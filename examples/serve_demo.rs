@@ -1,0 +1,93 @@
+//! End-to-end server demo: starts the GP inference server on a ring
+//! graph, then drives it as a client — observations, batched predicts,
+//! Thompson steps — and reports latency/throughput.
+//!
+//!     cargo run --release --example serve_demo -- [n_nodes] [n_requests]
+
+use grfgp::gp::{GpModel, Hypers, Modulation};
+use grfgp::graph::generators;
+use grfgp::util::rng::Rng;
+use grfgp::walks::{sample_components, WalkConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+fn request(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, body: &str) -> String {
+    stream.write_all(body.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4096);
+    let n_requests: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(50);
+
+    // Build the model.
+    let g = generators::ring(n);
+    let cfg = WalkConfig { n_walks: 100, p_halt: 0.1, max_len: 5, ..Default::default() };
+    let comps = sample_components(&g, &cfg, 0);
+    let model = GpModel::new(
+        comps,
+        Hypers::new(Modulation::diffusion(1.0, 1.0, 5), 0.1),
+        &[],
+        &[],
+    );
+
+    // Serve on an ephemeral port in a background thread.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        grfgp::server::serve_on(model, listener, 0).unwrap();
+    });
+
+    // Client.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut rng = Rng::new(1);
+
+    // Seed observations.
+    for _ in 0..20 {
+        let node = rng.below(n);
+        let t = node as f64 / n as f64 * std::f64::consts::TAU;
+        let y = t.sin() + 0.1 * rng.normal();
+        let resp = request(
+            &mut stream,
+            &mut reader,
+            &format!(r#"{{"op":"observe","node":{node},"y":{y}}}"#),
+        );
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+    }
+
+    // Timed predict requests.
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let node = (i * 37) % n;
+        let resp = request(
+            &mut stream,
+            &mut reader,
+            &format!(r#"{{"op":"predict","nodes":[{node}],"samples":8}}"#),
+        );
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!(
+        "{n_requests} predict requests on N={n}: {:.1} ms/request, {:.1} req/s",
+        1e3 * elapsed / n_requests as f64,
+        n_requests as f64 / elapsed
+    );
+
+    // A few Thompson steps.
+    for _ in 0..3 {
+        let resp = request(&mut stream, &mut reader, r#"{"op":"thompson"}"#);
+        println!("thompson -> {}", resp.trim());
+    }
+    let stats = request(&mut stream, &mut reader, r#"{"op":"stats"}"#);
+    println!("stats -> {}", stats.trim());
+
+    request(&mut stream, &mut reader, r#"{"op":"shutdown"}"#);
+    drop(stream);
+    server.join().unwrap();
+}

@@ -1,0 +1,66 @@
+//! Traffic-speed regression (paper §4.2.1, Fig. 3a-b / Fig. 6) on the
+//! San-Jose-substitute road network: exact diffusion kernel vs
+//! diffusion-shape GRF vs fully-learnable GRF.
+//!
+//!     cargo run --release --example traffic_regression -- [walks] [iters]
+
+use grfgp::datasets::traffic;
+use grfgp::gp::metrics::{nlpd, rmse};
+use grfgp::gp::{ExactGp, ExactKernel, GpModel, Hypers, Modulation};
+use grfgp::util::rng::Rng;
+use grfgp::walks::{sample_components, WalkConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n_walks: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+    let iters: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(80);
+
+    let mut rng = Rng::new(0);
+    let data = traffic::generate(&mut rng);
+    println!(
+        "road network: {} nodes / {} edges, {} train / {} test sensors",
+        data.graph.num_nodes(),
+        data.graph.num_edges(),
+        data.train_nodes.len(),
+        data.test_nodes.len()
+    );
+
+    // Exact diffusion baseline (O(N^3) eigendecomposition, feasible at
+    // ~1K nodes — exactly the paper's point).
+    let mut exact = ExactGp::new(&data.graph, ExactKernel::Diffusion);
+    exact.set_data(&data.train_nodes, &data.train_y);
+    exact.fit(3).expect("exact fit");
+    let (r, nl) = exact.evaluate(&data.test_nodes, &data.test_y).unwrap();
+    println!("exact diffusion:      RMSE {r:.3}  NLPD {nl:.3}");
+
+    // GRF kernels.
+    for (label, learnable) in [("diffusion-shape GRF", false), ("learnable GRF", true)] {
+        let cfg = WalkConfig {
+            n_walks,
+            p_halt: 0.1,
+            max_len: 10,
+            ..Default::default()
+        };
+        let comps = sample_components(&data.graph, &cfg, 7);
+        let modulation = if learnable {
+            Modulation::learnable_init(10, &mut rng)
+        } else {
+            Modulation::diffusion(1.0, 1.0, 10)
+        };
+        let mut model = GpModel::new(
+            comps,
+            Hypers::new(modulation, 0.1),
+            &data.train_nodes,
+            &data.train_y,
+        );
+        model.fit(iters, 0.02, &mut rng);
+        let (mean, var) = model.predict(32, &mut rng);
+        let mu: Vec<f64> = data.test_nodes.iter().map(|&i| mean[i]).collect();
+        let vv: Vec<f64> = data.test_nodes.iter().map(|&i| var[i]).collect();
+        println!(
+            "{label:<21} RMSE {:.3}  NLPD {:.3}   (n={n_walks} walks)",
+            rmse(&mu, &data.test_y),
+            nlpd(&mu, &vv, &data.test_y)
+        );
+    }
+}

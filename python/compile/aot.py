@@ -1,0 +1,186 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+Interchange format is **HLO text**, not ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Each entry point is lowered for a ladder of shape buckets
+``(N, K, Kt, R)`` and recorded in ``artifacts/manifest.json``; the Rust
+runtime pads its inputs up to the nearest bucket.  Usage:
+
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--buckets 1024:32:64,4096:32:64] [--rhs 8] [--iters 32] \
+        [--dense-n 256] [--quick]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _ell_args(n, k, kt):
+    """The four ELL arrays every sparse entry point takes, in order."""
+    return [
+        ("phi_idx", _spec((n, k), I32)),
+        ("phi_val", _spec((n, k))),
+        ("phit_idx", _spec((n, kt), I32)),
+        ("phit_val", _spec((n, kt))),
+    ]
+
+
+def entry_points(n, k, kt, r, iters):
+    """(name, fn, [(arg_name, ShapeDtypeStruct)]) for one bucket."""
+    ell = _ell_args(n, k, kt)
+    s = ("sigma2", _spec(()))
+    mask = ("mask", _spec((n,)))
+    eps = []  # populated below for readability
+
+    def wrap_iters(fn):
+        def inner(*args):
+            return fn(*args, iters=iters)
+        return inner
+
+    return [
+        (
+            f"gram_matvec_n{n}_k{k}_kt{kt}",
+            model.gram_matvec,
+            ell + [("x", _spec((n,))), s],
+        ),
+        (
+            f"cg_solve_n{n}_k{k}_kt{kt}_r{r}_i{iters}",
+            wrap_iters(model.cg_solve),
+            ell + [mask, ("b", _spec((n, r))), s],
+        ),
+        (
+            f"posterior_sample_n{n}_k{k}_kt{kt}_i{iters}",
+            wrap_iters(model.posterior_sample),
+            ell + [mask, ("y", _spec((n,))), ("w", _spec((n,))),
+                   ("eps", _spec((n,))), s],
+        ),
+        (
+            f"posterior_mean_n{n}_k{k}_kt{kt}_i{iters}",
+            wrap_iters(model.posterior_mean),
+            ell + [mask, ("y", _spec((n,))), s],
+        ),
+    ]
+
+
+def dense_entry_points(n):
+    return [
+        (
+            f"dense_diffusion_n{n}",
+            model.dense_diffusion,
+            [("w_adj", _spec((n, n))), ("beta", _spec(())),
+             ("sigma_f2", _spec(()))],
+        ),
+    ]
+
+
+def lower_one(name, fn, args, out_dir):
+    specs = [spec for _, spec in args]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {"name": arg_name,
+             "shape": list(spec.shape),
+             "dtype": str(spec.dtype)}
+            for arg_name, spec in args
+        ],
+        "bytes": len(text),
+    }
+
+
+def parse_buckets(text):
+    out = []
+    for part in text.split(","):
+        n, k, kt = (int(v) for v in part.split(":"))
+        out.append((n, k, kt))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default="1024:32:64,4096:32:64",
+                    help="comma-separated N:K:Kt shape buckets")
+    ap.add_argument("--rhs", type=int, default=8,
+                    help="RHS batch width for cg_solve artifacts")
+    ap.add_argument("--iters", type=int, default=model.DEFAULT_CG_ITERS,
+                    help="fixed CG iteration budget")
+    ap.add_argument("--dense-n", default="256",
+                    help="comma-separated N for dense baseline artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="single tiny bucket (CI smoke)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    if args.quick:
+        buckets = [(256, 16, 32)]
+        dense_ns = [128]
+    else:
+        buckets = parse_buckets(args.buckets)
+        dense_ns = [int(v) for v in args.dense_n.split(",") if v]
+
+    manifest = {
+        "format": "hlo-text/return-tuple",
+        "cg_iters": args.iters,
+        "rhs": args.rhs,
+        "dense_expm": {
+            "squarings": model.DENSE_EXPM_SQUARINGS,
+            "taylor_order": model.DENSE_EXPM_ORDER,
+            "max_beta_lap_inf_norm": float(2 ** model.DENSE_EXPM_SQUARINGS),
+        },
+        "artifacts": [],
+    }
+
+    for (n, k, kt) in buckets:
+        for name, fn, eps in entry_points(n, k, kt, args.rhs, args.iters):
+            print(f"lowering {name} ...", flush=True)
+            entry = lower_one(name, fn, eps, args.out_dir)
+            entry.update({"n": n, "k": k, "kt": kt, "iters": args.iters,
+                          "kind": name.split("_n")[0]})
+            manifest["artifacts"].append(entry)
+    for n in dense_ns:
+        for name, fn, eps in dense_entry_points(n):
+            print(f"lowering {name} ...", flush=True)
+            entry = lower_one(name, fn, eps, args.out_dir)
+            entry.update({"n": n, "kind": "dense_diffusion"})
+            manifest["artifacts"].append(entry)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for GRF-GP.
+
+Every kernel here is lowered with ``interpret=True`` — the CPU PJRT
+plugin cannot execute Mosaic custom-calls, so interpret mode is the
+correctness path and real-TPU performance is estimated analytically
+(see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .ell_spmv import ell_spmv, ell_spmv_pallas, DEFAULT_ROW_TILE
+from .matmul import matmul_tiled
+from . import ref
+
+__all__ = [
+    "ell_spmv",
+    "ell_spmv_pallas",
+    "matmul_tiled",
+    "ref",
+    "DEFAULT_ROW_TILE",
+]

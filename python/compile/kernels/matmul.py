@@ -1,0 +1,58 @@
+"""Blocked dense matmul Pallas kernel.
+
+Used by the *dense baseline* artifacts (exact diffusion kernel via
+scaling-and-squaring): chains of N x N matmuls.  On a real TPU this is
+the MXU path — [BM, BK] x [BK, BN] systolic tiles accumulated over the
+K grid axis; under interpret=True it is a correctness mirror of the
+same schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Grid (M/BM, N/BN, K/BK); accumulate partial products into o_ref."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matmul_tiled(a, b, block=DEFAULT_BLOCK):
+    """C = A @ B with an MXU-style blocked schedule (interpret mode)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = min(block, m)
+    bn = min(block, n)
+    bk = min(block, k)
+    if m % bm or n % bn or k % bk:
+        # Tests with odd sizes: pad up, compute, slice back.
+        mp, np_, kp = -m % bm, -n % bn, -k % bk
+        a = jnp.pad(a, ((0, mp), (0, kp)))
+        b = jnp.pad(b, ((0, kp), (0, np_)))
+        return matmul_tiled(a, b, block=block)[:m, :n]
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

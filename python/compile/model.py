@@ -1,0 +1,177 @@
+"""Layer-2: the GRF-GP compute graphs, in JAX, calling the L1 kernels.
+
+Everything here is build-time only — `aot.py` lowers these functions to
+HLO text once, and the Rust runtime (rust/src/runtime/) loads and
+executes the artifacts on the PJRT CPU client.  Python never runs on
+the request path.
+
+Conventions shared with the Rust side (see rust/src/runtime/mod.rs):
+
+  * The GRF feature matrix Phi (N x N, sparse) is passed as a pair of
+    ELL arrays: row-major (phi_idx, phi_val) of shape [N, K] for
+    products Phi @ x, and the ELL of Phi^T, (phit_idx, phit_val) of
+    shape [N, Kt], for products Phi^T @ x.
+  * Training-set restriction is a mask m in {0,1}^N: the masked CG
+    operator A(v) = m*(Phi Phi^T (m*v)) + sigma2*v solves the training
+    system embedded in R^N (off-train coordinates decouple and stay 0
+    whenever the RHS is masked), so a single shape bucket serves any
+    train/test split.
+  * All dtypes f32 / i32; sigma2 and kernel scales are scalar inputs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ell_spmv import ell_spmv, ell_spmv_batch
+from .kernels.matmul import matmul_tiled
+
+# Fixed CG iteration budget compiled into the artifacts.  The paper's
+# near-linear training/inference scaling (Table 1) explicitly reflects
+# "the fixed iteration budget of sparse linear solves"; the Rust native
+# engine uses a tolerance-based stop instead, and the two are compared
+# in rust/tests/pjrt_parity.rs.
+DEFAULT_CG_ITERS = 32
+
+
+# ----------------------------------------------------------------------
+# Core operators
+# ----------------------------------------------------------------------
+
+def gram_matvec(phi_idx, phi_val, phit_idx, phit_val, x, sigma2):
+    """(Phi Phi^T + sigma2 I) @ x via two sparse matvecs (never forms K)."""
+    z = ell_spmv(phit_idx, phit_val, x)
+    y = ell_spmv(phi_idx, phi_val, z)
+    return y + sigma2 * x
+
+
+def masked_gram_matvec(phi_idx, phi_val, phit_idx, phit_val, mask, x, sigma2):
+    """A(x) = m*(Phi Phi^T (m*x)) + sigma2*x — SPD for sigma2 > 0."""
+    mx = mask * x
+    z = ell_spmv(phit_idx, phit_val, mx)
+    y = ell_spmv(phi_idx, phi_val, z)
+    return mask * y + sigma2 * x
+
+
+def _masked_gram_matmat(phi_idx, phi_val, phit_idx, phit_val, mask, x, sigma2):
+    """Batched masked operator on X: f32[N, R]."""
+    mx = mask[:, None] * x
+    z = ell_spmv_batch(phit_idx, phit_val, mx)
+    y = ell_spmv_batch(phi_idx, phi_val, z)
+    return mask[:, None] * y + sigma2 * x
+
+
+def cg_solve(phi_idx, phi_val, phit_idx, phit_val, mask, b, sigma2,
+             iters=DEFAULT_CG_ITERS):
+    """Solve (m K m + sigma2 I) X = B for B f32[N, R] with batched CG.
+
+    Fixed `iters` iterations (lax.scan — fully unrolled into a compiled
+    loop), per-column scalars.  Returns (X, residual_sq[R]).
+    """
+
+    def matvec(v):
+        return _masked_gram_matmat(
+            phi_idx, phi_val, phit_idx, phit_val, mask, v, sigma2)
+
+    x0 = jnp.zeros_like(b)
+    r0 = b - matvec(x0)
+    p0 = r0
+    rs0 = jnp.sum(r0 * r0, axis=0)          # [R]
+
+    def step(carry, _):
+        x, r, p, rs = carry
+        ap = matvec(p)
+        # Guard against exactly-converged columns (rs == 0).
+        denom = jnp.sum(p * ap, axis=0)
+        alpha = jnp.where(denom > 0, rs / jnp.maximum(denom, 1e-30), 0.0)
+        x = x + alpha[None, :] * p
+        r = r - alpha[None, :] * ap
+        rs_new = jnp.sum(r * r, axis=0)
+        beta = jnp.where(rs > 0, rs_new / jnp.maximum(rs, 1e-30), 0.0)
+        p = r + beta[None, :] * p
+        return (x, r, p, rs_new), None
+
+    (x, r, _, rs), _ = jax.lax.scan(step, (x0, r0, p0, rs0), None,
+                                    length=iters)
+    return x, rs
+
+
+# ----------------------------------------------------------------------
+# GP workflow graphs (the artifacts)
+# ----------------------------------------------------------------------
+
+def posterior_sample(phi_idx, phi_val, phit_idx, phit_val, mask,
+                     y, w, eps, sigma2, iters=DEFAULT_CG_ITERS):
+    """One pathwise-conditioning posterior draw (paper Eq. 12), fused.
+
+      g      = Phi w,  w ~ N(0, I)      (prior sample: Cov = Phi Phi^T)
+      rhs    = m * (y - g - eps)        (eps ~ N(0, sigma2 I))
+      alpha  = (m K m + sigma2 I)^{-1} rhs       (masked batched CG)
+      sample = g + Phi (Phi^T (m * alpha))       (correction term)
+
+    This is the entire inner loop of graph Thompson sampling — one
+    artifact execution per BO step.
+    """
+    g = ell_spmv(phi_idx, phi_val, w)
+    rhs = mask * (y - g - eps)
+    alpha, rs = cg_solve(phi_idx, phi_val, phit_idx, phit_val, mask,
+                         rhs[:, None], sigma2, iters=iters)
+    alpha = alpha[:, 0]
+    corr = ell_spmv(phi_idx, phi_val,
+                    ell_spmv(phit_idx, phit_val, mask * alpha))
+    return g + corr, rs[0]
+
+
+def posterior_mean(phi_idx, phi_val, phit_idx, phit_val, mask, y, sigma2,
+                   iters=DEFAULT_CG_ITERS):
+    """MAP prediction at every node: K_{.,x} (K_xx + sigma2 I)^{-1} y."""
+    rhs = (mask * y)[:, None]
+    alpha, rs = cg_solve(phi_idx, phi_val, phit_idx, phit_val, mask,
+                         rhs, sigma2, iters=iters)
+    alpha = alpha[:, 0]
+    mean = ell_spmv(phi_idx, phi_val,
+                    ell_spmv(phit_idx, phit_val, mask * alpha))
+    return mean, rs[0]
+
+
+def lml_solves(phi_idx, phi_val, phit_idx, phit_val, mask, b, sigma2,
+               iters=DEFAULT_CG_ITERS):
+    """The batch of solves for one LML-gradient step (paper Eq. 9-11).
+
+    B packs [y, z_1, ..., z_S] (observation vector + Hutchinson probes);
+    the Rust side assembles the gradient from the returned solves.
+    """
+    return cg_solve(phi_idx, phi_val, phit_idx, phit_val, mask, b, sigma2,
+                    iters=iters)
+
+
+# ----------------------------------------------------------------------
+# Dense baseline graph
+# ----------------------------------------------------------------------
+
+DENSE_EXPM_SQUARINGS = 8
+DENSE_EXPM_ORDER = 12
+
+
+def dense_diffusion(w_adj, beta, sigma_f2):
+    """Exact diffusion kernel K = sigma_f^2 exp(-beta L) (dense baseline).
+
+    expm via scaling-and-squaring with a fixed squaring count (shape- and
+    trace-stable): exp(A) = (exp(A / 2^s))^(2^s), Taylor order 12.  Valid
+    for ||beta*L||_inf <~ 2^s; the manifest records the bound and the
+    Rust runtime checks it before dispatching to this artifact.
+    All matmuls go through the L1 blocked Pallas kernel (MXU path).
+    """
+    n = w_adj.shape[0]
+    deg = jnp.sum(w_adj, axis=1)
+    lap = jnp.diag(deg) - w_adj
+    a = (-beta / (2.0 ** DENSE_EXPM_SQUARINGS)) * lap
+
+    eye = jnp.eye(n, dtype=w_adj.dtype)
+    term = eye
+    out = eye
+    for r in range(1, DENSE_EXPM_ORDER + 1):
+        term = matmul_tiled(term, a) / r
+        out = out + term
+    for _ in range(DENSE_EXPM_SQUARINGS):
+        out = matmul_tiled(out, out)
+    return sigma_f2 * out

@@ -1,0 +1,13 @@
+"""Shared test fixtures/utilities."""
+import numpy as np
+
+
+def random_ell(rng, n, k, n_cols=None, density=1.0):
+    """Random ELL pair: some rows fully populated, some padded."""
+    n_cols = n_cols or n
+    idx = rng.integers(0, n_cols, size=(n, k)).astype(np.int32)
+    val = rng.normal(size=(n, k)).astype(np.float32)
+    keep = rng.random(size=(n, k)) < density
+    val = np.where(keep, val, 0.0).astype(np.float32)
+    idx = np.where(keep, idx, 0).astype(np.int32)
+    return idx, val

@@ -1,0 +1,79 @@
+"""AOT pipeline integrity: lower the --quick bucket and validate the
+manifest contract the Rust runtime (rust/src/runtime/manifest.rs)
+depends on: file presence, input ordering, shape/dtype fields."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+PYDIR = os.path.join(REPO, "python")
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts_quick")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--quick"],
+        cwd=PYDIR,
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def test_manifest_structure(quick_artifacts):
+    with open(quick_artifacts / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text/return-tuple"
+    assert manifest["cg_iters"] > 0
+    arts = manifest["artifacts"]
+    kinds = {a["kind"] for a in arts}
+    assert {"gram_matvec", "cg_solve", "posterior_sample",
+            "posterior_mean", "dense_diffusion"} <= kinds
+    for a in arts:
+        # Every artifact file exists and is non-trivial HLO text.
+        path = quick_artifacts / a["file"]
+        assert path.exists(), a["file"]
+        text = path.read_text()
+        assert "HloModule" in text
+        assert a["bytes"] == len(text)
+        # Shape bucket fields are coherent.
+        assert a["n"] > 0
+        if a["kind"] != "dense_diffusion":
+            assert a["k"] > 0 and a["kt"] >= a["k"]
+
+
+def test_input_ordering_matches_runtime_contract(quick_artifacts):
+    """The Rust runtime packs literals positionally; the manifest input
+    order must be exactly what runtime/mod.rs sends."""
+    with open(quick_artifacts / "manifest.json") as f:
+        manifest = json.load(f)
+    expect = {
+        "gram_matvec": ["phi_idx", "phi_val", "phit_idx", "phit_val", "x",
+                        "sigma2"],
+        "cg_solve": ["phi_idx", "phi_val", "phit_idx", "phit_val", "mask",
+                     "b", "sigma2"],
+        "posterior_sample": ["phi_idx", "phi_val", "phit_idx", "phit_val",
+                             "mask", "y", "w", "eps", "sigma2"],
+        "posterior_mean": ["phi_idx", "phi_val", "phit_idx", "phit_val",
+                           "mask", "y", "sigma2"],
+        "dense_diffusion": ["w_adj", "beta", "sigma_f2"],
+    }
+    for a in manifest["artifacts"]:
+        names = [i["name"] for i in a["inputs"]]
+        assert names == expect[a["kind"]], a["name"]
+
+
+def test_ell_dtypes(quick_artifacts):
+    with open(quick_artifacts / "manifest.json") as f:
+        manifest = json.load(f)
+    for a in manifest["artifacts"]:
+        for inp in a["inputs"]:
+            if inp["name"].endswith("_idx"):
+                assert inp["dtype"] == "int32"
+            else:
+                assert inp["dtype"] == "float32"

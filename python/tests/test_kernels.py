@@ -1,0 +1,157 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp/numpy oracles.
+
+Hypothesis sweeps shapes/densities/seeds; every case asserts allclose
+against ref.py.  These tests are the build-time contract the Rust
+runtime relies on.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ell_spmv import ell_spmv_pallas, ell_spmv_batch
+from compile.kernels.matmul import matmul_tiled
+
+from tests.helpers import random_ell
+
+
+# ----------------------------------------------------------------------
+# ELL SpMV
+# ----------------------------------------------------------------------
+
+class TestEllSpmv:
+    def test_identity(self, rng):
+        n = 32
+        idx = np.arange(n, dtype=np.int32)[:, None]
+        val = np.ones((n, 1), dtype=np.float32)
+        x = rng.normal(size=n).astype(np.float32)
+        y = ell_spmv_pallas(idx, val, x, row_tile=8)
+        np.testing.assert_allclose(np.asarray(y), x, rtol=1e-6)
+
+    def test_zero_matrix(self, rng):
+        n, k = 16, 4
+        idx = np.zeros((n, k), dtype=np.int32)
+        val = np.zeros((n, k), dtype=np.float32)
+        x = rng.normal(size=n).astype(np.float32)
+        y = ell_spmv_pallas(idx, val, x, row_tile=8)
+        np.testing.assert_array_equal(np.asarray(y), np.zeros(n))
+
+    def test_vs_dense(self, rng):
+        n, k = 64, 8
+        idx, val = random_ell(rng, n, k, density=0.7)
+        x = rng.normal(size=n).astype(np.float32)
+        dense = ref.ell_to_dense(idx, val)
+        y = ell_spmv_pallas(idx, val, x, row_tile=16)
+        np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=2e-5,
+                                   atol=1e-5)
+
+    def test_non_multiple_of_tile(self, rng):
+        """N not divisible by row_tile exercises the pad-and-slice path."""
+        n, k = 37, 3
+        idx, val = random_ell(rng, n, k)
+        x = rng.normal(size=n).astype(np.float32)
+        y = ell_spmv_pallas(idx, val, x, row_tile=16)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(ref.ell_spmv_ref(idx, val, x)),
+            rtol=2e-5, atol=1e-5)
+
+    def test_duplicate_columns_accumulate(self, rng):
+        """Repeated idx within a row must sum, not overwrite."""
+        n = 8
+        idx = np.full((n, 3), 2, dtype=np.int32)
+        val = np.ones((n, 3), dtype=np.float32)
+        x = np.arange(n, dtype=np.float32)
+        y = ell_spmv_pallas(idx, val, x, row_tile=8)
+        np.testing.assert_allclose(np.asarray(y), np.full(n, 3.0 * x[2]))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=80),
+        k=st.integers(min_value=1, max_value=9),
+        density=st.floats(min_value=0.0, max_value=1.0),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n, k, density, seed):
+        rng = np.random.default_rng(seed)
+        idx, val = random_ell(rng, n, k, density=density)
+        x = rng.normal(size=n).astype(np.float32)
+        y = ell_spmv_pallas(idx, val, x, row_tile=8)
+        expect = np.asarray(ref.ell_spmv_ref(idx, val, x))
+        np.testing.assert_allclose(np.asarray(y), expect, rtol=3e-5,
+                                   atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(min_value=8, max_value=64),
+        k=st.integers(min_value=1, max_value=6),
+        r=st.integers(min_value=1, max_value=9),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_batch_matches_loop(self, n, k, r, seed):
+        rng = np.random.default_rng(seed)
+        idx, val = random_ell(rng, n, k)
+        x = rng.normal(size=(n, r)).astype(np.float32)
+        y = np.asarray(ell_spmv_batch(idx, val, x, row_tile=8))
+        for j in range(r):
+            col = np.asarray(ell_spmv_pallas(idx, val, x[:, j], row_tile=8))
+            np.testing.assert_allclose(y[:, j], col, rtol=3e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Blocked matmul
+# ----------------------------------------------------------------------
+
+class TestMatmulTiled:
+    def test_small_exact(self, rng):
+        a = rng.normal(size=(4, 4)).astype(np.float32)
+        b = rng.normal(size=(4, 4)).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(matmul_tiled(a, b, block=4)),
+                                   a @ b, rtol=1e-5, atol=1e-5)
+
+    def test_multi_block_accumulation(self, rng):
+        """K-axis grid > 1 exercises the accumulate-into-o_ref path."""
+        a = rng.normal(size=(8, 32)).astype(np.float32)
+        b = rng.normal(size=(32, 8)).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(matmul_tiled(a, b, block=8)),
+                                   a @ b, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=40),
+        k=st.integers(min_value=1, max_value=40),
+        n=st.integers(min_value=1, max_value=40),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=(m, k)).astype(np.float32)
+        b = rng.normal(size=(k, n)).astype(np.float32)
+        out = np.asarray(matmul_tiled(a, b, block=16))
+        np.testing.assert_allclose(out, a @ b, rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------------
+# Oracles are self-consistent
+# ----------------------------------------------------------------------
+
+class TestRefInternal:
+    def test_expm_identity(self):
+        np.testing.assert_allclose(ref.expm_taylor_ref(np.zeros((5, 5))),
+                                   np.eye(5), atol=1e-12)
+
+    def test_expm_vs_eig(self, rng):
+        a = rng.normal(size=(6, 6))
+        a = (a + a.T) / 2
+        lam, q = np.linalg.eigh(a)
+        expect = q @ np.diag(np.exp(lam)) @ q.T
+        np.testing.assert_allclose(ref.expm_taylor_ref(a), expect,
+                                   rtol=1e-8, atol=1e-8)
+
+    def test_diffusion_kernel_psd(self, rng):
+        w = rng.random((10, 10))
+        w = np.triu(w, 1)
+        w = w + w.T
+        k = ref.diffusion_kernel_ref(w, beta=0.7)
+        lam = np.linalg.eigvalsh(k)
+        assert lam.min() > -1e-10

@@ -1,0 +1,153 @@
+"""L2 model-graph correctness: jitted GP graphs vs dense oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+from tests.helpers import random_ell
+
+
+def ell_transpose(idx, val, kt):
+    """Dense-roundtrip transpose for test fixtures (rust does this natively)."""
+    dense = ref.ell_to_dense(idx, val).T
+    n = dense.shape[0]
+    t_idx = np.zeros((n, kt), dtype=np.int32)
+    t_val = np.zeros((n, kt), dtype=np.float32)
+    for i in range(n):
+        nz = np.nonzero(dense[i])[0]
+        assert len(nz) <= kt, "test fixture too dense for kt"
+        t_idx[i, :len(nz)] = nz
+        t_val[i, :len(nz)] = dense[i, nz]
+    return t_idx, t_val
+
+
+def make_problem(seed, n=32, k=3, kt=None, train_frac=0.5):
+    rng = np.random.default_rng(seed)
+    idx, val = random_ell(rng, n, k, density=0.8)
+    val = (val * 0.3).astype(np.float32)      # keep K well-conditioned
+    kt = kt or 4 * k
+    t_idx, t_val = ell_transpose(idx, val, kt)
+    dense = ref.ell_to_dense(idx, val)
+    mask = (rng.random(n) < train_frac).astype(np.float32)
+    if mask.sum() == 0:
+        mask[0] = 1.0
+    y = (mask * rng.normal(size=n)).astype(np.float32)
+    return idx, val, t_idx, t_val, dense, mask, y, rng
+
+
+class TestGramMatvec:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_vs_dense(self, seed):
+        idx, val, t_idx, t_val, dense, mask, y, rng = make_problem(seed)
+        x = rng.normal(size=dense.shape[0]).astype(np.float32)
+        got = np.asarray(model.gram_matvec(idx, val, t_idx, t_val, x,
+                                           np.float32(0.3)))
+        expect = np.asarray(ref.gram_matvec_ref(dense, x, 0.3))
+        np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-4)
+
+    def test_masked_operator_spd(self):
+        idx, val, t_idx, t_val, dense, mask, y, rng = make_problem(7)
+        n = dense.shape[0]
+        # Assemble the operator matrix column by column; check SPD.
+        a = np.zeros((n, n))
+        for j in range(n):
+            e = np.zeros(n, dtype=np.float32)
+            e[j] = 1.0
+            a[:, j] = np.asarray(model.masked_gram_matvec(
+                idx, val, t_idx, t_val, mask, e, np.float32(0.5)))
+        np.testing.assert_allclose(a, a.T, atol=1e-5)
+        lam = np.linalg.eigvalsh((a + a.T) / 2)
+        assert lam.min() > 0.4   # >= sigma2 - tolerance
+
+
+class TestCgSolve:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_vs_direct(self, seed):
+        idx, val, t_idx, t_val, dense, mask, y, rng = make_problem(seed)
+        n = dense.shape[0]
+        b = (mask[:, None] * rng.normal(size=(n, 2))).astype(np.float32)
+        x, rs = model.cg_solve(idx, val, t_idx, t_val, mask, b,
+                               np.float32(0.5), iters=n)
+        expect = ref.cg_solve_ref(dense, mask, b, 0.5)
+        np.testing.assert_allclose(np.asarray(x), expect, rtol=5e-3,
+                                   atol=5e-3)
+        assert np.all(np.asarray(rs) < 1e-4)
+
+    def test_off_train_stays_zero(self):
+        idx, val, t_idx, t_val, dense, mask, y, rng = make_problem(3)
+        n = dense.shape[0]
+        b = (mask * rng.normal(size=n)).astype(np.float32)[:, None]
+        x, _ = model.cg_solve(idx, val, t_idx, t_val, mask, b,
+                              np.float32(0.5), iters=n)
+        x = np.asarray(x)[:, 0]
+        np.testing.assert_allclose(x[mask == 0], 0.0, atol=1e-6)
+
+
+class TestPosterior:
+    def test_sample_matches_dense_pathwise(self):
+        idx, val, t_idx, t_val, dense, mask, y, rng = make_problem(11)
+        n = dense.shape[0]
+        w = rng.normal(size=n).astype(np.float32)
+        eps = (0.1 * rng.normal(size=n)).astype(np.float32)
+        got, rs = model.posterior_sample(idx, val, t_idx, t_val, mask,
+                                         y, w, eps, np.float32(0.25),
+                                         iters=n)
+        expect = ref.posterior_sample_ref(dense, mask, y, w, eps, 0.25)
+        np.testing.assert_allclose(np.asarray(got), expect, rtol=5e-3,
+                                   atol=5e-3)
+
+    def test_mean_interpolates_when_noise_small(self):
+        """With tiny noise, posterior mean ~ y at training nodes."""
+        idx, val, t_idx, t_val, dense, mask, y, rng = make_problem(5)
+        # Make the kernel strongly diagonal so the system is well posed.
+        n = dense.shape[0]
+        idx2 = np.arange(n, dtype=np.int32)[:, None]
+        val2 = np.ones((n, 1), dtype=np.float32)
+        mean, _ = model.posterior_mean(idx2, val2, idx2, val2, mask, y,
+                                       np.float32(1e-4), iters=n)
+        mean = np.asarray(mean)
+        np.testing.assert_allclose(mean[mask == 1], y[mask == 1],
+                                   rtol=1e-2, atol=1e-2)
+
+    def test_sample_moments(self):
+        """Empirical mean/cov of pathwise samples match GP posterior."""
+        idx, val, t_idx, t_val, dense, mask, y, rng = make_problem(2, n=16,
+                                                                   k=2)
+        n = dense.shape[0]
+        sigma2 = 0.25
+        draws = []
+        for s in range(400):
+            w = rng.normal(size=n).astype(np.float32)
+            eps = (np.sqrt(sigma2) * rng.normal(size=n)).astype(np.float32)
+            g, _ = model.posterior_sample(idx, val, t_idx, t_val, mask, y,
+                                          w, eps, np.float32(sigma2),
+                                          iters=n)
+            draws.append(np.asarray(g))
+        draws = np.stack(draws)
+        # Dense posterior mean: K m (m K m + s I)^{-1} y
+        k = dense.astype(np.float64) @ dense.astype(np.float64).T
+        alpha = ref.cg_solve_ref(dense, mask, (mask * y), sigma2)
+        mean = k @ (mask * alpha)
+        err = np.abs(draws.mean(axis=0) - mean)
+        assert err.max() < 0.25, f"max |emp - exact| = {err.max()}"
+
+
+class TestDenseDiffusion:
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000),
+           beta=st.floats(min_value=0.05, max_value=2.0))
+    def test_vs_ref(self, seed, beta):
+        rng = np.random.default_rng(seed)
+        n = 16
+        w = rng.random((n, n)).astype(np.float32)
+        w = np.triu(w, 1)
+        w = (w + w.T).astype(np.float32)
+        got = np.asarray(model.dense_diffusion(w, np.float32(beta),
+                                               np.float32(1.3)))
+        expect = ref.diffusion_kernel_ref(w, beta, 1.3)
+        np.testing.assert_allclose(got, expect, rtol=1e-3, atol=1e-3)

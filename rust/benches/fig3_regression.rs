@@ -1,0 +1,39 @@
+//! Bench for Figure 3: traffic + wind regression sweeps at reduced
+//! budgets (full versions: `grfgp exp traffic` / `grfgp exp wind`).
+
+use grfgp::exp::regression;
+use grfgp::util::cli::Args;
+
+fn main() {
+    println!("== fig3_regression bench (reduced; full: grfgp exp traffic/wind) ==");
+    let args = Args::parse(
+        [
+            "exp",
+            "--walk-counts",
+            "16,128",
+            "--seeds",
+            "1",
+            "--train-iters",
+            "30",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    regression::run_traffic(&args);
+    let wind_args = Args::parse(
+        [
+            "exp",
+            "--walk-counts",
+            "16,64",
+            "--seeds",
+            "1",
+            "--res-deg",
+            "10",
+            "--train-iters",
+            "20",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    regression::run_wind(&wind_args);
+}

@@ -1,0 +1,39 @@
+//! Bench for Figure 4: BO regret on the three benchmark families at
+//! reduced sizes (full: `grfgp exp bo-synthetic / bo-social / bo-wind`).
+
+use grfgp::exp::bo;
+use grfgp::util::cli::Args;
+
+fn main() {
+    println!("== fig4_bo bench (reduced; full: grfgp exp bo-*) ==");
+    let args = Args::parse(
+        [
+            "exp",
+            "--side",
+            "30",
+            "--ring-n",
+            "5000",
+            "--seeds",
+            "2",
+            "--n-steps",
+            "60",
+            "--n-init",
+            "15",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    bo::run_synthetic(&args);
+    let social_args = Args::parse(
+        ["exp", "--scale", "0.01", "--seeds", "2", "--n-steps", "80"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    bo::run_social(&social_args);
+    let wind_args = Args::parse(
+        ["exp", "--res-deg", "10", "--seeds", "2", "--n-steps", "60"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    bo::run_wind(&wind_args);
+}

@@ -1,0 +1,61 @@
+//! Micro-benchmarks of the L3 hot paths, used by the performance pass
+//! (EXPERIMENTS.md §Perf): sparse matvec, gram matvec, CG solve, walk
+//! engine, and modulation recombination.
+
+use grfgp::gp::{GpModel, Hypers, Modulation};
+use grfgp::graph::generators;
+use grfgp::sparse::ops::GramOperator;
+use grfgp::util::bench::bench;
+use grfgp::util::rng::Rng;
+use grfgp::walks::{sample_components, WalkConfig};
+
+fn main() {
+    let mut rng = Rng::new(0);
+    println!("== hotpath microbenches ==");
+
+    for &n in &[16_384usize, 131_072] {
+        let g = generators::ring(n);
+        let cfg = WalkConfig { n_walks: 100, p_halt: 0.1, max_len: 3, ..Default::default() };
+        let comps = sample_components(&g, &cfg, 1);
+
+        bench(&format!("walk_engine/n={n}"), 1, 5, || {
+            sample_components(&g, &cfg, 2)
+        });
+
+        let mut prepared = comps.prepare();
+        let f = vec![1.0, 0.5, 0.25, 0.12];
+        bench(&format!("combine/n={n}"), 1, 10, || {
+            prepared.combine_into(&f).nnz()
+        });
+
+        let phi = prepared.combine_into(&f).clone();
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        bench(&format!("spmv/n={n}"), 2, 20, || phi.matvec(&x));
+        bench(&format!("spmv_par/n={n}"), 2, 20, || phi.matvec_par(&x, 0));
+
+        let mut op = GramOperator::new(phi.clone(), 0.1);
+        bench(&format!("gram_matvec/n={n}"), 2, 20, || op.apply(&x));
+
+        // Full CG solve through the model (the paper's O(N^{3/2}) op).
+        let train: Vec<usize> = (0..n).step_by(2).collect();
+        let y: Vec<f64> = train.iter().map(|&i| (i as f64 * 0.01).sin()).collect();
+        let model = GpModel::new(
+            comps.clone(),
+            Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1),
+            &train,
+            &y,
+        );
+        let rhs: Vec<f64> = model
+            .mask
+            .iter()
+            .zip(&model.y)
+            .map(|(m, v)| m * v)
+            .collect();
+        bench(&format!("cg_solve/n={n}"), 1, 10, || {
+            model.solve_system(&rhs).1.iterations
+        });
+        bench(&format!("posterior_sample/n={n}"), 1, 10, || {
+            model.posterior_sample(&mut rng)
+        });
+    }
+}

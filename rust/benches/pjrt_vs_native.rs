@@ -1,0 +1,65 @@
+//! Bench: PJRT artifact path (L1 Pallas interpret + L2 JAX, compiled by
+//! XLA) vs the native Rust engine on the same operations. Skipped when
+//! `artifacts/` is missing.
+
+use grfgp::gp::{GpModel, Hypers, Modulation};
+use grfgp::graph::generators;
+use grfgp::runtime::Runtime;
+use grfgp::util::bench::bench;
+use grfgp::util::rng::Rng;
+use grfgp::walks::{sample_components, WalkConfig};
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(rt) = Runtime::load(&dir) else {
+        println!("SKIP pjrt_vs_native: no artifacts (run `make artifacts`)");
+        return;
+    };
+    println!("== pjrt_vs_native bench (platform: {}) ==", rt.platform());
+
+    let g = generators::grid2d(10, 10);
+    let cfg = WalkConfig { n_walks: 24, max_len: 3, threads: 1, ..Default::default() };
+    let comps = sample_components(&g, &cfg, 1);
+    let mut rng = Rng::new(0);
+    let train: Vec<usize> = rng.sample_without_replacement(100, 40);
+    let y: Vec<f64> = train.iter().map(|&i| (i as f64 * 0.17).sin()).collect();
+    let model = GpModel::new(
+        comps,
+        Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.25),
+        &train,
+        &y,
+    );
+    let phi = model.features.current();
+    let ell = phi.to_ell(phi.max_row_nnz()).unwrap();
+    let phi_t = phi.transpose();
+    let ell_t = phi_t.to_ell(phi_t.max_row_nnz()).unwrap();
+    let n = model.n();
+    let x64: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+    let mask32: Vec<f32> = model.mask.iter().map(|&m| m as f32).collect();
+    let y32: Vec<f32> = model.y.iter().map(|&v| v as f32).collect();
+
+    bench("native/gram_matvec n=100", 3, 50, || {
+        model.apply_kernel(&x64)
+    });
+    bench("pjrt/gram_matvec n=100 (bucket 256)", 3, 50, || {
+        rt.gram_matvec(&ell, &ell_t, &x32, 0.25).unwrap()
+    });
+    let rhs64: Vec<f64> = model
+        .mask
+        .iter()
+        .zip(&model.y)
+        .map(|(m, v)| m * v)
+        .collect();
+    bench("native/cg_solve n=100", 2, 20, || {
+        model.solve_system(&rhs64).1.iterations
+    });
+    let rhs32: Vec<f32> = rhs64.iter().map(|&v| v as f32).collect();
+    bench("pjrt/cg_solve n=100 (32 iters, 8 rhs)", 2, 20, || {
+        rt.cg_solve(&ell, &ell_t, &mask32, &[rhs32.clone()], 0.25).unwrap()
+    });
+    bench("pjrt/posterior_mean n=100", 2, 20, || {
+        rt.posterior_mean(&ell, &ell_t, &mask32, &y32, 0.25).unwrap()
+    });
+}

@@ -1,0 +1,24 @@
+//! Bench for Table 1 / Figure 2: sparse-vs-dense end-to-end pipeline
+//! timings at doubling sizes (a fast, fixed-seed excerpt of
+//! `grfgp exp scaling`; the full sweep with exponent fits lives there).
+
+use grfgp::exp::scaling;
+use grfgp::util::cli::Args;
+
+fn main() {
+    println!("== table1_scaling bench (excerpt; full sweep: grfgp exp scaling) ==");
+    let args = Args::parse(
+        [
+            "exp",
+            "--sparse-pows",
+            "8,9,10,11,12",
+            "--dense-pows",
+            "8,9,10",
+            "--seeds",
+            "2",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    scaling::run(&args);
+}

@@ -1,0 +1,23 @@
+//! Bench for Table 5 / Figure 5: the importance-sampling ablation at a
+//! reduced walk budget (full version: `grfgp exp ablation`).
+
+use grfgp::exp::ablation;
+use grfgp::util::cli::Args;
+
+fn main() {
+    println!("== table5_ablation bench (reduced; full: grfgp exp ablation) ==");
+    let args = Args::parse(
+        [
+            "exp",
+            "--side",
+            "20",
+            "--walks",
+            "500",
+            "--train-iters",
+            "60",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    ablation::run(&args);
+}

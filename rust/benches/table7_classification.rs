@@ -1,0 +1,25 @@
+//! Bench for Table 7: Cora classification at reduced scale
+//! (full: `grfgp exp classify --scale 1.0`).
+
+use grfgp::exp::classify;
+use grfgp::util::cli::Args;
+
+fn main() {
+    println!("== table7_classification bench (reduced; full: grfgp exp classify) ==");
+    let args = Args::parse(
+        [
+            "exp",
+            "--scale",
+            "0.25",
+            "--seeds",
+            "2",
+            "--train-iters",
+            "80",
+            "--walks",
+            "256",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    );
+    classify::run(&args);
+}

@@ -1,0 +1,230 @@
+//! ERA5 wind-speed substitute (paper App. C.5).
+//!
+//! Paper: monthly-average ERA5 wind at 0.1/2/5 km, globe discretised at
+//! 2.5° (≈10K-node kNN graph on S²), trained on 1,441 nodes along the
+//! Aeolus satellite ground track.
+//!
+//! Substitute: a band-limited random spherical-harmonic field (altitude
+//! controls spectral decay — low altitude → rough, high → smooth/zonal)
+//! on the same 2.5° kNN sphere graph, with training nodes chosen as the
+//! nodes nearest a simulated sun-synchronous polar orbit ground track.
+
+use super::RegressionData;
+use crate::graph::generators::{knn_graph, sphere_grid};
+use crate::util::rng::Rng;
+
+/// Altitude regimes from the paper (0.1 km, 2 km, 5 km).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Altitude {
+    Low,  // 0.1 km: rough, small-scale structure
+    Mid,  // 2 km
+    High, // 5 km: smooth, zonal jets
+}
+
+impl Altitude {
+    /// Max spherical-harmonic degree and spectral decay.
+    fn spectrum(self) -> (usize, f64) {
+        match self {
+            Altitude::Low => (12, 1.2),
+            Altitude::Mid => (8, 1.8),
+            Altitude::High => (5, 2.5),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Altitude::Low => "0.1km",
+            Altitude::Mid => "2km",
+            Altitude::High => "5km",
+        }
+    }
+}
+
+/// Band-limited random field on the sphere as a sum of directional
+/// plane waves: f(p) = Σ_k a_k cos(ω_k ⟨d_k, p⟩ + φ_k), with frequency
+/// ω_k up to `l_max` (the harmonic-degree analogue) and amplitude decay
+/// a_k ∝ ω_k^{-decay}. Roughness genuinely scales with the bandwidth.
+struct Wave {
+    dir: [f64; 3],
+    omega: f64,
+    phase: f64,
+    amp: f64,
+}
+
+fn eval_field(p: [f64; 3], waves: &[Wave]) -> f64 {
+    waves
+        .iter()
+        .map(|w| {
+            let x = w.dir[0] * p[0] + w.dir[1] * p[1] + w.dir[2] * p[2];
+            w.amp * (w.omega * x + w.phase).cos()
+        })
+        .sum()
+}
+
+fn draw_field(l_max: usize, decay: f64, rng: &mut Rng) -> Vec<Wave> {
+    let mut waves = Vec::new();
+    for l in 1..=l_max {
+        // A few random directions per frequency shell.
+        for _ in 0..4 {
+            let mut d = [rng.normal(), rng.normal(), rng.normal()];
+            let norm = (d.iter().map(|x| x * x).sum::<f64>()).sqrt().max(1e-9);
+            d.iter_mut().for_each(|x| *x /= norm);
+            waves.push(Wave {
+                dir: d,
+                omega: l as f64,
+                phase: std::f64::consts::TAU * rng.uniform(),
+                amp: (l as f64).powf(-decay) * rng.normal(),
+            });
+        }
+    }
+    waves
+}
+
+/// Simulated sun-synchronous polar orbit ground track: `n_orbits`
+/// passes with the longitude of the ascending node precessing.
+fn satellite_track(n_points: usize, n_orbits: usize) -> Vec<[f64; 3]> {
+    let mut pts = Vec::with_capacity(n_points);
+    let per_orbit = n_points.div_ceil(n_orbits);
+    for orbit in 0..n_orbits {
+        let lon0 = orbit as f64 / n_orbits as f64 * std::f64::consts::TAU;
+        for s in 0..per_orbit {
+            if pts.len() == n_points {
+                break;
+            }
+            let phase = s as f64 / per_orbit as f64 * std::f64::consts::TAU;
+            // Near-polar inclination (97°).
+            let incl = 97f64.to_radians();
+            let lat = (phase.sin() * incl.sin()).asin();
+            let lon = lon0 + phase.cos().atan2(phase.sin() * incl.cos());
+            pts.push([
+                lat.cos() * lon.cos(),
+                lat.cos() * lon.sin(),
+                lat.sin(),
+            ]);
+        }
+    }
+    pts
+}
+
+/// Build the wind dataset at `res_deg` resolution (2.5 in the paper;
+/// coarser for quick tests). Training set ≈ 1441·(2.5/res)² nodes near
+/// the track, capped to 14% of the graph.
+pub fn generate(alt: Altitude, res_deg: f64, rng: &mut Rng) -> RegressionData {
+    let pts = sphere_grid(res_deg);
+    let graph = knn_graph(&pts, 6);
+    let n = pts.len();
+    let (l_max, decay) = alt.spectrum();
+    let waves = draw_field(l_max, decay, rng);
+    // Wind speed = |band-limited field| (normalised to unit sd) + a
+    // zonal jet component (smooth in latitude).
+    let raw: Vec<f64> = pts.iter().map(|&p| eval_field(p, &waves)).collect();
+    let sd = (raw.iter().map(|v| v * v).sum::<f64>() / n as f64)
+        .sqrt()
+        .max(1e-12);
+    let signal: Vec<f64> = pts
+        .iter()
+        .zip(&raw)
+        .map(|(&p, &f)| {
+            // Low-frequency jet: cos²(1.5 z) varies on planetary scale
+            // only, so it stays smooth at any grid resolution.
+            let zonal = match alt {
+                Altitude::High => 1.0 * (1.5 * p[2]).cos().powi(2),
+                Altitude::Mid => 0.5 * (1.5 * p[2]).cos().powi(2),
+                Altitude::Low => 0.3,
+            };
+            (f / sd).abs() + zonal
+        })
+        .collect();
+
+    // Training nodes: nearest grid node to each track point.
+    let n_track = ((1441.0 * (2.5 / res_deg).powi(2)) as usize)
+        .clamp(32, n * 14 / 100);
+    let track = satellite_track(n_track, 16);
+    let mut is_train = vec![false; n];
+    for t in &track {
+        let mut best = 0;
+        let mut best_d = f64::MAX;
+        for (i, p) in pts.iter().enumerate() {
+            let d: f64 = (0..3).map(|a| (p[a] - t[a]).powi(2)).sum();
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        is_train[best] = true;
+    }
+    let train_nodes: Vec<usize> = (0..n).filter(|&i| is_train[i]).collect();
+    let test_nodes: Vec<usize> = (0..n).filter(|&i| !is_train[i]).collect();
+    let noise = 0.05;
+    let train_y: Vec<f64> = train_nodes
+        .iter()
+        .map(|&i| signal[i] + noise * rng.normal())
+        .collect();
+    let test_y: Vec<f64> = test_nodes.iter().map(|&i| signal[i]).collect();
+    let mut d = RegressionData {
+        graph,
+        signal,
+        train_nodes,
+        train_y,
+        test_nodes,
+        test_y,
+    };
+    d.standardise();
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_resolution_graph_size() {
+        // 2.5 degrees -> 72 x 144 = 10368 nodes (paper: "roughly 10K").
+        let pts = sphere_grid(2.5);
+        assert_eq!(pts.len(), 10368);
+    }
+
+    #[test]
+    fn track_is_localised() {
+        let mut rng = Rng::new(0);
+        let d = generate(Altitude::Mid, 10.0, &mut rng);
+        let frac = d.train_nodes.len() as f64 / d.graph.num_nodes() as f64;
+        assert!(frac < 0.2, "train fraction {frac}");
+        assert!(!d.train_nodes.is_empty());
+    }
+
+    #[test]
+    fn altitude_controls_smoothness() {
+        let mut rng_a = Rng::new(3);
+        let mut rng_b = Rng::new(3);
+        let low = generate(Altitude::Low, 10.0, &mut rng_a);
+        let high = generate(Altitude::High, 10.0, &mut rng_b);
+        // Scale-invariant roughness: edge variation / total variation.
+        let roughness = |d: &RegressionData| {
+            let g = &d.graph;
+            let n = g.num_nodes();
+            let mean: f64 = d.signal.iter().sum::<f64>() / n as f64;
+            let total: f64 = d
+                .signal
+                .iter()
+                .map(|v| (v - mean).powi(2))
+                .sum::<f64>()
+                / n as f64;
+            let mut acc = 0.0;
+            let mut cnt = 0;
+            for i in 0..n {
+                for &j in g.neighbors(i) {
+                    acc += (d.signal[i] - d.signal[j as usize]).powi(2);
+                    cnt += 1;
+                }
+            }
+            acc / cnt as f64 / total.max(1e-12)
+        };
+        assert!(
+            roughness(&low) > roughness(&high),
+            "low altitude should be rougher: {} vs {}",
+            roughness(&low),
+            roughness(&high)
+        );
+    }
+}

@@ -1,0 +1,147 @@
+//! Experiment: Table 5 + Figure 5 — importance-sampling ablation.
+//!
+//! 30×30 mesh, ground truth drawn from the exact diffusion kernel with
+//! β* = 10 (hidden), 10% of nodes observed. Compare: exact diffusion
+//! kernel, principled GRF kernel, and the ad-hoc random-walk kernel
+//! with the 1/p(subwalk) reweighting removed (paper Eq. 13/16).
+
+use crate::exp::{write_result, Table};
+use crate::gp::metrics::{nlpd, rmse};
+use crate::gp::{ExactGp, ExactKernel, GpModel, Hypers, Modulation};
+use crate::graph::generators::grid2d;
+use crate::linalg::chol::Cholesky;
+use crate::linalg::expm::diffusion_kernel;
+use crate::linalg::Mat;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::walks::{sample_components, WalkConfig};
+
+pub struct AblationResult {
+    pub kernel: String,
+    pub rmse: f64,
+    pub nlpd: f64,
+}
+
+pub fn run(args: &Args) -> Json {
+    let side = args.usize("side", 30);
+    let beta_star = args.f64("beta-star", 10.0);
+    let obs_frac = args.f64("obs-frac", 0.1);
+    let n_walks = args.usize("walks", 2000);
+    let max_len = args.usize("max-len", 10);
+    let train_iters = args.usize("train-iters", 200);
+    let seed = args.u64("seed", 0);
+
+    println!("=== Ablation experiment (Table 5 / Fig. 5) ===");
+    println!(
+        "mesh {side}x{side}, beta*={beta_star}, {:.0}% observed, \
+         {n_walks} walks/node, l_max={max_len}",
+        obs_frac * 100.0
+    );
+    let mut rng = Rng::new(seed);
+    let g = grid2d(side, side);
+    let n = g.num_nodes();
+
+    // Ground truth: sample from K* = exp(-beta* L).
+    let l = Mat::from_rows(&g.dense_laplacian());
+    let mut kstar = diffusion_kernel(&l, beta_star, 1.0);
+    kstar.add_diag(1e-8);
+    let ch = Cholesky::new(&kstar).expect("K* PSD");
+    let u = rng.normal_vec(n);
+    let mut truth = ch.sample(&u);
+    // Standardise the sampled field: exp(-10L) keeps only the lowest
+    // Laplacian modes, so the raw sample has tiny variance — without
+    // rescaling, observation noise would drown every kernel equally.
+    let sd = (truth.iter().map(|v| v * v).sum::<f64>() / n as f64)
+        .sqrt()
+        .max(1e-12);
+    truth.iter_mut().for_each(|v| *v /= sd);
+    let noise = args.f64("noise", 0.01);
+    let n_obs = ((n as f64) * obs_frac) as usize;
+    let train = rng.sample_without_replacement(n, n_obs);
+    let y: Vec<f64> = train
+        .iter()
+        .map(|&i| truth[i] + noise.sqrt() * rng.normal())
+        .collect();
+    let test: Vec<usize> =
+        (0..n).filter(|i| !train.contains(i)).collect();
+    let y_test: Vec<f64> = test.iter().map(|&i| truth[i]).collect();
+
+    let mut results = Vec::new();
+
+    // (1) Exact diffusion kernel. Initialise sigma_f^2 at the data
+    // variance and give the coordinate search enough rounds to reach
+    // beta* = 10 from 1.0.
+    {
+        let mut gp = ExactGp::new(&g, ExactKernel::Diffusion);
+        gp.set_data(&train, &y);
+        let var_y =
+            y.iter().map(|v| v * v).sum::<f64>() / y.len().max(1) as f64;
+        gp.sigma_f2 = var_y.max(0.1);
+        gp.fit(6).expect("exact fit");
+        let (r, nl) = gp.evaluate(&test, &y_test).expect("exact eval");
+        results.push(AblationResult { kernel: "Diffusion".into(), rmse: r, nlpd: nl });
+    }
+
+    // (2) Principled GRFs and (3) ad-hoc GRFs.
+    //
+    // Both use the diffusion-shape modulation (learnable lengthscale +
+    // scale). On a regular mesh a *fully* per-length-learnable
+    // modulation can absorb the ad-hoc kernel's per-step rescaling,
+    // hiding the reweighting gap; constraining the modulation shape
+    // isolates exactly what Eq. 13 removes — the 1/p(subwalk) factor
+    // that upweights long, unlikely walks. The ad-hoc walks also run on
+    // the raw (unnormalised) weights, matching Eq. 13's plain
+    // edge-weight product.
+    for (label, reweight) in [("GRFs", true), ("Ad-hoc GRFs", false)] {
+        let cfg = WalkConfig {
+            n_walks,
+            p_halt: 0.1,
+            max_len,
+            reweight,
+            normalize: reweight,
+            threads: args.usize("threads", 0),
+        };
+        let comps = sample_components(&g, &cfg, seed + 1);
+        let hypers = Hypers::new(
+            Modulation::diffusion(1.0, 1.0, max_len),
+            0.1,
+        );
+        let mut model = GpModel::new(comps, hypers, &train, &y);
+        model.solve.probes = args.usize("probes", 6);
+        model.fit(train_iters, 0.01, &mut rng);
+        let (mean, var) = model.predict(32, &mut rng);
+        let mu: Vec<f64> = test.iter().map(|&i| mean[i]).collect();
+        let vv: Vec<f64> = test.iter().map(|&i| var[i]).collect();
+        results.push(AblationResult {
+            kernel: label.into(),
+            rmse: rmse(&mu, &y_test),
+            nlpd: nlpd(&mu, &vv, &y_test),
+        });
+    }
+
+    let mut table = Table::new(&["Kernel", "RMSE", "NLPD"]);
+    for r in &results {
+        table.row(vec![
+            r.kernel.clone(),
+            format!("{:.3}", r.rmse),
+            format!("{:.3}", r.nlpd),
+        ]);
+    }
+    table.print();
+
+    let json = Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("kernel", Json::Str(r.kernel.clone())),
+                    ("rmse", Json::Num(r.rmse)),
+                    ("nlpd", Json::Num(r.nlpd)),
+                ])
+            })
+            .collect(),
+    );
+    write_result("ablation", &json);
+    json
+}

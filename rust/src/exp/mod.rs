@@ -1,0 +1,92 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §4 for the full index). Each driver prints the same
+//! rows/series the paper reports and writes machine-readable JSON to
+//! `results/`.
+
+pub mod ablation;
+pub mod bo;
+pub mod classify;
+pub mod regression;
+pub mod scaling;
+
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// Where result JSON files go (override with GRFGP_RESULTS).
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("GRFGP_RESULTS").unwrap_or_else(|_| "results".into());
+    let p = PathBuf::from(dir);
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+/// Write a result JSON document and report where.
+pub fn write_result(name: &str, value: &Json) {
+    let path = results_dir().join(format!("{name}.json"));
+    match std::fs::write(&path, value.to_string_pretty()) {
+        Ok(()) => println!("[results] wrote {}", path.display()),
+        Err(e) => eprintln!("[results] FAILED to write {}: {e}", path.display()),
+    }
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut out = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                out.push_str(&format!("| {c:>w$} "));
+            }
+            out.push('|');
+            out
+        };
+        println!("{}", line(&self.headers));
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        println!("{}", "-".repeat(total));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// `mean ± sd` cell formatting.
+pub fn pm(mean: f64, sd: f64, digits: usize) -> String {
+    format!("{mean:.digits$} ± {sd:.digits$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2.5".into()]);
+        t.print();
+        assert_eq!(pm(1.23456, 0.1, 2), "1.23 ± 0.10");
+    }
+}

@@ -1,0 +1,195 @@
+//! Experiments: Figure 3 — regression NLPD/RMSE vs number of walkers.
+//!
+//! (a)-(b) Traffic (San Jose substitute): exact diffusion baseline +
+//!         diffusion-shape GRF + fully-learnable GRF, n ∈ {1..8192}.
+//! (c)-(d) Wind (ERA5 substitute): diffusion-shape + fully-learnable
+//!         (exact baseline omitted — O(N^3) at 10K nodes, as in the
+//!         paper).
+
+use crate::datasets::{traffic, wind, RegressionData};
+use crate::exp::{pm, write_result, Table};
+use crate::gp::metrics::{nlpd, rmse};
+use crate::gp::{ExactGp, ExactKernel, GpModel, Hypers, Modulation};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::timer::mean_std;
+use crate::walks::{sample_components, WalkConfig};
+
+/// Evaluate one GRF kernel variant on a dataset.
+fn eval_grf(
+    data: &RegressionData,
+    n_walks: usize,
+    max_len: usize,
+    learnable: bool,
+    train_iters: usize,
+    probes: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let cfg = WalkConfig {
+        n_walks,
+        p_halt: 0.1,
+        max_len,
+        reweight: true,
+        normalize: true,
+        threads: 0,
+    };
+    let comps = sample_components(&data.graph, &cfg, seed);
+    let modulation = if learnable {
+        Modulation::learnable_init(max_len, &mut rng)
+    } else {
+        Modulation::diffusion(1.0, 1.0, max_len)
+    };
+    let hypers = Hypers::new(modulation, 0.1);
+    let mut model = GpModel::new(comps, hypers, &data.train_nodes, &data.train_y);
+    model.solve.probes = probes;
+    model.fit(train_iters, 0.02, &mut rng);
+    let (mean, var) = model.predict(32, &mut rng);
+    let mu: Vec<f64> = data.test_nodes.iter().map(|&i| mean[i]).collect();
+    let vv: Vec<f64> = data.test_nodes.iter().map(|&i| var[i]).collect();
+    (rmse(&mu, &data.test_y), nlpd(&mu, &vv, &data.test_y))
+}
+
+struct Sweep {
+    label: String,
+    walks: usize,
+    rmse: (f64, f64),
+    nlpd: (f64, f64),
+}
+
+fn sweep_kernels(
+    dataset: &str,
+    make_data: &dyn Fn(u64) -> RegressionData,
+    walk_counts: &[usize],
+    seeds: usize,
+    max_len: usize,
+    train_iters: usize,
+    with_exact: bool,
+) -> Vec<Sweep> {
+    let mut out = Vec::new();
+    // Exact diffusion baseline (independent of walk count).
+    if with_exact {
+        let mut rs = Vec::new();
+        let mut ns = Vec::new();
+        for s in 0..seeds as u64 {
+            let data = make_data(s);
+            let mut gp = ExactGp::new(&data.graph, ExactKernel::Diffusion);
+            gp.set_data(&data.train_nodes, &data.train_y);
+            gp.fit(3).expect("exact fit");
+            let (r, nl) = gp
+                .evaluate(&data.test_nodes, &data.test_y)
+                .expect("exact eval");
+            rs.push(r);
+            ns.push(nl);
+        }
+        out.push(Sweep {
+            label: "exact-diffusion".into(),
+            walks: 0,
+            rmse: mean_std(&rs),
+            nlpd: mean_std(&ns),
+        });
+    }
+    for &(learnable, label) in
+        &[(false, "diffusion-shape"), (true, "learnable")]
+    {
+        for &w in walk_counts {
+            let mut rs = Vec::new();
+            let mut ns = Vec::new();
+            for s in 0..seeds as u64 {
+                let data = make_data(s);
+                let (r, nl) =
+                    eval_grf(&data, w, max_len, learnable, train_iters, 6, s + 91);
+                rs.push(r);
+                ns.push(nl);
+            }
+            println!(
+                "[{dataset}] {label} n={w}: RMSE {:.3}±{:.3} NLPD {:.3}±{:.3}",
+                mean_std(&rs).0,
+                mean_std(&rs).1,
+                mean_std(&ns).0,
+                mean_std(&ns).1
+            );
+            out.push(Sweep {
+                label: label.into(),
+                walks: w,
+                rmse: mean_std(&rs),
+                nlpd: mean_std(&ns),
+            });
+        }
+    }
+    out
+}
+
+fn print_and_json(dataset: &str, sweeps: &[Sweep]) -> Json {
+    let mut table = Table::new(&["Kernel", "walks n", "RMSE", "NLPD"]);
+    for s in sweeps {
+        table.row(vec![
+            s.label.clone(),
+            if s.walks == 0 { "-".into() } else { s.walks.to_string() },
+            pm(s.rmse.0, s.rmse.1, 3),
+            pm(s.nlpd.0, s.nlpd.1, 3),
+        ]);
+    }
+    println!("\n--- {dataset}: Figure 3 series ---");
+    table.print();
+    Json::Arr(
+        sweeps
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("kernel", Json::Str(s.label.clone())),
+                    ("walks", Json::Num(s.walks as f64)),
+                    ("rmse_mean", Json::Num(s.rmse.0)),
+                    ("rmse_sd", Json::Num(s.rmse.1)),
+                    ("nlpd_mean", Json::Num(s.nlpd.0)),
+                    ("nlpd_sd", Json::Num(s.nlpd.1)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Figure 3 (a)-(b): traffic.
+pub fn run_traffic(args: &Args) -> Json {
+    println!("=== Traffic regression (Fig. 3 a-b, Fig. 6) ===");
+    let walk_counts =
+        args.usize_list("walk-counts", &[4, 16, 64, 256, 1024]);
+    let seeds = args.usize("seeds", 3);
+    let train_iters = args.usize("train-iters", 60);
+    let max_len = args.usize("max-len", 10);
+    let sweeps = sweep_kernels(
+        "traffic",
+        &|s| traffic::generate(&mut Rng::new(s)),
+        &walk_counts,
+        seeds,
+        max_len,
+        train_iters,
+        true,
+    );
+    let json = print_and_json("traffic", &sweeps);
+    write_result("traffic_regression", &json);
+    json
+}
+
+/// Figure 3 (c)-(d): wind.
+pub fn run_wind(args: &Args) -> Json {
+    println!("=== Wind regression (Fig. 3 c-d, Figs. 7-10) ===");
+    let res = args.f64("res-deg", 5.0);
+    let walk_counts = args.usize_list("walk-counts", &[4, 16, 64, 256]);
+    let seeds = args.usize("seeds", 3);
+    let train_iters = args.usize("train-iters", 40);
+    let max_len = args.usize("max-len", 8);
+    let sweeps = sweep_kernels(
+        "wind",
+        &|s| wind::generate(wind::Altitude::Low, res, &mut Rng::new(s)),
+        &walk_counts,
+        seeds,
+        max_len,
+        train_iters,
+        false, // exact omitted: O(N^3) at 10K nodes (paper does the same)
+    );
+    let json = print_and_json("wind", &sweeps);
+    write_result("wind_regression", &json);
+    json
+}

@@ -1,0 +1,355 @@
+//! Experiment: Table 1 + Figure 2 (+ raw Tables 2/3 and fits Table 4).
+//!
+//! Dense vs sparse GRF implementations on ring graphs of doubling size:
+//! memory footprint, kernel-initialisation time, training time, and
+//! inference time, with power-law exponents fitted in log-log space.
+//!
+//! Paper settings (App. C.2): ring graphs N = 2^5..2^20, 100 walks per
+//! node, p_halt = 0.1, walks truncated at 3 hops, dense limited by
+//! memory (we default the dense cap to 2^11; our dense path is CPU
+//! Cholesky, so its *exponent* is ~3 rather than the paper's
+//! GPU-masked ~2 — the sparse-vs-dense gap direction reproduces).
+
+use crate::exp::{pm, write_result, Table};
+use crate::gp::{GpModel, Hypers, Modulation};
+use crate::graph::generators::ring;
+use crate::linalg::chol::Cholesky;
+use crate::linalg::{dot, Mat};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::powerlaw::fit_powerlaw;
+use crate::util::rng::Rng;
+use crate::util::timer::{mean_std, timeit};
+use crate::walks::{sample_components, WalkConfig};
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Measure {
+    memory_mb: f64,
+    init_s: f64,
+    train_s: f64,
+    infer_s: f64,
+}
+
+/// Smooth periodic signal on the ring + noise (paper App. C.2).
+fn make_signal(n: usize, rng: &mut Rng) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let t = i as f64 / n as f64 * std::f64::consts::TAU;
+            t.sin() + 0.5 * (3.0 * t).cos() + 0.1f64.sqrt() * rng.normal()
+        })
+        .collect()
+}
+
+fn walk_cfg(args: &Args) -> WalkConfig {
+    WalkConfig {
+        n_walks: args.usize("walks", 100),
+        p_halt: args.f64("p-halt", 0.1),
+        max_len: args.usize("max-len", 3),
+        reweight: true,
+        normalize: true,
+        threads: args.usize("threads", 0),
+    }
+}
+
+/// Sparse path: the paper's contribution.
+fn measure_sparse(n: usize, seed: u64, args: &Args) -> Measure {
+    let mut rng = Rng::new(seed);
+    let g = ring(n);
+    let signal = make_signal(n, &mut rng);
+    let train: Vec<usize> = (0..n).step_by(2).collect();
+    let y: Vec<f64> = train.iter().map(|&i| signal[i]).collect();
+    let cfg = walk_cfg(args);
+    let steps = args.usize("train-steps", 10);
+
+    let (comps, init_s) = timeit(|| sample_components(&g, &cfg, seed));
+    let memory_mb = comps.memory_bytes() as f64 / 1e6;
+    let hypers = Hypers::new(
+        Modulation::diffusion(1.0, 1.0, cfg.max_len),
+        0.1,
+    );
+    let mut model = GpModel::new(comps, hypers, &train, &y);
+    model.solve.probes = args.usize("probes", 4);
+    model.solve.max_iters = args.usize("cg-iters", 32);
+    model.solve.tol = 1e-7;
+
+    let (_, train_s) = timeit(|| model.fit(steps, 0.05, &mut rng));
+    let (_, infer_s) = timeit(|| {
+        let _ = model.posterior_mean();
+        for _ in 0..4 {
+            let _ = model.posterior_sample(&mut rng);
+        }
+    });
+    Measure { memory_mb, init_s, train_s, infer_s }
+}
+
+/// Dense baseline: same GRF features, but the kernel approximation is
+/// materialised as a dense N×N matrix and all solves are direct
+/// (Cholesky), as in the paper's "GRFs (Dense)" ablation.
+fn measure_dense(n: usize, seed: u64, args: &Args) -> Measure {
+    let mut rng = Rng::new(seed);
+    let g = ring(n);
+    let signal = make_signal(n, &mut rng);
+    let train: Vec<usize> = (0..n).step_by(2).collect();
+    let is_train: Vec<f64> = (0..n)
+        .map(|i| if i % 2 == 0 { 1.0 } else { 0.0 })
+        .collect();
+    let y_full: Vec<f64> = (0..n)
+        .map(|i| if i % 2 == 0 { signal[i] } else { 0.0 })
+        .collect();
+    let cfg = walk_cfg(args);
+    let steps = args.usize("train-steps", 10);
+    let probes = args.usize("probes", 4);
+
+    // Kernel init: walks + DENSE materialisation of K̂ = Φ Φᵀ.
+    let (comps, walk_s) = timeit(|| sample_components(&g, &cfg, seed));
+    let mut hypers = Hypers::new(
+        Modulation::diffusion(1.0, 1.0, cfg.max_len),
+        0.1,
+    );
+    let mut prepared = comps.prepare();
+    let c_t: Vec<crate::sparse::Csr> =
+        comps.c.iter().map(|c| c.transpose()).collect();
+    let materialise = |prepared: &mut crate::walks::CombinedFeatures,
+                       hypers: &Hypers| {
+        let phi = prepared.combine_into(&hypers.modulation.coeffs()).clone();
+        let phi_d = Mat::from_rows(&phi.to_dense());
+        (phi.clone(), phi_d.matmul_par(&phi_d.transpose(), 0))
+    };
+    let ((phi0, k0), mat_s) = timeit(|| materialise(&mut prepared, &hypers));
+    let memory_mb = (k0.memory_bytes() + phi0.to_dense().len()) as f64 / 1e6;
+    let init_s = walk_s + mat_s;
+
+    // Training: Adam on the LML with DENSE Cholesky solves.
+    let mut opt = crate::gp::adam::Adam::new(hypers.n_params(), 0.05);
+    let mut phi = phi0;
+    let mut k = k0;
+    let (_, train_s) = timeit(|| {
+        for _ in 0..steps {
+            let sigma2 = hypers.sigma_n2();
+            let mut h = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    h[(i, j)] = is_train[i] * k[(i, j)] * is_train[j];
+                }
+                h[(i, i)] += sigma2;
+            }
+            let Ok(ch) = Cholesky::new(&h) else { return };
+            let alpha = ch.solve(&y_full);
+            // Hutchinson probes with dense solves.
+            let mut solves = vec![alpha.clone()];
+            let mut rhs = vec![y_full.clone()];
+            for _ in 0..probes {
+                let z: Vec<f64> = (0..n)
+                    .map(|i| {
+                        if is_train[i] == 1.0 {
+                            if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 }
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                solves.push(ch.solve(&z));
+                rhs.push(z);
+            }
+            // Same projection identities as the sparse path.
+            let phi_t = phi.transpose();
+            let n_coeff = comps.c.len();
+            let mut grad_f = vec![0.0; n_coeff];
+            let proj_phi: Vec<Vec<f64>> =
+                solves.iter().map(|v| phi_t.matvec(v)).collect();
+            let proj_phi_rhs: Vec<Vec<f64>> =
+                rhs.iter().map(|v| phi_t.matvec(v)).collect();
+            for l in 0..n_coeff {
+                let quad =
+                    2.0 * dot(&c_t[l].matvec(&solves[0]), &proj_phi[0]);
+                let mut tr = 0.0;
+                for s in 1..=probes {
+                    tr += dot(&c_t[l].matvec(&solves[s]), &proj_phi_rhs[s])
+                        + dot(&proj_phi[s], &c_t[l].matvec(&rhs[s]));
+                }
+                grad_f[l] = 0.5 * quad - 0.5 * tr / probes.max(1) as f64;
+            }
+            let quad_n = sigma2 * dot(&solves[0], &solves[0]);
+            let mut tr_n = 0.0;
+            for s in 1..=probes {
+                tr_n += dot(&solves[s], &rhs[s]);
+            }
+            let g_noise =
+                0.5 * quad_n - 0.5 * sigma2 * tr_n / probes.max(1) as f64;
+            let jac = hypers.modulation.jacobian();
+            let mut grad: Vec<f64> =
+                jac.iter().map(|row| dot(row, &grad_f)).collect();
+            grad.push(g_noise);
+            let mut p = hypers.params();
+            opt.step_ascent(&mut p, &grad);
+            hypers.set_params(&p);
+            let (np, nk) = materialise(&mut prepared, &hypers);
+            phi = np;
+            k = nk;
+        }
+    });
+
+    // Inference: dense posterior mean + variance on the test half.
+    let (_, infer_s) = timeit(|| {
+        let sigma2 = hypers.sigma_n2();
+        let mut h = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                h[(i, j)] = is_train[i] * k[(i, j)] * is_train[j];
+            }
+            h[(i, i)] += sigma2;
+        }
+        let Ok(ch) = Cholesky::new(&h) else { return };
+        let alpha = ch.solve(&y_full);
+        let malpha: Vec<f64> =
+            (0..n).map(|i| is_train[i] * alpha[i]).collect();
+        let _mean = k.matvec(&malpha);
+        // Posterior covariance diag on the test half.
+        for i in (1..n).step_by(2).take(256) {
+            let k_i: Vec<f64> =
+                (0..n).map(|j| is_train[j] * k[(i, j)]).collect();
+            let w = ch.solve(&k_i);
+            let _var = k[(i, i)] - dot(&k_i, &w) + sigma2;
+        }
+    });
+    Measure { memory_mb, init_s, train_s, infer_s }
+}
+
+pub fn run(args: &Args) -> Json {
+    let sparse_pows =
+        args.usize_list("sparse-pows", &[5, 6, 7, 8, 9, 10, 11, 12, 13, 14]);
+    let dense_pows = args.usize_list("dense-pows", &[5, 6, 7, 8, 9, 10, 11]);
+    let seeds = args.usize("seeds", 3);
+
+    println!("=== Scaling experiment (Table 1 / Fig. 2 / Tables 2-4) ===");
+    let mut raw = Vec::new(); // (variant, n, field, mean, sd)
+    let mut per_variant: Vec<(&str, Vec<usize>, Vec<[Vec<f64>; 4]>)> = Vec::new();
+
+    for (variant, pows) in [("sparse", &sparse_pows), ("dense", &dense_pows)] {
+        let mut table = Table::new(&[
+            "Graph Size",
+            "Memory (MB)",
+            "Kernel init (s)",
+            "Training (s)",
+            "Inference (s)",
+        ]);
+        let mut collected = Vec::new();
+        let sizes: Vec<usize> = pows.iter().map(|&p| 1usize << p).collect();
+        for &n in &sizes {
+            let mut fields: [Vec<f64>; 4] = Default::default();
+            for seed in 0..seeds as u64 {
+                let m = if variant == "sparse" {
+                    measure_sparse(n, seed, args)
+                } else {
+                    measure_dense(n, seed, args)
+                };
+                fields[0].push(m.memory_mb);
+                fields[1].push(m.init_s);
+                fields[2].push(m.train_s);
+                fields[3].push(m.infer_s);
+            }
+            let stats: Vec<(f64, f64)> =
+                fields.iter().map(|f| mean_std(f)).collect();
+            table.row(vec![
+                n.to_string(),
+                pm(stats[0].0, stats[0].1, 3),
+                pm(stats[1].0, stats[1].1, 3),
+                pm(stats[2].0, stats[2].1, 3),
+                pm(stats[3].0, stats[3].1, 3),
+            ]);
+            for (fi, name) in
+                ["memory_mb", "init_s", "train_s", "infer_s"].iter().enumerate()
+            {
+                raw.push((variant, n, *name, stats[fi].0, stats[fi].1));
+            }
+            collected.push(fields);
+        }
+        println!(
+            "\n--- GRFs ({}) — Table {} raw measurements ---",
+            variant,
+            if variant == "dense" { 2 } else { 3 }
+        );
+        table.print();
+        per_variant.push((variant, sizes, collected));
+    }
+
+    // Table 4 / Table 1: power-law fits on the asymptotic tail.
+    println!("\n--- Table 1 / Table 4: fitted scaling exponents y ~ a N^b ---");
+    let mut fit_table = Table::new(&["Quantity", "Kernel", "a", "b", "95% CI (b)", "R2"]);
+    let mut fits_json = Vec::new();
+    for (variant, sizes, collected) in &per_variant {
+        // Fit on the top half of sizes (paper: dense N>=2^9, sparse N>=2^15).
+        let start = sizes.len() / 2;
+        for (fi, fname) in ["Memory (MB)", "Kernel init time (s)", "Training time (s)", "Inference time (s)"]
+            .iter()
+            .enumerate()
+        {
+            let xs: Vec<f64> =
+                sizes[start..].iter().map(|&n| n as f64).collect();
+            let ys: Vec<f64> = collected[start..]
+                .iter()
+                .map(|f| mean_std(&f[fi]).0)
+                .collect();
+            if xs.len() < 2 {
+                continue;
+            }
+            let fit = fit_powerlaw(&xs, &ys);
+            fit_table.row(vec![
+                fname.to_string(),
+                variant.to_string(),
+                format!("{:.3e}", fit.a),
+                format!("{:.2}", fit.b),
+                format!("[{:.2}, {:.2}]", fit.b - fit.b_ci95, fit.b + fit.b_ci95),
+                format!("{:.3}", fit.r2),
+            ]);
+            fits_json.push(Json::obj(vec![
+                ("quantity", Json::Str(fname.to_string())),
+                ("variant", Json::Str(variant.to_string())),
+                ("a", Json::Num(fit.a)),
+                ("b", Json::Num(fit.b)),
+                ("b_ci95", Json::Num(fit.b_ci95)),
+                ("r2", Json::Num(fit.r2)),
+            ]));
+        }
+    }
+    fit_table.print();
+
+    // Headline: dense/sparse wall-clock ratio at the largest common size.
+    let common = per_variant[1].1.last().cloned().unwrap_or(0);
+    if let Some(si) = per_variant[0].1.iter().position(|&n| n == common) {
+        let di = per_variant[1].1.len() - 1;
+        let sparse_total: f64 = (1..4)
+            .map(|fi| mean_std(&per_variant[0].2[si][fi]).0)
+            .sum();
+        let dense_total: f64 = (1..4)
+            .map(|fi| mean_std(&per_variant[1].2[di][fi]).0)
+            .sum();
+        println!(
+            "\nTotal wall-clock at N={common}: dense {dense_total:.2}s vs \
+             sparse {sparse_total:.2}s  → {:.1}x speedup",
+            dense_total / sparse_total.max(1e-9)
+        );
+    }
+
+    let json = Json::obj(vec![
+        (
+            "raw",
+            Json::Arr(
+                raw.iter()
+                    .map(|(v, n, f, m, s)| {
+                        Json::obj(vec![
+                            ("variant", Json::Str(v.to_string())),
+                            ("n", Json::Num(*n as f64)),
+                            ("field", Json::Str(f.to_string())),
+                            ("mean", Json::Num(*m)),
+                            ("sd", Json::Num(*s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("fits", Json::Arr(fits_json)),
+    ]);
+    write_result("scaling", &json);
+    json
+}

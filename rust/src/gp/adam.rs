@@ -1,0 +1,79 @@
+//! Adam optimiser (Kingma & Ba) — the paper trains all hyperparameters
+//! with Adam (App. C.3/C.4: lr 0.01, up to 1000 iterations).
+
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f64) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+
+    /// Ascent step: params += step(grad) maximises the objective
+    /// (our LML is maximised, so we pass the gradient directly).
+    pub fn step_ascent(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] += self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    /// Descent step (minimisation).
+    pub fn step_descent(&mut self, params: &mut [f64], grad: &[f64]) {
+        let neg: Vec<f64> = grad.iter().map(|g| -g).collect();
+        self.step_ascent(params, &neg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimises_quadratic() {
+        // f(x) = (x0-3)^2 + 2(x1+1)^2
+        let mut x = vec![0.0, 0.0];
+        let mut opt = Adam::new(2, 0.1);
+        for _ in 0..500 {
+            let g = vec![2.0 * (x[0] - 3.0), 4.0 * (x[1] + 1.0)];
+            opt.step_descent(&mut x, &g);
+        }
+        assert!((x[0] - 3.0).abs() < 1e-2, "{x:?}");
+        assert!((x[1] + 1.0).abs() < 1e-2, "{x:?}");
+    }
+
+    #[test]
+    fn ascent_maximises() {
+        // f(x) = -(x-2)^2, grad = -2(x-2)
+        let mut x = vec![0.0];
+        let mut opt = Adam::new(1, 0.05);
+        for _ in 0..800 {
+            let g = vec![-2.0 * (x[0] - 2.0)];
+            opt.step_ascent(&mut x, &g);
+        }
+        assert!((x[0] - 2.0).abs() < 1e-2, "{x:?}");
+    }
+}

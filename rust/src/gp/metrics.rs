@@ -1,0 +1,91 @@
+//! Evaluation metrics: RMSE and negative log predictive density (NLPD),
+//! exactly as defined in App. C.4.
+
+/// Root mean squared error between predictions and targets.
+pub fn rmse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    assert!(!pred.is_empty());
+    let mse: f64 = pred
+        .iter()
+        .zip(target)
+        .map(|(p, t)| (p - t).powi(2))
+        .sum::<f64>()
+        / pred.len() as f64;
+    mse.sqrt()
+}
+
+/// Gaussian NLPD: -(1/N) Σ log N(y_i | mu_i, var_i).
+pub fn nlpd(mu: &[f64], var: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(mu.len(), y.len());
+    assert_eq!(var.len(), y.len());
+    assert!(!mu.is_empty());
+    let ln2pi = (2.0 * std::f64::consts::PI).ln();
+    let total: f64 = mu
+        .iter()
+        .zip(var)
+        .zip(y)
+        .map(|((m, v), t)| {
+            let v = v.max(1e-12);
+            0.5 * (ln2pi + v.ln() + (t - m).powi(2) / v)
+        })
+        .sum();
+    total / mu.len() as f64
+}
+
+/// Simple regret: best-so-far gap to the optimum (BO metric, §4.3).
+pub fn simple_regret_curve(observed: &[f64], optimum: f64) -> Vec<f64> {
+    let mut best = f64::NEG_INFINITY;
+    observed
+        .iter()
+        .map(|&v| {
+            best = best.max(v);
+            optimum - best
+        })
+        .collect()
+}
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[usize], target: &[usize]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    let hits = pred.iter().zip(target).filter(|(a, b)| a == b).count();
+    hits as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_basics() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nlpd_is_minimised_by_truth() {
+        // For fixed var, NLPD at mu=y is lower than mu != y.
+        let y = [1.0, -2.0];
+        let var = [0.5, 0.5];
+        assert!(nlpd(&[1.0, -2.0], &var, &y) < nlpd(&[0.0, 0.0], &var, &y));
+        // Calibration: for standard normal residuals, NLPD ~ 0.5*(ln 2pi + 1).
+        let v = nlpd(&[0.0], &[1.0], &[1.0]);
+        assert!((v - 0.5 * ((2.0 * std::f64::consts::PI).ln() + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regret_monotone_nonincreasing() {
+        let r = simple_regret_curve(&[0.1, 0.5, 0.3, 0.9], 1.0);
+        let expect = [0.9, 0.5, 0.5, 0.1];
+        for (a, b) in r.iter().zip(expect) {
+            assert!((a - b).abs() < 1e-12, "{r:?}");
+        }
+        for w in r.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        assert_eq!(accuracy(&[1, 2, 3], &[1, 0, 3]), 2.0 / 3.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Gaussian-process layer: sparse GRF-GP (the paper's contribution) and
+//! exact dense baselines, with the full three-stage workflow of §3.2.
+
+pub mod adam;
+pub mod exact;
+pub mod metrics;
+pub mod model;
+pub mod modulation;
+pub mod woodbury;
+
+pub use exact::{ExactGp, ExactKernel};
+pub use model::{GpModel, SolveConfig, TrainStep};
+pub use modulation::{Hypers, Modulation};

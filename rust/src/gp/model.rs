@@ -1,0 +1,542 @@
+//! The sparse GRF-GP model: the paper's three-stage workflow
+//! (*kernel initialisation → hyperparameter learning → posterior
+//! inference*, §3.2) over the component-matrix representation.
+//!
+//! Everything runs through the masked gram operator
+//! `A(v) = m Φ Φᵀ m v + σ² v` and CG (Lemma 1: `O(N^{3/2})`).
+
+use crate::gp::adam::Adam;
+use crate::gp::modulation::Hypers;
+use crate::linalg::cg::{cg_solve, CgStats};
+use crate::linalg::dot;
+use crate::sparse::Csr;
+use crate::util::parallel::num_threads;
+use crate::util::rng::Rng;
+use crate::walks::{CombinedFeatures, WalkComponents};
+
+/// Solver settings shared by training and inference.
+#[derive(Clone, Debug)]
+pub struct SolveConfig {
+    pub tol: f64,
+    pub max_iters: usize,
+    /// Hutchinson probes per gradient step (paper Eq. 10's S).
+    pub probes: usize,
+    pub threads: usize,
+}
+
+impl Default for SolveConfig {
+    fn default() -> Self {
+        SolveConfig { tol: 1e-6, max_iters: 256, probes: 8, threads: 0 }
+    }
+}
+
+impl SolveConfig {
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            num_threads()
+        } else {
+            self.threads
+        }
+    }
+}
+
+/// Per-training-step diagnostics.
+#[derive(Clone, Debug)]
+pub struct TrainStep {
+    pub step: usize,
+    pub grad_norm: f64,
+    pub cg_iters: usize,
+    pub sigma_n2: f64,
+}
+
+/// Sparse GRF Gaussian process.
+pub struct GpModel {
+    /// Cached walk components + union pattern for fast recombination.
+    pub features: CombinedFeatures,
+    pub hypers: Hypers,
+    /// {0,1} training mask over all N nodes.
+    pub mask: Vec<f64>,
+    /// Observations embedded in R^N (zero off-train).
+    pub y: Vec<f64>,
+    pub solve: SolveConfig,
+    /// Transposes of each C_l (for modulation gradients).
+    c_t: Vec<Csr>,
+    /// Current Φ and Φᵀ (refreshed after each hyperparameter change).
+    phi: Csr,
+    phi_t: Csr,
+    /// Scratch buffers for the masked gram operator — the CG hot path
+    /// must not allocate per iteration (EXPERIMENTS.md §Perf).
+    scratch: std::cell::RefCell<(Vec<f64>, Vec<f64>, Vec<f64>)>,
+}
+
+impl GpModel {
+    /// Build from walk components. `train_nodes` and `train_y` define
+    /// the observed data; all other nodes are latent.
+    pub fn new(
+        components: WalkComponents,
+        hypers: Hypers,
+        train_nodes: &[usize],
+        train_y: &[f64],
+    ) -> GpModel {
+        assert_eq!(train_nodes.len(), train_y.len());
+        assert_eq!(
+            hypers.modulation.n_coeffs(),
+            components.n_coeffs(),
+            "modulation length must equal l_max+1 of the walk components"
+        );
+        let n = components.n();
+        let mut mask = vec![0.0; n];
+        let mut y = vec![0.0; n];
+        for (&i, &v) in train_nodes.iter().zip(train_y) {
+            mask[i] = 1.0;
+            y[i] = v;
+        }
+        let c_t = components.c.iter().map(|c| c.transpose()).collect();
+        let mut features = components.prepare();
+        let phi = features.combine_into(&hypers.modulation.coeffs()).clone();
+        let phi_t = phi.transpose();
+        GpModel {
+            features,
+            hypers,
+            mask,
+            y,
+            solve: SolveConfig::default(),
+            c_t,
+            phi,
+            phi_t,
+            scratch: std::cell::RefCell::new((
+                vec![0.0; n],
+                vec![0.0; n],
+                vec![0.0; n],
+            )),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.mask.len()
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.mask.iter().filter(|&&m| m == 1.0).count()
+    }
+
+    /// Refresh Φ after a hyperparameter update.
+    fn refresh_features(&mut self) {
+        let f = self.hypers.modulation.coeffs();
+        self.phi = self.features.combine_into(&f).clone();
+        self.phi_t = self.phi.transpose();
+    }
+
+    /// Replace observations (BO adds one point per step).
+    pub fn set_data(&mut self, train_nodes: &[usize], train_y: &[f64]) {
+        self.mask.iter_mut().for_each(|m| *m = 0.0);
+        self.y.iter_mut().for_each(|v| *v = 0.0);
+        for (&i, &v) in train_nodes.iter().zip(train_y) {
+            self.mask[i] = 1.0;
+            self.y[i] = v;
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Masked gram operator
+    // ------------------------------------------------------------------
+
+    /// y = m Φ Φᵀ m x + σ² x.
+    fn apply_h(&self, x: &[f64], out: &mut [f64]) {
+        let n = self.n();
+        let threads = self.solve.effective_threads();
+        let sigma2 = self.hypers.sigma_n2();
+        if threads > 1 && n > 4096 {
+            let mx: Vec<f64> =
+                self.mask.iter().zip(x).map(|(m, v)| m * v).collect();
+            let mid = self.phi_t.matvec_par(&mx, threads);
+            let prod = self.phi.matvec_par(&mid, threads);
+            for i in 0..n {
+                out[i] = self.mask[i] * prod[i] + sigma2 * x[i];
+            }
+        } else {
+            // Allocation-free path through reusable scratch buffers.
+            let mut guard = self.scratch.borrow_mut();
+            let (mx, mid, prod) = &mut *guard;
+            for i in 0..n {
+                mx[i] = self.mask[i] * x[i];
+            }
+            self.phi_t.matvec_into(mx, mid);
+            self.phi.matvec_into(mid, prod);
+            for i in 0..n {
+                out[i] = self.mask[i] * prod[i] + sigma2 * x[i];
+            }
+        }
+    }
+
+    /// Kernel product y = Φ (Φᵀ x) (no mask/noise).
+    pub fn apply_kernel(&self, x: &[f64]) -> Vec<f64> {
+        let threads = self.solve.effective_threads();
+        if threads > 1 && self.n() > 4096 {
+            let mid = self.phi_t.matvec_par(x, threads);
+            self.phi.matvec_par(&mid, threads)
+        } else {
+            self.phi.matvec(&self.phi_t.matvec(x))
+        }
+    }
+
+    /// Solve (m K m + σ² I) v = b by CG.
+    pub fn solve_system(&self, b: &[f64]) -> (Vec<f64>, CgStats) {
+        cg_solve(
+            |x, out| self.apply_h(x, out),
+            b,
+            None,
+            self.solve.tol,
+            self.solve.max_iters,
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // Hyperparameter learning (paper Eq. 8-11)
+    // ------------------------------------------------------------------
+
+    /// Stochastic LML gradient w.r.t. the packed parameter vector
+    /// [modulation params..., log σ²].
+    ///
+    /// ∇L = ½ αᵀ (∂H/∂θ) α − ½ tr(H⁻¹ ∂H/∂θ),   α = H⁻¹ y,
+    /// with the trace estimated by `probes` Rademacher probes z_s
+    /// (restricted to the training mask) and solves v_s = H⁻¹ z_s.
+    ///
+    /// ∂H/∂f_l = m (C_l Φᵀ + Φ C_lᵀ) m, so each term reduces to dot
+    /// products of Φᵀu and C_lᵀu — no kernel materialisation.
+    pub fn lml_grad(&self, rng: &mut Rng) -> (Vec<f64>, TrainStep) {
+        let n = self.n();
+        let s = self.solve.probes;
+        let sigma2 = self.hypers.sigma_n2();
+        let n_coeff = self.features.components.n_coeffs();
+
+        // --- batch of solves: [y, z_1..z_S] -------------------------------
+        let mut rhs: Vec<Vec<f64>> = Vec::with_capacity(s + 1);
+        rhs.push(self.y.clone());
+        for _ in 0..s {
+            let z: Vec<f64> = self
+                .mask
+                .iter()
+                .map(|&m| if m == 1.0 { if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 } } else { 0.0 })
+                .collect();
+            rhs.push(z);
+        }
+        let mut solves = Vec::with_capacity(s + 1);
+        let mut total_cg = 0;
+        for b in &rhs {
+            let (v, st) = self.solve_system(b);
+            total_cg += st.iterations;
+            solves.push(v);
+        }
+        let alpha = &solves[0];
+
+        // --- per-vector projections: Φᵀ u and C_lᵀ u ----------------------
+        // All vectors are already mask-supported (CG preserves the mask
+        // support since rhs are masked).
+        let proj_phi: Vec<Vec<f64>> =
+            solves.iter().map(|v| self.phi_t.matvec(v)).collect();
+        let proj_phi_rhs: Vec<Vec<f64>> =
+            rhs.iter().map(|v| self.phi_t.matvec(v)).collect();
+        let proj_c: Vec<Vec<Vec<f64>>> = self
+            .c_t
+            .iter()
+            .map(|ct| solves.iter().map(|v| ct.matvec(v)).collect())
+            .collect();
+        let proj_c_rhs: Vec<Vec<Vec<f64>>> = self
+            .c_t
+            .iter()
+            .map(|ct| rhs.iter().map(|v| ct.matvec(v)).collect())
+            .collect();
+
+        // --- gradient w.r.t. modulation coefficients ----------------------
+        // quad_l  = αᵀ ∂H α     = 2 (C_lᵀα)·(Φᵀα)
+        // trace_l ≈ (1/S) Σ_s [ (C_lᵀ v_s)·(Φᵀ z_s) + (Φᵀ v_s)·(C_lᵀ z_s) ]
+        let mut grad_f = vec![0.0; n_coeff];
+        for l in 0..n_coeff {
+            let quad = 2.0 * dot(&proj_c[l][0], &proj_phi[0]);
+            let mut tr = 0.0;
+            for si in 1..=s {
+                tr += dot(&proj_c[l][si], &proj_phi_rhs[si])
+                    + dot(&proj_phi[si], &proj_c_rhs[l][si]);
+            }
+            let tr = if s > 0 { tr / s as f64 } else { 0.0 };
+            grad_f[l] = 0.5 * quad - 0.5 * tr;
+        }
+
+        // --- gradient w.r.t. log σ² ---------------------------------------
+        // ∂H/∂logσ² = σ² I (on the train block):
+        // quad = σ² αᵀα;  trace ≈ σ²/S Σ v_s·z_s.
+        let quad_n = sigma2 * dot(alpha, alpha);
+        let mut tr_n = 0.0;
+        for si in 1..=s {
+            tr_n += dot(&solves[si], &rhs[si]);
+        }
+        let tr_n = if s > 0 { sigma2 * tr_n / s as f64 } else { 0.0 };
+        let grad_log_noise = 0.5 * quad_n - 0.5 * tr_n;
+
+        // --- chain rule to packed params ----------------------------------
+        let jac = self.hypers.modulation.jacobian();
+        let mut grad = Vec::with_capacity(self.hypers.n_params());
+        for row in &jac {
+            grad.push(dot(row, &grad_f));
+        }
+        grad.push(grad_log_noise);
+
+        let gnorm = grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+        let _ = n;
+        (
+            grad,
+            TrainStep {
+                step: 0,
+                grad_norm: gnorm,
+                cg_iters: total_cg,
+                sigma_n2: sigma2,
+            },
+        )
+    }
+
+    /// Maximise the LML with Adam for `steps` iterations.
+    pub fn fit(&mut self, steps: usize, lr: f64, rng: &mut Rng) -> Vec<TrainStep> {
+        let mut opt = Adam::new(self.hypers.n_params(), lr);
+        let mut log = Vec::with_capacity(steps);
+        for step in 0..steps {
+            let (grad, mut info) = self.lml_grad(rng);
+            let mut p = self.hypers.params();
+            opt.step_ascent(&mut p, &grad);
+            self.hypers.set_params(&p);
+            self.refresh_features();
+            info.step = step;
+            log.push(info);
+        }
+        log
+    }
+
+    // ------------------------------------------------------------------
+    // Posterior inference (paper Eq. 12, pathwise conditioning)
+    // ------------------------------------------------------------------
+
+    /// Posterior mean at every node: K (m α) with α = H⁻¹ (m y).
+    pub fn posterior_mean(&self) -> (Vec<f64>, CgStats) {
+        let rhs: Vec<f64> =
+            self.mask.iter().zip(&self.y).map(|(m, y)| m * y).collect();
+        let (alpha, st) = self.solve_system(&rhs);
+        let malpha: Vec<f64> =
+            self.mask.iter().zip(&alpha).map(|(m, a)| m * a).collect();
+        (self.apply_kernel(&malpha), st)
+    }
+
+    /// One pathwise-conditioning sample from the posterior over all
+    /// nodes: g + K m H⁻¹ m (y − g(x) − ε),  g = Φ w.
+    pub fn posterior_sample(&self, rng: &mut Rng) -> Vec<f64> {
+        let n = self.n();
+        let w = rng.normal_vec(self.phi.n_cols);
+        let threads = self.solve.effective_threads();
+        let g = if threads > 1 && n > 4096 {
+            self.phi.matvec_par(&w, threads)
+        } else {
+            self.phi.matvec(&w)
+        };
+        let sigma = self.hypers.sigma_n2().sqrt();
+        let rhs: Vec<f64> = (0..n)
+            .map(|i| self.mask[i] * (self.y[i] - g[i] - sigma * rng.normal()))
+            .collect();
+        let (alpha, _) = self.solve_system(&rhs);
+        let malpha: Vec<f64> =
+            self.mask.iter().zip(&alpha).map(|(m, a)| m * a).collect();
+        let corr = self.apply_kernel(&malpha);
+        (0..n).map(|i| g[i] + corr[i]).collect()
+    }
+
+    /// Predictive mean + variance at every node, variance estimated
+    /// from `n_samples` pathwise draws (includes observation noise).
+    pub fn predict(&self, n_samples: usize, rng: &mut Rng) -> (Vec<f64>, Vec<f64>) {
+        let n = self.n();
+        let (mean, _) = self.posterior_mean();
+        let mut m2 = vec![0.0; n];
+        for _ in 0..n_samples {
+            let s = self.posterior_sample(rng);
+            for i in 0..n {
+                let d = s[i] - mean[i];
+                m2[i] += d * d;
+            }
+        }
+        let sigma2 = self.hypers.sigma_n2();
+        let var: Vec<f64> = m2
+            .iter()
+            .map(|v| v / n_samples.max(1) as f64 + sigma2)
+            .collect();
+        (mean, var)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::modulation::Modulation;
+    use crate::graph::generators;
+    use crate::linalg::chol::Cholesky;
+    use crate::linalg::Mat;
+    use crate::walks::{sample_components, WalkConfig};
+
+    /// Exact train-block LML (paper Eq. 8) via dense algebra — oracle.
+    fn dense_lml_of(m: &GpModel) -> f64 {
+        let n = m.n();
+        let phi = Mat::from_rows(&m.phi.to_dense());
+        let k = phi.matmul(&phi.transpose());
+        let train: Vec<usize> = (0..n).filter(|&i| m.mask[i] == 1.0).collect();
+        let t = train.len();
+        let mut h = Mat::zeros(t, t);
+        for (a, &i) in train.iter().enumerate() {
+            for (b, &j) in train.iter().enumerate() {
+                h[(a, b)] = k[(i, j)];
+            }
+            h[(a, a)] += m.hypers.sigma_n2();
+        }
+        let yv: Vec<f64> = train.iter().map(|&i| m.y[i]).collect();
+        let ch = Cholesky::new(&h).unwrap();
+        let alpha = ch.solve(&yv);
+        -0.5 * dot(&yv, &alpha) - 0.5 * ch.logdet()
+            - 0.5 * t as f64 * (2.0 * std::f64::consts::PI).ln()
+    }
+
+    fn small_model(seed: u64) -> (GpModel, Mat) {
+        let g = generators::grid2d(5, 5);
+        let cfg = WalkConfig { n_walks: 300, max_len: 4, threads: 1, ..Default::default() };
+        let comps = sample_components(&g, &cfg, seed);
+        let mut rng = Rng::new(seed);
+        let train: Vec<usize> = rng.sample_without_replacement(25, 12);
+        let y: Vec<f64> = train.iter().map(|&i| (i as f64 * 0.3).sin()).collect();
+        let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 4), 0.1);
+        let model = GpModel::new(comps, hypers, &train, &y);
+        // Dense K̂ for oracles.
+        let phi = Mat::from_rows(&model.phi.to_dense());
+        let k = phi.matmul(&phi.transpose());
+        (model, k)
+    }
+
+    #[test]
+    fn posterior_mean_matches_dense_solve() {
+        let (model, k) = small_model(7);
+        let n = model.n();
+        // Dense oracle: mu = K m (m K m + s I)^{-1} m y.
+        let sigma2 = model.hypers.sigma_n2();
+        let mut h = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                h[(i, j)] = model.mask[i] * k[(i, j)] * model.mask[j];
+            }
+            h[(i, i)] += sigma2;
+        }
+        let rhs: Vec<f64> =
+            (0..n).map(|i| model.mask[i] * model.y[i]).collect();
+        let alpha = Cholesky::new(&h).unwrap().solve(&rhs);
+        let malpha: Vec<f64> =
+            (0..n).map(|i| model.mask[i] * alpha[i]).collect();
+        let expect = k.matvec(&malpha);
+        let (mean, st) = model.posterior_mean();
+        assert!(st.converged, "{st:?}");
+        for i in 0..n {
+            assert!(
+                (mean[i] - expect[i]).abs() < 1e-4,
+                "node {i}: {} vs {}",
+                mean[i],
+                expect[i]
+            );
+        }
+    }
+
+    #[test]
+    fn lml_grad_matches_finite_difference() {
+        // Exact-LML finite difference via dense Cholesky vs our
+        // stochastic gradient with MANY probes.
+        let (mut model, _) = small_model(3);
+        model.solve.probes = 400;
+        model.solve.tol = 1e-10;
+        model.solve.max_iters = 2000;
+        let mut rng = Rng::new(11);
+        let (grad, _) = model.lml_grad(&mut rng);
+        let dense_lml = dense_lml_of;
+        let p0 = model.hypers.params();
+        let eps = 1e-5;
+        for pi in 0..p0.len() {
+            let mut mp = model.hypers.clone();
+            let mut pv = p0.clone();
+            pv[pi] += eps;
+            mp.set_params(&pv);
+            let mut m_plus = GpModel::new(
+                model.features.components.clone(),
+                mp,
+                &(0..model.n()).filter(|&i| model.mask[i] == 1.0).collect::<Vec<_>>(),
+                &(0..model.n())
+                    .filter(|&i| model.mask[i] == 1.0)
+                    .map(|i| model.y[i])
+                    .collect::<Vec<_>>(),
+            );
+            m_plus.refresh_features();
+            let f_plus = dense_lml(&m_plus);
+            let f_zero = dense_lml(&model);
+            let fd = (f_plus - f_zero) / eps;
+            assert!(
+                (grad[pi] - fd).abs() < 0.05 * (1.0 + fd.abs()),
+                "param {pi}: stochastic {} vs fd {fd}",
+                grad[pi]
+            );
+        }
+    }
+
+    #[test]
+    fn fit_increases_exact_lml() {
+        let (mut model, _) = small_model(5);
+        let mut rng = Rng::new(0);
+        let before = dense_lml_of(&model);
+        model.fit(60, 0.05, &mut rng);
+        let after = dense_lml_of(&model);
+        assert!(
+            after > before,
+            "Adam on the stochastic LML gradient should increase the \
+             exact LML: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn posterior_sample_mean_converges_to_posterior_mean() {
+        let (model, _) = small_model(9);
+        let mut rng = Rng::new(4);
+        let n = model.n();
+        let (mean, _) = model.posterior_mean();
+        let reps = 250;
+        let mut acc = vec![0.0; n];
+        for _ in 0..reps {
+            let s = model.posterior_sample(&mut rng);
+            for i in 0..n {
+                acc[i] += s[i];
+            }
+        }
+        let mut max_err: f64 = 0.0;
+        for i in 0..n {
+            max_err = max_err.max((acc[i] / reps as f64 - mean[i]).abs());
+        }
+        assert!(max_err < 0.3, "max_err={max_err}");
+    }
+
+    #[test]
+    fn predict_variance_shrinks_at_train_nodes() {
+        let (model, _) = small_model(13);
+        let mut rng = Rng::new(8);
+        let (_, var) = model.predict(64, &mut rng);
+        let train_var: f64 = (0..model.n())
+            .filter(|&i| model.mask[i] == 1.0)
+            .map(|i| var[i])
+            .sum::<f64>()
+            / model.n_train() as f64;
+        let test_var: f64 = (0..model.n())
+            .filter(|&i| model.mask[i] == 0.0)
+            .map(|i| var[i])
+            .sum::<f64>()
+            / (model.n() - model.n_train()) as f64;
+        assert!(
+            train_var < test_var,
+            "variance should shrink at observed nodes: {train_var} vs {test_var}"
+        );
+    }
+}

@@ -1,0 +1,130 @@
+//! JLT + Woodbury alternative solver (paper App. B).
+//!
+//! Project the GRF features through a Gaussian Johnson–Lindenstrauss
+//! map G ∈ R^{N×m}: K₁ = ΦG/√m, then solve
+//! (K̂ + σ²I)⁻¹ b ≈ (1/σ²)[I − U (I_m + UᵀU)⁻¹ Uᵀ] b,  U = K₁/σ.
+//! Trades sparsity for an m×m dense solve: O(nnz(Φ)·m + N m² + m³).
+
+use crate::linalg::chol::Cholesky;
+use crate::linalg::Mat;
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Precomputed JLT/Woodbury solver for one (Φ, σ²).
+pub struct WoodburySolver {
+    /// U = Φ G / (√m σ), dense N×m.
+    u: Mat,
+    /// Cholesky of (I_m + UᵀU).
+    small: Cholesky,
+    sigma2: f64,
+}
+
+impl WoodburySolver {
+    /// Build with sketch dimension `m` (paper: logarithmic in N suffices
+    /// for JL-type accuracy).
+    pub fn new(phi: &Csr, sigma2: f64, m: usize, rng: &mut Rng) -> Result<WoodburySolver> {
+        let n = phi.n_rows;
+        // U[i, :] = (1/(sqrt(m) sigma)) * sum_c phi[i,c] * G[c, :]
+        // computed row-by-row from the sparse phi. G is materialised
+        // column-block free: G[c, :] regenerated via a per-row RNG would
+        // break iid-ness across rows of phi, so we materialise G (N×m).
+        let scale = 1.0 / ((m as f64).sqrt() * sigma2.sqrt());
+        let mut g = Mat::zeros(phi.n_cols, m);
+        for v in &mut g.data {
+            *v = rng.normal();
+        }
+        let mut u = Mat::zeros(n, m);
+        for i in 0..n {
+            let (cols, vals) = phi.row(i);
+            let ui = u.row_mut(i);
+            for (c, v) in cols.iter().zip(vals) {
+                let grow = g.row(*c as usize);
+                for (uij, gj) in ui.iter_mut().zip(grow) {
+                    *uij += v * gj;
+                }
+            }
+            for uij in ui.iter_mut() {
+                *uij *= scale;
+            }
+        }
+        // I_m + UᵀU
+        let utu = u.transpose().matmul(&u);
+        let mut small = utu;
+        small.add_diag(1.0);
+        let small = Cholesky::new(&small)?;
+        Ok(WoodburySolver { u, small, sigma2 })
+    }
+
+    /// Approximate solve of (K̂ + σ²I) v = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.u.rows;
+        assert_eq!(b.len(), n);
+        // v = (1/σ²)[b − U (I + UᵀU)⁻¹ (Uᵀ b)]
+        let utb = self.u.transpose().matvec(b);
+        let w = self.small.solve(&utb);
+        let uw = self.u.matvec(&w);
+        (0..n).map(|i| (b[i] - uw[i]) / self.sigma2).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooBuilder;
+
+    fn random_phi(rng: &mut Rng, n: usize) -> Csr {
+        let mut b = CooBuilder::new(n, n);
+        for i in 0..n {
+            for _ in 0..3 {
+                b.push(i as u32, rng.below(n) as u32, 0.3 * rng.normal());
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn woodbury_approximates_direct_solve() {
+        let mut rng = Rng::new(0);
+        let n = 60;
+        let phi = random_phi(&mut rng, n);
+        let sigma2 = 0.5;
+        // Large sketch -> high accuracy.
+        let solver = WoodburySolver::new(&phi, sigma2, 256, &mut rng).unwrap();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let got = solver.solve(&b);
+        // Direct dense solve.
+        let d = phi.to_dense();
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = (0..n).map(|c| d[i][c] * d[j][c]).sum();
+            }
+            a[(i, i)] += sigma2;
+        }
+        let expect = Cholesky::new(&a).unwrap().solve(&b);
+        // JL error scales ~1/sqrt(m); check relative L2 error.
+        let num: f64 = got
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let den: f64 =
+            expect.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+        assert!(num / den < 0.35, "relative error {}", num / den);
+    }
+
+    #[test]
+    fn exact_when_sketch_huge_and_phi_zero() {
+        // Phi = 0 -> system is sigma^2 I -> solve is b / sigma^2.
+        let mut rng = Rng::new(1);
+        let phi = Csr::zeros(10, 10);
+        let solver = WoodburySolver::new(&phi, 0.25, 8, &mut rng).unwrap();
+        let b: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let v = solver.solve(&b);
+        for i in 0..10 {
+            assert!((v[i] - b[i] / 0.25).abs() < 1e-10);
+        }
+    }
+}

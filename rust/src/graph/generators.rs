@@ -1,0 +1,382 @@
+//! Synthetic graph generators for every substrate the paper's
+//! experiments need: rings, 2-D grids/meshes, stochastic block models,
+//! Barabási–Albert preferential attachment, k-NN graphs on the sphere,
+//! and a planar road-network generator (traffic substitute).
+
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// Ring (cycle) graph of n nodes, unit weights — the paper's scaling
+/// substrate (App. C.2).
+pub fn ring(n: usize) -> Graph {
+    assert!(n >= 3);
+    let edges: Vec<(u32, u32, f64)> = (0..n)
+        .map(|i| (i as u32, ((i + 1) % n) as u32, 1.0))
+        .collect();
+    Graph::from_edges(n, &edges)
+}
+
+/// 4-connected rows x cols grid (the paper's 30x30 mesh / 1000x1000 BO
+/// grids), unit weights.
+pub fn grid2d(rows: usize, cols: usize) -> Graph {
+    let n = rows * cols;
+    let id = |r: usize, c: usize| (r * cols + c) as u32;
+    let mut edges = Vec::with_capacity(2 * n);
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((id(r, c), id(r, c + 1), 1.0));
+            }
+            if r + 1 < rows {
+                edges.push((id(r, c), id(r + 1, c), 1.0));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Stochastic block model: `sizes[c]` nodes per community, edge
+/// probability `p_in` within and `p_out` across communities.
+/// Returns (graph, community label per node).
+pub fn sbm(sizes: &[usize], p_in: f64, p_out: f64, rng: &mut Rng) -> (Graph, Vec<usize>) {
+    let n: usize = sizes.iter().sum();
+    let mut labels = Vec::with_capacity(n);
+    for (c, &sz) in sizes.iter().enumerate() {
+        labels.extend(std::iter::repeat(c).take(sz));
+    }
+    // Segment boundaries: labels are block-contiguous, so each row's
+    // columns split into runs of constant edge probability. Geometric
+    // skipping must stay *within* a run (restarting at each boundary)
+    // or edges near boundaries are sampled at the wrong rate.
+    let mut bounds = Vec::with_capacity(sizes.len() + 1);
+    bounds.push(0usize);
+    for &s in sizes {
+        bounds.push(bounds.last().unwrap() + s);
+    }
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for c in 0..sizes.len() {
+            let (seg_start, seg_end) = (bounds[c].max(i + 1), bounds[c + 1]);
+            if seg_start >= seg_end {
+                continue;
+            }
+            let p = if labels[i] == c { p_in } else { p_out };
+            if p <= 0.0 {
+                continue;
+            }
+            if p >= 1.0 {
+                for j in seg_start..seg_end {
+                    edges.push((i as u32, j as u32, 1.0));
+                }
+                continue;
+            }
+            let mut j = seg_start;
+            loop {
+                // Geometric skip: next edge at distance ~ Geom(p).
+                let u = rng.uniform().max(1e-300);
+                let skip = (u.ln() / (1.0 - p).ln()).floor() as usize;
+                j += skip;
+                if j >= seg_end {
+                    break;
+                }
+                edges.push((i as u32, j as u32, 1.0));
+                j += 1;
+            }
+        }
+    }
+    (Graph::from_edges(n, &edges), labels)
+}
+
+/// Degree-corrected-ish SBM used for the Cora substitute: same API but
+/// `p_in`/`p_out` scaled per-node by a heavy-ish degree propensity.
+pub fn dcsbm(sizes: &[usize], avg_within: f64, avg_across: f64, rng: &mut Rng) -> (Graph, Vec<usize>) {
+    let n: usize = sizes.iter().sum();
+    let mut labels = Vec::with_capacity(n);
+    for (c, &sz) in sizes.iter().enumerate() {
+        labels.extend(std::iter::repeat(c).take(sz));
+    }
+    // Propensity theta_i ~ 0.25 + Exp(1), normalized per community.
+    let theta: Vec<f64> = (0..n)
+        .map(|_| 0.25 + -rng.uniform().max(1e-12).ln())
+        .collect();
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let base = if labels[i] == labels[j] { avg_within } else { avg_across };
+            let p = (base * theta[i] * theta[j] / (n as f64)).min(0.9);
+            if rng.bernoulli(p) {
+                edges.push((i as u32, j as u32, 1.0));
+            }
+        }
+    }
+    (Graph::from_edges(n, &edges), labels)
+}
+
+/// Barabási–Albert preferential attachment: n nodes, each new node
+/// attaching `m` edges. Heavy-tailed degrees — the SNAP social-network
+/// substitute (DESIGN.md §5).
+pub fn barabasi_albert(n: usize, m: usize, rng: &mut Rng) -> Graph {
+    assert!(n > m && m >= 1);
+    // repeated-nodes list implements preferential attachment in O(1)
+    // per draw.
+    let mut repeated: Vec<u32> = Vec::with_capacity(2 * n * m);
+    let mut edges: Vec<(u32, u32, f64)> = Vec::with_capacity(n * m);
+    // Seed clique of m+1 nodes.
+    for i in 0..=(m as u32) {
+        for j in (i + 1)..=(m as u32) {
+            edges.push((i, j, 1.0));
+            repeated.push(i);
+            repeated.push(j);
+        }
+    }
+    for v in (m + 1)..n {
+        let mut chosen = Vec::with_capacity(m);
+        while chosen.len() < m {
+            let t = repeated[rng.below(repeated.len())];
+            if !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            edges.push((v as u32, t, 1.0));
+            repeated.push(v as u32);
+            repeated.push(t);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Points on the unit sphere arranged as a lat/lon grid with `res_deg`
+/// spacing (the paper's 2.5° ERA5 discretisation). Returns (points,
+/// lat_deg, lon_deg).
+pub fn sphere_grid(res_deg: f64) -> Vec<[f64; 3]> {
+    let mut pts = Vec::new();
+    let n_lat = (180.0 / res_deg) as usize;
+    let n_lon = (360.0 / res_deg) as usize;
+    for la in 0..n_lat {
+        let lat = -90.0 + (la as f64 + 0.5) * res_deg;
+        for lo in 0..n_lon {
+            let lon = -180.0 + lo as f64 * res_deg;
+            let (latr, lonr) = (lat.to_radians(), lon.to_radians());
+            pts.push([
+                latr.cos() * lonr.cos(),
+                latr.cos() * lonr.sin(),
+                latr.sin(),
+            ]);
+        }
+    }
+    pts
+}
+
+/// Symmetric k-nearest-neighbour graph over 3-D points; weight 1 on
+/// every kept edge (matching the paper's unweighted kNN construction).
+/// Brute force O(N^2) with a partial select — fine up to ~20K points.
+pub fn knn_graph(points: &[[f64; 3]], k: usize) -> Graph {
+    let n = points.len();
+    let mut edges = Vec::with_capacity(n * k);
+    for i in 0..n {
+        let mut dists: Vec<(f64, u32)> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| {
+                let d: f64 = (0..3)
+                    .map(|a| (points[i][a] - points[j][a]).powi(2))
+                    .sum();
+                (d, j as u32)
+            })
+            .collect();
+        let kth = k.min(dists.len());
+        dists.select_nth_unstable_by(kth - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        for &(_, j) in &dists[..kth] {
+            let (a, b) = (i as u32, j);
+            edges.push((a.min(b), a.max(b), 1.0));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Ring discretised as a k-NN graph (the paper's "circular graph,
+/// 10^6 nodes" BO benchmark): each node connects to its k nearest
+/// neighbours along the circle.
+pub fn circular_knn(n: usize, k: usize) -> Graph {
+    let half = (k / 2).max(1);
+    let mut edges = Vec::with_capacity(n * half);
+    for i in 0..n {
+        for d in 1..=half {
+            let j = (i + d) % n;
+            edges.push((i as u32, j as u32, 1.0));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Planar road-network generator (San Jose traffic substitute):
+/// a jittered coarse grid of "city blocks" plus diagonal freeway spines,
+/// randomly pruned to reach the target edge density. Returns
+/// (graph, positions, road_class per node) where class 1 = freeway.
+pub fn road_network(
+    target_nodes: usize,
+    target_edges: usize,
+    rng: &mut Rng,
+) -> (Graph, Vec<[f64; 2]>, Vec<u8>) {
+    // Grid dimensions chosen so rows*cols ≈ target_nodes.
+    let cols = (target_nodes as f64).sqrt().round() as usize;
+    let rows = target_nodes.div_ceil(cols);
+    let n = rows * cols;
+    let id = |r: usize, c: usize| (r * cols + c) as u32;
+    let mut pos = Vec::with_capacity(n);
+    for r in 0..rows {
+        for c in 0..cols {
+            pos.push([
+                c as f64 + 0.3 * (rng.uniform() - 0.5),
+                r as f64 + 0.3 * (rng.uniform() - 0.5),
+            ]);
+        }
+    }
+    // Freeway spines: two diagonals crossing the city.
+    let mut class = vec![0u8; n];
+    let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+    let spine = |points: Vec<(usize, usize)>, edges: &mut Vec<(u32, u32, f64)>, class: &mut Vec<u8>| {
+        for w in points.windows(2) {
+            let (a, b) = (id(w[0].0, w[0].1), id(w[1].0, w[1].1));
+            edges.push((a, b, 1.0));
+            class[a as usize] = 1;
+            class[b as usize] = 1;
+        }
+    };
+    spine(
+        (0..rows.min(cols)).map(|i| (i, i)).collect(),
+        &mut edges,
+        &mut class,
+    );
+    spine(
+        (0..rows.min(cols)).map(|i| (i, cols - 1 - i)).collect(),
+        &mut edges,
+        &mut class,
+    );
+    // City streets: grid edges kept with probability tuned to hit the
+    // edge target (roads are sparse: avg degree ~2.3 in the paper).
+    let grid_edge_count = rows * (cols - 1) + (rows - 1) * cols;
+    let keep_p = ((target_edges.saturating_sub(edges.len())) as f64
+        / grid_edge_count as f64)
+        .min(1.0);
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols && rng.bernoulli(keep_p) {
+                edges.push((id(r, c), id(r, c + 1), 1.0));
+            }
+            if r + 1 < rows && rng.bernoulli(keep_p) {
+                edges.push((id(r, c), id(r + 1, c), 1.0));
+            }
+        }
+    }
+    let g = Graph::from_edges(n, &edges);
+    // Keep only the largest connected component so GP inference is on
+    // one graph (the paper's network is connected).
+    let (g, keep) = super::stats::largest_component(&g);
+    let pos = keep.iter().map(|&i| pos[i]).collect();
+    let class = keep.iter().map(|&i| class[i]).collect();
+    (g, pos, class)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_degrees() {
+        let g = ring(10);
+        assert_eq!(g.num_nodes(), 10);
+        assert_eq!(g.num_edges(), 10);
+        for i in 0..10 {
+            assert_eq!(g.degree(i), 2);
+        }
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = grid2d(3, 4);
+        assert_eq!(g.num_nodes(), 12);
+        assert_eq!(g.num_edges(), 3 * 3 + 2 * 4);
+        assert_eq!(g.degree(0), 2); // corner
+        assert_eq!(g.degree(5), 4); // interior
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn sbm_community_structure() {
+        let mut rng = Rng::new(0);
+        let (g, labels) = sbm(&[50, 50], 0.3, 0.01, &mut rng);
+        g.validate().unwrap();
+        assert_eq!(labels.len(), 100);
+        // Count within vs across edges.
+        let (mut within, mut across) = (0, 0);
+        for i in 0..100 {
+            for &j in g.neighbors(i) {
+                if labels[i] == labels[j as usize] {
+                    within += 1;
+                } else {
+                    across += 1;
+                }
+            }
+        }
+        assert!(within > 8 * across, "within={within} across={across}");
+    }
+
+    #[test]
+    fn ba_heavy_tail() {
+        let mut rng = Rng::new(1);
+        let g = barabasi_albert(2000, 3, &mut rng);
+        g.validate().unwrap();
+        assert_eq!(g.num_nodes(), 2000);
+        // Max degree should greatly exceed average (heavy tail).
+        assert!(g.max_degree() as f64 > 5.0 * g.avg_degree());
+    }
+
+    #[test]
+    fn knn_graph_symmetric_connected_ring() {
+        let pts: Vec<[f64; 3]> = (0..60)
+            .map(|i| {
+                let t = i as f64 / 60.0 * std::f64::consts::TAU;
+                [t.cos(), t.sin(), 0.0]
+            })
+            .collect();
+        let g = knn_graph(&pts, 2);
+        g.validate().unwrap();
+        let (comp, _) = super::super::stats::largest_component(&g);
+        assert_eq!(comp.num_nodes(), 60);
+    }
+
+    #[test]
+    fn circular_knn_degree() {
+        let g = circular_knn(100, 4);
+        g.validate().unwrap();
+        for i in 0..100 {
+            assert_eq!(g.degree(i), 4);
+        }
+    }
+
+    #[test]
+    fn road_network_matches_paper_shape() {
+        let mut rng = Rng::new(7);
+        let (g, pos, class) = road_network(1016, 1173, &mut rng);
+        g.validate().unwrap();
+        assert_eq!(pos.len(), g.num_nodes());
+        assert_eq!(class.len(), g.num_nodes());
+        // Should be in the right ballpark (connected component pruning
+        // trims some nodes).
+        assert!(g.num_nodes() > 700, "nodes={}", g.num_nodes());
+        assert!(g.avg_degree() < 3.5, "avg degree={}", g.avg_degree());
+        assert!(class.iter().any(|&c| c == 1));
+    }
+
+    #[test]
+    fn sphere_grid_point_count() {
+        let pts = sphere_grid(10.0);
+        assert_eq!(pts.len(), 18 * 36);
+        for p in &pts {
+            let norm: f64 = p.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Graph serialization: a simple whitespace edge-list format
+//! (`src dst [weight]` per line, `#` comments) compatible with SNAP
+//! exports, plus save/load helpers.
+
+use super::Graph;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Parse an edge-list text. Node ids are remapped densely in first-seen
+/// order if `remap` is true, otherwise they must be < `n_hint`.
+pub fn parse_edge_list(text: &str, remap: bool) -> Result<Graph> {
+    let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+    let mut map = std::collections::HashMap::new();
+    let mut max_id = 0u32;
+    let intern = |raw: u64, map: &mut std::collections::HashMap<u64, u32>, max_id: &mut u32| -> u32 {
+        if remap {
+            let next = map.len() as u32;
+            let id = *map.entry(raw).or_insert(next);
+            *max_id = (*max_id).max(id);
+            id
+        } else {
+            let id = raw as u32;
+            *max_id = (*max_id).max(id);
+            id
+        }
+    };
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let a: u64 = parts
+            .next()
+            .context("missing src")?
+            .parse()
+            .with_context(|| format!("line {}: bad src", ln + 1))?;
+        let b: u64 = parts
+            .next()
+            .with_context(|| format!("line {}: missing dst", ln + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad dst", ln + 1))?;
+        let w: f64 = match parts.next() {
+            Some(t) => t
+                .parse()
+                .with_context(|| format!("line {}: bad weight", ln + 1))?,
+            None => 1.0,
+        };
+        if !w.is_finite() || w < 0.0 {
+            bail!("line {}: weight must be finite and >= 0", ln + 1);
+        }
+        let ai = intern(a, &mut map, &mut max_id);
+        let bi = intern(b, &mut map, &mut max_id);
+        edges.push((ai, bi, w));
+    }
+    if edges.is_empty() {
+        bail!("no edges found");
+    }
+    Ok(Graph::from_edges(max_id as usize + 1, &edges))
+}
+
+pub fn load_edge_list(path: &Path) -> Result<Graph> {
+    load_edge_list_opts(path, true)
+}
+
+/// `remap=false` preserves numeric node ids (files we wrote ourselves);
+/// `remap=true` renumbers densely in first-seen order (raw SNAP dumps).
+pub fn load_edge_list_opts(path: &Path, remap: bool) -> Result<Graph> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut text = String::new();
+    for line in std::io::BufReader::new(file).lines() {
+        text.push_str(&line?);
+        text.push('\n');
+    }
+    parse_edge_list(&text, remap)
+}
+
+pub fn save_edge_list(g: &Graph, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# nodes {} edges {}", g.num_nodes(), g.num_edges())?;
+    for i in 0..g.num_nodes() {
+        for (t, wt) in g.neighbors(i).iter().zip(g.neighbor_weights(i)) {
+            if i <= *t as usize {
+                writeln!(w, "{} {} {}", i, t, wt)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn parse_basic() {
+        let g = parse_edge_list("# comment\n0 1\n1 2 0.5\n", false).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.edge_weight(1, 2), 0.5);
+    }
+
+    #[test]
+    fn remap_sparse_ids() {
+        let g = parse_edge_list("100 200\n200 300\n", true).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let g = generators::grid2d(4, 4);
+        let path = std::env::temp_dir().join("grfgp_io_test.edges");
+        save_edge_list(&g, &path).unwrap();
+        let g2 = load_edge_list_opts(&path, false).unwrap();
+        assert_eq!(g.num_nodes(), g2.num_nodes());
+        assert_eq!(g.num_edges(), g2.num_edges());
+        for i in 0..g.num_nodes() {
+            assert_eq!(g.neighbors(i), g2.neighbors(i));
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse_edge_list("", false).is_err());
+        assert!(parse_edge_list("0 x\n", false).is_err());
+        assert!(parse_edge_list("0 1 -2\n", false).is_err());
+    }
+}

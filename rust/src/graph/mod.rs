@@ -1,0 +1,254 @@
+//! Graph substrate: CSR adjacency, generators, I/O, statistics.
+
+pub mod generators;
+pub mod io;
+pub mod stats;
+
+/// Undirected weighted graph in CSR (compressed sparse row) form.
+///
+/// Both directions of every undirected edge are stored, so `neighbors(i)`
+/// is a single contiguous slice. Node ids are `u32` (graphs up to ~4B
+/// nodes; the paper's largest is 1.13M).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Row pointer, length n+1.
+    pub offsets: Vec<usize>,
+    /// Column indices (neighbor ids), length 2|E|.
+    pub targets: Vec<u32>,
+    /// Edge weights, parallel to `targets`.
+    pub weights: Vec<f64>,
+}
+
+impl Graph {
+    /// Build from an undirected edge list. Duplicate edges are summed;
+    /// self-loops are kept as single directed entries.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, f64)]) -> Graph {
+        let mut deg = vec![0usize; n];
+        for &(a, b, _) in edges {
+            assert!((a as usize) < n && (b as usize) < n, "edge out of range");
+            deg[a as usize] += 1;
+            if a != b {
+                deg[b as usize] += 1;
+            }
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let nnz = offsets[n];
+        let mut targets = vec![0u32; nnz];
+        let mut weights = vec![0f64; nnz];
+        let mut cursor = offsets.clone();
+        for &(a, b, w) in edges {
+            targets[cursor[a as usize]] = b;
+            weights[cursor[a as usize]] = w;
+            cursor[a as usize] += 1;
+            if a != b {
+                targets[cursor[b as usize]] = a;
+                weights[cursor[b as usize]] = w;
+                cursor[b as usize] += 1;
+            }
+        }
+        let mut g = Graph { offsets, targets, weights };
+        g.sort_and_merge_duplicates();
+        g
+    }
+
+    /// Sort each adjacency row by target and merge duplicate entries
+    /// (summing weights). Keeps CSR canonical for fast binary search.
+    fn sort_and_merge_duplicates(&mut self) {
+        let n = self.num_nodes();
+        let mut new_offsets = vec![0usize; n + 1];
+        let mut new_targets = Vec::with_capacity(self.targets.len());
+        let mut new_weights = Vec::with_capacity(self.weights.len());
+        let mut row: Vec<(u32, f64)> = Vec::new();
+        for i in 0..n {
+            row.clear();
+            let (s, e) = (self.offsets[i], self.offsets[i + 1]);
+            for k in s..e {
+                row.push((self.targets[k], self.weights[k]));
+            }
+            row.sort_unstable_by_key(|&(t, _)| t);
+            let mut j = 0;
+            while j < row.len() {
+                let t = row[j].0;
+                let mut w = 0.0;
+                while j < row.len() && row[j].0 == t {
+                    w += row[j].1;
+                    j += 1;
+                }
+                new_targets.push(t);
+                new_weights.push(w);
+            }
+            new_offsets[i + 1] = new_targets.len();
+        }
+        self.offsets = new_offsets;
+        self.targets = new_targets;
+        self.weights = new_weights;
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges (self-loops count once).
+    pub fn num_edges(&self) -> usize {
+        let directed = self.targets.len();
+        let self_loops = (0..self.num_nodes())
+            .map(|i| self.neighbors(i).iter().filter(|&&t| t as usize == i).count())
+            .sum::<usize>();
+        (directed - self_loops) / 2 + self_loops
+    }
+
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.targets[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    #[inline]
+    pub fn neighbor_weights(&self, i: usize) -> &[f64] {
+        &self.weights[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// Unweighted degree of node i.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// Weighted degree (row sum of W).
+    pub fn weighted_degree(&self, i: usize) -> f64 {
+        self.neighbor_weights(i).iter().sum()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_nodes()).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_nodes() == 0 {
+            return 0.0;
+        }
+        self.targets.len() as f64 / self.num_nodes() as f64
+    }
+
+    pub fn max_edge_weight(&self) -> f64 {
+        self.weights.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Dense adjacency matrix (for small-N exact baselines / tests).
+    pub fn dense_adjacency(&self) -> Vec<Vec<f64>> {
+        let n = self.num_nodes();
+        let mut w = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for (t, wt) in self.neighbors(i).iter().zip(self.neighbor_weights(i)) {
+                w[i][*t as usize] += wt;
+            }
+        }
+        w
+    }
+
+    /// Dense graph Laplacian L = D - W.
+    pub fn dense_laplacian(&self) -> Vec<Vec<f64>> {
+        let mut l = self.dense_adjacency();
+        let n = self.num_nodes();
+        for (i, row) in l.iter_mut().enumerate().take(n) {
+            let d: f64 = row.iter().sum();
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = if i == j { d - *v } else { -*v };
+            }
+        }
+        l
+    }
+
+    /// Scale all edge weights uniformly (used to keep power series in
+    /// the GRF convergence radius).
+    pub fn scale_weights(&mut self, factor: f64) {
+        for w in &mut self.weights {
+            *w *= factor;
+        }
+    }
+
+    /// Check structural invariants (CSR sorted, symmetric). Test helper.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_nodes();
+        if *self.offsets.last().unwrap() != self.targets.len()
+            || self.targets.len() != self.weights.len()
+        {
+            return Err("offsets/targets/weights inconsistent".into());
+        }
+        for i in 0..n {
+            let nb = self.neighbors(i);
+            for w in nb.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {i} not strictly sorted"));
+                }
+            }
+            for (t, w) in nb.iter().zip(self.neighbor_weights(i)) {
+                let back = self.edge_weight(*t as usize, i);
+                if (back - w).abs() > 1e-12 {
+                    return Err(format!("asymmetric edge ({i},{t})"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Weight of edge (i, j), 0.0 if absent. Binary search (rows sorted).
+    pub fn edge_weight(&self, i: usize, j: usize) -> f64 {
+        let nb = self.neighbors(i);
+        match nb.binary_search(&(j as u32)) {
+            Ok(k) => self.neighbor_weights(i)[k],
+            Err(_) => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0), (0, 2, 3.0)])
+    }
+
+    #[test]
+    fn csr_structure() {
+        let g = triangle();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.edge_weight(1, 2), 2.0);
+        assert_eq!(g.edge_weight(2, 1), 2.0);
+        assert_eq!(g.edge_weight(0, 0), 0.0);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn duplicate_edges_merge() {
+        let g = Graph::from_edges(2, &[(0, 1, 1.0), (0, 1, 0.5), (1, 0, 0.25)]);
+        assert_eq!(g.num_edges(), 1);
+        assert!((g.edge_weight(0, 1) - 1.75).abs() < 1e-12);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn laplacian_rows_sum_to_zero() {
+        let g = triangle();
+        let l = g.dense_laplacian();
+        for row in &l {
+            assert!(row.iter().sum::<f64>().abs() < 1e-12);
+        }
+        // Diagonal = weighted degree.
+        assert!((l[0][0] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_degree() {
+        let g = triangle();
+        assert!((g.weighted_degree(0) - 4.0).abs() < 1e-12);
+        assert!((g.avg_degree() - 2.0).abs() < 1e-12);
+        assert_eq!(g.max_degree(), 2);
+    }
+}

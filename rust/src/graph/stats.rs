@@ -1,0 +1,168 @@
+//! Graph statistics: connected components, BFS distances, diameter
+//! estimates, degree summaries.
+
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// BFS distances from `source` (usize::MAX = unreachable).
+pub fn bfs_distances(g: &Graph, source: usize) -> Vec<usize> {
+    let n = g.num_nodes();
+    let mut dist = vec![usize::MAX; n];
+    let mut queue = std::collections::VecDeque::new();
+    dist[source] = 0;
+    queue.push_back(source);
+    while let Some(u) = queue.pop_front() {
+        for &v in g.neighbors(u) {
+            let v = v as usize;
+            if dist[v] == usize::MAX {
+                dist[v] = dist[u] + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+/// Connected-component labels (BFS flood fill).
+pub fn components(g: &Graph) -> Vec<usize> {
+    let n = g.num_nodes();
+    let mut comp = vec![usize::MAX; n];
+    let mut next = 0;
+    for s in 0..n {
+        if comp[s] != usize::MAX {
+            continue;
+        }
+        let mut queue = std::collections::VecDeque::new();
+        comp[s] = next;
+        queue.push_back(s);
+        while let Some(u) = queue.pop_front() {
+            for &v in g.neighbors(u) {
+                let v = v as usize;
+                if comp[v] == usize::MAX {
+                    comp[v] = next;
+                    queue.push_back(v);
+                }
+            }
+        }
+        next += 1;
+    }
+    comp
+}
+
+/// Extract the largest connected component. Returns the subgraph and
+/// the original ids of the kept nodes (new id i ↔ old id keep[i]).
+pub fn largest_component(g: &Graph) -> (Graph, Vec<usize>) {
+    let comp = components(g);
+    let n = g.num_nodes();
+    let ncomp = comp.iter().max().map(|&c| c + 1).unwrap_or(0);
+    let mut sizes = vec![0usize; ncomp];
+    for &c in &comp {
+        sizes[c] += 1;
+    }
+    let best = sizes
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, &s)| s)
+        .map(|(c, _)| c)
+        .unwrap_or(0);
+    let keep: Vec<usize> = (0..n).filter(|&i| comp[i] == best).collect();
+    let mut new_id = vec![u32::MAX; n];
+    for (ni, &oi) in keep.iter().enumerate() {
+        new_id[oi] = ni as u32;
+    }
+    let mut edges = Vec::new();
+    for &oi in &keep {
+        for (t, w) in g.neighbors(oi).iter().zip(g.neighbor_weights(oi)) {
+            let tj = *t as usize;
+            if comp[tj] == best && oi <= tj {
+                edges.push((new_id[oi], new_id[tj], *w));
+            }
+        }
+    }
+    (Graph::from_edges(keep.len(), &edges), keep)
+}
+
+/// Lower-bound diameter estimate via double-sweep BFS from `probes`
+/// random sources.
+pub fn diameter_estimate(g: &Graph, probes: usize, rng: &mut Rng) -> usize {
+    let n = g.num_nodes();
+    let mut best = 0;
+    for _ in 0..probes {
+        let s = rng.below(n);
+        let d1 = bfs_distances(g, s);
+        let (far, d) = d1
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d != usize::MAX)
+            .max_by_key(|(_, &d)| d)
+            .unwrap();
+        best = best.max(*d);
+        let d2 = bfs_distances(g, far);
+        let m = d2.iter().filter(|&&d| d != usize::MAX).max().unwrap();
+        best = best.max(*m);
+    }
+    best
+}
+
+/// Degree summary (min, mean, max).
+pub fn degree_summary(g: &Graph) -> (usize, f64, usize) {
+    let n = g.num_nodes();
+    let mut min = usize::MAX;
+    let mut max = 0;
+    let mut sum = 0usize;
+    for i in 0..n {
+        let d = g.degree(i);
+        min = min.min(d);
+        max = max.max(d);
+        sum += d;
+    }
+    (min, sum as f64 / n as f64, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn bfs_on_ring() {
+        let g = generators::ring(8);
+        let d = bfs_distances(&g, 0);
+        assert_eq!(d, vec![0, 1, 2, 3, 4, 3, 2, 1]);
+    }
+
+    #[test]
+    fn components_split() {
+        // Two triangles, disconnected.
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1, 1.0), (1, 2, 1.0), (0, 2, 1.0),
+              (3, 4, 1.0), (4, 5, 1.0), (3, 5, 1.0)],
+        );
+        let c = components(&g);
+        assert_eq!(c[0], c[1]);
+        assert_eq!(c[3], c[4]);
+        assert_ne!(c[0], c[3]);
+        let (lc, keep) = largest_component(&g);
+        assert_eq!(lc.num_nodes(), 3);
+        assert_eq!(keep.len(), 3);
+        lc.validate().unwrap();
+    }
+
+    #[test]
+    fn diameter_of_ring() {
+        let g = generators::ring(10);
+        let mut rng = Rng::new(0);
+        let d = diameter_estimate(&g, 3, &mut rng);
+        assert_eq!(d, 5);
+    }
+
+    #[test]
+    fn degree_summary_grid() {
+        let g = generators::grid2d(3, 3);
+        let (min, avg, max) = degree_summary(&g);
+        assert_eq!(min, 2);
+        assert_eq!(max, 4);
+        assert!(avg > 2.0 && avg < 4.0);
+    }
+}

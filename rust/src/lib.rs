@@ -1,0 +1,32 @@
+//! # grfgp — Graph Random Features for Scalable Gaussian Processes
+//!
+//! Production-quality reproduction of *"Graph Random Features for
+//! Scalable Gaussian Processes"* (Zhang et al., 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: graph substrate, the
+//!   GRF random-walk engine, sparse/dense linear algebra, the iterative
+//!   GP workflow (LML training, pathwise-conditioning inference),
+//!   Thompson-sampling Bayesian optimisation, variational
+//!   classification, a batching inference server, and the experiment
+//!   drivers regenerating every table/figure in the paper.
+//! * **Layer 2** — `python/compile/model.py`: the GP compute graphs in
+//!   JAX, AOT-lowered to HLO text artifacts.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels (ELL SpMV,
+//!   blocked matmul) called by L2.
+//!
+//! The [`runtime`] module loads the AOT artifacts and executes them via
+//! PJRT; Python never runs on the request path.
+
+pub mod bo;
+pub mod datasets;
+pub mod exp;
+pub mod gp;
+pub mod graph;
+pub mod linalg;
+pub mod runtime;
+pub mod server;
+pub mod sparse;
+pub mod util;
+pub mod vgp;
+pub mod walks;

@@ -1,0 +1,202 @@
+//! Conjugate-gradient solver over abstract SPD operators.
+//!
+//! This is the paper's core inference engine (Lemma 1): CG on
+//! `(K̂ + σ²I)` converges in `O(√κ) = O(√N)` iterations, each an
+//! `O(N)` sparse matvec, giving the headline `O(N^{3/2})`.
+
+use super::{axpy, dot};
+
+/// CG run statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct CgStats {
+    pub iterations: usize,
+    pub residual_norm: f64,
+    pub converged: bool,
+}
+
+/// Solve A x = b for SPD operator `apply(x, y)` computing y = A x.
+/// Stops at `tol * ||b||` relative residual or `max_iters`.
+pub fn cg_solve<F>(
+    mut apply: F,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<f64>, CgStats)
+where
+    F: FnMut(&[f64], &mut [f64]),
+{
+    let n = b.len();
+    let mut x = match x0 {
+        Some(v) => v.to_vec(),
+        None => vec![0.0; n],
+    };
+    let mut ax = vec![0.0; n];
+    apply(&x, &mut ax);
+    let mut r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+    let mut p = r.clone();
+    let mut rs = dot(&r, &r);
+    let b_norm = dot(b, b).sqrt().max(1e-300);
+    let mut ap = vec![0.0; n];
+    let mut iterations = 0;
+    for _ in 0..max_iters {
+        if rs.sqrt() <= tol * b_norm {
+            break;
+        }
+        apply(&p, &mut ap);
+        let denom = dot(&p, &ap);
+        if denom <= 0.0 {
+            // Numerical loss of positive-definiteness; bail with the
+            // current iterate.
+            break;
+        }
+        let alpha = rs / denom;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rs_new = dot(&r, &r);
+        let beta = rs_new / rs;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+        iterations += 1;
+    }
+    let residual_norm = rs.sqrt() / b_norm;
+    (
+        x,
+        CgStats {
+            iterations,
+            residual_norm,
+            converged: residual_norm <= tol,
+        },
+    )
+}
+
+/// Batched CG: solve A X = B for several right-hand sides, sharing the
+/// operator. RHS are solved independently (no block-CG coupling) but
+/// the caller may parallelise over them.
+pub fn cg_solve_batch<F>(
+    mut apply: F,
+    bs: &[Vec<f64>],
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<Vec<f64>>, Vec<CgStats>)
+where
+    F: FnMut(&[f64], &mut [f64]),
+{
+    let mut xs = Vec::with_capacity(bs.len());
+    let mut stats = Vec::with_capacity(bs.len());
+    for b in bs {
+        let (x, s) = cg_solve(&mut apply, b, None, tol, max_iters);
+        xs.push(x);
+        stats.push(s);
+    }
+    (xs, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::Cholesky;
+    use crate::linalg::Mat;
+    use crate::prop_assert;
+    use crate::util::proptest::proptest;
+
+    #[test]
+    fn solves_identity() {
+        let b = vec![1.0, 2.0, 3.0];
+        let (x, st) = cg_solve(
+            |v, y| y.copy_from_slice(v),
+            &b,
+            None,
+            1e-12,
+            10,
+        );
+        assert_eq!(x, b);
+        assert!(st.converged);
+    }
+
+    #[test]
+    fn matches_cholesky_on_random_spd() {
+        proptest(24, |rng| {
+            let n = 2 + rng.below(30);
+            let mut bmat = Mat::zeros(n, n);
+            for v in &mut bmat.data {
+                *v = rng.normal();
+            }
+            let mut a = bmat.matmul(&bmat.transpose());
+            a.add_diag(1.0);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let (x, st) = cg_solve(
+                |v, y| {
+                    let av = a.matvec(v);
+                    y.copy_from_slice(&av);
+                },
+                &b,
+                None,
+                1e-10,
+                10 * n,
+            );
+            prop_assert!(st.converged, "CG failed to converge: {st:?}");
+            let xd = Cholesky::new(&a).map_err(|e| e.to_string())?.solve(&b);
+            for i in 0..n {
+                prop_assert!(
+                    (x[i] - xd[i]).abs() < 1e-6,
+                    "component {i}: {} vs {}",
+                    x[i],
+                    xd[i]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn iteration_count_scales_with_sqrt_condition() {
+        // Diagonal operator with condition number kappa: CG needs
+        // ~sqrt(kappa) iterations; verify the trend.
+        let mut iters = Vec::new();
+        for &kappa in &[4.0, 64.0, 1024.0] {
+            let n = 2000;
+            let diag: Vec<f64> = (0..n)
+                .map(|i| 1.0 + (kappa - 1.0) * i as f64 / (n - 1) as f64)
+                .collect();
+            let b = vec![1.0; n];
+            let (_, st) = cg_solve(
+                |v, y| {
+                    for i in 0..n {
+                        y[i] = diag[i] * v[i];
+                    }
+                },
+                &b,
+                None,
+                1e-8,
+                n,
+            );
+            iters.push(st.iterations as f64);
+        }
+        assert!(iters[1] > 1.5 * iters[0], "{iters:?}");
+        assert!(iters[2] > 1.5 * iters[1], "{iters:?}");
+        // ~sqrt growth, not linear: 256x condition -> far less than
+        // 256x iterations (sqrt predicts 16x; allow slack).
+        assert!(iters[2] < 64.0 * iters[0], "{iters:?}");
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let a = Mat::from_rows(&[vec![4.0, 1.0], vec![1.0, 3.0]]);
+        let bs = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let apply = |v: &[f64], y: &mut [f64]| {
+            let av = a.matvec(v);
+            y.copy_from_slice(&av);
+        };
+        let (xs, stats) = cg_solve_batch(apply, &bs, 1e-12, 50);
+        assert!(stats.iter().all(|s| s.converged));
+        for (b, x) in bs.iter().zip(&xs) {
+            let ax = a.matvec(x);
+            for i in 0..2 {
+                assert!((ax[i] - b[i]).abs() < 1e-9);
+            }
+        }
+    }
+}

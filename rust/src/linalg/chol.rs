@@ -1,0 +1,173 @@
+//! Cholesky factorisation and triangular solves — the `O(N^3)` exact-GP
+//! baseline (paper §1: "exact kernels generally incur O(N^3)").
+
+use super::Mat;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+pub struct Cholesky {
+    pub l: Mat,
+}
+
+impl Cholesky {
+    /// Factor `a = L L^T`. Fails if `a` is not (numerically) SPD.
+    pub fn new(a: &Mat) -> Result<Cholesky> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        bail!("matrix not SPD at pivot {i} (sum={sum})");
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Solve A x = b via forward+back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        // L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[(i, k)] * y[k];
+            }
+            y[i] = sum / self.l[(i, i)];
+        }
+        // L^T x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in (i + 1)..n {
+                sum -= self.l[(k, i)] * x[k];
+            }
+            x[i] = sum / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve for many right-hand sides.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.l.rows;
+        assert_eq!(b.rows, n);
+        let mut out = Mat::zeros(n, b.cols);
+        for j in 0..b.cols {
+            let col: Vec<f64> = (0..n).map(|i| b[(i, j)]).collect();
+            let x = self.solve(&col);
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        out
+    }
+
+    /// log det A = 2 Σ log L_ii — the LML's log-determinant term.
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Sample z ~ N(0, A) as L u with u ~ N(0, I).
+    pub fn sample(&self, u: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        (0..n)
+            .map(|i| (0..=i).map(|k| self.l[(i, k)] * u[k]).sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::proptest;
+
+    fn random_spd(rng: &mut crate::util::rng::Rng, n: usize) -> Mat {
+        let mut b = Mat::zeros(n, n);
+        for v in &mut b.data {
+            *v = rng.normal();
+        }
+        let mut a = b.matmul(&b.transpose());
+        a.add_diag(0.5 + n as f64 * 0.01);
+        a
+    }
+
+    #[test]
+    fn factor_and_solve() {
+        proptest(24, |rng| {
+            let n = 1 + rng.below(25);
+            let a = random_spd(rng, n);
+            let ch = Cholesky::new(&a).map_err(|e| e.to_string())?;
+            // L L^T == A
+            let rec = ch.l.matmul(&ch.l.transpose());
+            for i in 0..n {
+                for j in 0..n {
+                    prop_assert!(
+                        (rec[(i, j)] - a[(i, j)]).abs() < 1e-8,
+                        "LL^T mismatch at ({i},{j})"
+                    );
+                }
+            }
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let x = ch.solve(&b);
+            let ax = a.matvec(&x);
+            for i in 0..n {
+                prop_assert!((ax[i] - b[i]).abs() < 1e-7, "solve residual {i}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn logdet_matches_eigen() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        let a = random_spd(&mut rng, 8);
+        let ch = Cholesky::new(&a).unwrap();
+        let (lam, _) = crate::linalg::eigen::jacobi_eigen(&a, 200);
+        let expect: f64 = lam.iter().map(|l| l.ln()).sum();
+        assert!((ch.logdet() - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eig -1
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn sample_covariance() {
+        // Cov(Lu) = LL^T = A; check on 2x2 with many samples.
+        let a = Mat::from_rows(&[vec![2.0, 0.6], vec![0.6, 1.0]]);
+        let ch = Cholesky::new(&a).unwrap();
+        let mut rng = crate::util::rng::Rng::new(42);
+        let mut cov = [[0.0; 2]; 2];
+        let n = 40_000;
+        for _ in 0..n {
+            let u = [rng.normal(), rng.normal()];
+            let z = ch.sample(&u);
+            for i in 0..2 {
+                for j in 0..2 {
+                    cov[i][j] += z[i] * z[j];
+                }
+            }
+        }
+        for i in 0..2 {
+            for j in 0..2 {
+                let emp = cov[i][j] / n as f64;
+                assert!((emp - a[(i, j)]).abs() < 0.06, "cov[{i}][{j}]={emp}");
+            }
+        }
+    }
+}

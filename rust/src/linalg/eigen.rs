@@ -1,0 +1,307 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations.
+//!
+//! Used for small-N oracles (expm validation, spectral checks) and for
+//! the exact Matérn kernel baseline `(2ν/κ² + L̃)^{-ν}` which needs a
+//! matrix power of a symmetric matrix.
+
+use super::Mat;
+
+/// Eigen-decomposition of symmetric `a`: returns (eigenvalues asc,
+/// eigenvector matrix V with columns = eigenvectors, i.e. A = V Λ Vᵀ).
+pub fn jacobi_eigen(a: &Mat, max_sweeps: usize) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + m.inf_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p, q of m.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Extract and sort ascending.
+    let mut pairs: Vec<(f64, usize)> =
+        (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let lam: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let mut vec_sorted = Mat::zeros(n, n);
+    for (new_j, &(_, old_j)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vec_sorted[(i, new_j)] = v[(i, old_j)];
+        }
+    }
+    (lam, vec_sorted)
+}
+
+/// Full symmetric eigendecomposition for larger matrices (N up to a few
+/// thousand): Householder tridiagonalisation (tred2) followed by the
+/// implicit-shift QL algorithm (tql2) — the classic EISPACK pair.
+/// Returns (eigenvalues ascending, eigenvector columns).
+pub fn sym_eigen(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    if n <= 24 {
+        return jacobi_eigen(a, 100);
+    }
+    let mut z = a.clone();
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+
+    // --- tred2: Householder reduction to tridiagonal -------------------
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let mut f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let val = f * e[k] + g * z[(i, k)];
+                        z[(j, k)] -= val;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..i {
+                    let val = g * z[(k, i)];
+                    z[(k, j)] -= val;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+
+    // --- tql2: implicit-shift QL on the tridiagonal ---------------------
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small subdiagonal element.
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 50, "tql2 failed to converge");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort ascending.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let lam: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut v = Mat::zeros(n, n);
+    for (newj, &oldj) in order.iter().enumerate() {
+        for i in 0..n {
+            v[(i, newj)] = z[(i, oldj)];
+        }
+    }
+    (lam, v)
+}
+
+/// Apply a scalar function to a symmetric matrix via its eigensystem:
+/// f(A) = V f(Λ) Vᵀ.
+pub fn matrix_function(a: &Mat, f: impl Fn(f64) -> f64) -> Mat {
+    let n = a.rows;
+    let (lam, v) = jacobi_eigen(a, 100);
+    let mut out = Mat::zeros(n, n);
+    for k in 0..n {
+        let fl = f(lam[k]);
+        if fl == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            let vik = v[(i, k)];
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[(i, j)] += fl * vik * v[(j, k)];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::proptest;
+
+    #[test]
+    fn diagonal_matrix_eigen() {
+        let a = Mat::from_rows(&[vec![3.0, 0.0], vec![0.0, 1.0]]);
+        let (lam, _) = jacobi_eigen(&a, 50);
+        assert!((lam[0] - 1.0).abs() < 1e-12);
+        assert!((lam[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_property() {
+        proptest(16, |rng| {
+            let n = 2 + rng.below(10);
+            let mut b = Mat::zeros(n, n);
+            for v in &mut b.data {
+                *v = rng.normal();
+            }
+            let a = b.add(&b.transpose()).scale(0.5);
+            let (lam, v) = jacobi_eigen(&a, 100);
+            // A v_k = lam_k v_k
+            for k in 0..n {
+                let vk: Vec<f64> = (0..n).map(|i| v[(i, k)]).collect();
+                let av = a.matvec(&vk);
+                for i in 0..n {
+                    prop_assert!(
+                        (av[i] - lam[k] * vk[i]).abs() < 1e-7,
+                        "eigpair {k} comp {i}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matrix_function_square() {
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let sq = matrix_function(&a, |x| x * x);
+        let direct = a.matmul(&a);
+        for i in 0..4 {
+            assert!((sq.data[i] - direct.data[i]).abs() < 1e-9);
+        }
+    }
+}

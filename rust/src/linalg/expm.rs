@@ -1,0 +1,96 @@
+//! Dense matrix exponential — the exact diffusion kernel
+//! `K = σ_f² exp(-βL)` baseline (paper Eq. after (1)).
+//!
+//! Scaling-and-squaring with a Taylor core, mirroring the L2 artifact
+//! (`python/compile/model.py::dense_diffusion`) so the two baselines
+//! agree to float tolerance.
+
+use super::Mat;
+
+/// exp(A) via scaling-and-squaring + Taylor. `order` ~ 16 gives ~1e-14
+/// once the scaled norm is < 0.5.
+pub fn expm(a: &Mat, order: usize) -> Mat {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let nrm = a.inf_norm();
+    let squarings = if nrm > 0.5 {
+        (nrm / 0.5).log2().ceil() as u32
+    } else {
+        0
+    };
+    let scale = 0.5f64.powi(squarings as i32);
+    let a_s = a.scale(scale);
+    let mut out = Mat::eye(n);
+    let mut term = Mat::eye(n);
+    for r in 1..=order {
+        term = term.matmul(&a_s).scale(1.0 / r as f64);
+        out = out.add(&term);
+    }
+    for _ in 0..squarings {
+        out = out.matmul(&out);
+    }
+    out
+}
+
+/// Exact dense diffusion kernel K = sigma_f2 * exp(-beta * L) for a
+/// graph Laplacian given as rows.
+pub fn diffusion_kernel(laplacian: &Mat, beta: f64, sigma_f2: f64) -> Mat {
+    expm(&laplacian.scale(-beta), 18).scale(sigma_f2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigen::{jacobi_eigen, matrix_function};
+    use crate::prop_assert;
+    use crate::util::proptest::proptest;
+
+    #[test]
+    fn expm_zero_is_identity() {
+        let e = expm(&Mat::zeros(4, 4), 16);
+        assert_eq!(e, Mat::eye(4));
+    }
+
+    #[test]
+    fn expm_diagonal() {
+        let a = Mat::from_rows(&[vec![1.0, 0.0], vec![0.0, -2.0]]);
+        let e = expm(&a, 20);
+        assert!((e[(0, 0)] - 1f64.exp()).abs() < 1e-12);
+        assert!((e[(1, 1)] - (-2f64).exp()).abs() < 1e-12);
+        assert!(e[(0, 1)].abs() < 1e-14);
+    }
+
+    #[test]
+    fn expm_matches_eigen_for_symmetric() {
+        proptest(12, |rng| {
+            let n = 2 + rng.below(8);
+            let mut b = Mat::zeros(n, n);
+            for v in &mut b.data {
+                *v = rng.normal();
+            }
+            let a = b.add(&b.transpose()).scale(0.5);
+            let via_taylor = expm(&a, 20);
+            let via_eigen = matrix_function(&a, f64::exp);
+            for i in 0..n * n {
+                prop_assert!(
+                    (via_taylor.data[i] - via_eigen.data[i]).abs() < 1e-8,
+                    "expm mismatch at flat {i}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn diffusion_kernel_spd_and_trace() {
+        // Ring graph laplacian, beta small: K ~ I - beta L.
+        let g = crate::graph::generators::ring(8);
+        let l = Mat::from_rows(&g.dense_laplacian());
+        let k = diffusion_kernel(&l, 0.01, 1.0);
+        let (lam, _) = jacobi_eigen(&k, 100);
+        assert!(lam[0] > 0.0);
+        for i in 0..8 {
+            assert!((k[(i, i)] - (1.0 - 0.01 * 2.0)).abs() < 1e-3);
+        }
+    }
+}

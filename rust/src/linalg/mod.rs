@@ -1,0 +1,222 @@
+//! Dense linear-algebra substrate (no LAPACK in the offline registry).
+//!
+//! Used by the exact GP baselines (dense diffusion/Matérn kernels, the
+//! `O(N^3)` comparator in the scaling experiments) and by small-N test
+//! oracles. Row-major flat storage.
+
+pub mod cg;
+pub mod chol;
+pub mod eigen;
+pub mod expm;
+
+/// Dense row-major matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// C = A B — blocked ikj loop (cache-friendly; the dense baseline's
+    /// hot operation).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            let ci = &mut c.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[p * n..(p + 1) * n];
+                for (cj, bj) in ci.iter_mut().zip(b_row) {
+                    *cj += a * bj;
+                }
+            }
+        }
+        c
+    }
+
+    /// Parallel matmul over row chunks (threads=0 → auto).
+    pub fn matmul_par(&self, other: &Mat, threads: usize) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let threads = if threads == 0 {
+            crate::util::parallel::num_threads()
+        } else {
+            threads
+        };
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        if threads <= 1 || m < 64 {
+            return self.matmul(other);
+        }
+        let rows = crate::util::parallel::par_map_chunks(m, threads, |s, e, _| {
+            let mut block = vec![0.0; (e - s) * n];
+            for i in s..e {
+                let ci = &mut block[(i - s) * n..(i - s + 1) * n];
+                for p in 0..k {
+                    let a = self.data[i * k + p];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let b_row = &other.data[p * n..(p + 1) * n];
+                    for (cj, bj) in ci.iter_mut().zip(b_row) {
+                        *cj += a * bj;
+                    }
+                }
+            }
+            block
+        });
+        Mat { rows: m, cols: n, data: rows.concat() }
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let mut out = self.clone();
+        for v in &mut out.data {
+            *v *= s;
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn add_diag(&mut self, s: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += s;
+        }
+    }
+
+    pub fn inf_norm(&self) -> f64 {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|v| v.abs()).sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// y += alpha * x.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_and_identity() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let t = a.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t[(2, 1)], 6.0);
+        let i = Mat::eye(3);
+        assert_eq!(a.matmul(&i).data, a.data);
+    }
+
+    #[test]
+    fn matvec_and_norms() {
+        let a = Mat::from_rows(&[vec![1.0, -2.0], vec![0.0, 3.0]]);
+        assert_eq!(a.matvec(&[1.0, 1.0]), vec![-1.0, 3.0]);
+        assert_eq!(a.inf_norm(), 3.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,153 @@
+//! grfgp — CLI for the GRF-GP reproduction.
+//!
+//! Subcommands:
+//!   exp <id>        run an experiment driver (scaling | ablation |
+//!                   traffic | wind | bo-synthetic | bo-social |
+//!                   bo-wind | classify | all)
+//!   serve           start the GP inference server on a graph
+//!   info            print environment / artifact status
+//!
+//! Every experiment accepts `--seeds`, workload-specific size knobs,
+//! and writes JSON into `results/` (see DESIGN.md §4 for the mapping
+//! to paper tables/figures).
+
+use anyhow::{bail, Result};
+use grfgp::exp;
+use grfgp::gp::{GpModel, Hypers, Modulation};
+use grfgp::graph::generators;
+use grfgp::util::cli::Args;
+use grfgp::util::rng::Rng;
+use grfgp::walks::{sample_components, WalkConfig};
+
+const USAGE: &str = "\
+grfgp — Graph Random Features for Scalable Gaussian Processes
+
+USAGE:
+  grfgp exp <scaling|ablation|traffic|wind|bo-synthetic|bo-social|bo-wind|classify|all> [opts]
+  grfgp serve [--graph ring --n 4096 --addr 127.0.0.1:7701]
+  grfgp info  [--artifacts artifacts]
+
+Common experiment options:
+  --seeds N          repetitions (default 3)
+  --walks N          random walks per node
+  --threads N        worker threads (default: all cores)
+  full list per experiment: see rust/src/exp/*.rs
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("exp") => run_exp(&args),
+        Some("serve") => run_serve(&args),
+        Some("info") => run_info(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn run_exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match which {
+        "scaling" => {
+            exp::scaling::run(args);
+        }
+        "ablation" => {
+            exp::ablation::run(args);
+        }
+        "traffic" => {
+            exp::regression::run_traffic(args);
+        }
+        "wind" => {
+            exp::regression::run_wind(args);
+        }
+        "bo-synthetic" => {
+            exp::bo::run_synthetic(args);
+        }
+        "bo-social" => {
+            exp::bo::run_social(args);
+        }
+        "bo-wind" => {
+            exp::bo::run_wind(args);
+        }
+        "classify" => {
+            exp::classify::run(args);
+        }
+        "all" => {
+            exp::scaling::run(args);
+            exp::ablation::run(args);
+            exp::regression::run_traffic(args);
+            exp::regression::run_wind(args);
+            exp::bo::run_synthetic(args);
+            exp::bo::run_social(args);
+            exp::bo::run_wind(args);
+            exp::classify::run(args);
+        }
+        other => bail!("unknown experiment {other:?}\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn run_serve(args: &Args) -> Result<()> {
+    let n = args.usize("n", 4096);
+    let addr = args.get_or("addr", "127.0.0.1:7701").to_string();
+    let seed = args.u64("seed", 0);
+    let graph = match args.get_or("graph", "ring") {
+        "ring" => generators::ring(n),
+        "grid" => {
+            let side = (n as f64).sqrt() as usize;
+            generators::grid2d(side, side)
+        }
+        "ba" => generators::barabasi_albert(n, 3, &mut Rng::new(seed)),
+        other => bail!("unknown graph kind {other:?}"),
+    };
+    let cfg = WalkConfig {
+        n_walks: args.usize("walks", 100),
+        p_halt: args.f64("p-halt", 0.1),
+        max_len: args.usize("max-len", 5),
+        reweight: true,
+        normalize: true,
+        threads: args.usize("threads", 0),
+    };
+    eprintln!(
+        "sampling GRF components: n={} walks={} l_max={}",
+        graph.num_nodes(),
+        cfg.n_walks,
+        cfg.max_len
+    );
+    let comps = sample_components(&graph, &cfg, seed);
+    let hypers = Hypers::new(
+        Modulation::diffusion(1.0, 1.0, cfg.max_len),
+        args.f64("noise", 0.1),
+    );
+    let model = GpModel::new(comps, hypers, &[], &[]);
+    grfgp::server::serve(model, &addr, seed)
+}
+
+fn run_info(args: &Args) -> Result<()> {
+    println!(
+        "grfgp {} (three-layer Rust + JAX + Pallas GRF-GP)",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!("threads available: {}", grfgp::util::parallel::num_threads());
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    match grfgp::runtime::Runtime::load(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts in {}:", dir.display());
+            for a in &rt.manifest.artifacts {
+                println!(
+                    "  {:<44} kind={:<18} n={:<8} k={:<4} kt={:<4} iters={}",
+                    a.name, a.kind, a.n, a.k, a.kt, a.iters
+                );
+            }
+        }
+        Err(e) => println!("no artifacts loaded ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}

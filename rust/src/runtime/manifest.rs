@@ -1,0 +1,109 @@
+//! Artifact manifest (written by `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One lowered entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    /// Entry-point family: gram_matvec | cg_solve | posterior_sample |
+    /// posterior_mean | dense_diffusion.
+    pub kind: String,
+    /// Shape bucket.
+    pub n: usize,
+    pub k: usize,
+    pub kt: usize,
+    /// RHS batch width (cg_solve only).
+    pub r: usize,
+    /// Compiled-in CG iteration budget.
+    pub iters: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub cg_iters: usize,
+    pub rhs: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let cg_iters = j
+            .get("cg_iters")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing cg_iters"))?;
+        let rhs = j.get("rhs").and_then(Json::as_usize).unwrap_or(1);
+        let arr = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            artifacts.push(ArtifactInfo {
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .unwrap_or(&format!("{name}.hlo.txt"))
+                    .to_string(),
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                n: a.get("n").and_then(Json::as_usize).unwrap_or(0),
+                k: a.get("k").and_then(Json::as_usize).unwrap_or(0),
+                kt: a.get("kt").and_then(Json::as_usize).unwrap_or(0),
+                r: a.get("r").and_then(Json::as_usize).unwrap_or(rhs),
+                iters: a.get("iters").and_then(Json::as_usize).unwrap_or(cg_iters),
+                name,
+            });
+        }
+        Ok(Manifest { cg_iters, rhs, artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let text = r#"{
+            "cg_iters": 32, "rhs": 8,
+            "artifacts": [
+                {"name": "cg_solve_n256", "file": "cg_solve_n256.hlo.txt",
+                 "kind": "cg_solve", "n": 256, "k": 16, "kt": 32,
+                 "iters": 32},
+                {"name": "dense_diffusion_n128", "kind": "dense_diffusion",
+                 "n": 128}
+            ]
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.cg_iters, 32);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[0].kt, 32);
+        assert_eq!(m.artifacts[0].r, 8);
+        assert_eq!(m.artifacts[1].file, "dense_diffusion_n128.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

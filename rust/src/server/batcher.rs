@@ -1,0 +1,265 @@
+//! Request parsing + micro-batching.
+//!
+//! The batcher coalesces requests that can share one model-lock
+//! acquisition. Predict requests arriving within the batching window
+//! are merged into a single `predict` over the union of their nodes
+//! (the expensive part — posterior mean solve + pathwise variance
+//! samples — is shared), then results are scattered back per request.
+
+use super::ServerState;
+use crate::util::json::Json;
+use std::sync::{Condvar, Mutex};
+
+/// Parsed request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Observe { node: usize, y: f64 },
+    Predict { nodes: Vec<usize>, samples: usize },
+    Sample,
+    Thompson,
+    Stats,
+    Shutdown,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let j = Json::parse(line).map_err(|e| format!("bad JSON: {e}"))?;
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or("missing op".to_string())?;
+        match op {
+            "observe" => {
+                let node = j
+                    .get("node")
+                    .and_then(Json::as_usize)
+                    .ok_or("observe needs node")?;
+                let y = j
+                    .get("y")
+                    .and_then(Json::as_f64)
+                    .ok_or("observe needs y")?;
+                Ok(Request::Observe { node, y })
+            }
+            "predict" => {
+                let nodes = j
+                    .get("nodes")
+                    .and_then(|a| a.as_arr())
+                    .ok_or("predict needs nodes")?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or("bad node id"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                let samples =
+                    j.get("samples").and_then(Json::as_usize).unwrap_or(16);
+                Ok(Request::Predict { nodes, samples })
+            }
+            "sample" => Ok(Request::Sample),
+            "thompson" => Ok(Request::Thompson),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+
+    fn batch_key(&self) -> Option<usize> {
+        match self {
+            Request::Predict { samples, .. } => Some(*samples),
+            _ => None,
+        }
+    }
+}
+
+/// Response wrapper.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub ok: bool,
+    pub fields: Vec<(String, Json)>,
+}
+
+impl Response {
+    pub fn ok(fields: Vec<(&str, Json)>) -> Response {
+        Response {
+            ok: true,
+            fields: fields
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        }
+    }
+
+    pub fn error(msg: impl Into<String>) -> Response {
+        Response {
+            ok: false,
+            fields: vec![("error".to_string(), Json::Str(msg.into()))],
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj: Vec<(&str, Json)> =
+            vec![("ok", Json::Bool(self.ok))];
+        for (k, v) in &self.fields {
+            obj.push((k.as_str(), v.clone()));
+        }
+        Json::obj(obj)
+    }
+}
+
+struct PendingBatch {
+    key: usize,
+    nodes: Vec<usize>,
+    /// (offset, len) per participant, in arrival order.
+    spans: Vec<(usize, usize)>,
+    /// Results, filled by the leader.
+    result: Option<(Vec<f64>, Vec<f64>)>,
+    generation: u64,
+}
+
+/// Micro-batcher: the first predict request in a window becomes the
+/// leader; followers that arrive while the leader is waiting join the
+/// batch. `max_batch` bounds the union size.
+pub struct Batcher {
+    max_batch: usize,
+    pending: Mutex<Option<PendingBatch>>,
+    cv: Condvar,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Batcher {
+        Batcher {
+            max_batch,
+            pending: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Execute a request, batching predicts.
+    pub fn submit(&self, state: &ServerState, req: Request) -> Response {
+        let Some(key) = req.batch_key() else {
+            return super::handle(state, &req);
+        };
+        let Request::Predict { nodes, samples } = req else {
+            unreachable!()
+        };
+        // Try to join or create a batch.
+        let (generation, span) = {
+            let mut guard = self.pending.lock().unwrap();
+            match guard.as_mut() {
+                Some(b)
+                    if b.key == key
+                        && b.result.is_none()
+                        && b.spans.len() < self.max_batch =>
+                {
+                    let span = (b.nodes.len(), nodes.len());
+                    b.nodes.extend_from_slice(&nodes);
+                    b.spans.push(span);
+                    (b.generation, span)
+                }
+                _ => {
+                    let generation = guard
+                        .as_ref()
+                        .map(|b| b.generation + 1)
+                        .unwrap_or(0);
+                    *guard = Some(PendingBatch {
+                        key,
+                        nodes: nodes.clone(),
+                        spans: vec![(0, nodes.len())],
+                        result: None,
+                        generation,
+                    });
+                    (generation, (0, nodes.len()))
+                }
+            }
+        };
+        // Tiny batching window so concurrent clients can pile on.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        // Leader = whoever gets the lock first with result unset.
+        let mut guard = self.pending.lock().unwrap();
+        let needs_run = matches!(
+            guard.as_ref(),
+            Some(b) if b.generation == generation && b.result.is_none()
+        );
+        if needs_run {
+            let batch_nodes = guard.as_ref().unwrap().nodes.clone();
+            drop(guard);
+            let full = {
+                let mut ms = state.model.lock().unwrap();
+                let mut rng = ms.rng.split(0xBA7C);
+                ms.rng = ms.rng.split(3);
+                ms.model.predict(key, &mut rng)
+            };
+            let mut g2 = self.pending.lock().unwrap();
+            if let Some(b) = g2.as_mut() {
+                if b.generation == generation {
+                    let mu: Vec<f64> =
+                        batch_nodes.iter().map(|&i| full.0[i]).collect();
+                    let var: Vec<f64> =
+                        batch_nodes.iter().map(|&i| full.1[i]).collect();
+                    b.result = Some((mu, var));
+                }
+            }
+            self.cv.notify_all();
+            guard = g2;
+        }
+        // Wait for the leader (or ourselves) to have filled results.
+        loop {
+            match guard.as_ref() {
+                Some(b) if b.generation == generation => {
+                    if let Some((mu, var)) = &b.result {
+                        let (off, len) = span;
+                        let m = mu[off..off + len].to_vec();
+                        let v = var[off..off + len].to_vec();
+                        state
+                            .requests_served
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        return Response::ok(vec![
+                            ("mean", Json::arr_f64(&m)),
+                            ("var", Json::arr_f64(&v)),
+                            ("batched", Json::Num(b.spans.len() as f64)),
+                        ]);
+                    }
+                }
+                _ => {
+                    return Response::error("batch evicted before completion")
+                }
+            }
+            let (g, _timeout) = self
+                .cv
+                .wait_timeout(guard, std::time::Duration::from_secs(5))
+                .unwrap();
+            guard = g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_ops() {
+        assert_eq!(
+            Request::parse(r#"{"op":"observe","node":3,"y":1.5}"#).unwrap(),
+            Request::Observe { node: 3, y: 1.5 }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"predict","nodes":[1,2]}"#).unwrap(),
+            Request::Predict { nodes: vec![1, 2], samples: 16 }
+        );
+        assert_eq!(Request::parse(r#"{"op":"sample"}"#).unwrap(), Request::Sample);
+        assert_eq!(
+            Request::parse(r#"{"op":"thompson"}"#).unwrap(),
+            Request::Thompson
+        );
+        assert_eq!(Request::parse(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
+        assert!(Request::parse(r#"{"op":"nope"}"#).is_err());
+        assert!(Request::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn response_serialises() {
+        let r = Response::ok(vec![("x", Json::Num(1.0))]);
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"ok\":true"));
+        let e = Response::error("boom");
+        assert!(e.to_json().to_string().contains("boom"));
+    }
+}

@@ -1,0 +1,197 @@
+//! GP inference server — the L3 "coordinator" surface.
+//!
+//! A std-net TCP server speaking newline-delimited JSON, in the style
+//! of a model-inference router: a listener thread accepts connections,
+//! requests are routed into a shared queue, and a worker pool owns the
+//! GP model behind a mutex, micro-batching compatible requests (e.g.
+//! several `predict` requests are merged into one posterior evaluation
+//! under a single lock acquisition / feature borrow).
+//!
+//! Protocol (one JSON object per line):
+//!   {"op":"observe","node":17,"y":0.42}
+//!   {"op":"predict","nodes":[1,2,3],"samples":16}
+//!   {"op":"sample"}                       → full posterior draw argmax
+//!   {"op":"thompson"}                     → next query node
+//!   {"op":"stats"}
+//!   {"op":"shutdown"}
+//! Responses: {"ok":true, ...} or {"ok":false,"error":"..."}.
+
+pub mod batcher;
+
+use crate::gp::model::GpModel;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use batcher::{Batcher, Request, Response};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Server shared state.
+pub struct ServerState {
+    pub model: Mutex<ModelState>,
+    pub requests_served: AtomicU64,
+    pub shutdown: AtomicBool,
+}
+
+/// The mutable model + data the workers operate on.
+pub struct ModelState {
+    pub model: GpModel,
+    pub observations: Vec<(usize, f64)>,
+    pub rng: Rng,
+}
+
+impl ModelState {
+    fn refresh(&mut self) {
+        let nodes: Vec<usize> =
+            self.observations.iter().map(|(i, _)| *i).collect();
+        let ys: Vec<f64> = self.observations.iter().map(|(_, v)| *v).collect();
+        self.model.set_data(&nodes, &ys);
+    }
+}
+
+/// Handle one already-parsed request against the state.
+pub fn handle(state: &ServerState, req: &Request) -> Response {
+    state.requests_served.fetch_add(1, Ordering::Relaxed);
+    match req {
+        Request::Observe { node, y } => {
+            let mut ms = state.model.lock().unwrap();
+            if *node >= ms.model.n() {
+                return Response::error(format!("node {node} out of range"));
+            }
+            ms.observations.push((*node, *y));
+            ms.refresh();
+            Response::ok(vec![("n_obs", Json::Num(ms.observations.len() as f64))])
+        }
+        Request::Predict { nodes, samples } => {
+            let mut ms = state.model.lock().unwrap();
+            if let Some(&bad) = nodes.iter().find(|&&n| n >= ms.model.n()) {
+                return Response::error(format!("node {bad} out of range"));
+            }
+            let mut rng = ms.rng.split(ms.observations.len() as u64);
+            let (mean, var) = ms.model.predict(*samples, &mut rng);
+            let mu: Vec<f64> = nodes.iter().map(|&i| mean[i]).collect();
+            let vv: Vec<f64> = nodes.iter().map(|&i| var[i]).collect();
+            Response::ok(vec![
+                ("mean", Json::arr_f64(&mu)),
+                ("var", Json::arr_f64(&vv)),
+            ])
+        }
+        Request::Sample => {
+            let mut ms = state.model.lock().unwrap();
+            let mut rng = ms.rng.split(0x5A);
+            ms.rng = ms.rng.split(1); // advance server stream
+            let s = ms.model.posterior_sample(&mut rng);
+            let (argmax, max) = s
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, v)| (i, *v))
+                .unwrap();
+            Response::ok(vec![
+                ("argmax", Json::Num(argmax as f64)),
+                ("max", Json::Num(max)),
+            ])
+        }
+        Request::Thompson => {
+            let mut ms = state.model.lock().unwrap();
+            let mut rng = ms.rng.split(0x7A);
+            ms.rng = ms.rng.split(2);
+            let s = ms.model.posterior_sample(&mut rng);
+            let queried: std::collections::HashSet<usize> =
+                ms.observations.iter().map(|(i, _)| *i).collect();
+            let next = s
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !queried.contains(i))
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            Response::ok(vec![("next", Json::Num(next as f64))])
+        }
+        Request::Stats => {
+            let ms = state.model.lock().unwrap();
+            Response::ok(vec![
+                ("n_nodes", Json::Num(ms.model.n() as f64)),
+                ("n_obs", Json::Num(ms.observations.len() as f64)),
+                (
+                    "requests",
+                    Json::Num(state.requests_served.load(Ordering::Relaxed) as f64),
+                ),
+            ])
+        }
+        Request::Shutdown => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            Response::ok(vec![("bye", Json::Bool(true))])
+        }
+    }
+}
+
+fn client_loop(stream: TcpStream, state: Arc<ServerState>, batcher: Arc<Batcher>) -> Result<()> {
+    let mut writer = stream.try_clone().context("clone stream")?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Request::parse(&line) {
+            Ok(req) => batcher.submit(&state, req),
+            Err(e) => Response::error(e),
+        };
+        writer.write_all(resp.to_json().to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Serve `model` on `addr` until a shutdown request arrives.
+pub fn serve(model: GpModel, addr: &str, seed: u64) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    let local = listener.local_addr()?;
+    eprintln!("grfgp server listening on {local}");
+    serve_on(model, listener, seed)
+}
+
+/// Serve on an already-bound listener (tests bind port 0 themselves).
+pub fn serve_on(model: GpModel, listener: TcpListener, seed: u64) -> Result<()> {
+    let state = Arc::new(ServerState {
+        model: Mutex::new(ModelState {
+            model,
+            observations: Vec::new(),
+            rng: Rng::new(seed),
+        }),
+        requests_served: AtomicU64::new(0),
+        shutdown: AtomicBool::new(false),
+    });
+    let batcher = Arc::new(Batcher::new(8));
+    listener.set_nonblocking(true)?;
+    std::thread::scope(|scope| -> Result<()> {
+        loop {
+            if state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false).ok();
+                    let st = state.clone();
+                    let ba = batcher.clone();
+                    scope.spawn(move || {
+                        if let Err(e) = client_loop(stream, st, ba) {
+                            eprintln!("client error: {e:#}");
+                        }
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    })
+}

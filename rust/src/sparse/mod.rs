@@ -1,0 +1,431 @@
+//! Sparse linear-algebra substrate: CSR matrices, COO builders, ELL
+//! conversion (the PJRT interchange layout), and the gram-matvec that
+//! dominates the GP hot path.
+
+pub mod ops;
+
+use crate::util::parallel;
+
+/// CSR sparse matrix over f64. Rows sorted by column, duplicates merged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub offsets: Vec<usize>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+/// COO triplet accumulator; `build()` sorts, merges duplicates, and
+/// produces canonical CSR.
+#[derive(Clone, Debug, Default)]
+pub struct CooBuilder {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    entries: Vec<(u32, u32, f64)>,
+}
+
+impl CooBuilder {
+    pub fn new(n_rows: usize, n_cols: usize) -> Self {
+        CooBuilder { n_rows, n_cols, entries: Vec::new() }
+    }
+
+    #[inline]
+    pub fn push(&mut self, r: u32, c: u32, v: f64) {
+        debug_assert!((r as usize) < self.n_rows && (c as usize) < self.n_cols);
+        self.entries.push((r, c, v));
+    }
+
+    pub fn nnz_upper_bound(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn build(mut self) -> Csr {
+        self.entries
+            .sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut offsets = vec![0usize; self.n_rows + 1];
+        let mut cols = Vec::with_capacity(self.entries.len());
+        let mut vals = Vec::with_capacity(self.entries.len());
+        let mut i = 0;
+        while i < self.entries.len() {
+            let (r, c, _) = self.entries[i];
+            let mut v = 0.0;
+            while i < self.entries.len()
+                && self.entries[i].0 == r
+                && self.entries[i].1 == c
+            {
+                v += self.entries[i].2;
+                i += 1;
+            }
+            if v != 0.0 {
+                cols.push(c);
+                vals.push(v);
+                offsets[r as usize + 1] += 1;
+            }
+        }
+        for r in 0..self.n_rows {
+            offsets[r + 1] += offsets[r];
+        }
+        Csr {
+            n_rows: self.n_rows,
+            n_cols: self.n_cols,
+            offsets,
+            cols,
+            vals,
+        }
+    }
+}
+
+impl Csr {
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Csr {
+        Csr {
+            n_rows,
+            n_cols,
+            offsets: vec![0; n_rows + 1],
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    /// Identity matrix scaled by `s`.
+    pub fn scaled_identity(n: usize, s: f64) -> Csr {
+        Csr {
+            n_rows: n,
+            n_cols: n,
+            offsets: (0..=n).collect(),
+            cols: (0..n as u32).collect(),
+            vals: vec![s; n],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.offsets[i], self.offsets[i + 1]);
+        (&self.cols[s..e], &self.vals[s..e])
+    }
+
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.n_rows)
+            .map(|i| self.offsets[i + 1] - self.offsets[i])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Memory footprint in bytes (cols + vals + offsets).
+    pub fn memory_bytes(&self) -> usize {
+        self.cols.len() * 4 + self.vals.len() * 8 + self.offsets.len() * 8
+    }
+
+    /// y = A x (serial).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(x.len(), self.n_cols);
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A x, writing into a caller-provided buffer (hot path:
+    /// no allocation per CG iteration).
+    ///
+    /// The inner gather uses unchecked indexing: `cols` entries are
+    /// validated < n_cols at construction (CooBuilder asserts, CSR
+    /// stitching preserves), so the bound holds by construction; this
+    /// is worth ~20% on the CG hot path (EXPERIMENTS.md §Perf).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n_cols);
+        debug_assert_eq!(y.len(), self.n_rows);
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0.0;
+            for (c, v) in cols.iter().zip(vals) {
+                // SAFETY: *c < n_cols == x.len() by CSR construction.
+                acc += v * unsafe { x.get_unchecked(*c as usize) };
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Parallel y = A x across row chunks.
+    pub fn matvec_par(&self, x: &[f64], threads: usize) -> Vec<f64> {
+        let parts = parallel::par_map_chunks(self.n_rows, threads, |s, e, _| {
+            let mut part = vec![0.0; e - s];
+            for i in s..e {
+                let (cols, vals) = self.row(i);
+                let mut acc = 0.0;
+                for (c, v) in cols.iter().zip(vals) {
+                    acc += v * x[*c as usize];
+                }
+                part[i - s] = acc;
+            }
+            part
+        });
+        parts.concat()
+    }
+
+    /// Transpose (CSR -> CSR of A^T) via counting sort; O(nnz).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.n_cols + 1];
+        for &c in &self.cols {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.n_cols {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cols = vec![0u32; self.nnz()];
+        let mut vals = vec![0f64; self.nnz()];
+        let mut cursor = counts;
+        for r in 0..self.n_rows {
+            let (rc, rv) = self.row(r);
+            for (c, v) in rc.iter().zip(rv) {
+                let k = cursor[*c as usize];
+                cols[k] = r as u32;
+                vals[k] = *v;
+                cursor[*c as usize] += 1;
+            }
+        }
+        Csr {
+            n_rows: self.n_cols,
+            n_cols: self.n_rows,
+            offsets,
+            cols,
+            vals,
+        }
+    }
+
+    /// Linear combination Σ_l coeff[l] * mats[l] (same shape). Used to
+    /// assemble Φ(f) = Σ_l f_l C_l from walk component matrices.
+    pub fn linear_combination(mats: &[&Csr], coeffs: &[f64]) -> Csr {
+        assert_eq!(mats.len(), coeffs.len());
+        assert!(!mats.is_empty());
+        let (nr, nc) = (mats[0].n_rows, mats[0].n_cols);
+        let mut b = CooBuilder::new(nr, nc);
+        for (m, &w) in mats.iter().zip(coeffs) {
+            assert_eq!((m.n_rows, m.n_cols), (nr, nc));
+            if w == 0.0 {
+                continue;
+            }
+            for r in 0..nr {
+                let (cols, vals) = m.row(r);
+                for (c, v) in cols.iter().zip(vals) {
+                    b.push(r as u32, *c, w * v);
+                }
+            }
+        }
+        b.build()
+    }
+
+    /// Dense expansion (tests / small-N baselines only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut out = vec![vec![0.0; self.n_cols]; self.n_rows];
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                out[r][*c as usize] += v;
+            }
+        }
+        out
+    }
+
+    /// Convert to ELL (fixed row width) with f32/i32 payloads — the
+    /// layout the PJRT artifacts consume. Pads with (idx 0, val 0).
+    /// Returns None if any row exceeds `width`.
+    pub fn to_ell(&self, width: usize) -> Option<Ell> {
+        if self.max_row_nnz() > width {
+            return None;
+        }
+        let n = self.n_rows;
+        let mut idx = vec![0i32; n * width];
+        let mut val = vec![0f32; n * width];
+        for r in 0..n {
+            let (cols, vals) = self.row(r);
+            for (k, (c, v)) in cols.iter().zip(vals).enumerate() {
+                idx[r * width + k] = *c as i32;
+                val[r * width + k] = *v as f32;
+            }
+        }
+        Some(Ell { n_rows: n, n_cols: self.n_cols, width, idx, val })
+    }
+}
+
+/// ELL (padded fixed-width) sparse matrix with f32/i32 payloads —
+/// the interchange layout for the PJRT artifacts (see python/compile).
+#[derive(Clone, Debug)]
+pub struct Ell {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub width: usize,
+    /// Row-major [n_rows, width] column indices.
+    pub idx: Vec<i32>,
+    /// Row-major [n_rows, width] values.
+    pub val: Vec<f32>,
+}
+
+impl Ell {
+    /// Pad to a larger (rows, width) bucket, preserving content.
+    pub fn pad_to(&self, rows: usize, width: usize) -> Ell {
+        assert!(rows >= self.n_rows && width >= self.width);
+        let mut idx = vec![0i32; rows * width];
+        let mut val = vec![0f32; rows * width];
+        for r in 0..self.n_rows {
+            let src = r * self.width;
+            let dst = r * width;
+            idx[dst..dst + self.width]
+                .copy_from_slice(&self.idx[src..src + self.width]);
+            val[dst..dst + self.width]
+                .copy_from_slice(&self.val[src..src + self.width]);
+        }
+        Ell { n_rows: rows, n_cols: self.n_cols.max(rows), width, idx, val }
+    }
+
+    /// Reference matvec (f32 accumulation matches the artifact numerics).
+    pub fn matvec_f32(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0f32; self.n_rows];
+        for r in 0..self.n_rows {
+            let mut acc = 0f32;
+            for k in 0..self.width {
+                let e = r * self.width + k;
+                acc += self.val[e] * x[self.idx[e] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
+
+    pub fn random_csr(rng: &mut Rng, n_rows: usize, n_cols: usize, nnz: usize) -> Csr {
+        let mut b = CooBuilder::new(n_rows, n_cols);
+        for _ in 0..nnz {
+            b.push(
+                rng.below(n_rows) as u32,
+                rng.below(n_cols) as u32,
+                rng.normal(),
+            );
+        }
+        b.build()
+    }
+
+    #[test]
+    fn coo_merges_duplicates() {
+        let mut b = CooBuilder::new(2, 2);
+        b.push(0, 1, 1.0);
+        b.push(0, 1, 2.0);
+        b.push(1, 0, -1.0);
+        b.push(1, 0, 1.0); // cancels to zero -> dropped
+        let m = b.build();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row(0), (&[1u32][..], &[3.0][..]));
+        assert_eq!(m.row(1).0.len(), 0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        proptest(32, |rng| {
+            let n = 1 + rng.below(40);
+            let m = 1 + rng.below(40);
+            let a = random_csr(rng, n, m, 3 * n);
+            let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let y = a.matvec(&x);
+            let dense = a.to_dense();
+            for i in 0..n {
+                let expect: f64 =
+                    dense[i].iter().zip(&x).map(|(a, b)| a * b).sum();
+                prop_assert!(
+                    (y[i] - expect).abs() < 1e-9,
+                    "row {i}: {} vs {expect}",
+                    y[i]
+                );
+            }
+            let y_par = a.matvec_par(&x, 4);
+            prop_assert!(y == y_par, "parallel matvec differs");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transpose_involution_and_shape() {
+        proptest(32, |rng| {
+            let n = 1 + rng.below(30);
+            let m = 1 + rng.below(30);
+            let a = random_csr(rng, n, m, 2 * n);
+            let t = a.transpose();
+            prop_assert!(t.n_rows == m && t.n_cols == n, "shape");
+            let tt = t.transpose();
+            prop_assert!(tt == a, "transpose twice != identity");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linear_combination_matches_dense() {
+        proptest(16, |rng| {
+            let n = 1 + rng.below(20);
+            let a = random_csr(rng, n, n, 2 * n);
+            let b = random_csr(rng, n, n, 2 * n);
+            let combo = Csr::linear_combination(&[&a, &b], &[2.0, -0.5]);
+            let (da, db, dc) = (a.to_dense(), b.to_dense(), combo.to_dense());
+            for i in 0..n {
+                for j in 0..n {
+                    let expect = 2.0 * da[i][j] - 0.5 * db[i][j];
+                    prop_assert!(
+                        (dc[i][j] - expect).abs() < 1e-10,
+                        "entry ({i},{j})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ell_roundtrip() {
+        let mut rng = Rng::new(3);
+        let a = random_csr(&mut rng, 10, 10, 25);
+        let w = a.max_row_nnz();
+        let e = a.to_ell(w).unwrap();
+        let x: Vec<f32> = (0..10).map(|_| rng.normal() as f32).collect();
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let y32 = e.matvec_f32(&x);
+        let y64 = a.matvec(&x64);
+        for i in 0..10 {
+            assert!((y32[i] as f64 - y64[i]).abs() < 1e-4);
+        }
+        assert!(a.to_ell(w.saturating_sub(1)).is_none() || w == 0);
+    }
+
+    #[test]
+    fn ell_pad_preserves_product() {
+        let mut rng = Rng::new(5);
+        let a = random_csr(&mut rng, 8, 8, 20);
+        let e = a.to_ell(a.max_row_nnz()).unwrap();
+        let p = e.pad_to(16, e.width + 3);
+        let mut x: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        x.resize(16, 0.0);
+        let y = p.matvec_f32(&x);
+        let y0 = e.matvec_f32(&x[..8]);
+        for i in 0..8 {
+            assert!((y[i] - y0[i]).abs() < 1e-6);
+        }
+        for v in &y[8..] {
+            assert_eq!(*v, 0.0);
+        }
+    }
+
+    #[test]
+    fn scaled_identity() {
+        let m = Csr::scaled_identity(4, 2.5);
+        let y = m.matvec(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(y, vec![2.5, 5.0, 7.5, 10.0]);
+    }
+}

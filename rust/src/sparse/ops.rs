@@ -1,0 +1,317 @@
+//! Gram-matrix operators built from GRF feature matrices.
+//!
+//! The whole GP hot path reduces to products with
+//! `A = m (Φ Φᵀ) m + σ² I` (mask m selects training nodes). `K = ΦΦᵀ`
+//! is never materialised: each product is two sparse matvecs
+//! (paper §3.2, Theorem 2 property 1).
+
+use super::Csr;
+use crate::util::parallel;
+
+/// Reusable operator around Φ (and its precomputed transpose).
+pub struct GramOperator {
+    pub phi: Csr,
+    pub phi_t: Csr,
+    /// Observation-noise variance σ².
+    pub sigma2: f64,
+    /// Optional {0,1} training mask (None = all nodes).
+    pub mask: Option<Vec<f64>>,
+    /// Worker threads for the two SpMVs (1 = serial).
+    pub threads: usize,
+    // Scratch buffers so repeated applies don't allocate.
+    buf_mid: Vec<f64>,
+    buf_in: Vec<f64>,
+}
+
+impl GramOperator {
+    pub fn new(phi: Csr, sigma2: f64) -> GramOperator {
+        let phi_t = phi.transpose();
+        let mid = phi.n_cols;
+        let n = phi.n_rows;
+        GramOperator {
+            phi,
+            phi_t,
+            sigma2,
+            mask: None,
+            threads: 1,
+            buf_mid: vec![0.0; mid],
+            buf_in: vec![0.0; n],
+        }
+    }
+
+    pub fn with_mask(mut self, mask: Vec<f64>) -> Self {
+        assert_eq!(mask.len(), self.phi.n_rows);
+        self.mask = Some(mask);
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn n(&self) -> usize {
+        self.phi.n_rows
+    }
+
+    /// Number of stored nonzeros in Φ (the paper's O(N) memory object).
+    pub fn nnz(&self) -> usize {
+        self.phi.nnz()
+    }
+
+    /// y = m Φ Φᵀ m x + σ² x  (in-place into `y`).
+    pub fn apply_into(&mut self, x: &[f64], y: &mut [f64]) {
+        let n = self.n();
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(y.len(), n);
+        let masked_x: &[f64] = match &self.mask {
+            Some(m) => {
+                for i in 0..n {
+                    self.buf_in[i] = m[i] * x[i];
+                }
+                &self.buf_in
+            }
+            None => x,
+        };
+        if self.threads > 1 && n > 4096 {
+            let mid = self.phi_t.matvec_par(masked_x, self.threads);
+            let out = self.phi.matvec_par(&mid, self.threads);
+            match &self.mask {
+                Some(m) => {
+                    for i in 0..n {
+                        y[i] = m[i] * out[i] + self.sigma2 * x[i];
+                    }
+                }
+                None => {
+                    for i in 0..n {
+                        y[i] = out[i] + self.sigma2 * x[i];
+                    }
+                }
+            }
+        } else {
+            self.phi_t.matvec_into(masked_x, &mut self.buf_mid);
+            // Write Φ·mid into y, then add mask and noise terms.
+            let buf_mid = std::mem::take(&mut self.buf_mid);
+            self.phi.matvec_into(&buf_mid, y);
+            self.buf_mid = buf_mid;
+            match &self.mask {
+                Some(m) => {
+                    for i in 0..n {
+                        y[i] = m[i] * y[i] + self.sigma2 * x[i];
+                    }
+                }
+                None => {
+                    for i in 0..n {
+                        y[i] += self.sigma2 * x[i];
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn apply(&mut self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n()];
+        self.apply_into(x, &mut y);
+        y
+    }
+
+    /// Kernel product without noise or mask: y = Φ (Φᵀ x).
+    pub fn kernel_apply(&mut self, x: &[f64]) -> Vec<f64> {
+        self.phi_t.matvec_into(x, &mut self.buf_mid);
+        let mut y = vec![0.0; self.n()];
+        self.phi.matvec_into(&self.buf_mid, &mut y);
+        y
+    }
+
+    /// Prior sample g = Φ w, Cov(g) = ΦΦᵀ = K̂ (paper §3.2).
+    pub fn prior_sample(&self, w: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(w.len(), self.phi.n_cols);
+        if self.threads > 1 && self.n() > 4096 {
+            self.phi.matvec_par(w, self.threads)
+        } else {
+            self.phi.matvec(w)
+        }
+    }
+
+    /// Single kernel entry K̂[i,j] = φ(i)·φ(j) (sorted-row merge).
+    pub fn kernel_entry(&self, i: usize, j: usize) -> f64 {
+        let (ci, vi) = self.phi.row(i);
+        let (cj, vj) = self.phi.row(j);
+        let mut a = 0;
+        let mut b = 0;
+        let mut acc = 0.0;
+        while a < ci.len() && b < cj.len() {
+            match ci[a].cmp(&cj[b]) {
+                std::cmp::Ordering::Less => a += 1,
+                std::cmp::Ordering::Greater => b += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += vi[a] * vj[b];
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Materialise one row of K̂ (used by small exact comparisons).
+    pub fn kernel_row(&mut self, i: usize) -> Vec<f64> {
+        let n = self.n();
+        let mut e = vec![0.0; n];
+        e[i] = 1.0;
+        self.kernel_apply(&e)
+    }
+}
+
+/// Batched gram matvec over R right-hand sides (column-major layout:
+/// `x[r]` is the r-th vector). Parallelises over RHS — the Hutchinson
+/// probe batch in LML training.
+pub fn gram_matmat(op_phi: &Csr, op_phi_t: &Csr, mask: Option<&[f64]>,
+                   sigma2: f64, xs: &[Vec<f64>], threads: usize) -> Vec<Vec<f64>> {
+    parallel::par_map(xs, threads, |x| {
+        let n = op_phi.n_rows;
+        let masked: Vec<f64> = match mask {
+            Some(m) => m.iter().zip(x).map(|(mi, xi)| mi * xi).collect(),
+            None => x.clone(),
+        };
+        let mid = op_phi_t.matvec(&masked);
+        let mut y = op_phi.matvec(&mid);
+        match mask {
+            Some(m) => {
+                for i in 0..n {
+                    y[i] = m[i] * y[i] + sigma2 * x[i];
+                }
+            }
+            None => {
+                for i in 0..n {
+                    y[i] += sigma2 * x[i];
+                }
+            }
+        }
+        y
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::sparse::CooBuilder;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
+
+    fn random_phi(rng: &mut Rng, n: usize) -> Csr {
+        let mut b = CooBuilder::new(n, n);
+        for i in 0..n {
+            for _ in 0..3 {
+                b.push(i as u32, rng.below(n) as u32, 0.4 * rng.normal());
+            }
+        }
+        b.build()
+    }
+
+    fn dense_gram(phi: &Csr) -> Vec<Vec<f64>> {
+        let d = phi.to_dense();
+        let n = phi.n_rows;
+        let mut k = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            for j in 0..n {
+                k[i][j] = (0..phi.n_cols).map(|c| d[i][c] * d[j][c]).sum();
+            }
+        }
+        k
+    }
+
+    #[test]
+    fn gram_apply_matches_dense() {
+        proptest(24, |rng| {
+            let n = 2 + rng.below(30);
+            let phi = random_phi(rng, n);
+            let k = dense_gram(&phi);
+            let mask: Vec<f64> =
+                (0..n).map(|_| if rng.bernoulli(0.6) { 1.0 } else { 0.0 }).collect();
+            let sigma2 = 0.3;
+            let mut op = GramOperator::new(phi, sigma2).with_mask(mask.clone());
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y = op.apply(&x);
+            for i in 0..n {
+                let kmx: f64 = (0..n).map(|j| k[i][j] * mask[j] * x[j]).sum();
+                let expect = mask[i] * kmx + sigma2 * x[i];
+                prop_assert!(
+                    (y[i] - expect).abs() < 1e-9,
+                    "i={i}: {} vs {expect}",
+                    y[i]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd() {
+        proptest(12, |rng| {
+            let n = 2 + rng.below(20);
+            let phi = random_phi(rng, n);
+            let mut op = GramOperator::new(phi, 0.0);
+            // Symmetry: x'A y == y'A x; PSD: x'A x >= 0.
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let ax = op.kernel_apply(&x);
+            let ay = op.kernel_apply(&y);
+            let xay: f64 = x.iter().zip(&ay).map(|(a, b)| a * b).sum();
+            let yax: f64 = y.iter().zip(&ax).map(|(a, b)| a * b).sum();
+            prop_assert!((xay - yax).abs() < 1e-8 * (1.0 + xay.abs()), "symmetry");
+            let xax: f64 = x.iter().zip(&ax).map(|(a, b)| a * b).sum();
+            prop_assert!(xax >= -1e-9, "psd violated: {xax}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kernel_entry_matches_apply() {
+        let mut rng = Rng::new(0);
+        let n = 12;
+        let phi = random_phi(&mut rng, n);
+        let mut op = GramOperator::new(phi, 0.0);
+        for i in 0..n {
+            let row = op.kernel_row(i);
+            for j in 0..n {
+                assert!((op.kernel_entry(i, j) - row[j]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_path_matches_serial() {
+        let mut rng = Rng::new(1);
+        // Big enough to trigger the threaded branch.
+        let n = 5000;
+        let phi = random_phi(&mut rng, n);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut serial = GramOperator::new(phi.clone(), 0.1);
+        let mut par = GramOperator::new(phi, 0.1).with_threads(4);
+        let ys = serial.apply(&x);
+        let yp = par.apply(&x);
+        for i in 0..n {
+            assert!((ys[i] - yp[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gram_matmat_matches_apply() {
+        let mut rng = Rng::new(2);
+        let n = 40;
+        let phi = random_phi(&mut rng, n);
+        let phi_t = phi.transpose();
+        let xs: Vec<Vec<f64>> =
+            (0..5).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let mut op = GramOperator::new(phi.clone(), 0.2);
+        let batch = gram_matmat(&phi, &phi_t, None, 0.2, &xs, 3);
+        for (x, yb) in xs.iter().zip(&batch) {
+            let y = op.apply(x);
+            for i in 0..n {
+                assert!((y[i] - yb[i]).abs() < 1e-10);
+            }
+        }
+    }
+}

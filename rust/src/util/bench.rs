@@ -1,0 +1,98 @@
+//! Benchmark harness (criterion is not in the offline registry).
+//!
+//! Provides warmup + repeated timing with mean/σ/min, throughput
+//! annotation, and a stable one-line-per-benchmark output format that
+//! the EXPERIMENTS.md tables are generated from.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub reps: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} mean {:>12} ± {:>10}   min {:>12}   ({} reps)",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+            self.reps
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if !s.is_finite() {
+        return format!("{s}");
+    }
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured calls then `reps` measured calls.
+/// A `black_box`-alike on the closure result prevents dead-code elision.
+pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let (mean, std) = crate::util::timer::mean_std(&times);
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_s: mean,
+        std_s: std,
+        min_s: min,
+        reps,
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Adaptive variant: pick reps so total measured time ≈ `budget_s`.
+pub fn bench_auto<T>(name: &str, budget_s: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    // One probe call to estimate cost.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let probe = t0.elapsed().as_secs_f64().max(1e-9);
+    let reps = ((budget_s / probe) as usize).clamp(3, 1000);
+    bench(name, 1, reps, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop-sum", 1, 5, || (0..1000u64).sum::<u64>());
+        assert_eq!(r.reps, 5);
+        assert!(r.mean_s >= 0.0 && r.min_s <= r.mean_s);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,150 @@
+//! Tiny CLI argument parser (no clap in the offline registry).
+//!
+//! Grammar: `binary <subcommand> [--flag] [--key value] [positional...]`.
+//! `--key=value` is also accepted.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `known_flags` lists boolean options that never take a value, so
+    /// `--verbose positional` parses unambiguously.
+    pub fn parse_known<I: IntoIterator<Item = String>>(
+        raw: I,
+        known_flags: &[&str],
+    ) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if !known_flags.contains(&rest)
+                    && iter
+                        .peek()
+                        .map(|next| !next.starts_with("--"))
+                        .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        Args::parse_known(raw, &[])
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} wants a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes, e.g. `--sizes 32,64,128`.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name}: bad entry {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = Args::parse_known(
+            ["exp", "--n", "100", "--verbose", "pos1", "--k=3"]
+                .iter()
+                .map(|s| s.to_string()),
+            &["verbose"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.usize("n", 0), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.usize("k", 0), 3);
+    }
+
+    #[test]
+    fn unknown_flag_greedily_takes_value() {
+        let a = parse(&["exp", "--mode", "fast"]);
+        assert_eq!(a.get("mode"), Some("fast"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["run"]);
+        assert_eq!(a.usize("n", 7), 7);
+        assert_eq!(a.f64("lr", 0.1), 0.1);
+        assert!(!a.flag("x"));
+        assert_eq!(a.usize_list("sizes", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--sizes", "32,64,128"]);
+        assert_eq!(a.usize_list("sizes", &[]), vec![32, 64, 128]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["x", "--fast"]);
+        assert!(a.flag("fast"));
+    }
+}

@@ -1,0 +1,15 @@
+//! In-tree infrastructure substrate.
+//!
+//! The offline crate registry only provides `xla`, `anyhow`, and
+//! `num-traits`; everything a production crate would normally pull from
+//! crates.io (rand, serde_json, clap, rayon, criterion, proptest) is
+//! implemented here, scoped to exactly what the GRF-GP stack needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod parallel;
+pub mod powerlaw;
+pub mod proptest;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,144 @@
+//! Scoped-thread parallelism helpers (no rayon in the offline registry).
+//!
+//! The walk engine and the experiment sweeps are embarrassingly
+//! parallel over nodes/seeds; `par_map_chunks` splits an index range
+//! into contiguous chunks, one std scoped thread per chunk.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: respects `GRFGP_THREADS`, defaults
+/// to available parallelism.
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("GRFGP_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f(chunk_start, chunk_end, chunk_index)` in parallel over
+/// contiguous chunks of `[0, n)`, collecting per-chunk outputs in chunk
+/// order. Deterministic given deterministic `f`.
+pub fn par_map_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize, usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        return vec![f(0, n, 0)];
+    }
+    let chunk = n.div_ceil(threads);
+    let mut bounds = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        bounds.push((start, end));
+        start = end;
+    }
+    let mut out: Vec<Option<T>> = (0..bounds.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (ci, &(s, e)) in bounds.iter().enumerate() {
+            let f = &f;
+            handles.push(scope.spawn(move || (ci, f(s, e, ci))));
+        }
+        for h in handles {
+            let (ci, v) = h.join().expect("worker panicked");
+            out[ci] = Some(v);
+        }
+    });
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+/// Parallel element-wise map over a slice, writing results into a new
+/// Vec in input order.
+pub fn par_map<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send + Clone + Default,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let mut out = vec![U::default(); n];
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        for (o, it) in out.iter_mut().zip(items) {
+            *o = f(it);
+        }
+        return out;
+    }
+    let next = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let out_ptr = out_ptr;
+            scope.spawn(move || {
+                // Capture the wrapper (not its raw-pointer field) so the
+                // closure stays Send under 2021 disjoint capture.
+                let out_ptr = out_ptr;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(&items[i]);
+                    // SAFETY: each index is claimed by exactly one thread.
+                    unsafe { *out_ptr.0.add(i) = v };
+                }
+            });
+        }
+    });
+    out
+}
+
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_range_once() {
+        let parts = par_map_chunks(101, 7, |s, e, _| (s, e));
+        let mut covered = vec![false; 101];
+        for (s, e) in parts {
+            for c in covered.iter_mut().take(e).skip(s) {
+                assert!(!*c);
+                *c = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn par_map_matches_serial() {
+        let xs: Vec<u64> = (0..1000).collect();
+        let serial: Vec<u64> = xs.iter().map(|x| x * x + 1).collect();
+        let parallel = par_map(&xs, 8, |x| x * x + 1);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        assert_eq!(par_map::<u32, u32, _>(&[], 4, |x| *x), vec![]);
+        assert_eq!(par_map(&[5u32], 4, |x| x + 1), vec![6]);
+        let parts = par_map_chunks(0, 4, |s, e, _| (s, e));
+        assert_eq!(parts, vec![(0, 0)]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Power-law fitting in log-log space (paper Table 4).
+//!
+//! The paper summarises scaling as `y ≈ a·N^b`, fit by OLS on
+//! (log N, log y), reporting `b` with a 95% t-interval and R².
+
+/// Result of an OLS power-law fit `y = a * x^b`.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerLawFit {
+    pub a: f64,
+    pub b: f64,
+    /// Half-width of the 95% confidence interval on `b`.
+    pub b_ci95: f64,
+    pub r2: f64,
+    pub n: usize,
+}
+
+/// Two-sided 97.5% quantile of Student's t with `df` degrees of freedom.
+/// Table-based (exact for small df, 1.96 asymptote) — good to ~0.1%,
+/// which is far below the run-to-run noise it brackets.
+fn t975(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262,
+        2.228, 2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101,
+        2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052,
+        2.048, 2.045, 2.042,
+    ];
+    match df {
+        0 => f64::INFINITY,
+        d if d <= 30 => TABLE[d - 1],
+        d if d <= 40 => 2.021,
+        d if d <= 60 => 2.000,
+        d if d <= 120 => 1.980,
+        _ => 1.960,
+    }
+}
+
+/// Fit `y = a x^b` by OLS in log-log space. Ignores non-positive pairs.
+pub fn fit_powerlaw(xs: &[f64], ys: &[f64]) -> PowerLawFit {
+    assert_eq!(xs.len(), ys.len());
+    let pts: Vec<(f64, f64)> = xs
+        .iter()
+        .zip(ys)
+        .filter(|(&x, &y)| x > 0.0 && y > 0.0)
+        .map(|(&x, &y)| (x.ln(), y.ln()))
+        .collect();
+    let n = pts.len();
+    assert!(n >= 2, "need at least 2 positive points");
+    let nf = n as f64;
+    let mx = pts.iter().map(|p| p.0).sum::<f64>() / nf;
+    let my = pts.iter().map(|p| p.1).sum::<f64>() / nf;
+    let sxx: f64 = pts.iter().map(|p| (p.0 - mx).powi(2)).sum();
+    let sxy: f64 = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let syy: f64 = pts.iter().map(|p| (p.1 - my).powi(2)).sum();
+    let b = sxy / sxx;
+    let a = (my - b * mx).exp();
+    let ss_res: f64 = pts
+        .iter()
+        .map(|p| (p.1 - (my + b * (p.0 - mx))).powi(2))
+        .sum();
+    let r2 = if syy > 0.0 { 1.0 - ss_res / syy } else { 1.0 };
+    let b_ci95 = if n > 2 {
+        let se = (ss_res / (nf - 2.0) / sxx).sqrt();
+        t975(n - 2) * se
+    } else {
+        f64::INFINITY
+    };
+    PowerLawFit { a, b, b_ci95, r2, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_powerlaw_recovered() {
+        let xs: Vec<f64> = (5..15).map(|k| (1u64 << k) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.5 * x.powf(1.5)).collect();
+        let fit = fit_powerlaw(&xs, &ys);
+        assert!((fit.b - 1.5).abs() < 1e-9);
+        assert!((fit.a - 3.5).abs() < 1e-6);
+        assert!(fit.r2 > 0.999999);
+        assert!(fit.b_ci95 < 1e-6);
+    }
+
+    #[test]
+    fn noisy_fit_has_sane_ci() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let xs: Vec<f64> = (5..20).map(|k| (1u64 << k) as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 2.0 * x.powf(1.0) * (1.0 + 0.05 * rng.normal()).abs())
+            .collect();
+        let fit = fit_powerlaw(&xs, &ys);
+        assert!((fit.b - 1.0).abs() < 0.05, "b={}", fit.b);
+        assert!(fit.b_ci95 > 0.0 && fit.b_ci95 < 0.1);
+        assert!(fit.r2 > 0.99);
+    }
+
+    #[test]
+    fn skips_nonpositive() {
+        let fit = fit_powerlaw(&[1.0, 2.0, 4.0, 8.0, 0.0], &[1.0, 2.0, 4.0, 8.0, -1.0]);
+        assert!((fit.b - 1.0).abs() < 1e-12);
+        assert_eq!(fit.n, 4);
+    }
+}

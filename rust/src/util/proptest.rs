@@ -1,0 +1,97 @@
+//! In-tree property-testing harness (the `proptest` crate is not in the
+//! offline registry; this reproduces its methodology: seeded random case
+//! generation, many cases per property, and a reproducible failure
+//! report naming the seed).
+//!
+//! Usage:
+//! ```ignore
+//! proptest(64, |rng| {
+//!     let n = 1 + rng.below(50);
+//!     let m = random_csr(rng, n);
+//!     check!(m.transpose().transpose() == m, "transpose involution n={n}");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `cases` randomized cases of `property`, each with an independent
+/// seeded RNG. On failure, panics with the case seed for reproduction.
+pub fn proptest<F>(cases: usize, property: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    // Honor GRFGP_PROPTEST_SEED for replaying a failure.
+    let base = std::env::var("GRFGP_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    if let Some(seed) = base {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64
+            .wrapping_mul(case as u64 + 1)
+            .wrapping_add(0xD1B54A32D192ED03);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property failed on case {case}/{cases} \
+                 (replay with GRFGP_PROPTEST_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Assert two f64s are within tolerance.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a, $b);
+        if (a - b).abs() > $tol {
+            return Err(format!(
+                "{} = {a} vs {} = {b} differ by {} (tol {})",
+                stringify!($a), stringify!($b), (a - b).abs(), $tol
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        proptest(16, |rng| {
+            let _ = rng.uniform();
+            Ok(())
+        });
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        proptest(8, |rng| {
+            let x = rng.uniform();
+            prop_assert!(x < 0.0, "x={x} is not negative");
+            Ok(())
+        });
+    }
+}

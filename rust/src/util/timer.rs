@@ -1,0 +1,116 @@
+//! Wall-clock timing + lightweight metrics instrumentation.
+
+use std::time::Instant;
+
+/// Time a closure; returns (result, seconds).
+pub fn timeit<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+/// Mean and sample standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+/// Percentile (nearest-rank) of a sample; `q` in [0, 1].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Named duration accumulator for profiling sections of a pipeline.
+#[derive(Default, Debug)]
+pub struct Stopwatch {
+    entries: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (v, secs) = timeit(f);
+        self.entries.push((name.to_string(), secs));
+        v
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        self.entries.push((name.to_string(), secs));
+    }
+
+    pub fn total(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, s)| s)
+            .sum()
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    pub fn report(&self) -> String {
+        use std::collections::BTreeMap;
+        let mut totals: BTreeMap<&str, (f64, usize)> = BTreeMap::new();
+        for (n, s) in &self.entries {
+            let e = totals.entry(n).or_insert((0.0, 0));
+            e.0 += s;
+            e.1 += 1;
+        }
+        let mut out = String::new();
+        for (n, (s, c)) in totals {
+            out.push_str(&format!("{n:>24}: {s:9.4}s  ({c} calls)\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!((m1, s1), (5.0, 0.0));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&xs, 0.01), 1.0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.add("a", 1.0);
+        sw.add("a", 2.0);
+        sw.add("b", 0.5);
+        assert!((sw.total("a") - 3.0).abs() < 1e-12);
+        assert!(sw.report().contains("a"));
+    }
+}

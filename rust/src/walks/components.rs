@@ -1,0 +1,197 @@
+//! Per-length walk component matrices and their fast recombination.
+//!
+//! Training recombines `Φ(f) = Σ_l f_l C_l` at every optimiser step, so
+//! the union sparsity pattern and per-length scatter maps are
+//! precomputed once ([`CombinedFeatures`]); each recombination is then
+//! a single fused scatter pass with no allocation or sorting.
+
+use crate::sparse::{CooBuilder, Csr};
+
+/// The output of the walk engine: `c[l][i][j]` estimates `(W^l)[i][j]`.
+#[derive(Clone, Debug)]
+pub struct WalkComponents {
+    pub c: Vec<Csr>,
+}
+
+impl WalkComponents {
+    pub fn new(c: Vec<Csr>) -> Self {
+        assert!(!c.is_empty());
+        let n = c[0].n_rows;
+        for m in &c {
+            assert_eq!(m.n_rows, n);
+            assert_eq!(m.n_cols, n);
+        }
+        WalkComponents { c }
+    }
+
+    pub fn n(&self) -> usize {
+        self.c[0].n_rows
+    }
+
+    /// Number of modulation coefficients (l_max + 1).
+    pub fn n_coeffs(&self) -> usize {
+        self.c.len()
+    }
+
+    /// Total stored nonzeros across all lengths.
+    pub fn nnz(&self) -> usize {
+        self.c.iter().map(|m| m.nnz()).sum()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.c.iter().map(|m| m.memory_bytes()).sum()
+    }
+
+    /// One-shot combination Φ(f) = Σ_l f_l C_l (allocates; for repeated
+    /// combination use [`CombinedFeatures`]).
+    pub fn combine(&self, f: &[f64]) -> Csr {
+        assert_eq!(f.len(), self.c.len(), "modulation length != l_max+1");
+        let refs: Vec<&Csr> = self.c.iter().collect();
+        Csr::linear_combination(&refs, f)
+    }
+
+    /// Precompute the union pattern + scatter maps for fast repeated
+    /// recombination during training.
+    pub fn prepare(&self) -> CombinedFeatures {
+        let n = self.n();
+        // Union pattern via a zero-weight linear combination trick:
+        // build with all coefficient 1.0 on |values| to avoid cancel-drop.
+        let mut b = CooBuilder::new(n, n);
+        for m in &self.c {
+            for r in 0..n {
+                let (cols, _) = m.row(r);
+                for c in cols {
+                    b.push(r as u32, *c, 1.0);
+                }
+            }
+        }
+        let mut pattern = b.build();
+        for v in &mut pattern.vals {
+            *v = 0.0;
+        }
+        // Scatter map per length: position of each entry in the pattern.
+        let maps = self
+            .c
+            .iter()
+            .map(|m| {
+                let mut map = Vec::with_capacity(m.nnz());
+                for r in 0..n {
+                    let (cols, _) = m.row(r);
+                    let (pc, _) = pattern.row(r);
+                    let base = pattern.offsets[r];
+                    for c in cols {
+                        let k = pc.binary_search(c).expect("pattern covers entry");
+                        map.push((base + k) as u32);
+                    }
+                }
+                map
+            })
+            .collect();
+        CombinedFeatures { components: self.clone(), pattern, maps }
+    }
+}
+
+/// Union-pattern recombiner: `combine_into` refreshes the value array of
+/// the shared pattern in O(total nnz) with zero allocation.
+pub struct CombinedFeatures {
+    pub components: WalkComponents,
+    /// Union sparsity pattern; `vals` holds the latest combination.
+    pub pattern: Csr,
+    /// For each length l, flat index into `pattern.vals` of each entry
+    /// of `components.c[l]`.
+    maps: Vec<Vec<u32>>,
+}
+
+impl CombinedFeatures {
+    pub fn n(&self) -> usize {
+        self.pattern.n_rows
+    }
+
+    /// Recompute Φ(f) into the shared pattern and return a reference.
+    pub fn combine_into(&mut self, f: &[f64]) -> &Csr {
+        assert_eq!(f.len(), self.components.c.len());
+        for v in &mut self.pattern.vals {
+            *v = 0.0;
+        }
+        for (l, map) in self.maps.iter().enumerate() {
+            let fl = f[l];
+            if fl == 0.0 {
+                continue;
+            }
+            let vals = &self.components.c[l].vals;
+            for (slot, v) in map.iter().zip(vals) {
+                self.pattern.vals[*slot as usize] += fl * v;
+            }
+        }
+        &self.pattern
+    }
+
+    /// Clone out the current combination.
+    pub fn current(&self) -> Csr {
+        self.pattern.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooBuilder;
+    use crate::util::rng::Rng;
+
+    fn random_components(rng: &mut Rng, n: usize, lens: usize) -> WalkComponents {
+        let mut c = Vec::new();
+        for l in 0..lens {
+            let mut b = CooBuilder::new(n, n);
+            for i in 0..n {
+                if l == 0 {
+                    b.push(i as u32, i as u32, 1.0);
+                } else {
+                    for _ in 0..3 {
+                        b.push(i as u32, rng.below(n) as u32, rng.normal());
+                    }
+                }
+            }
+            c.push(b.build());
+        }
+        WalkComponents::new(c)
+    }
+
+    #[test]
+    fn prepared_combination_matches_oneshot() {
+        let mut rng = Rng::new(0);
+        let comps = random_components(&mut rng, 20, 4);
+        let mut prepared = comps.prepare();
+        for trial in 0..5 {
+            let f: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+            let fast = prepared.combine_into(&f).clone();
+            let slow = comps.combine(&f);
+            let (df, ds) = (fast.to_dense(), slow.to_dense());
+            for i in 0..20 {
+                for j in 0..20 {
+                    assert!(
+                        (df[i][j] - ds[i][j]).abs() < 1e-12,
+                        "trial {trial} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_coefficients_give_zero_matrix() {
+        let mut rng = Rng::new(1);
+        let comps = random_components(&mut rng, 10, 3);
+        let mut prepared = comps.prepare();
+        let phi = prepared.combine_into(&[0.0, 0.0, 0.0]);
+        assert!(phi.vals.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn memory_accounting_positive() {
+        let mut rng = Rng::new(2);
+        let comps = random_components(&mut rng, 10, 3);
+        assert!(comps.nnz() > 0);
+        assert!(comps.memory_bytes() > comps.nnz() * 12);
+        assert_eq!(comps.n_coeffs(), 3);
+    }
+}

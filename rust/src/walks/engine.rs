@@ -1,0 +1,350 @@
+//! Random-walk simulation (paper Alg. 2), parallel over source nodes.
+
+use super::components::WalkComponents;
+use crate::graph::Graph;
+use crate::sparse::Csr;
+use crate::util::parallel::{num_threads, par_map_chunks};
+use crate::util::rng::Rng;
+
+/// Configuration of the GRF sampler.
+#[derive(Clone, Debug)]
+pub struct WalkConfig {
+    /// Walks per node (paper `n`). Theorem 1: the number needed for an
+    /// accurate estimate is independent of graph size N.
+    pub n_walks: usize,
+    /// Termination probability per step (paper `p`).
+    pub p_halt: f64,
+    /// Maximum walk length `l_max`; walks are truncated here and the
+    /// modulation function is zero beyond it (App. C.1).
+    pub max_len: usize,
+    /// `false` switches to the *ad-hoc* ablation kernel (paper Eq. 13):
+    /// loads are only products of edge weights, with no importance
+    /// reweighting by `1/p(subwalk)`. Still a valid PSD kernel, but no
+    /// longer unbiased for the target power series.
+    pub reweight: bool,
+    /// Walk the *symmetrically normalised* adjacency
+    /// `Wn = D^{-1/2} W D^{-1/2}` instead of raw W (default true).
+    /// Wn's spectrum lies in [-1, 1], so Theorem 1's constant
+    /// `c = Σ|f_r| (max W d/(1-p))^r` stays small: the per-step load
+    /// factor becomes `√(d_u/d_v)/(1-p)` instead of `d_u·w/(1-p)`,
+    /// which diverges with degree on unweighted graphs. Kernels are
+    /// then power series of Wn — e.g. diffusion on the normalised
+    /// Laplacian, `exp(-βL̃) = e^{-β} exp(βWn)`.
+    pub normalize: bool,
+    /// Worker threads (0 = auto).
+    pub threads: usize,
+}
+
+impl Default for WalkConfig {
+    fn default() -> Self {
+        WalkConfig {
+            n_walks: 100,
+            p_halt: 0.1,
+            max_len: 10,
+            reweight: true,
+            normalize: true,
+            threads: 0,
+        }
+    }
+}
+
+impl WalkConfig {
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            num_threads()
+        } else {
+            self.threads
+        }
+    }
+}
+
+/// Per-chunk CSR fragment: rows [start, end) of each C_l.
+struct ChunkOut {
+    start: usize,
+    /// For each l: (row_lengths, cols, vals).
+    per_len: Vec<(Vec<u32>, Vec<u32>, Vec<f64>)>,
+}
+
+/// Simulate the GRF walks and build the per-length component matrices.
+///
+/// Deterministic given `seed` regardless of thread count: node `i`
+/// always uses RNG stream `seed ⊕ i`.
+pub fn sample_components(g: &Graph, cfg: &WalkConfig, seed: u64) -> WalkComponents {
+    let n = g.num_nodes();
+    let n_len = cfg.max_len + 1;
+    let threads = cfg.effective_threads();
+    let base = Rng::new(seed);
+    // Weighted degrees for adjacency normalisation (1.0 disables).
+    let norm_deg: Vec<f64> = if cfg.normalize {
+        (0..n).map(|i| g.weighted_degree(i).max(1e-12)).collect()
+    } else {
+        Vec::new()
+    };
+
+    let chunks: Vec<ChunkOut> = par_map_chunks(n, threads, |s, e, _| {
+        let mut per_len: Vec<(Vec<u32>, Vec<u32>, Vec<f64>)> =
+            (0..n_len).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
+        // Scratch: deposits of one source node, per length.
+        let mut deposits: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n_len];
+        for i in s..e {
+            let mut rng = base.split(i as u64);
+            for d in deposits.iter_mut() {
+                d.clear();
+            }
+            for _ in 0..cfg.n_walks {
+                walk_once(g, cfg, &norm_deg, i, &mut rng, &mut deposits);
+            }
+            // Dedup per (row, length): sort by target, merge runs.
+            let inv_n = 1.0 / cfg.n_walks as f64;
+            for (l, dep) in deposits.iter_mut().enumerate() {
+                dep.sort_unstable_by_key(|&(j, _)| j);
+                let (rows, cols, vals) = &mut per_len[l];
+                let mut count = 0u32;
+                let mut k = 0;
+                while k < dep.len() {
+                    let j = dep[k].0;
+                    let mut v = 0.0;
+                    while k < dep.len() && dep[k].0 == j {
+                        v += dep[k].1;
+                        k += 1;
+                    }
+                    cols.push(j);
+                    vals.push(v * inv_n);
+                    count += 1;
+                }
+                rows.push(count);
+            }
+        }
+        ChunkOut { start: s, per_len }
+    });
+
+    // Stitch chunk fragments into global CSRs (chunks are in row order).
+    let mut c = Vec::with_capacity(n_len);
+    for l in 0..n_len {
+        let total_nnz: usize = chunks.iter().map(|ch| ch.per_len[l].1.len()).sum();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0usize);
+        let mut cols = Vec::with_capacity(total_nnz);
+        let mut vals = Vec::with_capacity(total_nnz);
+        for ch in &chunks {
+            debug_assert_eq!(ch.start + 0, offsets.len() - 1);
+            let (rows, ccols, cvals) = &ch.per_len[l];
+            for &rl in rows {
+                offsets.push(offsets.last().unwrap() + rl as usize);
+            }
+            cols.extend_from_slice(ccols);
+            vals.extend_from_slice(cvals);
+        }
+        c.push(Csr { n_rows: n, n_cols: n, offsets, cols, vals });
+    }
+    WalkComponents::new(c)
+}
+
+/// One walk from `source`: deposit loads into `deposits[l]`.
+#[inline]
+fn walk_once(
+    g: &Graph,
+    cfg: &WalkConfig,
+    norm_deg: &[f64],
+    source: usize,
+    rng: &mut Rng,
+    deposits: &mut [Vec<(u32, f64)>],
+) {
+    let mut current = source;
+    let mut load = 1.0f64;
+    for l in 0..=cfg.max_len {
+        deposits[l].push((current as u32, load));
+        if l == cfg.max_len {
+            break;
+        }
+        let deg = g.degree(current);
+        if deg == 0 {
+            break; // isolated node: walk cannot continue
+        }
+        // Termination draw (after the deposit, as in Alg. 2).
+        if rng.bernoulli(cfg.p_halt) {
+            break;
+        }
+        let k = rng.below(deg);
+        let next = g.neighbors(current)[k] as usize;
+        let mut w = g.neighbor_weights(current)[k];
+        if cfg.normalize {
+            // Effective matrix entry: Wn_uv = w / sqrt(d_u d_v).
+            w /= (norm_deg[current] * norm_deg[next]).sqrt();
+        }
+        load *= if cfg.reweight {
+            // Importance weight: 1 / P(step) = deg / (1 - p_halt),
+            // times the traversed (normalised) edge weight.
+            deg as f64 * w / (1.0 - cfg.p_halt)
+        } else {
+            // Ad-hoc ablation: raw edge-weight product (Eq. 13).
+            w
+        };
+        current = next;
+    }
+}
+
+/// Convenience: sample components and immediately combine them with a
+/// modulation vector, returning the feature matrix Φ(f).
+pub fn sample_features(g: &Graph, cfg: &WalkConfig, f: &[f64], seed: u64) -> Csr {
+    let comps = sample_components(g, cfg, seed);
+    comps.combine(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::linalg::Mat;
+    use crate::prop_assert;
+    use crate::util::proptest::proptest;
+
+    /// Dense W^l for the unbiasedness oracle.
+    fn adjacency_powers(g: &Graph, max_len: usize) -> Vec<Mat> {
+        let w = Mat::from_rows(&g.dense_adjacency());
+        let n = g.num_nodes();
+        let mut out = vec![Mat::eye(n)];
+        for l in 1..=max_len {
+            out.push(out[l - 1].matmul(&w));
+        }
+        out
+    }
+
+    #[test]
+    fn components_unbiased_for_adjacency_powers() {
+        // E[C_l] = W^l: Monte Carlo mean over many walks on a small
+        // weighted graph must match the exact matrix power.
+        let mut edges = vec![];
+        let mut rng = Rng::new(3);
+        for i in 0u32..8 {
+            for j in (i + 1)..8 {
+                if rng.bernoulli(0.5) {
+                    edges.push((i, j, 0.3 + 0.4 * rng.uniform()));
+                }
+            }
+        }
+        let g = Graph::from_edges(8, &edges);
+        let cfg = WalkConfig {
+            n_walks: 60_000,
+            p_halt: 0.25,
+            max_len: 3,
+            reweight: true,
+            normalize: false,
+            threads: 2,
+        };
+        let comps = sample_components(&g, &cfg, 12345);
+        let powers = adjacency_powers(&g, cfg.max_len);
+        for l in 0..=cfg.max_len {
+            let dense = comps.c[l].to_dense();
+            for i in 0..8 {
+                for j in 0..8 {
+                    let got = dense[i][j];
+                    let expect = powers[l][(i, j)];
+                    assert!(
+                        (got - expect).abs() < 0.15 * (1.0 + expect.abs()),
+                        "l={l} ({i},{j}): {got} vs {expect}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn c0_is_identity_exactly() {
+        let g = generators::ring(20);
+        let cfg = WalkConfig { n_walks: 7, max_len: 2, ..Default::default() };
+        let comps = sample_components(&g, &cfg, 0);
+        let d = comps.c[0].to_dense();
+        for i in 0..20 {
+            for j in 0..20 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((d[i][j] - expect).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let g = generators::grid2d(6, 6);
+        let cfg1 = WalkConfig { n_walks: 20, threads: 1, ..Default::default() };
+        let cfg4 = WalkConfig { n_walks: 20, threads: 4, ..Default::default() };
+        let a = sample_components(&g, &cfg1, 99);
+        let b = sample_components(&g, &cfg4, 99);
+        for l in 0..a.c.len() {
+            assert_eq!(a.c[l], b.c[l], "length {l} differs across threads");
+        }
+    }
+
+    #[test]
+    fn sparsity_independent_of_graph_size() {
+        // Theorem 1: nonzeros per feature bounded independent of N.
+        let cfg = WalkConfig { n_walks: 16, max_len: 4, ..Default::default() };
+        let mut nnz_per_row = Vec::new();
+        for &n in &[64usize, 256, 1024] {
+            let g = generators::ring(n);
+            let comps = sample_components(&g, &cfg, 5);
+            let phi = comps.combine(&[1.0, 0.5, 0.25, 0.12, 0.06]);
+            nnz_per_row.push(phi.nnz() as f64 / n as f64);
+        }
+        let spread = nnz_per_row
+            .iter()
+            .cloned()
+            .fold(f64::MIN, f64::max)
+            - nnz_per_row.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(
+            spread < 1.5,
+            "nnz/row should be ~constant across N: {nnz_per_row:?}"
+        );
+    }
+
+    #[test]
+    fn adhoc_differs_from_reweighted() {
+        let g = generators::grid2d(5, 5);
+        let base = WalkConfig { n_walks: 200, max_len: 4, ..Default::default() };
+        let adhoc = WalkConfig { reweight: false, ..base.clone() };
+        let a = sample_components(&g, &base, 1);
+        let b = sample_components(&g, &adhoc, 1);
+        // Loads differ beyond length 0 (deg/(1-p) factor ~ 4/0.9 >> 1).
+        let da = a.c[2].to_dense();
+        let db = b.c[2].to_dense();
+        let suma: f64 = da.iter().flatten().sum();
+        let sumb: f64 = db.iter().flatten().sum();
+        assert!(suma > 3.0 * sumb, "suma={suma} sumb={sumb}");
+    }
+
+    #[test]
+    fn walk_respects_max_len_and_isolated_nodes() {
+        proptest(8, |rng| {
+            let n = 3 + rng.below(20);
+            // Graph with an isolated node n-1.
+            let mut edges = Vec::new();
+            for i in 0..(n as u32 - 2) {
+                edges.push((i, i + 1, 1.0));
+            }
+            let g = Graph::from_edges(n, &edges);
+            let max_len = rng.below(4);
+            let cfg = WalkConfig {
+                n_walks: 10,
+                max_len,
+                p_halt: 0.01,
+                ..Default::default()
+            };
+            let comps = sample_components(&g, &cfg, rng.next_u64());
+            prop_assert!(comps.c.len() == max_len + 1, "len count");
+            // Isolated node deposits only at l=0 on itself.
+            let last = n - 1;
+            for (l, cl) in comps.c.iter().enumerate() {
+                let (cols, vals) = cl.row(last);
+                if l == 0 {
+                    prop_assert!(
+                        cols == [last as u32] && (vals[0] - 1.0).abs() < 1e-12,
+                        "isolated node l=0 row"
+                    );
+                } else {
+                    prop_assert!(cols.is_empty(), "isolated node deposited at l={l}");
+                }
+            }
+            Ok(())
+        });
+    }
+}

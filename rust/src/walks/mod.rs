@@ -1,0 +1,22 @@
+//! The GRF random-walk engine — the paper's core estimator (Alg. 1/2).
+//!
+//! For every node `i` we simulate `n_walks` random walks with geometric
+//! halting (probability `p_halt` per step). Every prefix subwalk of
+//! length `l` ending at node `j` deposits its importance-sampling
+//! *load* into the per-length **component matrix** `C_l[i, j]`.
+//!
+//! The GRF feature matrix for a modulation function `f` is then the
+//! linear combination `Φ(f) = Σ_{l=0}^{l_max} f_l C_l`, which makes
+//! `∂Φ/∂f_l = C_l` **exact** — hyperparameter gradients never need
+//! re-walking (DESIGN.md §3). The walk engine runs once per model;
+//! training re-combines the cached components every optimiser step.
+//!
+//! Unbiasedness: `E[C_l] = W^l` (tested in `engine.rs`), hence
+//! `E[Φ] = Ψ = Σ_l f_l W^l` and `E[Φ Φᵀ] ≈ K_α` for `α = f ⊛ f`
+//! (discrete convolution), exactly the paper's estimator.
+
+pub mod components;
+pub mod engine;
+
+pub use components::{CombinedFeatures, WalkComponents};
+pub use engine::{sample_components, sample_features, WalkConfig};

@@ -1,0 +1,191 @@
+//! Integration: the PJRT artifact path (L1 Pallas + L2 JAX, AOT-lowered)
+//! must agree numerically with the native Rust engine on the same GRF
+//! features. This is the cross-layer contract of the whole stack.
+//!
+//! Requires `artifacts/` (run `make artifacts` first); tests are skipped
+//! gracefully if the directory is missing so `cargo test` works in a
+//! fresh checkout.
+
+use grfgp::gp::{GpModel, Hypers, Modulation};
+use grfgp::graph::generators;
+use grfgp::linalg::Mat;
+use grfgp::runtime::Runtime;
+use grfgp::util::rng::Rng;
+use grfgp::walks::{sample_components, WalkConfig};
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/ (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifacts present but unloadable"))
+}
+
+/// Build a small GRF model + its ELL representation.
+fn setup(seed: u64) -> (GpModel, grfgp::sparse::Ell, grfgp::sparse::Ell) {
+    let g = generators::grid2d(10, 10);
+    let cfg = WalkConfig { n_walks: 24, max_len: 3, threads: 1, ..Default::default() };
+    let comps = sample_components(&g, &cfg, seed);
+    let mut rng = Rng::new(seed);
+    let train: Vec<usize> = rng.sample_without_replacement(100, 40);
+    let y: Vec<f64> = train.iter().map(|&i| (i as f64 * 0.17).sin()).collect();
+    let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.25);
+    let model = GpModel::new(comps, hypers, &train, &y);
+    let phi = model.features.current();
+    let width = phi.max_row_nnz();
+    let phi_t = phi.transpose();
+    let width_t = phi_t.max_row_nnz();
+    let ell = phi.to_ell(width).unwrap();
+    let ell_t = phi_t.to_ell(width_t).unwrap();
+    (model, ell, ell_t)
+}
+
+#[test]
+fn gram_matvec_pjrt_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (model, ell, ell_t) = setup(1);
+    let n = model.n();
+    let mut rng = Rng::new(9);
+    let x64: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+
+    let native = {
+        let mut v = model.apply_kernel(&x64);
+        for (vi, xi) in v.iter_mut().zip(&x64) {
+            *vi += 0.25 * xi;
+        }
+        v
+    };
+    let pjrt = rt
+        .gram_matvec(&ell, &ell_t, &x32, 0.25)
+        .expect("pjrt gram_matvec");
+    for i in 0..n {
+        assert!(
+            (pjrt[i] as f64 - native[i]).abs() < 1e-3 * (1.0 + native[i].abs()),
+            "node {i}: pjrt {} vs native {}",
+            pjrt[i],
+            native[i]
+        );
+    }
+}
+
+#[test]
+fn cg_solve_pjrt_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (model, ell, ell_t) = setup(2);
+    let n = model.n();
+    let mask32: Vec<f32> = model.mask.iter().map(|&m| m as f32).collect();
+    let rhs64: Vec<f64> = model
+        .mask
+        .iter()
+        .zip(&model.y)
+        .map(|(m, y)| m * y)
+        .collect();
+    let rhs32: Vec<f32> = rhs64.iter().map(|&v| v as f32).collect();
+
+    let (native, st) = model.solve_system(&rhs64);
+    assert!(st.converged);
+    let (pjrt, rs) = rt
+        .cg_solve(&ell, &ell_t, &mask32, &[rhs32], 0.25)
+        .expect("pjrt cg_solve");
+    assert!(rs[0] < 1e-4, "artifact CG residual {rs:?}");
+    for i in 0..n {
+        assert!(
+            (pjrt[0][i] as f64 - native[i]).abs() < 5e-3 * (1.0 + native[i].abs()),
+            "node {i}: pjrt {} vs native {}",
+            pjrt[0][i],
+            native[i]
+        );
+    }
+}
+
+#[test]
+fn posterior_mean_pjrt_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (model, ell, ell_t) = setup(3);
+    let n = model.n();
+    let mask32: Vec<f32> = model.mask.iter().map(|&m| m as f32).collect();
+    let y32: Vec<f32> = model.y.iter().map(|&v| v as f32).collect();
+
+    let (native, _) = model.posterior_mean();
+    let pjrt = rt
+        .posterior_mean(&ell, &ell_t, &mask32, &y32, 0.25)
+        .expect("pjrt posterior_mean");
+    for i in 0..n {
+        assert!(
+            (pjrt[i] as f64 - native[i]).abs() < 5e-3 * (1.0 + native[i].abs()),
+            "node {i}: pjrt {} vs native {}",
+            pjrt[i],
+            native[i]
+        );
+    }
+}
+
+#[test]
+fn posterior_sample_pjrt_matches_native_formula() {
+    let Some(rt) = runtime() else { return };
+    let (model, ell, ell_t) = setup(4);
+    let n = model.n();
+    let mut rng = Rng::new(77);
+    let w: Vec<f64> = rng.normal_vec(n);
+    let eps: Vec<f64> = (0..n).map(|_| 0.5 * rng.normal()).collect();
+    let mask32: Vec<f32> = model.mask.iter().map(|&m| m as f32).collect();
+    let y32: Vec<f32> = model.y.iter().map(|&v| v as f32).collect();
+    let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+    let eps32: Vec<f32> = eps.iter().map(|&v| v as f32).collect();
+
+    // Native pathwise formula with the same (w, eps).
+    let phi = model.features.current();
+    let g = phi.matvec(&w);
+    let rhs: Vec<f64> = (0..n)
+        .map(|i| model.mask[i] * (model.y[i] - g[i] - eps[i]))
+        .collect();
+    let (alpha, _) = model.solve_system(&rhs);
+    let malpha: Vec<f64> = (0..n).map(|i| model.mask[i] * alpha[i]).collect();
+    let corr = model.apply_kernel(&malpha);
+    let native: Vec<f64> = (0..n).map(|i| g[i] + corr[i]).collect();
+
+    let pjrt = rt
+        .posterior_sample(&ell, &ell_t, &mask32, &y32, &w32, &eps32, 0.25)
+        .expect("pjrt posterior_sample");
+    for i in 0..n {
+        assert!(
+            (pjrt[i] as f64 - native[i]).abs() < 1e-2 * (1.0 + native[i].abs()),
+            "node {i}: pjrt {} vs native {}",
+            pjrt[i],
+            native[i]
+        );
+    }
+}
+
+#[test]
+fn dense_diffusion_pjrt_matches_native_expm() {
+    let Some(rt) = runtime() else { return };
+    let g = generators::ring(64);
+    let n = 64;
+    let w_dense = g.dense_adjacency();
+    let mut w32 = vec![0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            w32[i * n + j] = w_dense[i][j] as f32;
+        }
+    }
+    let beta = 0.5f32;
+    let k = rt
+        .dense_diffusion(&w32, n, beta, 1.0)
+        .expect("pjrt dense_diffusion");
+    let l = Mat::from_rows(&g.dense_laplacian());
+    let expect = grfgp::linalg::expm::diffusion_kernel(&l, beta as f64, 1.0);
+    for i in 0..n {
+        for j in 0..n {
+            assert!(
+                (k[i * n + j] as f64 - expect[(i, j)]).abs() < 1e-3,
+                "({i},{j}): {} vs {}",
+                k[i * n + j],
+                expect[(i, j)]
+            );
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Integration: the GP inference server — protocol round-trips,
+//! concurrent clients, batching invariants (no request dropped or
+//! duplicated, responses routed to the right client).
+
+use grfgp::gp::{GpModel, Hypers, Modulation};
+use grfgp::graph::generators;
+use grfgp::util::json::Json;
+use grfgp::walks::{sample_components, WalkConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+fn start_server(n: usize) -> std::net::SocketAddr {
+    let g = generators::ring(n);
+    let cfg = WalkConfig { n_walks: 32, p_halt: 0.1, max_len: 3, threads: 1, ..Default::default() };
+    let comps = sample_components(&g, &cfg, 0);
+    let model = GpModel::new(
+        comps,
+        Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1),
+        &[],
+        &[],
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::spawn(move || {
+        grfgp::server::serve_on(model, listener, 7).unwrap();
+    });
+    addr
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn call(&mut self, body: &str) -> Json {
+        self.stream.write_all(body.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(&line).expect("server must return valid JSON")
+    }
+}
+
+#[test]
+fn protocol_roundtrip() {
+    let addr = start_server(256);
+    let mut c = Client::connect(addr);
+
+    // Errors are structured, not disconnects.
+    let bad = c.call("not json");
+    assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+    let bad2 = c.call(r#"{"op":"observe","node":99999,"y":1.0}"#);
+    assert_eq!(bad2.get("ok").unwrap().as_bool(), Some(false));
+
+    // Observe + predict + thompson + stats.
+    for i in 0..10 {
+        let r = c.call(&format!(
+            r#"{{"op":"observe","node":{},"y":{}}}"#,
+            i * 20,
+            (i as f64 * 0.5).sin()
+        ));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    }
+    let p = c.call(r#"{"op":"predict","nodes":[0,1,2],"samples":4}"#);
+    assert_eq!(p.get("ok").unwrap().as_bool(), Some(true), "{p:?}");
+    assert_eq!(p.get("mean").unwrap().as_arr().unwrap().len(), 3);
+    assert_eq!(p.get("var").unwrap().as_arr().unwrap().len(), 3);
+    for v in p.get("var").unwrap().as_arr().unwrap() {
+        assert!(v.as_f64().unwrap() > 0.0);
+    }
+
+    let t = c.call(r#"{"op":"thompson"}"#);
+    let next = t.get("next").unwrap().as_usize().unwrap();
+    assert!(next < 256);
+
+    let s = c.call(r#"{"op":"stats"}"#);
+    assert_eq!(s.get("n_obs").unwrap().as_usize(), Some(10));
+
+    let bye = c.call(r#"{"op":"shutdown"}"#);
+    assert_eq!(bye.get("ok").unwrap().as_bool(), Some(true));
+}
+
+#[test]
+fn concurrent_predicts_are_batched_and_correct() {
+    let addr = start_server(512);
+    // Seed some observations first.
+    let mut seeder = Client::connect(addr);
+    for i in 0..8 {
+        seeder.call(&format!(
+            r#"{{"op":"observe","node":{},"y":{}}}"#,
+            i * 60,
+            (i as f64).cos()
+        ));
+    }
+    // Fire concurrent predict requests from several clients; each must
+    // get exactly its own nodes back.
+    let handles: Vec<_> = (0..6)
+        .map(|k| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let nodes: Vec<usize> = (0..3).map(|j| k * 10 + j).collect();
+                let body = format!(
+                    r#"{{"op":"predict","nodes":[{},{},{}],"samples":4}}"#,
+                    nodes[0], nodes[1], nodes[2]
+                );
+                let r = c.call(&body);
+                assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+                let mean = r.get("mean").unwrap().as_arr().unwrap();
+                assert_eq!(mean.len(), 3, "client {k} got wrong span");
+                mean.iter().map(|v| v.as_f64().unwrap()).collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let results: Vec<Vec<f64>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // All responses finite.
+    for r in &results {
+        for v in r {
+            assert!(v.is_finite());
+        }
+    }
+    let mut c = Client::connect(addr);
+    c.call(r#"{"op":"shutdown"}"#);
+}
