@@ -1,40 +1,121 @@
 //! Micro-benchmarks of the L3 hot paths, used by the performance pass
-//! (EXPERIMENTS.md §Perf): sparse matvec, gram matvec, CG solve, walk
-//! engine, and modulation recombination.
+//! (EXPERIMENTS.md §Perf): sparse matvec/SpMM, gram matvec, single and
+//! block CG, the walk engine, modulation recombination, and the
+//! end-to-end multi-RHS paths (`lml_grad`, `predict`) in both their
+//! blocked and legacy serial-loop forms.
+//!
+//! Besides the human-readable table, the run writes
+//! `BENCH_hotpath.json` — a machine-readable record
+//! `[{"name", "n", "b", "ns_per_op"}, ...]` — so the perf trajectory of
+//! the blocked solver path is tracked across PRs.
 
 use grfgp::gp::{GpModel, Hypers, Modulation};
 use grfgp::graph::generators;
 use grfgp::sparse::ops::GramOperator;
 use grfgp::util::bench::bench;
+use grfgp::util::parallel::num_threads;
 use grfgp::util::rng::Rng;
 use grfgp::walks::{sample_components, WalkConfig};
 
+struct JsonRow {
+    name: String,
+    n: usize,
+    b: usize,
+    ns_per_op: f64,
+}
+
+fn record(rows: &mut Vec<JsonRow>, name: &str, n: usize, b: usize, mean_s: f64) {
+    rows.push(JsonRow {
+        name: name.to_string(),
+        n,
+        b,
+        ns_per_op: mean_s * 1e9,
+    });
+}
+
+/// Serial multi-RHS reference: what `lml_grad`'s solve phase cost
+/// before the blocked path — one independent CG run per RHS.
+fn serial_solves(model: &GpModel, rhs: &[Vec<f64>]) -> usize {
+    let mut iters = 0;
+    for b in rhs {
+        iters += model.solve_system(b).1.iterations;
+    }
+    iters
+}
+
 fn main() {
     let mut rng = Rng::new(0);
-    println!("== hotpath microbenches ==");
+    let threads = num_threads();
+    let mut rows: Vec<JsonRow> = Vec::new();
+    println!("== hotpath microbenches (threads={threads}) ==");
 
     for &n in &[16_384usize, 131_072] {
         let g = generators::ring(n);
         let cfg = WalkConfig { n_walks: 100, p_halt: 0.1, max_len: 3, ..Default::default() };
         let comps = sample_components(&g, &cfg, 1);
 
-        bench(&format!("walk_engine/n={n}"), 1, 5, || {
+        let r = bench(&format!("walk_engine/n={n}"), 1, 5, || {
             sample_components(&g, &cfg, 2)
         });
+        record(&mut rows, "walk_engine", n, 1, r.mean_s);
 
         let mut prepared = comps.prepare();
         let f = vec![1.0, 0.5, 0.25, 0.12];
-        bench(&format!("combine/n={n}"), 1, 10, || {
+        let r = bench(&format!("combine/n={n}"), 1, 10, || {
             prepared.combine_into(&f).nnz()
         });
+        record(&mut rows, "combine", n, 1, r.mean_s);
 
         let phi = prepared.combine_into(&f).clone();
         let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        bench(&format!("spmv/n={n}"), 2, 20, || phi.matvec(&x));
-        bench(&format!("spmv_par/n={n}"), 2, 20, || phi.matvec_par(&x, 0));
+        let r = bench(&format!("spmv/n={n}"), 2, 20, || phi.matvec(&x));
+        record(&mut rows, "spmv", n, 1, r.mean_s);
+        let r = bench(&format!("spmv_par/n={n}"), 2, 20, || {
+            phi.matvec_par(&x, threads)
+        });
+        record(&mut rows, "spmv_par", n, 1, r.mean_s);
+
+        let r = bench(&format!("transpose/n={n}"), 1, 10, || phi.transpose());
+        record(&mut rows, "transpose", n, 1, r.mean_s);
+        let r = bench(&format!("transpose_par/n={n}"), 1, 10, || {
+            phi.transpose_par(threads)
+        });
+        record(&mut rows, "transpose_par", n, 1, r.mean_s);
+
+        // SpMM: one pass over Φ feeding B right-hand sides, vs B SpMVs.
+        for &b in &[8usize, 16] {
+            let xb: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+            let mut yb = vec![0.0; n * b];
+            let r = bench(&format!("spmm/n={n}/B={b}"), 2, 10, || {
+                phi.matmat_into(&xb, b, &mut yb);
+                yb[0]
+            });
+            record(&mut rows, "spmm", n, b, r.mean_s);
+            let r = bench(&format!("spmm_par/n={n}/B={b}"), 2, 10, || {
+                phi.matmat_par_into(&xb, b, &mut yb, threads);
+                yb[0]
+            });
+            record(&mut rows, "spmm_par", n, b, r.mean_s);
+            // Columns pre-extracted outside the timed closure so the
+            // baseline measures B passes of matrix traffic, not the
+            // gather; each SpMV still allocates its result, as the
+            // legacy per-RHS path did.
+            let x_cols: Vec<Vec<f64>> = (0..b)
+                .map(|j| (0..n).map(|i| xb[i * b + j]).collect())
+                .collect();
+            let r = bench(&format!("spmv_xB/n={n}/B={b}"), 2, 10, || {
+                let mut acc = 0.0;
+                for xj in &x_cols {
+                    acc += phi.matvec(xj)[0];
+                }
+                acc
+            });
+            record(&mut rows, "spmv_xB", n, b, r.mean_s);
+        }
 
         let mut op = GramOperator::new(phi.clone(), 0.1);
-        bench(&format!("gram_matvec/n={n}"), 2, 20, || op.apply(&x));
+        let r = bench(&format!("gram_matvec/n={n}"), 2, 20, || op.apply(&x));
+        record(&mut rows, "gram_matvec", n, 1, r.mean_s);
 
         // Full CG solve through the model (the paper's O(N^{3/2}) op).
         let train: Vec<usize> = (0..n).step_by(2).collect();
@@ -51,11 +132,86 @@ fn main() {
             .zip(&model.y)
             .map(|(m, v)| m * v)
             .collect();
-        bench(&format!("cg_solve/n={n}"), 1, 10, || {
+        let r = bench(&format!("cg_solve/n={n}"), 1, 10, || {
             model.solve_system(&rhs).1.iterations
         });
-        bench(&format!("posterior_sample/n={n}"), 1, 10, || {
-            model.posterior_sample(&mut rng)
+        record(&mut rows, "cg_solve", n, 1, r.mean_s);
+
+        // Multi-RHS solve: S+1 = 9 systems (training-step shape),
+        // blocked vs the legacy serial loop.
+        let n_rhs = 9;
+        let mut probe_rng = Rng::new(5);
+        let rhs_vecs: Vec<Vec<f64>> = (0..n_rhs)
+            .map(|j| {
+                if j == 0 {
+                    rhs.clone()
+                } else {
+                    model
+                        .mask
+                        .iter()
+                        .map(|&m| if m == 1.0 { probe_rng.normal() } else { 0.0 })
+                        .collect()
+                }
+            })
+            .collect();
+        let mut rhs_block = vec![0.0; n * n_rhs];
+        for (j, b) in rhs_vecs.iter().enumerate() {
+            for i in 0..n {
+                rhs_block[i * n_rhs + j] = b[i];
+            }
+        }
+        let r = bench(&format!("block_cg/n={n}/B={n_rhs}"), 1, 5, || {
+            let (_, stats) = model.solve_system_block(&rhs_block, n_rhs);
+            stats.iter().map(|s| s.iterations).sum::<usize>()
         });
+        record(&mut rows, "block_cg", n, n_rhs, r.mean_s);
+        let r = bench(&format!("cg_serial_loop/n={n}/B={n_rhs}"), 1, 5, || {
+            serial_solves(&model, &rhs_vecs)
+        });
+        record(&mut rows, "cg_serial_loop", n, n_rhs, r.mean_s);
+
+        // Training-step gradient: one blocked solve + SpMM projections
+        // (S = 8 probes -> 9 RHS).
+        let r = bench(&format!("lml_grad/n={n}/S=8"), 1, 5, || {
+            let mut step_rng = Rng::new(3);
+            model.lml_grad(&mut step_rng).1.cg_iters
+        });
+        record(&mut rows, "lml_grad", n, 9, r.mean_s);
+
+        // Prediction: 16 pathwise samples, blocked vs serial draws.
+        let n_samples = 16;
+        let r = bench(&format!("predict/n={n}/B={n_samples}"), 1, 3, || {
+            let mut p_rng = Rng::new(7);
+            model.predict(n_samples, &mut p_rng).1[0]
+        });
+        record(&mut rows, "predict", n, n_samples, r.mean_s);
+        let r = bench(&format!("predict_serial/n={n}/B={n_samples}"), 1, 3, || {
+            let mut p_rng = Rng::new(7);
+            let (_, st) = model.posterior_mean();
+            let mut acc = st.iterations as f64;
+            for _ in 0..n_samples {
+                acc += model.posterior_sample(&mut p_rng)[0];
+            }
+            acc
+        });
+        record(&mut rows, "predict_serial", n, n_samples, r.mean_s);
+    }
+
+    // Machine-readable record for cross-PR perf tracking.
+    let mut json = String::from("[\n");
+    for (i, row) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"name\": \"{}\", \"n\": {}, \"b\": {}, \"ns_per_op\": {:.1}}}{}\n",
+            row.name,
+            row.n,
+            row.b,
+            row.ns_per_op,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("]\n");
+    match std::fs::write("BENCH_hotpath.json", &json) {
+        Ok(()) => println!("wrote BENCH_hotpath.json ({} entries)", rows.len()),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
     }
 }

@@ -4,11 +4,20 @@
 //!
 //! Everything runs through the masked gram operator
 //! `A(v) = m Φ Φᵀ m v + σ² v` and CG (Lemma 1: `O(N^{3/2})`).
+//!
+//! Multi-RHS work — the `S+1` solves of a training step and the
+//! pathwise sample batch of `predict` — goes through the **blocked**
+//! path ([`GpModel::solve_system_block`]): one block-CG whose operator
+//! application is two CSR SpMMs over the whole `n × B` block, instead
+//! of `B` serial CG runs each streaming Φ per iteration for a single
+//! vector. An optional Jacobi preconditioner (masked Φ row norms,
+//! `O(nnz)`) cuts the iteration count on ill-conditioned kernels; it is
+//! on by default via [`SolveConfig::precondition`].
 
 use crate::gp::adam::Adam;
 use crate::gp::modulation::Hypers;
-use crate::linalg::cg::{cg_solve, CgStats};
-use crate::linalg::dot;
+use crate::linalg::cg::{block_cg_solve, pcg_solve, CgStats};
+use crate::linalg::{column_dots, dot};
 use crate::sparse::Csr;
 use crate::util::parallel::num_threads;
 use crate::util::rng::Rng;
@@ -22,11 +31,19 @@ pub struct SolveConfig {
     /// Hutchinson probes per gradient step (paper Eq. 10's S).
     pub probes: usize,
     pub threads: usize,
+    /// Jacobi-precondition the CG solves with diag(H) = m‖φ_i‖² + σ².
+    pub precondition: bool,
 }
 
 impl Default for SolveConfig {
     fn default() -> Self {
-        SolveConfig { tol: 1e-6, max_iters: 256, probes: 8, threads: 0 }
+        SolveConfig {
+            tol: 1e-6,
+            max_iters: 256,
+            probes: 8,
+            threads: 0,
+            precondition: true,
+        }
     }
 }
 
@@ -67,6 +84,14 @@ pub struct GpModel {
     /// Scratch buffers for the masked gram operator — the CG hot path
     /// must not allocate per iteration (EXPERIMENTS.md §Perf).
     scratch: std::cell::RefCell<(Vec<f64>, Vec<f64>, Vec<f64>)>,
+    /// Block-sized scratch (masked input, Φᵀ-space mid) for the blocked
+    /// operator; lazily grown to the widest block seen.
+    scratch_blk: std::cell::RefCell<(Vec<f64>, Vec<f64>)>,
+    /// Cached Jacobi diagonal of H (None = stale). Invalidated when Φ,
+    /// the mask, or σ² change (`refresh_features` / `set_data`), so the
+    /// many solves between hyperparameter updates (posterior mean,
+    /// every Thompson draw of a BO loop) don't re-pay the O(nnz) pass.
+    jacobi_cache: std::cell::RefCell<Option<Vec<f64>>>,
 }
 
 impl GpModel {
@@ -91,10 +116,15 @@ impl GpModel {
             mask[i] = 1.0;
             y[i] = v;
         }
-        let c_t = components.c.iter().map(|c| c.transpose()).collect();
+        let threads = num_threads();
+        let c_t = components
+            .c
+            .iter()
+            .map(|c| c.transpose_par(threads))
+            .collect();
         let mut features = components.prepare();
         let phi = features.combine_into(&hypers.modulation.coeffs()).clone();
-        let phi_t = phi.transpose();
+        let phi_t = phi.transpose_par(threads);
         GpModel {
             features,
             hypers,
@@ -109,6 +139,8 @@ impl GpModel {
                 vec![0.0; n],
                 vec![0.0; n],
             )),
+            scratch_blk: std::cell::RefCell::new((Vec::new(), Vec::new())),
+            jacobi_cache: std::cell::RefCell::new(None),
         }
     }
 
@@ -120,11 +152,13 @@ impl GpModel {
         self.mask.iter().filter(|&&m| m == 1.0).count()
     }
 
-    /// Refresh Φ after a hyperparameter update.
+    /// Refresh Φ after a hyperparameter update. Runs on every Adam
+    /// step, so the transpose goes through the parallel path.
     fn refresh_features(&mut self) {
         let f = self.hypers.modulation.coeffs();
         self.phi = self.features.combine_into(&f).clone();
-        self.phi_t = self.phi.transpose();
+        self.phi_t = self.phi.transpose_par(self.solve.effective_threads());
+        *self.jacobi_cache.borrow_mut() = None;
     }
 
     /// Replace observations (BO adds one point per step).
@@ -135,6 +169,7 @@ impl GpModel {
             self.mask[i] = 1.0;
             self.y[i] = v;
         }
+        *self.jacobi_cache.borrow_mut() = None;
     }
 
     // ------------------------------------------------------------------
@@ -142,31 +177,75 @@ impl GpModel {
     // ------------------------------------------------------------------
 
     /// y = m Φ Φᵀ m x + σ² x.
+    ///
+    /// Both the serial and the threaded SpMVs run through the reusable
+    /// scratch buffers — no allocation per CG iteration on either path.
     fn apply_h(&self, x: &[f64], out: &mut [f64]) {
         let n = self.n();
         let threads = self.solve.effective_threads();
         let sigma2 = self.hypers.sigma_n2();
+        let mut guard = self.scratch.borrow_mut();
+        let (mx, mid, prod) = &mut *guard;
+        for i in 0..n {
+            mx[i] = self.mask[i] * x[i];
+        }
         if threads > 1 && n > 4096 {
-            let mx: Vec<f64> =
-                self.mask.iter().zip(x).map(|(m, v)| m * v).collect();
-            let mid = self.phi_t.matvec_par(&mx, threads);
-            let prod = self.phi.matvec_par(&mid, threads);
-            for i in 0..n {
-                out[i] = self.mask[i] * prod[i] + sigma2 * x[i];
-            }
+            self.phi_t.matvec_par_into(mx, mid, threads);
+            self.phi.matvec_par_into(mid, prod, threads);
         } else {
-            // Allocation-free path through reusable scratch buffers.
-            let mut guard = self.scratch.borrow_mut();
-            let (mx, mid, prod) = &mut *guard;
-            for i in 0..n {
-                mx[i] = self.mask[i] * x[i];
-            }
             self.phi_t.matvec_into(mx, mid);
             self.phi.matvec_into(mid, prod);
-            for i in 0..n {
-                out[i] = self.mask[i] * prod[i] + sigma2 * x[i];
+        }
+        for i in 0..n {
+            out[i] = self.mask[i] * prod[i] + sigma2 * x[i];
+        }
+    }
+
+    /// Blocked operator: `Y = m Φ Φᵀ m X + σ² X` over a row-major
+    /// `n × ncols` block — two SpMMs serve all `ncols` vectors, so one
+    /// block-CG iteration streams Φ/Φᵀ once instead of `ncols` times.
+    fn apply_h_block(&self, x: &[f64], ncols: usize, out: &mut [f64]) {
+        let n = self.n();
+        let k = self.phi.n_cols;
+        let threads = self.solve.effective_threads();
+        let sigma2 = self.hypers.sigma_n2();
+        debug_assert_eq!(x.len(), n * ncols);
+        debug_assert_eq!(out.len(), n * ncols);
+        let mut guard = self.scratch_blk.borrow_mut();
+        let (mx, mid) = &mut *guard;
+        mx.resize(n * ncols, 0.0);
+        mid.resize(k * ncols, 0.0);
+        for i in 0..n {
+            let m = self.mask[i];
+            let base = i * ncols;
+            for j in 0..ncols {
+                mx[base + j] = m * x[base + j];
             }
         }
+        if threads > 1 && n > 4096 {
+            self.phi_t.matmat_par_into(mx, ncols, mid, threads);
+            self.phi.matmat_par_into(mid, ncols, out, threads);
+        } else {
+            self.phi_t.matmat_into(mx, ncols, mid);
+            self.phi.matmat_into(mid, ncols, out);
+        }
+        for i in 0..n {
+            let m = self.mask[i];
+            let base = i * ncols;
+            for j in 0..ncols {
+                out[base + j] = m * out[base + j] + sigma2 * x[base + j];
+            }
+        }
+    }
+
+    /// Jacobi preconditioner diagonal of H, `diag(H)_i = m_i ‖φ_i‖² + σ²`
+    /// (see [`crate::sparse::ops::jacobi_diag`], the shared definition).
+    pub fn jacobi_diag(&self) -> Vec<f64> {
+        crate::sparse::ops::jacobi_diag(
+            &self.phi,
+            Some(&self.mask),
+            self.hypers.sigma_n2(),
+        )
     }
 
     /// Kernel product y = Φ (Φᵀ x) (no mask/noise).
@@ -180,12 +259,48 @@ impl GpModel {
         }
     }
 
-    /// Solve (m K m + σ² I) v = b by CG.
+    /// Cached Jacobi diagonal for the solvers: computed on first use
+    /// after Φ/mask/σ² change, then shared by every subsequent solve.
+    fn jacobi_cached(&self) -> Option<std::cell::Ref<'_, Vec<f64>>> {
+        if !self.solve.precondition {
+            return None;
+        }
+        {
+            let mut cache = self.jacobi_cache.borrow_mut();
+            if cache.is_none() {
+                *cache = Some(self.jacobi_diag());
+            }
+        }
+        Some(std::cell::Ref::map(self.jacobi_cache.borrow(), |c| {
+            c.as_ref().expect("filled above")
+        }))
+    }
+
+    /// Solve (m K m + σ² I) v = b by (optionally Jacobi-preconditioned)
+    /// CG.
     pub fn solve_system(&self, b: &[f64]) -> (Vec<f64>, CgStats) {
-        cg_solve(
+        let precond = self.jacobi_cached();
+        pcg_solve(
             |x, out| self.apply_h(x, out),
             b,
             None,
+            precond.as_ref().map(|d| d.as_slice()),
+            self.solve.tol,
+            self.solve.max_iters,
+        )
+    }
+
+    /// Solve (m K m + σ² I) V = B for a row-major `n × ncols` block of
+    /// right-hand sides with one block-CG (shared SpMM operator
+    /// application, per-column convergence). Column `j` of the result
+    /// is bitwise the solve of column `j` through [`GpModel::solve_system`].
+    pub fn solve_system_block(&self, b: &[f64], ncols: usize) -> (Vec<f64>, Vec<CgStats>) {
+        let precond = self.jacobi_cached();
+        block_cg_solve(
+            |x, out| self.apply_h_block(x, ncols, out),
+            b,
+            ncols,
+            precond.as_ref().map(|d| d.as_slice()),
             self.solve.tol,
             self.solve.max_iters,
         )
@@ -207,57 +322,73 @@ impl GpModel {
     pub fn lml_grad(&self, rng: &mut Rng) -> (Vec<f64>, TrainStep) {
         let n = self.n();
         let s = self.solve.probes;
+        let ncols = s + 1;
         let sigma2 = self.hypers.sigma_n2();
         let n_coeff = self.features.components.n_coeffs();
+        let threads = self.solve.effective_threads();
+        let par = threads > 1 && n > 4096;
 
-        // --- batch of solves: [y, z_1..z_S] -------------------------------
-        let mut rhs: Vec<Vec<f64>> = Vec::with_capacity(s + 1);
-        rhs.push(self.y.clone());
-        for _ in 0..s {
-            let z: Vec<f64> = self
-                .mask
-                .iter()
-                .map(|&m| if m == 1.0 { if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 } } else { 0.0 })
-                .collect();
-            rhs.push(z);
+        // --- one blocked solve: [y, z_1..z_S] -----------------------------
+        // Column 0 is y; columns 1..=S are Rademacher probes restricted
+        // to the training mask (drawn probe-major, matching the historic
+        // stream).
+        let mut rhs = vec![0.0; n * ncols];
+        for i in 0..n {
+            rhs[i * ncols] = self.y[i];
         }
-        let mut solves = Vec::with_capacity(s + 1);
-        let mut total_cg = 0;
-        for b in &rhs {
-            let (v, st) = self.solve_system(b);
-            total_cg += st.iterations;
-            solves.push(v);
+        for si in 1..ncols {
+            for i in 0..n {
+                if self.mask[i] == 1.0 {
+                    rhs[i * ncols + si] =
+                        if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+                }
+            }
         }
-        let alpha = &solves[0];
+        let (solves, stats) = self.solve_system_block(&rhs, ncols);
+        let total_cg: usize = stats.iter().map(|st| st.iterations).sum();
 
-        // --- per-vector projections: Φᵀ u and C_lᵀ u ----------------------
-        // All vectors are already mask-supported (CG preserves the mask
-        // support since rhs are masked).
-        let proj_phi: Vec<Vec<f64>> =
-            solves.iter().map(|v| self.phi_t.matvec(v)).collect();
-        let proj_phi_rhs: Vec<Vec<f64>> =
-            rhs.iter().map(|v| self.phi_t.matvec(v)).collect();
-        let proj_c: Vec<Vec<Vec<f64>>> = self
-            .c_t
-            .iter()
-            .map(|ct| solves.iter().map(|v| ct.matvec(v)).collect())
-            .collect();
-        let proj_c_rhs: Vec<Vec<Vec<f64>>> = self
-            .c_t
-            .iter()
-            .map(|ct| rhs.iter().map(|v| ct.matvec(v)).collect())
-            .collect();
+        // --- blocked projections: Φᵀ and C_lᵀ applied to whole blocks -----
+        // Each projection is a single SpMM pass over the matrix instead
+        // of S+1 SpMVs. All vectors are mask-supported (CG preserves the
+        // support since the rhs are masked).
+        let proj = |mat: &Csr, x: &[f64]| -> Vec<f64> {
+            if par {
+                mat.matmat_par(x, ncols, threads)
+            } else {
+                mat.matmat(x, ncols)
+            }
+        };
+        let phi_v = proj(&self.phi_t, &solves); // Φᵀ V
+        let phi_z = proj(&self.phi_t, &rhs); // Φᵀ Z
 
         // --- gradient w.r.t. modulation coefficients ----------------------
         // quad_l  = αᵀ ∂H α     = 2 (C_lᵀα)·(Φᵀα)
         // trace_l ≈ (1/S) Σ_s [ (C_lᵀ v_s)·(Φᵀ z_s) + (Φᵀ v_s)·(C_lᵀ z_s) ]
+        // All S+1 dot products of a pair of blocks come out of one
+        // streaming column_dots pass.
+        // Quad terms only ever read column 0 (the α column), so they
+        // use a strided single-column dot instead of a full
+        // column_dots pass — 1/ncols of the memory traffic.
+        let col0_dot = |a: &[f64], b: &[f64]| -> f64 {
+            debug_assert_eq!(a.len(), b.len());
+            let mut acc = 0.0;
+            let mut i = 0;
+            while i < a.len() {
+                acc += a[i] * b[i];
+                i += ncols;
+            }
+            acc
+        };
         let mut grad_f = vec![0.0; n_coeff];
-        for l in 0..n_coeff {
-            let quad = 2.0 * dot(&proj_c[l][0], &proj_phi[0]);
+        for (l, ct) in self.c_t.iter().enumerate() {
+            let c_v = proj(ct, &solves); // C_lᵀ V
+            let c_z = proj(ct, &rhs); // C_lᵀ Z
+            let d_cv_pz = column_dots(&c_v, &phi_z, ncols);
+            let d_pv_cz = column_dots(&phi_v, &c_z, ncols);
+            let quad = 2.0 * col0_dot(&c_v, &phi_v);
             let mut tr = 0.0;
-            for si in 1..=s {
-                tr += dot(&proj_c[l][si], &proj_phi_rhs[si])
-                    + dot(&proj_phi[si], &proj_c_rhs[l][si]);
+            for si in 1..ncols {
+                tr += d_cv_pz[si] + d_pv_cz[si];
             }
             let tr = if s > 0 { tr / s as f64 } else { 0.0 };
             grad_f[l] = 0.5 * quad - 0.5 * tr;
@@ -266,10 +397,11 @@ impl GpModel {
         // --- gradient w.r.t. log σ² ---------------------------------------
         // ∂H/∂logσ² = σ² I (on the train block):
         // quad = σ² αᵀα;  trace ≈ σ²/S Σ v_s·z_s.
-        let quad_n = sigma2 * dot(alpha, alpha);
+        let quad_n = sigma2 * col0_dot(&solves, &solves);
+        let d_vz = column_dots(&solves, &rhs, ncols);
         let mut tr_n = 0.0;
-        for si in 1..=s {
-            tr_n += dot(&solves[si], &rhs[si]);
+        for si in 1..ncols {
+            tr_n += d_vz[si];
         }
         let tr_n = if s > 0 { sigma2 * tr_n / s as f64 } else { 0.0 };
         let grad_log_noise = 0.5 * quad_n - 0.5 * tr_n;
@@ -328,33 +460,89 @@ impl GpModel {
     /// One pathwise-conditioning sample from the posterior over all
     /// nodes: g + K m H⁻¹ m (y − g(x) − ε),  g = Φ w.
     pub fn posterior_sample(&self, rng: &mut Rng) -> Vec<f64> {
+        self.posterior_samples(1, rng)
+            .pop()
+            .expect("posterior_samples(1) returns one sample")
+    }
+
+    /// `n_samples` pathwise-conditioning draws through **one** blocked
+    /// solve: all prior functions `g_j = Φ w_j`, the conditioning
+    /// solves, and the kernel corrections run as `n × n_samples` SpMM
+    /// blocks, so the feature matrix is streamed once per block-CG
+    /// iteration instead of once per sample per iteration.
+    ///
+    /// Randomness is drawn per sample in the same order as the historic
+    /// serial loop (`w_j`, then the per-node noise of sample `j`), so a
+    /// given `Rng` produces the same draws either way.
+    pub fn posterior_samples(&self, n_samples: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+        if n_samples == 0 {
+            return Vec::new();
+        }
         let n = self.n();
-        let w = rng.normal_vec(self.phi.n_cols);
+        let b = n_samples;
+        let k = self.phi.n_cols;
         let threads = self.solve.effective_threads();
-        let g = if threads > 1 && n > 4096 {
-            self.phi.matvec_par(&w, threads)
-        } else {
-            self.phi.matvec(&w)
-        };
+        let par = threads > 1 && n > 4096;
         let sigma = self.hypers.sigma_n2().sqrt();
-        let rhs: Vec<f64> = (0..n)
-            .map(|i| self.mask[i] * (self.y[i] - g[i] - sigma * rng.normal()))
-            .collect();
-        let (alpha, _) = self.solve_system(&rhs);
-        let malpha: Vec<f64> =
-            self.mask.iter().zip(&alpha).map(|(m, a)| m * a).collect();
-        let corr = self.apply_kernel(&malpha);
-        (0..n).map(|i| g[i] + corr[i]).collect()
+
+        let mut w = vec![0.0; k * b];
+        let mut eps = vec![0.0; n * b];
+        for j in 0..b {
+            for i in 0..k {
+                w[i * b + j] = rng.normal();
+            }
+            for i in 0..n {
+                eps[i * b + j] = rng.normal();
+            }
+        }
+        // Prior draws g = Φ W over the whole block.
+        let g = if par {
+            self.phi.matmat_par(&w, b, threads)
+        } else {
+            self.phi.matmat(&w, b)
+        };
+        // Masked residual block m (y − g − σ ε).
+        let mut rhs = vec![0.0; n * b];
+        for i in 0..n {
+            let m = self.mask[i];
+            let base = i * b;
+            for j in 0..b {
+                rhs[base + j] = m * (self.y[i] - g[base + j] - sigma * eps[base + j]);
+            }
+        }
+        let (alpha, _) = self.solve_system_block(&rhs, b);
+        // Kernel correction K (m α) for all samples: two more SpMMs.
+        let mut malpha = alpha;
+        for i in 0..n {
+            let m = self.mask[i];
+            let base = i * b;
+            for j in 0..b {
+                malpha[base + j] *= m;
+            }
+        }
+        let mid = if par {
+            self.phi_t.matmat_par(&malpha, b, threads)
+        } else {
+            self.phi_t.matmat(&malpha, b)
+        };
+        let corr = if par {
+            self.phi.matmat_par(&mid, b, threads)
+        } else {
+            self.phi.matmat(&mid, b)
+        };
+        (0..b)
+            .map(|j| (0..n).map(|i| g[i * b + j] + corr[i * b + j]).collect())
+            .collect()
     }
 
     /// Predictive mean + variance at every node, variance estimated
     /// from `n_samples` pathwise draws (includes observation noise).
+    /// The draws come from one blocked solve ([`GpModel::posterior_samples`]).
     pub fn predict(&self, n_samples: usize, rng: &mut Rng) -> (Vec<f64>, Vec<f64>) {
         let n = self.n();
         let (mean, _) = self.posterior_mean();
         let mut m2 = vec![0.0; n];
-        for _ in 0..n_samples {
-            let s = self.posterior_sample(rng);
+        for s in self.posterior_samples(n_samples, rng) {
             for i in 0..n {
                 let d = s[i] - mean[i];
                 m2[i] += d * d;
@@ -496,6 +684,83 @@ mod tests {
             "Adam on the stochastic LML gradient should increase the \
              exact LML: {before} -> {after}"
         );
+    }
+
+    #[test]
+    fn solve_system_block_matches_serial_solves() {
+        // Each column of the blocked solve must reproduce the
+        // stand-alone single-RHS solve (same preconditioner, lockstep
+        // per-column recurrences), on both solver configurations.
+        let (mut model, _) = small_model(21);
+        let n = model.n();
+        let mut rng = Rng::new(2);
+        for &precondition in &[true, false] {
+            model.solve.precondition = precondition;
+            let ncols = 4;
+            let mut block = vec![0.0; n * ncols];
+            let mut cols: Vec<Vec<f64>> = Vec::new();
+            for j in 0..ncols {
+                let c: Vec<f64> = (0..n).map(|i| model.mask[i] * rng.normal()).collect();
+                for i in 0..n {
+                    block[i * ncols + j] = c[i];
+                }
+                cols.push(c);
+            }
+            let (xb, stats) = model.solve_system_block(&block, ncols);
+            for (j, c) in cols.iter().enumerate() {
+                let (xs, st) = model.solve_system(c);
+                assert_eq!(
+                    stats[j].iterations, st.iterations,
+                    "precond={precondition} col {j} iteration count"
+                );
+                for i in 0..n {
+                    assert!(
+                        (xb[i * ncols + j] - xs[i]).abs()
+                            < 1e-12 * (1.0 + xs[i].abs()),
+                        "precond={precondition} col {j} row {i}: {} vs {}",
+                        xb[i * ncols + j],
+                        xs[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn posterior_samples_match_serial_formula() {
+        // The blocked sampler must reproduce the serial pathwise
+        // formula draw-for-draw: same rng stream, same solves.
+        let (model, _) = small_model(31);
+        let n = model.n();
+        let n_samples = 3;
+        let mut rng_block = Rng::new(99);
+        let mut rng_serial = rng_block.clone();
+        let samples = model.posterior_samples(n_samples, &mut rng_block);
+        assert_eq!(samples.len(), n_samples);
+        let sigma = model.hypers.sigma_n2().sqrt();
+        for (j, sample) in samples.iter().enumerate() {
+            let w = rng_serial.normal_vec(model.phi.n_cols);
+            let g = model.phi.matvec(&w);
+            let rhs: Vec<f64> = (0..n)
+                .map(|i| {
+                    model.mask[i] * (model.y[i] - g[i] - sigma * rng_serial.normal())
+                })
+                .collect();
+            let (alpha, _) = model.solve_system(&rhs);
+            let malpha: Vec<f64> =
+                (0..n).map(|i| model.mask[i] * alpha[i]).collect();
+            let corr = model.apply_kernel(&malpha);
+            for i in 0..n {
+                let expect = g[i] + corr[i];
+                assert!(
+                    (sample[i] - expect).abs() < 1e-10 * (1.0 + expect.abs()),
+                    "sample {j} node {i}: {} vs {expect}",
+                    sample[i]
+                );
+            }
+        }
+        // The blocked path consumed exactly the serial stream.
+        assert_eq!(rng_block.next_u64(), rng_serial.next_u64());
     }
 
     #[test]

@@ -190,6 +190,27 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// Per-column dot products of two row-major `n × ncols` blocks:
+/// `out[j] = Σ_i a[i*ncols + j] * b[i*ncols + j]`.
+///
+/// One streaming pass over both blocks computes all `ncols` dots —
+/// the block-CG inner products cost one read of the iterate blocks
+/// regardless of RHS count. Accumulation order per column matches
+/// [`dot`] over the corresponding vectors, so results are bitwise
+/// identical to the single-RHS path.
+pub fn column_dots(a: &[f64], b: &[f64], ncols: usize) -> Vec<f64> {
+    assert!(ncols > 0, "ncols must be positive");
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len() % ncols, 0);
+    let mut out = vec![0.0; ncols];
+    for (ar, br) in a.chunks_exact(ncols).zip(b.chunks_exact(ncols)) {
+        for ((o, x), y) in out.iter_mut().zip(ar).zip(br) {
+            *o += x * y;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -30,6 +30,24 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Smallest bucket of `kind` with n ≥ rows, k ≥ width, kt ≥ width_t.
+    /// Shared by the PJRT executor and its stub so bucket selection is
+    /// testable without the `pjrt` feature.
+    pub fn pick(
+        &self,
+        kind: &str,
+        rows: usize,
+        width: usize,
+        width_t: usize,
+    ) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == kind && a.n >= rows && a.k >= width && a.kt >= width_t
+            })
+            .min_by_key(|a| (a.n, a.k, a.kt))
+    }
+
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read {}", path.display()))?;

@@ -1,0 +1,95 @@
+//! No-op [`Runtime`] used when the `pjrt` feature is disabled: keeps
+//! every call-site compiling while `load` always fails, so the parity
+//! tests, benches, and `grfgp info` all take their "no artifacts"
+//! branch.
+
+use super::manifest::{ArtifactInfo, Manifest};
+use crate::sparse::Ell;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Stub executor; cannot be constructed (`load` always errors).
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+const DISABLED: &str =
+    "grfgp was built without the `pjrt` feature; the PJRT runtime is unavailable";
+
+#[allow(unused_variables)]
+impl Runtime {
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        bail!("{DISABLED}");
+    }
+
+    pub fn platform(&self) -> String {
+        "disabled".to_string()
+    }
+
+    /// Smallest bucket of `kind` with n ≥ rows, k ≥ width, kt ≥ width_t.
+    pub fn pick(
+        &self,
+        kind: &str,
+        rows: usize,
+        width: usize,
+        width_t: usize,
+    ) -> Option<&ArtifactInfo> {
+        self.manifest.pick(kind, rows, width, width_t)
+    }
+
+    pub fn gram_matvec(
+        &self,
+        phi: &Ell,
+        phi_t: &Ell,
+        x: &[f32],
+        sigma2: f32,
+    ) -> Result<Vec<f32>> {
+        bail!("{DISABLED}");
+    }
+
+    pub fn cg_solve(
+        &self,
+        phi: &Ell,
+        phi_t: &Ell,
+        mask: &[f32],
+        bs: &[Vec<f32>],
+        sigma2: f32,
+    ) -> Result<(Vec<Vec<f32>>, Vec<f32>)> {
+        bail!("{DISABLED}");
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn posterior_sample(
+        &self,
+        phi: &Ell,
+        phi_t: &Ell,
+        mask: &[f32],
+        y: &[f32],
+        w: &[f32],
+        eps: &[f32],
+        sigma2: f32,
+    ) -> Result<Vec<f32>> {
+        bail!("{DISABLED}");
+    }
+
+    pub fn posterior_mean(
+        &self,
+        phi: &Ell,
+        phi_t: &Ell,
+        mask: &[f32],
+        y: &[f32],
+        sigma2: f32,
+    ) -> Result<Vec<f32>> {
+        bail!("{DISABLED}");
+    }
+
+    pub fn dense_diffusion(
+        &self,
+        w_adj: &[f32],
+        n0: usize,
+        beta: f32,
+        sigma_f2: f32,
+    ) -> Result<Vec<f32>> {
+        bail!("{DISABLED}");
+    }
+}

@@ -1,10 +1,27 @@
 //! Sparse linear-algebra substrate: CSR matrices, COO builders, ELL
 //! conversion (the PJRT interchange layout), and the gram-matvec that
 //! dominates the GP hot path.
+//!
+//! ## Dense-block (SpMM) kernels
+//!
+//! SpMV is memory-bandwidth-bound: every CG iteration streams the whole
+//! CSR from memory to produce one vector. The blocked kernels
+//! ([`Csr::matmat_into`] / [`Csr::matmat_par_into`]) multiply against a
+//! **row-major `n_cols × B` dense block** instead, so one pass over the
+//! matrix feeds `B` right-hand sides — the matrix traffic is amortised
+//! `B`× and the inner loop over the `B` contiguous columns vectorises.
+//! This is what makes the multi-RHS solver path (Hutchinson probes in
+//! training, pathwise samples in prediction) scale with bandwidth
+//! rather than RHS count.
+//!
+//! Block layout convention used across the crate: a dense block `X` of
+//! `B` column vectors over `r` coordinates is stored row-major as
+//! `x[i * B + j]` = coordinate `i` of column `j`.
 
 pub mod ops;
 
 use crate::util::parallel;
+use crate::util::parallel::SendPtr;
 
 /// CSR sparse matrix over f64. Rows sorted by column, duplicates merged.
 #[derive(Clone, Debug, PartialEq)]
@@ -151,19 +168,90 @@ impl Csr {
 
     /// Parallel y = A x across row chunks.
     pub fn matvec_par(&self, x: &[f64], threads: usize) -> Vec<f64> {
-        let parts = parallel::par_map_chunks(self.n_rows, threads, |s, e, _| {
-            let mut part = vec![0.0; e - s];
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_par_into(x, &mut y, threads);
+        y
+    }
+
+    /// Parallel y = A x into a caller-provided buffer: threads write
+    /// disjoint row ranges of `y` directly, so repeated applications
+    /// (every CG iteration) allocate nothing.
+    pub fn matvec_par_into(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        // Hard asserts, not debug: the row loop below reads x with
+        // unchecked indices justified by these lengths, and a mis-sized
+        // caller buffer must panic rather than read out of bounds in
+        // release builds.
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        parallel::par_rows_mut(y, 1, threads, |s, e, ys| {
             for i in s..e {
                 let (cols, vals) = self.row(i);
                 let mut acc = 0.0;
                 for (c, v) in cols.iter().zip(vals) {
-                    acc += v * x[*c as usize];
+                    // SAFETY: *c < n_cols == x.len() by CSR construction.
+                    acc += v * unsafe { x.get_unchecked(*c as usize) };
                 }
-                part[i - s] = acc;
+                ys[i - s] = acc;
             }
-            part
         });
-        parts.concat()
+    }
+
+    /// Rows [s, e) of the SpMM Y = A X, written into `out` (row-major
+    /// `(e-s) × ncols`). Shared inner kernel of the serial and parallel
+    /// block products.
+    #[inline]
+    fn matmat_rows(&self, x: &[f64], ncols: usize, s: usize, e: usize, out: &mut [f64]) {
+        for i in s..e {
+            let (cols, vals) = self.row(i);
+            let yi = &mut out[(i - s) * ncols..(i - s + 1) * ncols];
+            yi.fill(0.0);
+            for (c, v) in cols.iter().zip(vals) {
+                let base = *c as usize * ncols;
+                // SAFETY: *c < n_cols, so base + ncols <= x.len() by the
+                // caller's (debug-asserted) shape contract.
+                let xr = unsafe { x.get_unchecked(base..base + ncols) };
+                for (yj, xj) in yi.iter_mut().zip(xr) {
+                    *yj += v * xj;
+                }
+            }
+        }
+    }
+
+    /// SpMM Y = A X over a row-major `n_cols × ncols` dense block,
+    /// writing into the caller's row-major `n_rows × ncols` buffer.
+    /// One pass over the CSR serves all `ncols` right-hand sides.
+    pub fn matmat_into(&self, x: &[f64], ncols: usize, y: &mut [f64]) {
+        assert!(ncols > 0, "block width must be positive");
+        // Hard asserts: matmat_rows reads x unchecked against these
+        // lengths; a wrongly packed block must panic, not read OOB.
+        assert_eq!(x.len(), self.n_cols * ncols);
+        assert_eq!(y.len(), self.n_rows * ncols);
+        self.matmat_rows(x, ncols, 0, self.n_rows, y);
+    }
+
+    /// Allocating convenience wrapper over [`Csr::matmat_into`].
+    pub fn matmat(&self, x: &[f64], ncols: usize) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows * ncols];
+        self.matmat_into(x, ncols, &mut y);
+        y
+    }
+
+    /// Thread-parallel SpMM over row chunks, allocation-free: threads
+    /// write disjoint row ranges of `y`.
+    pub fn matmat_par_into(&self, x: &[f64], ncols: usize, y: &mut [f64], threads: usize) {
+        assert!(ncols > 0, "block width must be positive");
+        assert_eq!(x.len(), self.n_cols * ncols);
+        assert_eq!(y.len(), self.n_rows * ncols);
+        parallel::par_rows_mut(y, ncols, threads, |s, e, rows| {
+            self.matmat_rows(x, ncols, s, e, rows);
+        });
+    }
+
+    /// Allocating convenience wrapper over [`Csr::matmat_par_into`].
+    pub fn matmat_par(&self, x: &[f64], ncols: usize, threads: usize) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows * ncols];
+        self.matmat_par_into(x, ncols, &mut y, threads);
+        y
     }
 
     /// Transpose (CSR -> CSR of A^T) via counting sort; O(nnz).
@@ -188,6 +276,105 @@ impl Csr {
                 cursor[*c as usize] += 1;
             }
         }
+        Csr {
+            n_rows: self.n_cols,
+            n_cols: self.n_rows,
+            offsets,
+            cols,
+            vals,
+        }
+    }
+
+    /// Thread-parallel transpose, bit-identical to [`Csr::transpose`].
+    ///
+    /// Classic two-pass parallel counting sort: each thread histograms
+    /// the columns of its row chunk, a serial scan turns the per-chunk
+    /// histograms into disjoint per-(thread, column) cursor ranges, then
+    /// each thread re-walks its chunk scattering into its own ranges.
+    /// Entries of earlier rows land earlier within every column segment,
+    /// exactly like the serial scatter. `refresh_features` transposes Φ
+    /// on every Adam step, so this is on the training hot path.
+    pub fn transpose_par(&self, threads: usize) -> Csr {
+        let threads = threads.max(1).min(self.n_rows.max(1));
+        if threads <= 1 || self.n_rows < 2048 {
+            return self.transpose();
+        }
+        let chunk = self.n_rows.div_ceil(threads);
+        let mut bounds = Vec::new();
+        let mut start = 0;
+        while start < self.n_rows {
+            let end = (start + chunk).min(self.n_rows);
+            bounds.push((start, end));
+            start = end;
+        }
+        // Phase 1: per-chunk column histograms.
+        let mut hists: Vec<Vec<usize>> = Vec::with_capacity(bounds.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = bounds
+                .iter()
+                .map(|&(s, e)| {
+                    scope.spawn(move || {
+                        let mut h = vec![0usize; self.n_cols];
+                        for &c in &self.cols[self.offsets[s]..self.offsets[e]] {
+                            h[c as usize] += 1;
+                        }
+                        h
+                    })
+                })
+                .collect();
+            for handle in handles {
+                hists.push(handle.join().expect("histogram worker panicked"));
+            }
+        });
+        // Serial scan: global column offsets + per-chunk cursors.
+        let mut offsets = vec![0usize; self.n_cols + 1];
+        for h in &hists {
+            for (c, &v) in h.iter().enumerate() {
+                offsets[c + 1] += v;
+            }
+        }
+        for c in 0..self.n_cols {
+            offsets[c + 1] += offsets[c];
+        }
+        let mut cursors: Vec<Vec<usize>> = Vec::with_capacity(bounds.len());
+        let mut running = offsets[..self.n_cols].to_vec();
+        for h in &hists {
+            cursors.push(running.clone());
+            for c in 0..self.n_cols {
+                running[c] += h[c];
+            }
+        }
+        // Phase 2: scatter. Each (thread, column) owns the disjoint
+        // range [cursors[t][c], cursors[t][c] + hists[t][c]).
+        let nnz = self.nnz();
+        let mut cols = vec![0u32; nnz];
+        let mut vals = vec![0f64; nnz];
+        let cols_ptr = SendPtr(cols.as_mut_ptr());
+        let vals_ptr = SendPtr(vals.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for (&(s, e), mut cur) in bounds.iter().zip(std::mem::take(&mut cursors)) {
+                let cols_ptr = cols_ptr;
+                let vals_ptr = vals_ptr;
+                scope.spawn(move || {
+                    let cols_ptr = cols_ptr;
+                    let vals_ptr = vals_ptr;
+                    for r in s..e {
+                        let (rc, rv) = self.row(r);
+                        for (c, v) in rc.iter().zip(rv) {
+                            let k = cur[*c as usize];
+                            // SAFETY: k is taken from this thread's own
+                            // cursor range, disjoint across threads and
+                            // in-bounds by construction of `offsets`.
+                            unsafe {
+                                *cols_ptr.0.add(k) = r as u32;
+                                *vals_ptr.0.add(k) = *v;
+                            }
+                            cur[*c as usize] += 1;
+                        }
+                    }
+                });
+            }
+        });
         Csr {
             n_rows: self.n_cols,
             n_cols: self.n_rows,
@@ -351,6 +538,74 @@ mod tests {
             prop_assert!(y == y_par, "parallel matvec differs");
             Ok(())
         });
+    }
+
+    #[test]
+    fn spmm_matches_repeated_spmv() {
+        // Property: one SpMM over a B-column block == B independent
+        // SpMVs, bitwise (same per-output accumulation order), for the
+        // serial and the thread-parallel kernel.
+        proptest(24, |rng| {
+            let n = 1 + rng.below(40);
+            let m = 1 + rng.below(40);
+            let b = 1 + rng.below(7);
+            let a = random_csr(rng, n, m, 3 * n);
+            // Column vectors + their row-major block packing.
+            let cols_x: Vec<Vec<f64>> = (0..b)
+                .map(|_| (0..m).map(|_| rng.normal()).collect())
+                .collect();
+            let mut block = vec![0.0; m * b];
+            for (j, col) in cols_x.iter().enumerate() {
+                for i in 0..m {
+                    block[i * b + j] = col[i];
+                }
+            }
+            let y_block = a.matmat(&block, b);
+            let y_par = a.matmat_par(&block, b, 4);
+            prop_assert!(y_block == y_par, "parallel SpMM differs from serial");
+            for (j, col) in cols_x.iter().enumerate() {
+                let y = a.matvec(col);
+                for i in 0..n {
+                    prop_assert!(
+                        y_block[i * b + j] == y[i],
+                        "SpMM col {j} row {i}: {} vs {}",
+                        y_block[i * b + j],
+                        y[i]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transpose_par_matches_serial() {
+        // Above the serial-fallback threshold so the histogram/scatter
+        // path actually runs.
+        let mut rng = Rng::new(17);
+        for &threads in &[2usize, 3, 8] {
+            let a = random_csr(&mut rng, 3000, 500, 12_000);
+            let serial = a.transpose();
+            let par = a.transpose_par(threads);
+            assert!(serial == par, "transpose_par({threads}) differs");
+        }
+        // Below the threshold it falls back to (and equals) the serial path.
+        let small = random_csr(&mut rng, 40, 40, 100);
+        assert!(small.transpose() == small.transpose_par(4));
+    }
+
+    #[test]
+    fn matvec_par_into_reuses_buffer() {
+        let mut rng = Rng::new(23);
+        let a = random_csr(&mut rng, 300, 200, 1500);
+        let x: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
+        let expect = a.matvec(&x);
+        let mut y = vec![f64::NAN; 300];
+        a.matvec_par_into(&x, &mut y, 4);
+        assert_eq!(y, expect);
+        // Second application into the same buffer overwrites cleanly.
+        a.matvec_par_into(&x, &mut y, 2);
+        assert_eq!(y, expect);
     }
 
     #[test]

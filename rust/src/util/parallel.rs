@@ -99,7 +99,44 @@ where
     out
 }
 
-struct SendPtr<T>(*mut T);
+/// Split `out` (logically `n_rows` rows of `row_len` contiguous items)
+/// into per-thread row ranges and run `f(start_row, end_row, rows)` on
+/// scoped threads, each with exclusive access to its slice. This is the
+/// allocation-free backbone of the parallel SpMV/SpMM paths: callers
+/// hand in a reusable output buffer instead of concatenating per-chunk
+/// Vecs. Deterministic given deterministic `f`.
+pub fn par_rows_mut<T, F>(out: &mut [T], row_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    assert!(row_len > 0, "row_len must be positive");
+    debug_assert_eq!(out.len() % row_len, 0);
+    let n_rows = out.len() / row_len;
+    let threads = threads.max(1).min(n_rows.max(1));
+    if threads <= 1 {
+        f(0, n_rows, out);
+        return;
+    }
+    let chunk = n_rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut start = 0;
+        let f = &f;
+        while start < n_rows {
+            let end = (start + chunk).min(n_rows);
+            let (head, tail) = rest.split_at_mut((end - start) * row_len);
+            rest = tail;
+            scope.spawn(move || f(start, end, head));
+            start = end;
+        }
+    });
+}
+
+/// Raw-pointer wrapper asserting Send/Sync; used where threads write
+/// provably disjoint index sets of a shared buffer (par_map's slot
+/// writes, the parallel transpose scatter).
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
         *self
@@ -132,6 +169,30 @@ mod tests {
         let serial: Vec<u64> = xs.iter().map(|x| x * x + 1).collect();
         let parallel = par_map(&xs, 8, |x| x * x + 1);
         assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn par_rows_mut_covers_disjointly() {
+        // Each row written exactly once with its row index.
+        let row_len = 3;
+        let n_rows = 101;
+        let mut out = vec![0u64; n_rows * row_len];
+        par_rows_mut(&mut out, row_len, 7, |s, e, rows| {
+            assert_eq!(rows.len(), (e - s) * row_len);
+            for r in s..e {
+                for k in 0..row_len {
+                    rows[(r - s) * row_len + k] += r as u64 + 1;
+                }
+            }
+        });
+        for r in 0..n_rows {
+            for k in 0..row_len {
+                assert_eq!(out[r * row_len + k], r as u64 + 1, "row {r}");
+            }
+        }
+        // Degenerate: zero rows.
+        let mut empty: Vec<u64> = Vec::new();
+        par_rows_mut(&mut empty, 4, 3, |_, _, _| {});
     }
 
     #[test]

@@ -118,16 +118,20 @@ pub fn sample_components(g: &Graph, cfg: &WalkConfig, seed: u64) -> WalkComponen
         ChunkOut { start: s, per_len }
     });
 
-    // Stitch chunk fragments into global CSRs (chunks are in row order).
-    let mut c = Vec::with_capacity(n_len);
-    for l in 0..n_len {
+    // Stitch chunk fragments into global CSRs. The per-length stitches
+    // are independent memcpy-bound passes, so they run in parallel over
+    // the l_max+1 lengths (this sits on the training path:
+    // `refresh_features` re-derives Φ from these components every Adam
+    // step). Chunks are in row order, so each stitch is a prefix-sum
+    // over row lengths plus two concatenations.
+    let stitch = |l: usize| -> Csr {
         let total_nnz: usize = chunks.iter().map(|ch| ch.per_len[l].1.len()).sum();
         let mut offsets = Vec::with_capacity(n + 1);
         offsets.push(0usize);
         let mut cols = Vec::with_capacity(total_nnz);
         let mut vals = Vec::with_capacity(total_nnz);
         for ch in &chunks {
-            debug_assert_eq!(ch.start + 0, offsets.len() - 1);
+            debug_assert_eq!(ch.start, offsets.len() - 1);
             let (rows, ccols, cvals) = &ch.per_len[l];
             for &rl in rows {
                 offsets.push(offsets.last().unwrap() + rl as usize);
@@ -135,8 +139,14 @@ pub fn sample_components(g: &Graph, cfg: &WalkConfig, seed: u64) -> WalkComponen
             cols.extend_from_slice(ccols);
             vals.extend_from_slice(cvals);
         }
-        c.push(Csr { n_rows: n, n_cols: n, offsets, cols, vals });
-    }
+        Csr { n_rows: n, n_cols: n, offsets, cols, vals }
+    };
+    let c: Vec<Csr> = par_map_chunks(n_len, threads.min(n_len), |s, e, _| {
+        (s..e).map(stitch).collect::<Vec<Csr>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect();
     WalkComponents::new(c)
 }
 

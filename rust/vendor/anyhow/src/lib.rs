@@ -1,0 +1,144 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The container image has no network and no crates.io mirror, so the
+//! workspace vendors the exact subset of the `anyhow` API that grfgp
+//! uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] macros, and
+//! the [`Context`] extension trait over `Result` and `Option`. Errors
+//! are flat formatted strings with a context chain — no backtraces, no
+//! downcasting.
+
+use std::fmt;
+
+/// String-backed error with an outer-to-inner context chain.
+pub struct Error {
+    /// Most recent context first, root cause last (like anyhow's Display
+    /// of `{:#}`); plain Display shows the outermost entry.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> Result<()>` prints errors via Debug; keep the
+        // readable chained form there too.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// NOTE: `Error` deliberately does not implement `std::error::Error`;
+// that keeps the blanket `From` below from colliding with the identity
+// `From<T> for T` impl (same trick as upstream anyhow).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to the error arm of a `Result` or to `None`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s
+            .parse()
+            .with_context(|| format!("bad integer {s:?}"))?;
+        if v < 0 {
+            bail!("negative: {v}");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = parse("x").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.starts_with("bad integer \"x\""), "{msg}");
+        assert!(msg.contains(':'), "{msg}");
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        assert!(parse("7").is_ok());
+        let e = parse("-3").unwrap_err();
+        assert_eq!(e.to_string(), "negative: -3");
+        let e2: Error = anyhow!("code {}", 42);
+        assert_eq!(e2.to_string(), "code 42");
+    }
+
+    #[test]
+    fn io_error_converts_via_question_mark() {
+        fn open() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(open().is_err());
+        fn opt() -> Result<u32> {
+            let v = [1u32, 2].iter().copied().find(|&x| x > 5).context("missing")?;
+            Ok(v)
+        }
+        assert_eq!(opt().unwrap_err().to_string(), "missing");
+    }
+}
