@@ -23,6 +23,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 # Rows per grid step.  8 sublanes x 128 lanes is the natural f32 tile on
@@ -118,3 +119,92 @@ def ell_spmv_batch(idx, val, x, row_tile=DEFAULT_ROW_TILE):
         out_shape=jax.ShapeDtypeStruct((n, r), val.dtype),
         interpret=True,
     )(idx, val, x)
+
+
+# ----------------------------------------------------------------------
+# Multi-RHS SpMM with the native (Rust) padding/spill semantics
+# ----------------------------------------------------------------------
+#
+# The Rust engine's `Csr::to_ell` packs the first `width` entries of
+# each row into the dense [N, width] arrays (padding with idx 0 /
+# val 0) and keeps the overflow of wider rows in a small CSR *spill*
+# remainder, so any matrix converts losslessly without padding every
+# row to the maximum width.  `csr_to_ell` mirrors that split
+# host-side, and `ell_spmm` applies both parts: the regular ELL body
+# through the Pallas batch kernel, the (tiny) spill through a
+# segment-sum gather.
+
+
+def csr_to_ell(indptr, indices, data, width):
+    """Split a CSR matrix into an ELL body + CSR spill remainder.
+
+    Mirrors the Rust ``Csr::to_ell`` layout exactly: row ``i``'s first
+    ``width`` entries land in ``idx/val[i, :]`` (padded with index 0 /
+    value 0), the rest stay — in order — in the returned spill CSR
+    ``(sp_indptr, sp_indices, sp_data)``.
+
+    Returns ``(idx, val, spill)`` with ``spill = None`` when no row is
+    wider than ``width``.
+    """
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    data = np.asarray(data)
+    n = len(indptr) - 1
+    idx = np.zeros((n, width), dtype=np.int32)
+    val = np.zeros((n, width), dtype=np.float32)
+    sp_indptr = np.zeros(n + 1, dtype=np.int64)
+    sp_indices = []
+    sp_data = []
+    for i in range(n):
+        row = slice(indptr[i], indptr[i + 1])
+        cols_i = indices[row]
+        vals_i = data[row]
+        head = min(len(cols_i), width)
+        idx[i, :head] = cols_i[:head]
+        val[i, :head] = vals_i[:head]
+        sp_indices.extend(cols_i[head:])
+        sp_data.extend(vals_i[head:])
+        sp_indptr[i + 1] = len(sp_indices)
+    if not sp_indices:
+        return idx, val, None
+    spill = (
+        sp_indptr,
+        np.asarray(sp_indices, dtype=np.int32),
+        np.asarray(sp_data, dtype=np.float32),
+    )
+    return idx, val, spill
+
+
+def _spill_spmm(spill, x, n_rows):
+    """Y contribution of the CSR spill remainder: a segment-sum gather.
+
+    The spill holds only the overflow of the few rows wider than the
+    ELL width, so this is a tiny irregular tail — jnp ops are plenty;
+    the bandwidth-critical regular body runs in the Pallas kernel.
+    """
+    sp_indptr, sp_indices, sp_data = spill
+    nnz = int(sp_indices.shape[0])
+    counts = jnp.diff(jnp.asarray(sp_indptr))
+    row_ids = jnp.repeat(
+        jnp.arange(n_rows, dtype=jnp.int32), counts, total_repeat_length=nnz
+    )
+    contrib = jnp.asarray(sp_data)[:, None] * x[jnp.asarray(sp_indices)]
+    return jnp.zeros((n_rows, x.shape[1]), x.dtype).at[row_ids].add(contrib)
+
+
+def ell_spmm(idx, val, x, spill=None, row_tile=DEFAULT_ROW_TILE):
+    """Y = A @ X for A split as ELL body + optional CSR spill.
+
+    Args:
+      idx: int32[N, K] ELL column indices (padding: 0 with val 0).
+      val: f32[N, K] ELL values.
+      x:   f32[M, R] dense multi-RHS block.
+      spill: optional ``(indptr, indices, data)`` CSR remainder from
+        :func:`csr_to_ell` holding the entries of rows wider than K.
+    Returns:
+      f32[N, R] product, matching the dense oracle ``A_dense @ x``.
+    """
+    y = ell_spmv_batch(idx, val, x, row_tile=row_tile)
+    if spill is not None:
+        y = y + _spill_spmm(spill, jnp.asarray(x), idx.shape[0])
+    return y

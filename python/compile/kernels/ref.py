@@ -14,6 +14,23 @@ def ell_spmv_ref(idx, val, x):
     return jnp.sum(val * x[idx], axis=1)
 
 
+def ell_spmm_ref(idx, val, x):
+    """Y[i, :] = sum_k val[i,k] * X[idx[i,k], :] — naive batched gather."""
+    return jnp.sum(val[..., None] * x[idx], axis=1)
+
+
+def csr_to_dense(indptr, indices, data, n_rows, n_cols):
+    """Expand a CSR triple into a dense [n_rows, n_cols] matrix."""
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    data = np.asarray(data)
+    dense = np.zeros((n_rows, n_cols), dtype=np.float64)
+    for i in range(n_rows):
+        for k in range(indptr[i], indptr[i + 1]):
+            dense[i, indices[k]] += data[k]
+    return dense
+
+
 def ell_to_dense(idx, val, n_cols=None):
     """Expand an ELL (idx, val) pair into a dense [N, n_cols] matrix."""
     idx = np.asarray(idx)

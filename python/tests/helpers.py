@@ -11,3 +11,24 @@ def random_ell(rng, n, k, n_cols=None, density=1.0):
     val = np.where(keep, val, 0.0).astype(np.float32)
     idx = np.where(keep, idx, 0).astype(np.int32)
     return idx, val
+
+
+def random_csr(rng, widths, n_cols):
+    """Random CSR triple with the given per-row nonzero counts.
+
+    Columns are unique and sorted within each row (canonical CSR, like
+    the Rust `CooBuilder` output); `widths[i] == 0` gives an empty row.
+    """
+    indptr = np.zeros(len(widths) + 1, dtype=np.int64)
+    indices = []
+    data = []
+    for i, w in enumerate(widths):
+        cols = np.sort(rng.choice(n_cols, size=min(w, n_cols), replace=False))
+        indices.extend(cols)
+        data.extend(rng.normal(size=len(cols)))
+        indptr[i + 1] = len(indices)
+    return (
+        indptr,
+        np.asarray(indices, dtype=np.int32),
+        np.asarray(data, dtype=np.float32),
+    )

@@ -10,10 +10,11 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref
-from compile.kernels.ell_spmv import ell_spmv_pallas, ell_spmv_batch
+from compile.kernels.ell_spmv import (csr_to_ell, ell_spmm, ell_spmv_batch,
+                                      ell_spmv_pallas)
 from compile.kernels.matmul import matmul_tiled
 
-from tests.helpers import random_ell
+from tests.helpers import random_csr, random_ell
 
 
 # ----------------------------------------------------------------------
@@ -93,6 +94,77 @@ class TestEllSpmv:
         idx, val = random_ell(rng, n, k)
         x = rng.normal(size=(n, r)).astype(np.float32)
         y = np.asarray(ell_spmv_batch(idx, val, x, row_tile=8))
+        for j in range(r):
+            col = np.asarray(ell_spmv_pallas(idx, val, x[:, j], row_tile=8))
+            np.testing.assert_allclose(y[:, j], col, rtol=3e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Multi-RHS ELL SpMM (native padding/spill semantics)
+# ----------------------------------------------------------------------
+
+class TestEllSpmm:
+    def test_matches_dense_matmul(self, rng):
+        n, k, r = 48, 5, 7
+        idx, val = random_ell(rng, n, k, density=0.8)
+        x = rng.normal(size=(n, r)).astype(np.float32)
+        dense = ref.ell_to_dense(idx, val)
+        y = ell_spmm(idx, val, x, row_tile=16)
+        np.testing.assert_allclose(np.asarray(y), dense @ x, rtol=3e-5,
+                                   atol=1e-4)
+
+    def test_padded_rows_and_odd_n(self, rng):
+        """Low density (many padded slots), explicit empty rows, and N
+        not divisible by the row tile (pad-and-slice path)."""
+        n, k, r = 37, 3, 4
+        idx, val = random_ell(rng, n, k, density=0.4)
+        idx[5] = 0
+        val[5] = 0.0
+        x = rng.normal(size=(n, r)).astype(np.float32)
+        y = np.asarray(ell_spmm(idx, val, x, row_tile=16))
+        expect = np.asarray(ref.ell_spmm_ref(idx, val, x))
+        np.testing.assert_allclose(y, expect, rtol=3e-5, atol=1e-5)
+        np.testing.assert_array_equal(y[5], np.zeros(r))
+
+    @pytest.mark.parametrize("width", [2, 4])
+    def test_spill_rows_match_dense(self, rng, width):
+        """Rows wider than the ELL width overflow into the CSR spill
+        remainder; ELL body + spill must reproduce the dense product."""
+        n, r = 24, 5
+        widths = rng.integers(0, width + 1, size=n)
+        widths[3] = width + 7   # spill rows
+        widths[17] = width + 2
+        indptr, indices, data = random_csr(rng, widths, n)
+        idx, val, spill = csr_to_ell(indptr, indices, data, width)
+        assert spill is not None
+        sp_indptr, sp_indices, _ = spill
+        assert sp_indptr[-1] == (widths[3] - width) + (widths[17] - width)
+        assert len(sp_indices) == sp_indptr[-1]
+        x = rng.normal(size=(n, r)).astype(np.float32)
+        dense = ref.csr_to_dense(indptr, indices, data, n, n)
+        y = np.asarray(ell_spmm(idx, val, x, spill=spill, row_tile=8))
+        np.testing.assert_allclose(y, dense @ x.astype(np.float64),
+                                   rtol=3e-5, atol=1e-4)
+
+    def test_no_spill_when_width_covers(self, rng):
+        n, r = 19, 3
+        widths = rng.integers(0, 4, size=n)
+        indptr, indices, data = random_csr(rng, widths, n)
+        idx, val, spill = csr_to_ell(indptr, indices, data, 4)
+        assert spill is None
+        x = rng.normal(size=(n, r)).astype(np.float32)
+        dense = ref.csr_to_dense(indptr, indices, data, n, n)
+        y = np.asarray(ell_spmm(idx, val, x, row_tile=8))
+        np.testing.assert_allclose(y, dense @ x.astype(np.float64),
+                                   rtol=3e-5, atol=1e-4)
+
+    def test_spmm_columns_match_spmv(self, rng):
+        """Each column of the blocked product equals the single-RHS
+        kernel on that column (the Rust block contract, mirrored)."""
+        n, k, r = 32, 4, 6
+        idx, val = random_ell(rng, n, k)
+        x = rng.normal(size=(n, r)).astype(np.float32)
+        y = np.asarray(ell_spmm(idx, val, x, row_tile=8))
         for j in range(r):
             col = np.asarray(ell_spmv_pallas(idx, val, x[:, j], row_tile=8))
             np.testing.assert_allclose(y[:, j], col, rtol=3e-5, atol=1e-5)

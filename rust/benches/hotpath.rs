@@ -1,37 +1,32 @@
 //! Micro-benchmarks of the L3 hot paths, used by the performance pass
-//! (EXPERIMENTS.md §Perf): sparse matvec/SpMM, gram matvec, single and
-//! block CG, the walk engine, modulation recombination, and the
-//! end-to-end multi-RHS paths (`lml_grad`, `predict`) in both their
-//! blocked and legacy serial-loop forms.
+//! (EXPERIMENTS.md §Perf): sparse matvec/SpMM (CSR vs native ELL, f64
+//! vs f32 values), gram matvec, single and block CG, the walk engine,
+//! modulation recombination, and the end-to-end multi-RHS paths
+//! (`lml_grad`, `predict`) under each operand layout.
 //!
 //! Besides the human-readable table, the run writes
-//! `BENCH_hotpath.json` — a machine-readable record
-//! `[{"name", "n", "b", "ns_per_op"}, ...]` — so the perf trajectory of
-//! the blocked solver path is tracked across PRs.
+//! `BENCH_hotpath.json` — the machine-readable `BenchRow` schema
+//! `[{"name", "n", "b", "ns_per_op"}, ...]` (pinned by a tier-1 test
+//! in `util::bench`) — so the perf trajectory of the blocked/ELL
+//! solver paths is tracked across PRs. The headline comparison is
+//! `csr_spmm` (f64 CSR) vs `ell_spmm` (f64 ELL) vs `ell_spmm_f32`
+//! (f32 values, f64 accumulators — half the value traffic), and the
+//! same contrast on the blocked `predict`/`lml_grad` solves via
+//! `*_csr` vs `*_ell_f32`.
+//!
+//! Row-name continuity vs the PR 1 schema: `spmm`/`spmm_par` are now
+//! `csr_spmm`/`csr_spmm_par`, and `lml_grad`/`predict` (which ran the
+//! then-only CSR operator) continue as `lml_grad_csr`/`predict_csr`;
+//! splice those series when reading the trajectory across PRs.
 
 use grfgp::gp::{GpModel, Hypers, Modulation};
 use grfgp::graph::generators;
 use grfgp::sparse::ops::GramOperator;
-use grfgp::util::bench::bench;
+use grfgp::sparse::FeatureLayout;
+use grfgp::util::bench::{bench, write_rows_json, BenchRow};
 use grfgp::util::parallel::num_threads;
 use grfgp::util::rng::Rng;
 use grfgp::walks::{sample_components, WalkConfig};
-
-struct JsonRow {
-    name: String,
-    n: usize,
-    b: usize,
-    ns_per_op: f64,
-}
-
-fn record(rows: &mut Vec<JsonRow>, name: &str, n: usize, b: usize, mean_s: f64) {
-    rows.push(JsonRow {
-        name: name.to_string(),
-        n,
-        b,
-        ns_per_op: mean_s * 1e9,
-    });
-}
 
 /// Serial multi-RHS reference: what `lml_grad`'s solve phase cost
 /// before the blocked path — one independent CG run per RHS.
@@ -46,7 +41,7 @@ fn serial_solves(model: &GpModel, rhs: &[Vec<f64>]) -> usize {
 fn main() {
     let mut rng = Rng::new(0);
     let threads = num_threads();
-    let mut rows: Vec<JsonRow> = Vec::new();
+    let mut rows: Vec<BenchRow> = Vec::new();
     println!("== hotpath microbenches (threads={threads}) ==");
 
     for &n in &[16_384usize, 131_072] {
@@ -57,45 +52,89 @@ fn main() {
         let r = bench(&format!("walk_engine/n={n}"), 1, 5, || {
             sample_components(&g, &cfg, 2)
         });
-        record(&mut rows, "walk_engine", n, 1, r.mean_s);
+        rows.push(BenchRow::new("walk_engine", n, 1, r.mean_s));
 
         let mut prepared = comps.prepare();
         let f = vec![1.0, 0.5, 0.25, 0.12];
         let r = bench(&format!("combine/n={n}"), 1, 10, || {
             prepared.combine_into(&f).nnz()
         });
-        record(&mut rows, "combine", n, 1, r.mean_s);
+        rows.push(BenchRow::new("combine", n, 1, r.mean_s));
 
         let phi = prepared.combine_into(&f).clone();
         let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let r = bench(&format!("spmv/n={n}"), 2, 20, || phi.matvec(&x));
-        record(&mut rows, "spmv", n, 1, r.mean_s);
+        rows.push(BenchRow::new("spmv", n, 1, r.mean_s));
         let r = bench(&format!("spmv_par/n={n}"), 2, 20, || {
             phi.matvec_par(&x, threads)
         });
-        record(&mut rows, "spmv_par", n, 1, r.mean_s);
+        rows.push(BenchRow::new("spmv_par", n, 1, r.mean_s));
 
         let r = bench(&format!("transpose/n={n}"), 1, 10, || phi.transpose());
-        record(&mut rows, "transpose", n, 1, r.mean_s);
+        rows.push(BenchRow::new("transpose", n, 1, r.mean_s));
         let r = bench(&format!("transpose_par/n={n}"), 1, 10, || {
             phi.transpose_par(threads)
         });
-        record(&mut rows, "transpose_par", n, 1, r.mean_s);
+        rows.push(BenchRow::new("transpose_par", n, 1, r.mean_s));
 
-        // SpMM: one pass over Φ feeding B right-hand sides, vs B SpMVs.
+        // The feature-build row-width stats that drive the ELL layout
+        // decision, plus the ELL operands themselves: f64 (bit-identical
+        // to CSR) and f32 values (half the value traffic).
+        let st = phi.row_width_stats();
+        let width = phi.ell_auto_width();
+        let mut ell = phi.to_ell(width, false);
+        println!(
+            "Φ row widths: mean {:.2}, max {}, nnz {} -> ELL width {} \
+             (pad ratio {:.2}, spill {} nnz)",
+            st.mean,
+            st.max,
+            st.nnz,
+            width,
+            st.pad_ratio(width),
+            ell.spill_nnz()
+        );
+
+        // SpMM: one pass over Φ feeding B right-hand sides, vs B SpMVs,
+        // across layouts. All three kernels produce the same per-column
+        // accumulation order, so this is a pure memory-layout contrast.
         for &b in &[8usize, 16] {
             let xb: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
             let mut yb = vec![0.0; n * b];
-            let r = bench(&format!("spmm/n={n}/B={b}"), 2, 10, || {
+            let r = bench(&format!("csr_spmm/n={n}/B={b}"), 2, 10, || {
                 phi.matmat_into(&xb, b, &mut yb);
                 yb[0]
             });
-            record(&mut rows, "spmm", n, b, r.mean_s);
-            let r = bench(&format!("spmm_par/n={n}/B={b}"), 2, 10, || {
+            rows.push(BenchRow::new("csr_spmm", n, b, r.mean_s));
+            let r = bench(&format!("csr_spmm_par/n={n}/B={b}"), 2, 10, || {
                 phi.matmat_par_into(&xb, b, &mut yb, threads);
                 yb[0]
             });
-            record(&mut rows, "spmm_par", n, b, r.mean_s);
+            rows.push(BenchRow::new("csr_spmm_par", n, b, r.mean_s));
+
+            ell.set_use_f32(false);
+            let r = bench(&format!("ell_spmm/n={n}/B={b}"), 2, 10, || {
+                ell.matmat_into(&xb, b, &mut yb);
+                yb[0]
+            });
+            rows.push(BenchRow::new("ell_spmm", n, b, r.mean_s));
+            let r = bench(&format!("ell_spmm_par/n={n}/B={b}"), 2, 10, || {
+                ell.matmat_par_into(&xb, b, &mut yb, threads);
+                yb[0]
+            });
+            rows.push(BenchRow::new("ell_spmm_par", n, b, r.mean_s));
+
+            ell.set_use_f32(true);
+            let r = bench(&format!("ell_spmm_f32/n={n}/B={b}"), 2, 10, || {
+                ell.matmat_into(&xb, b, &mut yb);
+                yb[0]
+            });
+            rows.push(BenchRow::new("ell_spmm_f32", n, b, r.mean_s));
+            let r = bench(&format!("ell_spmm_f32_par/n={n}/B={b}"), 2, 10, || {
+                ell.matmat_par_into(&xb, b, &mut yb, threads);
+                yb[0]
+            });
+            rows.push(BenchRow::new("ell_spmm_f32_par", n, b, r.mean_s));
+
             // Columns pre-extracted outside the timed closure so the
             // baseline measures B passes of matrix traffic, not the
             // gather; each SpMV still allocates its result, as the
@@ -110,17 +149,18 @@ fn main() {
                 }
                 acc
             });
-            record(&mut rows, "spmv_xB", n, b, r.mean_s);
+            rows.push(BenchRow::new("spmv_xB", n, b, r.mean_s));
         }
 
         let mut op = GramOperator::new(phi.clone(), 0.1);
+        println!("gram operator layout: {}", op.layout_desc());
         let r = bench(&format!("gram_matvec/n={n}"), 2, 20, || op.apply(&x));
-        record(&mut rows, "gram_matvec", n, 1, r.mean_s);
+        rows.push(BenchRow::new("gram_matvec", n, 1, r.mean_s));
 
         // Full CG solve through the model (the paper's O(N^{3/2}) op).
         let train: Vec<usize> = (0..n).step_by(2).collect();
         let y: Vec<f64> = train.iter().map(|&i| (i as f64 * 0.01).sin()).collect();
-        let model = GpModel::new(
+        let mut model = GpModel::new(
             comps.clone(),
             Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1),
             &train,
@@ -135,7 +175,7 @@ fn main() {
         let r = bench(&format!("cg_solve/n={n}"), 1, 10, || {
             model.solve_system(&rhs).1.iterations
         });
-        record(&mut rows, "cg_solve", n, 1, r.mean_s);
+        rows.push(BenchRow::new("cg_solve", n, 1, r.mean_s));
 
         // Multi-RHS solve: S+1 = 9 systems (training-step shape),
         // blocked vs the legacy serial loop.
@@ -164,27 +204,36 @@ fn main() {
             let (_, stats) = model.solve_system_block(&rhs_block, n_rhs);
             stats.iter().map(|s| s.iterations).sum::<usize>()
         });
-        record(&mut rows, "block_cg", n, n_rhs, r.mean_s);
+        rows.push(BenchRow::new("block_cg", n, n_rhs, r.mean_s));
         let r = bench(&format!("cg_serial_loop/n={n}/B={n_rhs}"), 1, 5, || {
             serial_solves(&model, &rhs_vecs)
         });
-        record(&mut rows, "cg_serial_loop", n, n_rhs, r.mean_s);
+        rows.push(BenchRow::new("cg_serial_loop", n, n_rhs, r.mean_s));
 
-        // Training-step gradient: one blocked solve + SpMM projections
-        // (S = 8 probes -> 9 RHS).
-        let r = bench(&format!("lml_grad/n={n}/S=8"), 1, 5, || {
-            let mut step_rng = Rng::new(3);
-            model.lml_grad(&mut step_rng).1.cg_iters
-        });
-        record(&mut rows, "lml_grad", n, 9, r.mean_s);
-
-        // Prediction: 16 pathwise samples, blocked vs serial draws.
+        // End-to-end multi-RHS paths under each operand layout: the
+        // blocked solves dominate both, so `*_ell_f32` vs `*_csr` is
+        // the headline bandwidth win of the f32 ELL path.
         let n_samples = 16;
-        let r = bench(&format!("predict/n={n}/B={n_samples}"), 1, 3, || {
-            let mut p_rng = Rng::new(7);
-            model.predict(n_samples, &mut p_rng).1[0]
-        });
-        record(&mut rows, "predict", n, n_samples, r.mean_s);
+        for (tag, layout) in [
+            ("csr", FeatureLayout::Csr),
+            ("ell", FeatureLayout::Ell),
+            ("ell_f32", FeatureLayout::EllF32),
+        ] {
+            model.solve.layout = layout;
+            let r = bench(&format!("lml_grad_{tag}/n={n}/S=8"), 1, 5, || {
+                let mut step_rng = Rng::new(3);
+                model.lml_grad(&mut step_rng).1.cg_iters
+            });
+            rows.push(BenchRow::new(&format!("lml_grad_{tag}"), n, 9, r.mean_s));
+            let r = bench(&format!("predict_{tag}/n={n}/B={n_samples}"), 1, 3, || {
+                let mut p_rng = Rng::new(7);
+                model.predict(n_samples, &mut p_rng).1[0]
+            });
+            rows.push(BenchRow::new(&format!("predict_{tag}"), n, n_samples, r.mean_s));
+        }
+
+        // Legacy serial-draw prediction baseline (per-sample solves).
+        model.solve.layout = FeatureLayout::Auto;
         let r = bench(&format!("predict_serial/n={n}/B={n_samples}"), 1, 3, || {
             let mut p_rng = Rng::new(7);
             let (_, st) = model.posterior_mean();
@@ -194,23 +243,11 @@ fn main() {
             }
             acc
         });
-        record(&mut rows, "predict_serial", n, n_samples, r.mean_s);
+        rows.push(BenchRow::new("predict_serial", n, n_samples, r.mean_s));
     }
 
     // Machine-readable record for cross-PR perf tracking.
-    let mut json = String::from("[\n");
-    for (i, row) in rows.iter().enumerate() {
-        json.push_str(&format!(
-            "  {{\"name\": \"{}\", \"n\": {}, \"b\": {}, \"ns_per_op\": {:.1}}}{}\n",
-            row.name,
-            row.n,
-            row.b,
-            row.ns_per_op,
-            if i + 1 < rows.len() { "," } else { "" }
-        ));
-    }
-    json.push_str("]\n");
-    match std::fs::write("BENCH_hotpath.json", &json) {
+    match write_rows_json("BENCH_hotpath.json", &rows) {
         Ok(()) => println!("wrote BENCH_hotpath.json ({} entries)", rows.len()),
         Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
     }

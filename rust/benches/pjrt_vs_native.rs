@@ -31,9 +31,9 @@ fn main() {
         &y,
     );
     let phi = model.features.current();
-    let ell = phi.to_ell(phi.max_row_nnz()).unwrap();
+    let ell = phi.to_ell_artifact(phi.max_row_nnz()).unwrap();
     let phi_t = phi.transpose();
-    let ell_t = phi_t.to_ell(phi_t.max_row_nnz()).unwrap();
+    let ell_t = phi_t.to_ell_artifact(phi_t.max_row_nnz()).unwrap();
     let n = model.n();
     let x64: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();

@@ -422,6 +422,65 @@ mod tests {
     }
 
     #[test]
+    fn warm_started_thompson_resolve_beats_cold_start() {
+        // One BO step changes a single observation, so the Thompson
+        // re-solve is a nearly identical system: warm-starting the
+        // block-CG at the previous step's solves must take strictly
+        // fewer iterations than the cold start on the same system.
+        use crate::walks::sample_components;
+        let n = 400;
+        let g = generators::ring(n);
+        let walk = WalkConfig { n_walks: 64, max_len: 4, threads: 1, ..Default::default() };
+        let comps = sample_components(&g, &walk, 3);
+        let h = bump_objective(n);
+        let nodes0: Vec<usize> = (0..40).map(|i| i * 10).collect();
+        let y0: Vec<f64> = nodes0.iter().map(|&i| h(i)).collect();
+        let mut model = GpModel::new(
+            comps,
+            crate::gp::Hypers::new(crate::gp::Modulation::diffusion(1.0, 1.0, 4), 0.1),
+            &nodes0,
+            &y0,
+        );
+        model.solve.tol = 1e-8;
+        // Thompson-shaped rhs block [m·y, m·(y − s)] with a fixed draw
+        // `s` standing in for the pathwise sample g + σε: the draw is
+        // shared across BO steps so the two systems differ only by the
+        // single-point data update.
+        let mut draw = Rng::new(99);
+        let s: Vec<f64> = (0..n).map(|_| draw.normal()).collect();
+        let ncols = 2;
+        let build_rhs = |m: &GpModel| -> Vec<f64> {
+            let mut rhs = vec![0.0; n * ncols];
+            for i in 0..n {
+                rhs[i * ncols] = m.mask[i] * m.y[i];
+                rhs[i * ncols + 1] = m.mask[i] * (m.y[i] - 0.5 * s[i]);
+            }
+            rhs
+        };
+        let rhs0 = build_rhs(&model);
+        let (x_prev, st_prev) = model.solve_system_block(&rhs0, ncols);
+        assert!(st_prev.iter().all(|st| st.converged));
+        // The BO step: query one new node, append its observation.
+        let mut nodes1 = nodes0.clone();
+        nodes1.push(5);
+        let y1: Vec<f64> = nodes1.iter().map(|&i| h(i)).collect();
+        model.set_data(&nodes1, &y1);
+        let rhs1 = build_rhs(&model);
+        let (_, st_cold) = model.solve_system_block(&rhs1, ncols);
+        let (_, st_warm) =
+            model.solve_system_block_warm(&rhs1, ncols, Some(&x_prev));
+        assert!(st_cold.iter().all(|st| st.converged));
+        assert!(st_warm.iter().all(|st| st.converged));
+        let cold: usize = st_cold.iter().map(|st| st.iterations).sum();
+        let warm: usize = st_warm.iter().map(|st| st.iterations).sum();
+        assert!(
+            warm < cold,
+            "warm-started re-solve must take strictly fewer iterations: \
+             warm {warm} vs cold {cold}"
+        );
+    }
+
+    #[test]
     fn regret_hits_zero_when_optimum_found() {
         let n = 30;
         let h = |i: usize| if i == 17 { 10.0 } else { 0.0 };

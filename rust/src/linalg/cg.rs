@@ -151,16 +151,27 @@ where
 /// application `apply_block(X, Y)` (computing `Y = A X` column-wise)
 /// per iteration.
 ///
+/// `x0` optionally warm-starts the whole block (row-major `n × ncols`,
+/// like `b`): the initial residual becomes `R = B − A·X0` at the cost
+/// of one extra operator application. Thompson-sampling BO re-solves
+/// nearly identical systems after each single-point data update, so
+/// carrying the previous solves as `x0` cuts the iteration count (see
+/// the warm-start test in `bo`). With `x0 = None` the zero-start
+/// shortcut (`R = B`, no operator application) is taken, bitwise
+/// identical to the pre-warm-start behavior.
+///
 /// Each column keeps its own α, β, residual, and convergence flag, so
 /// the per-column iterates are **bitwise identical** to running
-/// [`cg_solve`] / [`pcg_solve`] on that column alone (columns that
-/// converge early are frozen and no longer updated; the operator is
-/// still applied to the full block, whose traffic the live columns
-/// amortise). Returns the solution block and per-column stats.
+/// [`cg_solve`] / [`pcg_solve`] on that column alone with the matching
+/// `x0` column (columns that converge early are frozen and no longer
+/// updated; the operator is still applied to the full block, whose
+/// traffic the live columns amortise). Returns the solution block and
+/// per-column stats.
 pub fn block_cg_solve<F>(
     mut apply_block: F,
     b: &[f64],
     ncols: usize,
+    x0: Option<&[f64]>,
     precond_diag: Option<&[f64]>,
     tol: f64,
     max_iters: usize,
@@ -176,8 +187,24 @@ where
     }
     let use_precond = precond_diag.is_some();
 
-    let mut x = vec![0.0; n * ncols];
-    let mut r = b.to_vec(); // r = B − A·0 = B
+    let mut x = match x0 {
+        Some(v) => {
+            assert_eq!(v.len(), n * ncols, "x0 block shape must match b");
+            v.to_vec()
+        }
+        None => vec![0.0; n * ncols],
+    };
+    // R = B − A·X0; without a warm start A·0 = 0 exactly, so skip the
+    // operator application (bitwise identical, one full pass cheaper —
+    // the same shortcut pcg_solve takes).
+    let mut r: Vec<f64> = match x0 {
+        Some(_) => {
+            let mut ax = vec![0.0; n * ncols];
+            apply_block(&x, &mut ax);
+            b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect()
+        }
+        None => b.to_vec(),
+    };
     let mut z: Vec<f64> = if use_precond {
         let d = precond_diag.unwrap();
         let mut z = vec![0.0; n * ncols];
@@ -329,6 +356,7 @@ where
         |x, y| apply_block(x, y, ncols),
         &block,
         ncols,
+        None,
         precond_diag,
         tol,
         max_iters,
@@ -506,6 +534,7 @@ mod tests {
                 &block,
                 ncols,
                 None,
+                None,
                 1e-10,
                 20 * n,
             );
@@ -558,9 +587,9 @@ mod tests {
             }
         };
         let (x_plain, st_plain) =
-            block_cg_solve(apply, &block, ncols, None, 1e-10, n);
+            block_cg_solve(apply, &block, ncols, None, None, 1e-10, n);
         let (x_pre, st_pre) =
-            block_cg_solve(apply, &block, ncols, Some(&diag), 1e-10, n);
+            block_cg_solve(apply, &block, ncols, None, Some(&diag), 1e-10, n);
         for j in 0..ncols {
             assert!(st_plain[j].converged && st_pre[j].converged, "col {j}");
             assert!(
@@ -578,6 +607,105 @@ mod tests {
                 x_pre[i]
             );
         }
+    }
+
+    #[test]
+    fn block_cg_warm_start_matches_single_rhs_bitwise() {
+        // The x0 block extends the lockstep guarantee: column j of a
+        // warm-started block solve reproduces pcg_solve on that column
+        // with the matching x0 column — same iterates, same stats.
+        proptest(16, |rng| {
+            let n = 2 + rng.below(24);
+            let ncols = 1 + rng.below(5);
+            let mut bmat = Mat::zeros(n, n);
+            for v in &mut bmat.data {
+                *v = rng.normal();
+            }
+            let mut a = bmat.matmul(&bmat.transpose());
+            a.add_diag(0.5);
+            let cols: Vec<Vec<f64>> = (0..ncols)
+                .map(|_| (0..n).map(|_| rng.normal()).collect())
+                .collect();
+            let x0_cols: Vec<Vec<f64>> = (0..ncols)
+                .map(|_| (0..n).map(|_| 0.3 * rng.normal()).collect())
+                .collect();
+            let mut block = vec![0.0; n * ncols];
+            let mut x0_block = vec![0.0; n * ncols];
+            for j in 0..ncols {
+                for i in 0..n {
+                    block[i * ncols + j] = cols[j][i];
+                    x0_block[i * ncols + j] = x0_cols[j][i];
+                }
+            }
+            let (xb, stats) = block_cg_solve(
+                |x, y| dense_apply_block(&a, x, y, ncols),
+                &block,
+                ncols,
+                Some(&x0_block),
+                None,
+                1e-10,
+                20 * n,
+            );
+            for j in 0..ncols {
+                let (xs, st) = pcg_solve(
+                    |v, y: &mut [f64]| {
+                        let av = a.matvec(v);
+                        y.copy_from_slice(&av);
+                    },
+                    &cols[j],
+                    Some(&x0_cols[j]),
+                    None,
+                    1e-10,
+                    20 * n,
+                );
+                prop_assert!(
+                    stats[j].iterations == st.iterations,
+                    "col {j}: {} vs {} iterations",
+                    stats[j].iterations,
+                    st.iterations
+                );
+                for i in 0..n {
+                    let bv = xb[i * ncols + j];
+                    prop_assert!(
+                        (bv - xs[i]).abs() < 1e-12 * (1.0 + xs[i].abs()),
+                        "col {j} row {i}: block {bv} vs single {}",
+                        xs[i]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_cg_warm_start_at_solution_takes_zero_iterations() {
+        // x0 = exact solution => R = B − A·X0 = 0, every column starts
+        // converged, and the returned block is x0 unchanged.
+        let n = 40;
+        let ncols = 3;
+        let diag: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+        let mut rng = Rng::new(5);
+        let x_true: Vec<f64> = (0..n * ncols).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0; n * ncols];
+        for i in 0..n {
+            for j in 0..ncols {
+                b[i * ncols + j] = diag[i] * x_true[i * ncols + j];
+            }
+        }
+        let apply = |x: &[f64], y: &mut [f64]| {
+            for i in 0..n {
+                for j in 0..ncols {
+                    y[i * ncols + j] = diag[i] * x[i * ncols + j];
+                }
+            }
+        };
+        let (x, stats) =
+            block_cg_solve(apply, &b, ncols, Some(&x_true), None, 1e-10, 100);
+        for st in &stats {
+            assert_eq!(st.iterations, 0, "{st:?}");
+            assert!(st.converged);
+        }
+        assert_eq!(x, x_true);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! [`crate::runtime`] for the bucket-padding contract.
 
 use super::manifest::{ArtifactInfo, Manifest};
-use crate::sparse::Ell;
+use crate::sparse::EllArtifact;
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -77,7 +77,7 @@ impl Runtime {
 
     // -- literal packing ------------------------------------------------
 
-    fn lit_ell(&self, e: &Ell, rows: usize, width: usize) -> Result<(xla::Literal, xla::Literal)> {
+    fn lit_ell(&self, e: &EllArtifact, rows: usize, width: usize) -> Result<(xla::Literal, xla::Literal)> {
         let p = e.pad_to(rows, width);
         let idx = xla::Literal::vec1(&p.idx)
             .reshape(&[rows as i64, width as i64])
@@ -111,7 +111,7 @@ impl Runtime {
     // -- public entry points ---------------------------------------------
 
     /// y = Φ Φᵀ x + σ² x via the `gram_matvec` artifact.
-    pub fn gram_matvec(&self, phi: &Ell, phi_t: &Ell, x: &[f32], sigma2: f32) -> Result<Vec<f32>> {
+    pub fn gram_matvec(&self, phi: &EllArtifact, phi_t: &EllArtifact, x: &[f32], sigma2: f32) -> Result<Vec<f32>> {
         let info = self
             .pick("gram_matvec", phi.n_rows, phi.width, phi_t.width)
             .ok_or_else(|| anyhow!(
@@ -135,8 +135,8 @@ impl Runtime {
     /// Returns the solutions and the final squared residuals.
     pub fn cg_solve(
         &self,
-        phi: &Ell,
-        phi_t: &Ell,
+        phi: &EllArtifact,
+        phi_t: &EllArtifact,
         mask: &[f32],
         bs: &[Vec<f32>],
         sigma2: f32,
@@ -174,8 +174,8 @@ impl Runtime {
     #[allow(clippy::too_many_arguments)]
     pub fn posterior_sample(
         &self,
-        phi: &Ell,
-        phi_t: &Ell,
+        phi: &EllArtifact,
+        phi_t: &EllArtifact,
         mask: &[f32],
         y: &[f32],
         w: &[f32],
@@ -208,8 +208,8 @@ impl Runtime {
     /// Posterior mean at all nodes via the `posterior_mean` artifact.
     pub fn posterior_mean(
         &self,
-        phi: &Ell,
-        phi_t: &Ell,
+        phi: &EllArtifact,
+        phi_t: &EllArtifact,
         mask: &[f32],
         y: &[f32],
         sigma2: f32,

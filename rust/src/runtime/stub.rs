@@ -4,7 +4,7 @@
 //! branch.
 
 use super::manifest::{ArtifactInfo, Manifest};
-use crate::sparse::Ell;
+use crate::sparse::EllArtifact;
 use anyhow::{bail, Result};
 use std::path::Path;
 
@@ -39,8 +39,8 @@ impl Runtime {
 
     pub fn gram_matvec(
         &self,
-        phi: &Ell,
-        phi_t: &Ell,
+        phi: &EllArtifact,
+        phi_t: &EllArtifact,
         x: &[f32],
         sigma2: f32,
     ) -> Result<Vec<f32>> {
@@ -49,8 +49,8 @@ impl Runtime {
 
     pub fn cg_solve(
         &self,
-        phi: &Ell,
-        phi_t: &Ell,
+        phi: &EllArtifact,
+        phi_t: &EllArtifact,
         mask: &[f32],
         bs: &[Vec<f32>],
         sigma2: f32,
@@ -61,8 +61,8 @@ impl Runtime {
     #[allow(clippy::too_many_arguments)]
     pub fn posterior_sample(
         &self,
-        phi: &Ell,
-        phi_t: &Ell,
+        phi: &EllArtifact,
+        phi_t: &EllArtifact,
         mask: &[f32],
         y: &[f32],
         w: &[f32],
@@ -74,8 +74,8 @@ impl Runtime {
 
     pub fn posterior_mean(
         &self,
-        phi: &Ell,
-        phi_t: &Ell,
+        phi: &EllArtifact,
+        phi_t: &EllArtifact,
         mask: &[f32],
         y: &[f32],
         sigma2: f32,

@@ -1,0 +1,724 @@
+//! Native ELL (padded fixed-width) sparse matrices for the solver hot
+//! path.
+//!
+//! The GRF feature matrix Φ has near-uniform row widths (Theorem 1
+//! bounds nonzeros-per-feature w.h.p.), so packing rows to a common
+//! width turns the CSR's per-row offset chasing into a regular
+//! `[n_rows × width]` strided gather: the inner SpMV/SpMM loop has a
+//! fixed trip count, no `offsets` traffic, and vectorises cleanly.
+//! Rows wider than the chosen width keep their overflow entries in a
+//! small CSR *spill* remainder, so any matrix converts losslessly.
+//!
+//! The type carries up to two value arrays:
+//!
+//! * `vals` (f64, always present) — bit-identical arithmetic with the
+//!   CSR kernels (same per-row accumulation order; padding contributes
+//!   exact `+0.0` terms).
+//! * `vals32` (f32, materialized only when the f32 path is selected) —
+//!   the same entries rounded once. Φ's entries are Monte-Carlo
+//!   estimates with ~1e-2 relative error, so the ~6e-8 rounding is
+//!   statistically free while halving the value-array traffic of the
+//!   bandwidth-bound SpMM. Accumulation stays in f64 either way.
+//!
+//! [`FeatureLayout`] is the per-matrix selection policy used by
+//! `GpModel::refresh_features` and `GramOperator`: `Auto` converts to
+//! ELL only when the row widths are regular enough (width ≤
+//! [`ELL_WIDTH_FACTOR`]·mean row nnz with bounded padding and spill),
+//! falling back to CSR on irregular (power-law) patterns.
+
+use super::Csr;
+use crate::util::parallel;
+
+/// Row-width distribution of a sparse matrix — the signal the ELL
+/// auto-layout policy (and the walk-engine diagnostics) decide on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RowWidthStats {
+    pub n_rows: usize,
+    pub nnz: usize,
+    pub max: usize,
+    pub mean: f64,
+}
+
+impl RowWidthStats {
+    /// Padding overhead of packing every row to `width` slots:
+    /// stored-slot count over real nonzeros (1.0 = no padding).
+    pub fn pad_ratio(&self, width: usize) -> f64 {
+        if self.nnz == 0 {
+            return 1.0;
+        }
+        (self.n_rows * width) as f64 / self.nnz as f64
+    }
+}
+
+/// Auto-layout width multiplier: ELL width is capped at
+/// `ceil(ELL_WIDTH_FACTOR * mean_row_nnz)` so a few fat rows spill
+/// instead of padding every row to the maximum.
+pub const ELL_WIDTH_FACTOR: f64 = 1.5;
+/// Auto layout rejects ELL when more than this fraction of nonzeros
+/// would land in the spill remainder (the pattern is too irregular for
+/// a fixed width to pay off).
+pub const ELL_MAX_SPILL_FRAC: f64 = 0.10;
+/// Auto layout rejects ELL when padding would inflate stored slots
+/// beyond this factor over the real nonzeros.
+pub const ELL_MAX_PAD_RATIO: f64 = 2.0;
+
+/// Per-matrix operator layout policy (selected at `refresh_features`
+/// time by the GP model, or via `GramOperator::with_layout`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureLayout {
+    /// ELL with f64 values when the row widths are regular enough
+    /// (bit-identical results, pure memory-layout win); CSR otherwise.
+    Auto,
+    /// Always the CSR kernels (the pre-ELL behavior).
+    Csr,
+    /// Force ELL with f64 values (spill absorbs any irregularity).
+    Ell,
+    /// Force ELL with f32 values / f64 accumulators: halves the value
+    /// traffic at ~6e-8 relative rounding of Φ's MC-estimated entries.
+    EllF32,
+}
+
+impl FeatureLayout {
+    pub fn uses_f32(self) -> bool {
+        matches!(self, FeatureLayout::EllF32)
+    }
+}
+
+/// Native ELL matrix: fixed-width padded rows + CSR spill remainder.
+///
+/// Entries of row `i` occupy `cols/vals[i*width ..]` in the same
+/// column-sorted order as the source CSR, padded with `(col 0, 0.0)`;
+/// overflow entries (beyond `width`) continue, still in order, in
+/// `spill` row `i`. Every kernel accumulates a row as: ELL slots left
+/// to right, then spill entries — exactly the CSR entry order, which
+/// is what makes the f64 path bit-identical to [`Csr::matvec_into`] /
+/// [`Csr::matmat_into`].
+#[derive(Clone, Debug)]
+pub struct Ell {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Padded row width (0 for an empty matrix).
+    pub width: usize,
+    /// Row-major `[n_rows × width]` column indices (padding: 0).
+    pub cols: Vec<u32>,
+    /// Row-major `[n_rows × width]` f64 values (padding: 0.0). Always
+    /// present — the source of truth the f32 array is derived from.
+    pub vals: Vec<f64>,
+    /// The same entries rounded to f32 once. Materialized only when
+    /// the f32 path is (or has ever been) selected, so the default
+    /// f64 layout carries no dead copy.
+    pub vals32: Vec<f32>,
+    /// Which value array the kernels read (accumulators are f64 both
+    /// ways). Private: flip it through [`Ell::set_use_f32`], which
+    /// guarantees `vals32` is materialized before the kernels index it.
+    use_f32: bool,
+    /// Overflow entries of rows wider than `width` (often empty).
+    /// Spill values stay f64 on both paths — the remainder is tiny, so
+    /// rounding it buys no bandwidth.
+    pub spill: Csr,
+    /// Real (unpadded) nonzeros, ELL body + spill.
+    nnz: usize,
+}
+
+/// Value-array abstraction so the f64 and f32 kernels monomorphise to
+/// the same tight loop instead of branching per entry.
+trait EllVal: Copy + Send + Sync {
+    fn promote(self) -> f64;
+}
+
+impl EllVal for f64 {
+    #[inline(always)]
+    fn promote(self) -> f64 {
+        self
+    }
+}
+
+impl EllVal for f32 {
+    #[inline(always)]
+    fn promote(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Csr {
+    /// Row-width distribution (drives the ELL auto-layout policy; also
+    /// reported by the walk-engine feature-build diagnostics).
+    pub fn row_width_stats(&self) -> RowWidthStats {
+        let nnz = self.nnz();
+        RowWidthStats {
+            n_rows: self.n_rows,
+            nnz,
+            max: self.max_row_nnz(),
+            mean: if self.n_rows == 0 {
+                0.0
+            } else {
+                nnz as f64 / self.n_rows as f64
+            },
+        }
+    }
+
+    /// The auto-policy ELL width for this matrix:
+    /// `min(max_row_nnz, ceil(ELL_WIDTH_FACTOR · mean_row_nnz))`.
+    pub fn ell_auto_width(&self) -> usize {
+        let st = self.row_width_stats();
+        if st.nnz == 0 {
+            return 0;
+        }
+        st.max.min(((ELL_WIDTH_FACTOR * st.mean).ceil() as usize).max(1))
+    }
+
+    /// Convert to native ELL with the given row width; entries beyond
+    /// `width` per row go to the CSR spill remainder, so the conversion
+    /// is total (never fails) and lossless. `use_f32` selects which of
+    /// the two value arrays the kernels will read.
+    pub fn to_ell(&self, width: usize, use_f32: bool) -> Ell {
+        let n = self.n_rows;
+        // An empty matrix gets width 0 regardless of the request: the
+        // padding column index 0 would otherwise be out of bounds when
+        // n_cols == 0.
+        let width = if self.nnz() == 0 { 0 } else { width };
+        let mut cols = vec![0u32; n * width];
+        let mut vals = vec![0f64; n * width];
+        // Spill CSR built directly (not via CooBuilder) so exact-zero
+        // entries survive and the entry order is preserved verbatim.
+        let mut sp_offsets = vec![0usize; n + 1];
+        let mut sp_cols = Vec::new();
+        let mut sp_vals = Vec::new();
+        for r in 0..n {
+            let (rc, rv) = self.row(r);
+            let head = rc.len().min(width);
+            let base = r * width;
+            cols[base..base + head].copy_from_slice(&rc[..head]);
+            vals[base..base + head].copy_from_slice(&rv[..head]);
+            sp_cols.extend_from_slice(&rc[head..]);
+            sp_vals.extend_from_slice(&rv[head..]);
+            sp_offsets[r + 1] = sp_cols.len();
+        }
+        let vals32: Vec<f32> = if use_f32 {
+            vals.iter().map(|&v| v as f32).collect()
+        } else {
+            Vec::new()
+        };
+        Ell {
+            n_rows: n,
+            n_cols: self.n_cols,
+            width,
+            cols,
+            vals,
+            vals32,
+            use_f32,
+            spill: Csr {
+                n_rows: n,
+                n_cols: self.n_cols,
+                offsets: sp_offsets,
+                cols: sp_cols,
+                vals: sp_vals,
+            },
+            nnz: self.nnz(),
+        }
+    }
+
+    /// Auto-layout policy: ELL at [`Csr::ell_auto_width`] if the
+    /// pattern is regular enough (spill ≤ [`ELL_MAX_SPILL_FRAC`] of
+    /// nnz, padding ≤ [`ELL_MAX_PAD_RATIO`]×), `None` to stay CSR.
+    pub fn to_ell_auto(&self, use_f32: bool) -> Option<Ell> {
+        let st = self.row_width_stats();
+        if st.nnz == 0 {
+            return None;
+        }
+        let width = self.ell_auto_width();
+        if st.pad_ratio(width) > ELL_MAX_PAD_RATIO {
+            return None;
+        }
+        let ell = self.to_ell(width, use_f32);
+        if ell.spill.nnz() as f64 > ELL_MAX_SPILL_FRAC * st.nnz as f64 {
+            return None;
+        }
+        Some(ell)
+    }
+
+    /// Apply `layout` to this matrix: `Some(ell)` when the policy picks
+    /// (or forces) ELL, `None` when it stays CSR.
+    pub fn select_ell(&self, layout: FeatureLayout) -> Option<Ell> {
+        match layout {
+            FeatureLayout::Csr => None,
+            FeatureLayout::Auto => self.to_ell_auto(false),
+            FeatureLayout::Ell | FeatureLayout::EllF32 => {
+                Some(self.to_ell(self.ell_auto_width(), layout.uses_f32()))
+            }
+        }
+    }
+}
+
+impl Ell {
+    /// Real (unpadded) nonzeros, ELL body + spill.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Whether the kernels read the f32 value array.
+    pub fn uses_f32(&self) -> bool {
+        self.use_f32
+    }
+
+    /// Select which value array the kernels read, materializing the
+    /// f32 copy from the f64 source on first use (the f64 array always
+    /// stays, so the toggle is lossless in both directions).
+    pub fn set_use_f32(&mut self, use_f32: bool) {
+        if use_f32 && self.vals32.len() != self.vals.len() {
+            self.vals32 = self.vals.iter().map(|&v| v as f32).collect();
+        }
+        self.use_f32 = use_f32;
+    }
+
+    /// Nonzeros held in the spill remainder.
+    pub fn spill_nnz(&self) -> usize {
+        self.spill.nnz()
+    }
+
+    /// Memory footprint in bytes (both value arrays + indices + spill).
+    pub fn memory_bytes(&self) -> usize {
+        self.cols.len() * 4
+            + self.vals.len() * 8
+            + self.vals32.len() * 4
+            + self.spill.memory_bytes()
+    }
+
+    /// Rows [s, e) of y = A x into `out[0 .. e-s]`: fixed-width ELL
+    /// gather, then the spill continuation in the same accumulator —
+    /// the exact CSR per-row entry order.
+    #[inline]
+    fn rows_matvec<V: EllVal>(
+        &self,
+        vals: &[V],
+        x: &[f64],
+        s: usize,
+        e: usize,
+        out: &mut [f64],
+    ) {
+        let w = self.width;
+        for i in s..e {
+            let base = i * w;
+            let mut acc = 0.0;
+            for k in base..base + w {
+                // SAFETY: k < n_rows*width == cols.len() == vals.len()
+                // by construction; every stored col (incl. padding 0)
+                // is < n_cols == x.len() (asserted by callers).
+                unsafe {
+                    acc += vals.get_unchecked(k).promote()
+                        * x.get_unchecked(*self.cols.get_unchecked(k) as usize);
+                }
+            }
+            let (sc, sv) = self.spill.row(i);
+            for (c, v) in sc.iter().zip(sv) {
+                // SAFETY: spill cols come from the source CSR, < n_cols.
+                acc += v * unsafe { x.get_unchecked(*c as usize) };
+            }
+            out[i - s] = acc;
+        }
+    }
+
+    /// Rows [s, e) of the SpMM Y = A X into `out` (row-major
+    /// `(e-s) × ncols`); shared inner kernel of the serial and parallel
+    /// block products, same accumulation order as [`Csr::matmat_into`].
+    #[inline]
+    fn rows_matmat<V: EllVal>(
+        &self,
+        vals: &[V],
+        x: &[f64],
+        ncols: usize,
+        s: usize,
+        e: usize,
+        out: &mut [f64],
+    ) {
+        let w = self.width;
+        for i in s..e {
+            let yi = &mut out[(i - s) * ncols..(i - s + 1) * ncols];
+            yi.fill(0.0);
+            let base = i * w;
+            for k in base..base + w {
+                let c = unsafe { *self.cols.get_unchecked(k) } as usize;
+                let v = unsafe { vals.get_unchecked(k) }.promote();
+                // SAFETY: c < n_cols so c*ncols + ncols <= x.len() by
+                // the callers' (hard-asserted) shape contract.
+                let xr = unsafe { x.get_unchecked(c * ncols..c * ncols + ncols) };
+                for (yj, xj) in yi.iter_mut().zip(xr) {
+                    *yj += v * xj;
+                }
+            }
+            let (sc, sv) = self.spill.row(i);
+            for (c, v) in sc.iter().zip(sv) {
+                let base = *c as usize * ncols;
+                let xr = unsafe { x.get_unchecked(base..base + ncols) };
+                for (yj, xj) in yi.iter_mut().zip(xr) {
+                    *yj += v * xj;
+                }
+            }
+        }
+    }
+
+    /// y = A x into a caller-provided buffer (serial).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        if self.use_f32 {
+            self.rows_matvec(&self.vals32, x, 0, self.n_rows, y);
+        } else {
+            self.rows_matvec(&self.vals, x, 0, self.n_rows, y);
+        }
+    }
+
+    /// Allocating wrapper over [`Ell::matvec_into`].
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Thread-parallel y = A x over disjoint row chunks,
+    /// allocation-free.
+    pub fn matvec_par_into(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        parallel::par_rows_mut(y, 1, threads, |s, e, ys| {
+            if self.use_f32 {
+                self.rows_matvec(&self.vals32, x, s, e, ys);
+            } else {
+                self.rows_matvec(&self.vals, x, s, e, ys);
+            }
+        });
+    }
+
+    /// Allocating wrapper over [`Ell::matvec_par_into`].
+    pub fn matvec_par(&self, x: &[f64], threads: usize) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_par_into(x, &mut y, threads);
+        y
+    }
+
+    /// SpMM Y = A X over a row-major `n_cols × ncols` block into the
+    /// caller's row-major `n_rows × ncols` buffer (serial).
+    pub fn matmat_into(&self, x: &[f64], ncols: usize, y: &mut [f64]) {
+        assert!(ncols > 0, "block width must be positive");
+        assert_eq!(x.len(), self.n_cols * ncols);
+        assert_eq!(y.len(), self.n_rows * ncols);
+        if self.use_f32 {
+            self.rows_matmat(&self.vals32, x, ncols, 0, self.n_rows, y);
+        } else {
+            self.rows_matmat(&self.vals, x, ncols, 0, self.n_rows, y);
+        }
+    }
+
+    /// Allocating wrapper over [`Ell::matmat_into`].
+    pub fn matmat(&self, x: &[f64], ncols: usize) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows * ncols];
+        self.matmat_into(x, ncols, &mut y);
+        y
+    }
+
+    /// Thread-parallel SpMM over disjoint row chunks, allocation-free.
+    pub fn matmat_par_into(&self, x: &[f64], ncols: usize, y: &mut [f64], threads: usize) {
+        assert!(ncols > 0, "block width must be positive");
+        assert_eq!(x.len(), self.n_cols * ncols);
+        assert_eq!(y.len(), self.n_rows * ncols);
+        parallel::par_rows_mut(y, ncols, threads, |s, e, rows| {
+            if self.use_f32 {
+                self.rows_matmat(&self.vals32, x, ncols, s, e, rows);
+            } else {
+                self.rows_matmat(&self.vals, x, ncols, s, e, rows);
+            }
+        });
+    }
+
+    /// Allocating wrapper over [`Ell::matmat_par_into`].
+    pub fn matmat_par(&self, x: &[f64], ncols: usize, threads: usize) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows * ncols];
+        self.matmat_par_into(x, ncols, &mut y, threads);
+        y
+    }
+}
+
+/// y = A x through the selected operand: the ELL when the layout
+/// policy produced one, the CSR otherwise. `par` gates the threaded
+/// kernels (callers keep their existing size thresholds).
+#[inline]
+pub fn spmv_dispatch(
+    csr: &Csr,
+    ell: Option<&Ell>,
+    x: &[f64],
+    y: &mut [f64],
+    threads: usize,
+    par: bool,
+) {
+    match ell {
+        Some(e) if par => e.matvec_par_into(x, y, threads),
+        Some(e) => e.matvec_into(x, y),
+        None if par => csr.matvec_par_into(x, y, threads),
+        None => csr.matvec_into(x, y),
+    }
+}
+
+/// Blocked Y = A X through the selected operand (see
+/// [`spmv_dispatch`]).
+#[inline]
+pub fn spmm_dispatch(
+    csr: &Csr,
+    ell: Option<&Ell>,
+    x: &[f64],
+    ncols: usize,
+    y: &mut [f64],
+    threads: usize,
+    par: bool,
+) {
+    match ell {
+        Some(e) if par => e.matmat_par_into(x, ncols, y, threads),
+        Some(e) => e.matmat_into(x, ncols, y),
+        None if par => csr.matmat_par_into(x, ncols, y, threads),
+        None => csr.matmat_into(x, ncols, y),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::sparse::CooBuilder;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
+
+    /// Random CSR with empty rows (rows are hit at random) and, at
+    /// `nnz > width * n_rows`-ish densities, rows wide enough to spill.
+    fn random_csr(rng: &mut Rng, n_rows: usize, n_cols: usize, nnz: usize) -> Csr {
+        let mut b = CooBuilder::new(n_rows, n_cols);
+        for _ in 0..nnz {
+            b.push(
+                rng.below(n_rows) as u32,
+                rng.below(n_cols) as u32,
+                rng.normal(),
+            );
+        }
+        b.build()
+    }
+
+    /// Pack column vectors into the row-major block layout.
+    fn pack(cols: &[Vec<f64>], n: usize) -> Vec<f64> {
+        let b = cols.len();
+        let mut block = vec![0.0; n * b];
+        for (j, col) in cols.iter().enumerate() {
+            for i in 0..n {
+                block[i * b + j] = col[i];
+            }
+        }
+        block
+    }
+
+    #[test]
+    fn f64_ell_matvec_bit_identical_to_csr() {
+        // Property: for random CSRs — including empty rows, non-square
+        // shapes, and widths small enough that rows spill — the f64 ELL
+        // matvec is BITWISE the CSR matvec, serial and parallel.
+        proptest(48, |rng| {
+            let n = 1 + rng.below(50);
+            let m = 1 + rng.below(50);
+            let a = random_csr(rng, n, m, 4 * n.max(m));
+            let max_w = a.max_row_nnz();
+            // Widths: 0 (all-spill), sub-max (some rows spill), exact,
+            // and over-padded.
+            for width in [0, max_w / 2, max_w, max_w + 3] {
+                let ell = a.to_ell(width, false);
+                let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+                let y_csr = a.matvec(&x);
+                let y_ell = ell.matvec(&x);
+                prop_assert!(
+                    y_csr == y_ell,
+                    "width {width}: f64 ELL matvec differs from CSR"
+                );
+                let y_par = ell.matvec_par(&x, 4);
+                prop_assert!(y_ell == y_par, "width {width}: parallel differs");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f64_ell_matmat_bit_identical_to_csr() {
+        proptest(32, |rng| {
+            let n = 1 + rng.below(40);
+            let m = 1 + rng.below(40);
+            let b = 1 + rng.below(7);
+            let a = random_csr(rng, n, m, 3 * n.max(m));
+            let cols: Vec<Vec<f64>> = (0..b)
+                .map(|_| (0..m).map(|_| rng.normal()).collect())
+                .collect();
+            let block = pack(&cols, m);
+            let y_csr = a.matmat(&block, b);
+            for width in [a.max_row_nnz() / 2, a.max_row_nnz() + 1] {
+                let ell = a.to_ell(width, false);
+                let y_ell = ell.matmat(&block, b);
+                prop_assert!(
+                    y_csr == y_ell,
+                    "width {width}: f64 ELL SpMM differs from CSR"
+                );
+                let y_par = ell.matmat_par(&block, b, 4);
+                prop_assert!(y_ell == y_par, "width {width}: parallel SpMM differs");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f32_ell_within_relative_error_of_f64() {
+        // Property: the f32 value path agrees with f64 to the f32
+        // rounding bound, per row: the only error source is the one
+        // rounding of each value (accumulators are f64), so
+        // |y32 - y64| <= ~eps32 * sum_k |v_k x_k| with slack.
+        proptest(32, |rng| {
+            let n = 1 + rng.below(40);
+            let m = 1 + rng.below(40);
+            let a = random_csr(rng, n, m, 4 * n.max(m));
+            let width = a.max_row_nnz() / 2;
+            let ell64 = a.to_ell(width, false);
+            let mut ell32 = a.to_ell(width, true);
+            prop_assert!(ell32.uses_f32(), "to_ell must honor use_f32");
+            let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let y64 = ell64.matvec(&x);
+            let y32 = ell32.matvec(&x);
+            let dense = a.to_dense();
+            for i in 0..n {
+                let row_mass: f64 =
+                    dense[i].iter().zip(&x).map(|(v, xi)| (v * xi).abs()).sum();
+                let bound = 1e-6 * row_mass + 1e-12;
+                prop_assert!(
+                    (y32[i] - y64[i]).abs() <= bound,
+                    "row {i}: |{} - {}| > {bound}",
+                    y32[i],
+                    y64[i]
+                );
+            }
+            // Same bound for the blocked kernel (single-column block).
+            let yb32 = ell32.matmat(&x, 1);
+            prop_assert!(yb32 == y32, "f32 SpMM column differs from f32 SpMV");
+            // Toggling back to f64 recovers bitwise CSR parity.
+            ell32.set_use_f32(false);
+            prop_assert!(ell32.matvec(&x) == a.matvec(&x), "f64 toggle");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spill_split_is_lossless_and_ordered() {
+        proptest(32, |rng| {
+            let n = 1 + rng.below(30);
+            let m = 1 + rng.below(30);
+            let a = random_csr(rng, n, m, 5 * n);
+            let width = a.max_row_nnz() / 3;
+            let ell = a.to_ell(width, false);
+            prop_assert!(
+                ell.nnz() == a.nnz(),
+                "nnz mismatch: {} vs {}",
+                ell.nnz(),
+                a.nnz()
+            );
+            // Every row: ELL head entries + spill tail == the CSR row.
+            for r in 0..n {
+                let (rc, rv) = a.row(r);
+                let head = rc.len().min(ell.width);
+                for k in 0..head {
+                    prop_assert!(
+                        ell.cols[r * ell.width + k] == rc[k]
+                            && ell.vals[r * ell.width + k] == rv[k],
+                        "row {r} slot {k} corrupted"
+                    );
+                }
+                let (sc, sv) = ell.spill.row(r);
+                prop_assert!(
+                    sc == &rc[head..] && sv == &rv[head..],
+                    "row {r} spill tail corrupted"
+                );
+            }
+            // max-width conversion leaves the spill empty.
+            prop_assert!(
+                a.to_ell(a.max_row_nnz(), false).spill_nnz() == 0,
+                "full-width conversion must not spill"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn auto_policy_accepts_regular_rejects_irregular() {
+        // Near-uniform rows (the GRF feature shape): accepted.
+        let mut rng = Rng::new(3);
+        let mut b = CooBuilder::new(200, 200);
+        for i in 0..200u32 {
+            for k in 0..4 {
+                b.push(i, (i + k) % 200, rng.normal());
+            }
+        }
+        let regular = b.build();
+        let ell = regular.to_ell_auto(false).expect("regular matrix -> ELL");
+        assert!(ell.spill_nnz() as f64 <= ELL_MAX_SPILL_FRAC * regular.nnz() as f64);
+        assert!(
+            regular.row_width_stats().pad_ratio(ell.width) <= ELL_MAX_PAD_RATIO
+        );
+
+        // One dense row over an otherwise almost-empty matrix: the
+        // width collapses to ~mean so nearly everything would spill.
+        let mut b = CooBuilder::new(400, 400);
+        for j in 0..400u32 {
+            b.push(0, j, 1.0);
+        }
+        b.push(5, 5, 1.0);
+        let skewed = b.build();
+        assert!(
+            skewed.to_ell_auto(false).is_none(),
+            "spill-heavy pattern must stay CSR"
+        );
+
+        // Empty matrix: no ELL.
+        assert!(Csr::zeros(10, 10).to_ell_auto(false).is_none());
+
+        // select_ell honors forcing even where Auto rejects.
+        assert!(skewed.select_ell(FeatureLayout::Auto).is_none());
+        let forced = skewed.select_ell(FeatureLayout::EllF32).unwrap();
+        assert!(forced.uses_f32());
+        assert!(skewed.select_ell(FeatureLayout::Csr).is_none());
+    }
+
+    #[test]
+    fn row_width_stats_match_pattern() {
+        let mut b = CooBuilder::new(4, 8);
+        b.push(0, 1, 1.0);
+        b.push(0, 2, 1.0);
+        b.push(0, 3, 1.0);
+        b.push(2, 0, 1.0);
+        let a = b.build();
+        let st = a.row_width_stats();
+        assert_eq!(st.n_rows, 4);
+        assert_eq!(st.nnz, 4);
+        assert_eq!(st.max, 3);
+        assert!((st.mean - 1.0).abs() < 1e-12);
+        assert!((st.pad_ratio(3) - 3.0).abs() < 1e-12);
+        // Empty matrix edge.
+        let st0 = Csr::zeros(0, 5).row_width_stats();
+        assert_eq!(st0.max, 0);
+        assert_eq!(st0.mean, 0.0);
+        assert_eq!(st0.pad_ratio(7), 1.0);
+    }
+
+    #[test]
+    fn empty_and_zero_width_edges() {
+        // Empty matrix: width forced to 0, matvec is the zero map.
+        let z = Csr::zeros(3, 4);
+        let ell = z.to_ell(5, false);
+        assert_eq!(ell.width, 0);
+        assert_eq!(ell.matvec(&[1.0, 2.0, 3.0, 4.0]), vec![0.0; 3]);
+        // Non-square with empty rows round-trips through matmat.
+        let mut b = CooBuilder::new(3, 2);
+        b.push(1, 0, 2.0);
+        let a = b.build();
+        let ell = a.to_ell(1, true);
+        let y = ell.matmat(&[1.0, 10.0, 2.0, 20.0], 2);
+        assert_eq!(y, vec![0.0, 0.0, 2.0, 20.0, 0.0, 0.0]);
+    }
+}

@@ -1,5 +1,6 @@
-//! Sparse linear-algebra substrate: CSR matrices, COO builders, ELL
-//! conversion (the PJRT interchange layout), and the gram-matvec that
+//! Sparse linear-algebra substrate: CSR matrices, COO builders, native
+//! ELL matrices for the solver hot path (see [`ell`]), the f32/i32 ELL
+//! artifact layout the PJRT runtime consumes, and the gram-matvec that
 //! dominates the GP hot path.
 //!
 //! ## Dense-block (SpMM) kernels
@@ -18,7 +19,10 @@
 //! `B` column vectors over `r` coordinates is stored row-major as
 //! `x[i * B + j]` = coordinate `i` of column `j`.
 
+pub mod ell;
 pub mod ops;
+
+pub use ell::{Ell, FeatureLayout, RowWidthStats};
 
 use crate::util::parallel;
 use crate::util::parallel::SendPtr;
@@ -418,10 +422,13 @@ impl Csr {
         out
     }
 
-    /// Convert to ELL (fixed row width) with f32/i32 payloads — the
-    /// layout the PJRT artifacts consume. Pads with (idx 0, val 0).
-    /// Returns None if any row exceeds `width`.
-    pub fn to_ell(&self, width: usize) -> Option<Ell> {
+    /// Convert to the ELL **artifact** layout (fixed row width,
+    /// f32/i32 payloads) — what the PJRT artifacts consume. Pads with
+    /// (idx 0, val 0). Returns None if any row exceeds `width`.
+    ///
+    /// For the native solver-side ELL (f64/f32 values, f64
+    /// accumulators, spill remainder) see [`Csr::to_ell`] in [`ell`].
+    pub fn to_ell_artifact(&self, width: usize) -> Option<EllArtifact> {
         if self.max_row_nnz() > width {
             return None;
         }
@@ -435,14 +442,15 @@ impl Csr {
                 val[r * width + k] = *v as f32;
             }
         }
-        Some(Ell { n_rows: n, n_cols: self.n_cols, width, idx, val })
+        Some(EllArtifact { n_rows: n, n_cols: self.n_cols, width, idx, val })
     }
 }
 
 /// ELL (padded fixed-width) sparse matrix with f32/i32 payloads —
 /// the interchange layout for the PJRT artifacts (see python/compile).
+/// The native solver-side ELL type is [`ell::Ell`].
 #[derive(Clone, Debug)]
-pub struct Ell {
+pub struct EllArtifact {
     pub n_rows: usize,
     pub n_cols: usize,
     pub width: usize,
@@ -452,9 +460,9 @@ pub struct Ell {
     pub val: Vec<f32>,
 }
 
-impl Ell {
+impl EllArtifact {
     /// Pad to a larger (rows, width) bucket, preserving content.
-    pub fn pad_to(&self, rows: usize, width: usize) -> Ell {
+    pub fn pad_to(&self, rows: usize, width: usize) -> EllArtifact {
         assert!(rows >= self.n_rows && width >= self.width);
         let mut idx = vec![0i32; rows * width];
         let mut val = vec![0f32; rows * width];
@@ -466,7 +474,7 @@ impl Ell {
             val[dst..dst + self.width]
                 .copy_from_slice(&self.val[src..src + self.width]);
         }
-        Ell { n_rows: rows, n_cols: self.n_cols.max(rows), width, idx, val }
+        EllArtifact { n_rows: rows, n_cols: self.n_cols.max(rows), width, idx, val }
     }
 
     /// Reference matvec (f32 accumulation matches the artifact numerics).
@@ -644,11 +652,11 @@ mod tests {
     }
 
     #[test]
-    fn ell_roundtrip() {
+    fn ell_artifact_roundtrip() {
         let mut rng = Rng::new(3);
         let a = random_csr(&mut rng, 10, 10, 25);
         let w = a.max_row_nnz();
-        let e = a.to_ell(w).unwrap();
+        let e = a.to_ell_artifact(w).unwrap();
         let x: Vec<f32> = (0..10).map(|_| rng.normal() as f32).collect();
         let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
         let y32 = e.matvec_f32(&x);
@@ -656,14 +664,14 @@ mod tests {
         for i in 0..10 {
             assert!((y32[i] as f64 - y64[i]).abs() < 1e-4);
         }
-        assert!(a.to_ell(w.saturating_sub(1)).is_none() || w == 0);
+        assert!(a.to_ell_artifact(w.saturating_sub(1)).is_none() || w == 0);
     }
 
     #[test]
-    fn ell_pad_preserves_product() {
+    fn ell_artifact_pad_preserves_product() {
         let mut rng = Rng::new(5);
         let a = random_csr(&mut rng, 8, 8, 20);
-        let e = a.to_ell(a.max_row_nnz()).unwrap();
+        let e = a.to_ell_artifact(a.max_row_nnz()).unwrap();
         let p = e.pad_to(16, e.width + 3);
         let mut x: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
         x.resize(16, 0.0);

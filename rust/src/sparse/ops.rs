@@ -10,8 +10,16 @@
 //! instead of `2B` SpMVs, and [`GramOperator::jacobi_diag`] extracts
 //! `diag(A)` in `O(nnz(Φ))` from masked row norms for Jacobi
 //! preconditioning of the block-CG.
+//!
+//! The SpMV/SpMM operands are selected per matrix by a
+//! [`FeatureLayout`] policy (default [`FeatureLayout::Auto`]): when
+//! Φ's row widths are regular enough, the applications run through the
+//! native ELL layout — bit-identical in f64, and with optionally
+//! f32-stored values ([`FeatureLayout::EllF32`]) that halve the value
+//! traffic of the bandwidth-bound kernels.
 
-use super::Csr;
+use super::ell::{spmm_dispatch, spmv_dispatch};
+use super::{Csr, Ell, FeatureLayout};
 use crate::util::parallel;
 
 /// Reusable operator around Φ (and its precomputed transpose).
@@ -24,6 +32,15 @@ pub struct GramOperator {
     pub mask: Option<Vec<f64>>,
     /// Worker threads for the two SpMVs (1 = serial).
     pub threads: usize,
+    // Layout policy + the ELL operands it selected (None = CSR).
+    // Built lazily on first application (so a `with_layout` right
+    // after `new` never pays for a discarded selection); `phi`/`phi_t`
+    // stay the source of truth for everything that needs exact f64
+    // entries.
+    layout: FeatureLayout,
+    ops_ready: bool,
+    phi_ell: Option<Ell>,
+    phi_t_ell: Option<Ell>,
     // Scratch buffers so repeated applies don't allocate.
     buf_mid: Vec<f64>,
     buf_in: Vec<f64>,
@@ -45,6 +62,10 @@ impl GramOperator {
             sigma2,
             mask: None,
             threads: 1,
+            layout: FeatureLayout::Auto,
+            ops_ready: false,
+            phi_ell: None,
+            phi_t_ell: None,
             buf_mid: vec![0.0; mid],
             buf_in: vec![0.0; n],
             blk_mid: Vec::new(),
@@ -63,6 +84,45 @@ impl GramOperator {
         self
     }
 
+    /// Re-select the SpMV/SpMM operands under `layout` (per matrix:
+    /// Φ and Φᵀ decide independently under [`FeatureLayout::Auto`]).
+    /// Like construction, the selection itself runs lazily at the next
+    /// application.
+    pub fn with_layout(mut self, layout: FeatureLayout) -> Self {
+        if layout != self.layout {
+            self.layout = layout;
+            self.ops_ready = false;
+            self.phi_ell = None;
+            self.phi_t_ell = None;
+        }
+        self
+    }
+
+    pub fn layout(&self) -> FeatureLayout {
+        self.layout
+    }
+
+    /// Build the ELL operands for the current layout if not done yet.
+    fn ensure_ops(&mut self) {
+        if !self.ops_ready {
+            self.phi_ell = self.phi.select_ell(self.layout);
+            self.phi_t_ell = self.phi_t.select_ell(self.layout);
+            self.ops_ready = true;
+        }
+    }
+
+    /// Human-readable operand selection, e.g. `"ell(w=6)/csr"` for
+    /// (Φ, Φᵀ) — surfaced by benches and diagnostics.
+    pub fn layout_desc(&mut self) -> String {
+        self.ensure_ops();
+        let one = |e: &Option<Ell>| match e {
+            Some(e) if e.uses_f32() => format!("ell_f32(w={})", e.width),
+            Some(e) => format!("ell(w={})", e.width),
+            None => "csr".to_string(),
+        };
+        format!("{}/{}", one(&self.phi_ell), one(&self.phi_t_ell))
+    }
+
     pub fn n(&self) -> usize {
         self.phi.n_rows
     }
@@ -77,6 +137,8 @@ impl GramOperator {
         let n = self.n();
         debug_assert_eq!(x.len(), n);
         debug_assert_eq!(y.len(), n);
+        self.ensure_ops();
+        let par = self.threads > 1 && n > 4096;
         let masked_x: &[f64] = match &self.mask {
             Some(m) => {
                 for i in 0..n {
@@ -86,42 +148,33 @@ impl GramOperator {
             }
             None => x,
         };
-        if self.threads > 1 && n > 4096 {
-            // Same scratch discipline as the serial branch: no
-            // allocation per application.
-            self.phi_t
-                .matvec_par_into(masked_x, &mut self.buf_mid, self.threads);
-            let buf_mid = std::mem::take(&mut self.buf_mid);
-            self.phi.matvec_par_into(&buf_mid, y, self.threads);
-            self.buf_mid = buf_mid;
-            match &self.mask {
-                Some(m) => {
-                    for i in 0..n {
-                        y[i] = m[i] * y[i] + self.sigma2 * x[i];
-                    }
-                }
-                None => {
-                    for i in 0..n {
-                        y[i] += self.sigma2 * x[i];
-                    }
+        // Same scratch discipline on every operand/thread combination:
+        // no allocation per application.
+        spmv_dispatch(
+            &self.phi_t,
+            self.phi_t_ell.as_ref(),
+            masked_x,
+            &mut self.buf_mid,
+            self.threads,
+            par,
+        );
+        spmv_dispatch(
+            &self.phi,
+            self.phi_ell.as_ref(),
+            &self.buf_mid,
+            y,
+            self.threads,
+            par,
+        );
+        match &self.mask {
+            Some(m) => {
+                for i in 0..n {
+                    y[i] = m[i] * y[i] + self.sigma2 * x[i];
                 }
             }
-        } else {
-            self.phi_t.matvec_into(masked_x, &mut self.buf_mid);
-            // Write Φ·mid into y, then add mask and noise terms.
-            let buf_mid = std::mem::take(&mut self.buf_mid);
-            self.phi.matvec_into(&buf_mid, y);
-            self.buf_mid = buf_mid;
-            match &self.mask {
-                Some(m) => {
-                    for i in 0..n {
-                        y[i] = m[i] * y[i] + self.sigma2 * x[i];
-                    }
-                }
-                None => {
-                    for i in 0..n {
-                        y[i] += self.sigma2 * x[i];
-                    }
+            None => {
+                for i in 0..n {
+                    y[i] += self.sigma2 * x[i];
                 }
             }
         }
@@ -145,6 +198,7 @@ impl GramOperator {
         let k = self.phi.n_cols;
         debug_assert_eq!(x.len(), n * ncols);
         debug_assert_eq!(y.len(), n * ncols);
+        self.ensure_ops();
         self.blk_mid.resize(k * ncols, 0.0);
         let masked_x: &[f64] = match &self.mask {
             Some(m) => {
@@ -160,15 +214,25 @@ impl GramOperator {
             }
             None => x,
         };
-        if self.threads > 1 && n > 4096 {
-            self.phi_t
-                .matmat_par_into(masked_x, ncols, &mut self.blk_mid, self.threads);
-            self.phi
-                .matmat_par_into(&self.blk_mid, ncols, y, self.threads);
-        } else {
-            self.phi_t.matmat_into(masked_x, ncols, &mut self.blk_mid);
-            self.phi.matmat_into(&self.blk_mid, ncols, y);
-        }
+        let par = self.threads > 1 && n > 4096;
+        spmm_dispatch(
+            &self.phi_t,
+            self.phi_t_ell.as_ref(),
+            masked_x,
+            ncols,
+            &mut self.blk_mid,
+            self.threads,
+            par,
+        );
+        spmm_dispatch(
+            &self.phi,
+            self.phi_ell.as_ref(),
+            &self.blk_mid,
+            ncols,
+            y,
+            self.threads,
+            par,
+        );
         match &self.mask {
             Some(m) => {
                 for i in 0..n {
@@ -469,6 +533,7 @@ mod tests {
                 &block,
                 ncols,
                 None,
+                None,
                 tol,
                 4000,
             )
@@ -477,6 +542,7 @@ mod tests {
             |x, y| op.apply_block_into(x, ncols, y),
             &block,
             ncols,
+            None,
             Some(&diag),
             tol,
             4000,
@@ -498,6 +564,77 @@ mod tests {
             max_rel = max_rel.max((x_plain[i] - x_pre[i]).abs() / denom);
         }
         assert!(max_rel < 1e-4, "solutions diverge: {max_rel}");
+    }
+
+    #[test]
+    fn layout_selection_preserves_apply_bitwise_in_f64() {
+        // Forced CSR, forced ELL(f64), and Auto must agree BITWISE on
+        // both the single-vector and the blocked application: the ELL
+        // kernels replay the CSR per-row accumulation order.
+        proptest(12, |rng| {
+            let n = 2 + rng.below(30);
+            let ncols = 1 + rng.below(5);
+            let phi = random_phi(rng, n);
+            let mask: Vec<f64> =
+                (0..n).map(|_| if rng.bernoulli(0.6) { 1.0 } else { 0.0 }).collect();
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let block: Vec<f64> = (0..n * ncols).map(|_| rng.normal()).collect();
+            let mut ops: Vec<GramOperator> = [
+                FeatureLayout::Csr,
+                FeatureLayout::Ell,
+                FeatureLayout::Auto,
+            ]
+            .into_iter()
+            .map(|l| {
+                GramOperator::new(phi.clone(), 0.3)
+                    .with_mask(mask.clone())
+                    .with_layout(l)
+            })
+            .collect();
+            let y_ref = ops[0].apply(&x);
+            let yb_ref = ops[0].apply_block(&block, ncols);
+            for op in &mut ops[1..] {
+                prop_assert!(
+                    op.apply(&x) == y_ref,
+                    "layout {:?} ({}) apply differs",
+                    op.layout(),
+                    op.layout_desc()
+                );
+                prop_assert!(
+                    op.apply_block(&block, ncols) == yb_ref,
+                    "layout {:?} apply_block differs",
+                    op.layout()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ell_f32_gram_within_rounding_tolerance() {
+        // The f32 value path perturbs Φ's entries by ≤ ~6e-8 relative;
+        // the gram product must stay within that rounding envelope of
+        // the f64 operator (MC estimation error in Φ is ~1e-2, so this
+        // is statistically free).
+        let mut rng = Rng::new(31);
+        let n = 60;
+        let phi = random_phi(&mut rng, n);
+        let mut op64 = GramOperator::new(phi.clone(), 0.1);
+        let mut op32 =
+            GramOperator::new(phi, 0.1).with_layout(FeatureLayout::EllF32);
+        assert!(op32.layout_desc().contains("ell_f32"));
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y64 = op64.apply(&x);
+        let y32 = op32.apply(&x);
+        let scale = y64.iter().fold(0.0f64, |a, v| a.max(v.abs()));
+        for i in 0..n {
+            assert!(
+                (y32[i] - y64[i]).abs() <= 1e-5 * (scale + 1.0),
+                "node {i}: {} vs {}",
+                y32[i],
+                y64[i]
+            );
+        }
     }
 
     #[test]

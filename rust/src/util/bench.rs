@@ -2,7 +2,11 @@
 //!
 //! Provides warmup + repeated timing with mean/σ/min, throughput
 //! annotation, and a stable one-line-per-benchmark output format that
-//! the EXPERIMENTS.md tables are generated from.
+//! the EXPERIMENTS.md tables are generated from. The machine-readable
+//! side ([`BenchRow`] / [`rows_to_json`]) is the schema behind
+//! `BENCH_hotpath.json`, which tracks the perf trajectory of the
+//! blocked/ELL solver paths across PRs — its shape is pinned by a
+//! tier-1 test here so downstream tooling can rely on it.
 
 use std::time::Instant;
 
@@ -77,6 +81,58 @@ pub fn bench_auto<T>(name: &str, budget_s: f64, mut f: impl FnMut() -> T) -> Ben
     bench(name, 1, reps, f)
 }
 
+/// One machine-readable benchmark record: `name` identifies the
+/// kernel/path, `n` the problem size, `b` the block width (1 for
+/// single-RHS), `ns_per_op` the mean wall time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRow {
+    pub name: String,
+    pub n: usize,
+    pub b: usize,
+    pub ns_per_op: f64,
+}
+
+impl BenchRow {
+    pub fn new(name: &str, n: usize, b: usize, mean_s: f64) -> BenchRow {
+        BenchRow {
+            name: name.to_string(),
+            n,
+            b,
+            ns_per_op: mean_s * 1e9,
+        }
+    }
+}
+
+/// Serialize bench rows as the stable `BENCH_*.json` schema: a JSON
+/// array of objects with exactly the keys `name` (string), `n`, `b`
+/// (integers), and `ns_per_op` (number, one decimal). The emission is
+/// deterministic (fixed key order, fixed float formatting) so results
+/// files diff cleanly between runs; `util::json::Json::parse` accepts
+/// the output (pinned by `bench_json_schema_stable`).
+pub fn rows_to_json(rows: &[BenchRow]) -> String {
+    let mut json = String::from("[\n");
+    for (i, row) in rows.iter().enumerate() {
+        // Names are escaped through the shared serializer so a future
+        // bench label with special characters cannot corrupt the file.
+        let name = crate::util::json::Json::Str(row.name.clone()).to_string();
+        json.push_str(&format!(
+            "  {{\"name\": {}, \"n\": {}, \"b\": {}, \"ns_per_op\": {:.1}}}{}\n",
+            name,
+            row.n,
+            row.b,
+            row.ns_per_op,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("]\n");
+    json
+}
+
+/// Write `rows` to `path` in the `BENCH_*.json` schema.
+pub fn write_rows_json(path: &str, rows: &[BenchRow]) -> std::io::Result<()> {
+    std::fs::write(path, rows_to_json(rows))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +150,39 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with(" ms"));
         assert!(fmt_time(2e-6).ends_with(" us"));
         assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn bench_json_schema_stable() {
+        // The emitter must produce valid JSON with the pinned schema:
+        // array of objects with exactly {name, n, b, ns_per_op}, typed
+        // string/int/int/number — the contract `BENCH_hotpath.json`
+        // consumers (cross-PR perf tracking) rely on.
+        use crate::util::json::Json;
+        let rows = vec![
+            BenchRow::new("csr_spmm", 16_384, 8, 1.25e-3),
+            BenchRow::new("ell_spmm_f32", 131_072, 16, 9.87e-4),
+            BenchRow::new("weird \"name\"\n", 1, 1, 0.0),
+        ];
+        let text = rows_to_json(&rows);
+        let parsed = Json::parse(&text).expect("emitter must produce valid JSON");
+        let arr = parsed.as_arr().expect("top level must be an array");
+        assert_eq!(arr.len(), rows.len());
+        for (row, obj) in rows.iter().zip(arr) {
+            let Json::Obj(m) = obj else { panic!("entries must be objects") };
+            let keys: Vec<&str> = m.keys().map(|k| k.as_str()).collect();
+            let mut expect = vec!["name", "n", "b", "ns_per_op"];
+            expect.sort_unstable();
+            assert_eq!(keys, expect, "schema keys drifted");
+            assert_eq!(obj.get("name").unwrap().as_str(), Some(row.name.as_str()));
+            assert_eq!(obj.get("n").unwrap().as_usize(), Some(row.n));
+            assert_eq!(obj.get("b").unwrap().as_usize(), Some(row.b));
+            let ns = obj.get("ns_per_op").unwrap().as_f64().unwrap();
+            assert!((ns - row.ns_per_op).abs() <= 0.05 + 1e-9 * row.ns_per_op.abs());
+        }
+        // Determinism: same rows, same bytes.
+        assert_eq!(text, rows_to_json(&rows));
+        // Empty input is still a valid (empty) array.
+        assert_eq!(Json::parse(&rows_to_json(&[])).unwrap(), Json::Arr(vec![]));
     }
 }

@@ -5,7 +5,7 @@
 //! precomputed once ([`CombinedFeatures`]); each recombination is then
 //! a single fused scatter pass with no allocation or sorting.
 
-use crate::sparse::{CooBuilder, Csr};
+use crate::sparse::{CooBuilder, Csr, RowWidthStats};
 
 /// The output of the walk engine: `c[l][i][j]` estimates `(W^l)[i][j]`.
 #[derive(Clone, Debug)]
@@ -36,6 +36,14 @@ impl WalkComponents {
     /// Total stored nonzeros across all lengths.
     pub fn nnz(&self) -> usize {
         self.c.iter().map(|m| m.nnz()).sum()
+    }
+
+    /// Row-width distribution of each per-length component matrix —
+    /// the feature-build diagnostic behind the ELL layout decision
+    /// (Theorem 1 bounds these widths w.h.p., which is exactly why the
+    /// fixed-width layout pays off).
+    pub fn row_width_stats(&self) -> Vec<RowWidthStats> {
+        self.c.iter().map(|m| m.row_width_stats()).collect()
     }
 
     pub fn memory_bytes(&self) -> usize {
@@ -130,6 +138,13 @@ impl CombinedFeatures {
     pub fn current(&self) -> Csr {
         self.pattern.clone()
     }
+
+    /// Row-width distribution of Φ's union pattern (invariant under
+    /// recombination — the pattern is shared by every Φ(f)). This is
+    /// what `GpModel`'s ELL auto-layout policy effectively decides on.
+    pub fn row_width_stats(&self) -> RowWidthStats {
+        self.pattern.row_width_stats()
+    }
 }
 
 #[cfg(test)]
@@ -184,6 +199,28 @@ mod tests {
         let mut prepared = comps.prepare();
         let phi = prepared.combine_into(&[0.0, 0.0, 0.0]);
         assert!(phi.vals.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn row_width_stats_cover_union_pattern() {
+        let mut rng = Rng::new(7);
+        let comps = random_components(&mut rng, 30, 3);
+        let per_len = comps.row_width_stats();
+        assert_eq!(per_len.len(), 3);
+        for (l, st) in per_len.iter().enumerate() {
+            assert_eq!(st.n_rows, 30, "length {l}");
+            assert_eq!(st.nnz, comps.c[l].nnz(), "length {l}");
+            assert!(st.max >= 1 && st.mean > 0.0, "length {l}");
+        }
+        let prepared = comps.prepare();
+        let union = prepared.row_width_stats();
+        // The union pattern is at least as wide as any component and
+        // no wider than their sum.
+        let max_component = per_len.iter().map(|s| s.max).max().unwrap();
+        let sum_nnz: usize = per_len.iter().map(|s| s.nnz).sum();
+        assert!(union.max >= max_component);
+        assert!(union.nnz <= sum_nnz);
+        assert_eq!(union.n_rows, 30);
     }
 
     #[test]

@@ -33,7 +33,7 @@ fn runtime() -> Option<Runtime> {
 }
 
 /// Build a small GRF model + its ELL representation.
-fn setup(seed: u64) -> (GpModel, grfgp::sparse::Ell, grfgp::sparse::Ell) {
+fn setup(seed: u64) -> (GpModel, grfgp::sparse::EllArtifact, grfgp::sparse::EllArtifact) {
     let g = generators::grid2d(10, 10);
     let cfg = WalkConfig { n_walks: 24, max_len: 3, threads: 1, ..Default::default() };
     let comps = sample_components(&g, &cfg, seed);
@@ -46,8 +46,8 @@ fn setup(seed: u64) -> (GpModel, grfgp::sparse::Ell, grfgp::sparse::Ell) {
     let width = phi.max_row_nnz();
     let phi_t = phi.transpose();
     let width_t = phi_t.max_row_nnz();
-    let ell = phi.to_ell(width).unwrap();
-    let ell_t = phi_t.to_ell(width_t).unwrap();
+    let ell = phi.to_ell_artifact(width).unwrap();
+    let ell_t = phi_t.to_ell_artifact(width_t).unwrap();
     (model, ell, ell_t)
 }
 
