@@ -18,11 +18,26 @@
 //! `csr_spmm`/`csr_spmm_par`, and `lml_grad`/`predict` (which ran the
 //! then-only CSR operator) continue as `lml_grad_csr`/`predict_csr`;
 //! splice those series when reading the trajectory across PRs.
+//!
+//! PR 3 additions (streaming + end-task rows):
+//! * `stream_full_rebuild` vs `stream_delta` — full walk resample +
+//!   feature build against one single-edge incremental update
+//!   (`StreamingFeatures::apply_delta`); `stream_delta_model` is the
+//!   model-level path (`GpModel::apply_graph_delta`: feature patch +
+//!   operator refresh + warm re-solve).
+//! * `stream_delta_solve_{warm,cold}_iters` — post-delta block-CG
+//!   iteration counts; these rows carry the **count in the `b`
+//!   column** (ns_per_op 0).
+//! * `metric_*` rows — dimensionless end-task values in `ns_per_op`
+//!   (EllF32 LML-gradient deviation, final BO regret per layout), the
+//!   data behind the ROADMAP "f32-by-default" decision.
 
+use grfgp::bo::{run_policy, BoConfig, ThompsonPolicy};
 use grfgp::gp::{GpModel, Hypers, Modulation};
 use grfgp::graph::generators;
 use grfgp::sparse::ops::GramOperator;
 use grfgp::sparse::FeatureLayout;
+use grfgp::stream::{GraphDelta, StreamingFeatures};
 use grfgp::util::bench::{bench, write_rows_json, BenchRow};
 use grfgp::util::parallel::num_threads;
 use grfgp::util::rng::Rng;
@@ -244,6 +259,158 @@ fn main() {
             acc
         });
         rows.push(BenchRow::new("predict_serial", n, n_samples, r.mean_s));
+
+        // --- Streaming graph deltas: incremental vs full rebuild ------
+        // apply_delta is bit-identical to the full rebuild (property-
+        // tested in `stream`); here we measure the wall-clock gap of a
+        // single-edge update, which the visit index turns from
+        // O(N·n_walks) walk work into O(visits at the endpoints).
+        let fmod = vec![1.0, 0.5, 0.25, 0.12];
+        let mut stream = StreamingFeatures::new(g.clone(), cfg.clone(), fmod.clone(), 11);
+        let r = bench(&format!("stream_full_rebuild/n={n}"), 1, 3, || {
+            StreamingFeatures::new(g.clone(), cfg.clone(), fmod.clone(), 11).n()
+        });
+        rows.push(BenchRow::new("stream_full_rebuild", n, 1, r.mean_s));
+        let mut flip = 0usize;
+        let r = bench(&format!("stream_delta/n={n}"), 2, 20, || {
+            // Alternate add/remove of one chord: every rep is a
+            // single-edge delta against the current graph.
+            let (u, v) = (17usize, n / 2 + 17);
+            let d = if flip % 2 == 0 {
+                GraphDelta::AddEdge { u, v, w: 0.5 }
+            } else {
+                GraphDelta::RemoveEdge { u, v }
+            };
+            flip += 1;
+            stream.apply_delta(&d).unwrap().resampled.len()
+        });
+        rows.push(BenchRow::new("stream_delta", n, 1, r.mean_s));
+
+        // Model-level delta: feature-row patch + operator refresh +
+        // warm-started post-delta solve, against a cold re-solve of the
+        // same refreshed system.
+        let mut model_s = GpModel::new(
+            stream.components(),
+            Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1),
+            &train,
+            &y,
+        );
+        let rhs_s: Vec<f64> = model_s
+            .mask
+            .iter()
+            .zip(&model_s.y)
+            .map(|(m, v)| m * v)
+            .collect();
+        let (alpha0, _) = model_s.solve_system_block(&rhs_s, 1);
+        let t0 = std::time::Instant::now();
+        let out = model_s
+            .apply_graph_delta(
+                &mut stream,
+                &GraphDelta::AddEdge { u: 3, v: n / 3, w: 0.5 },
+                Some(&alpha0),
+            )
+            .unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "stream_delta_model/n={n}: {:.3} ms ({} walks resampled, {} rows \
+             patched), post-delta solve warm {} iters",
+            1e3 * dt,
+            out.resampled_walks,
+            out.patched_rows,
+            out.solve_stats.iterations
+        );
+        rows.push(BenchRow::new("stream_delta_model", n, 1, dt));
+        let (_, st_cold) = model_s.solve_system_block(&rhs_s, 1);
+        println!(
+            "post-delta block-CG iterations: warm {} vs cold {}",
+            out.solve_stats.iterations, st_cold[0].iterations
+        );
+        rows.push(BenchRow::new(
+            "stream_delta_solve_warm_iters",
+            n,
+            out.solve_stats.iterations,
+            0.0,
+        ));
+        rows.push(BenchRow::new(
+            "stream_delta_solve_cold_iters",
+            n,
+            st_cold[0].iterations,
+            0.0,
+        ));
+
+        // --- End-task f32 metrics (ROADMAP: flip EllF32 by default?) --
+        if n == 16_384 {
+            // Relative L2 deviation of the stochastic LML gradient
+            // under the f32-valued operator (same probe stream).
+            model.solve.layout = FeatureLayout::Auto;
+            let mut gr = Rng::new(3);
+            let (g64, _) = model.lml_grad(&mut gr);
+            model.solve.layout = FeatureLayout::EllF32;
+            let mut gr = Rng::new(3);
+            let (g32, _) = model.lml_grad(&mut gr);
+            model.solve.layout = FeatureLayout::Auto;
+            let num = g64
+                .iter()
+                .zip(&g32)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            let den = g64.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+            let dev = num / den;
+            println!("metric_lml_grad_reldev_f32: {dev:.3e}");
+            rows.push(BenchRow {
+                name: "metric_lml_grad_reldev_f32".into(),
+                n,
+                b: 9,
+                ns_per_op: dev,
+            });
+
+            // Short-horizon BO regret per layout: does the f32 operand
+            // move the end-task result at all?
+            let nb = 2048usize;
+            let gb = generators::ring(nb);
+            let h = move |i: usize| {
+                let c = 0.37 * nb as f64;
+                let mut d = (i as f64 - c).abs();
+                d = d.min(nb as f64 - d);
+                let w = 0.05 * nb as f64;
+                (-d * d / (2.0 * w * w)).exp()
+            };
+            let bo_cfg = BoConfig {
+                n_init: 10,
+                n_steps: 25,
+                noise: 0.01,
+                walk: WalkConfig {
+                    n_walks: 64,
+                    max_len: 4,
+                    threads: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let optimum = (0..nb).map(h).fold(f64::MIN, f64::max);
+            for (tag, layout) in [
+                ("f64", FeatureLayout::Auto),
+                ("ell_f32", FeatureLayout::EllF32),
+            ] {
+                let mut regret = 0.0;
+                let seeds = 2u64;
+                for seed in 0..seeds {
+                    let mut brng = Rng::new(seed);
+                    let mut p = ThompsonPolicy::new(&gb, &bo_cfg, &mut brng);
+                    p.model_mut().solve.layout = layout;
+                    let run = run_policy(&mut p, &h, optimum, nb, &bo_cfg, &mut brng);
+                    regret += run.regret.last().unwrap() / seeds as f64;
+                }
+                println!("metric_bo_regret_{tag}: {regret:.4}");
+                rows.push(BenchRow {
+                    name: format!("metric_bo_regret_{tag}"),
+                    n: nb,
+                    b: 1,
+                    ns_per_op: regret,
+                });
+            }
+        }
     }
 
     // Machine-readable record for cross-PR perf tracking.

@@ -1,13 +1,15 @@
 //! End-to-end server demo: starts the GP inference server on a ring
 //! graph, then drives it as a client — observations, batched predicts,
-//! Thompson steps — and reports latency/throughput.
+//! live graph mutations, Thompson steps — and reports
+//! latency/throughput.
 //!
 //!     cargo run --release --example serve_demo -- [n_nodes] [n_requests]
 
-use grfgp::gp::{GpModel, Hypers, Modulation};
+use grfgp::gp::{Hypers, Modulation};
 use grfgp::graph::generators;
+use grfgp::stream::StreamingFeatures;
 use grfgp::util::rng::Rng;
-use grfgp::walks::{sample_components, WalkConfig};
+use grfgp::walks::WalkConfig;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
@@ -25,22 +27,17 @@ fn main() {
     let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4096);
     let n_requests: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(50);
 
-    // Build the model.
+    // Build the streaming feature state + hyperparameters.
     let g = generators::ring(n);
     let cfg = WalkConfig { n_walks: 100, p_halt: 0.1, max_len: 5, ..Default::default() };
-    let comps = sample_components(&g, &cfg, 0);
-    let model = GpModel::new(
-        comps,
-        Hypers::new(Modulation::diffusion(1.0, 1.0, 5), 0.1),
-        &[],
-        &[],
-    );
+    let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 5), 0.1);
+    let stream = StreamingFeatures::new(g, cfg, hypers.modulation.coeffs(), 0);
 
     // Serve on an ephemeral port in a background thread.
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
-        grfgp::server::serve_on(model, listener, 0).unwrap();
+        grfgp::server::serve_on(stream, hypers, listener, 0).unwrap();
     });
 
     // Client.
@@ -77,6 +74,24 @@ fn main() {
         "{n_requests} predict requests on N={n}: {:.1} ms/request, {:.1} req/s",
         1e3 * elapsed / n_requests as f64,
         n_requests as f64 / elapsed
+    );
+
+    // Live graph mutations: each add_edge resamples only the walks
+    // that visited its endpoints and warm-starts the re-solve.
+    let t0 = Instant::now();
+    for i in 0..5 {
+        let (u, v) = (i * 11 % n, (i * 11 + n / 2) % n);
+        let resp = request(
+            &mut stream,
+            &mut reader,
+            &format!(r#"{{"op":"add_edge","u":{u},"v":{v},"w":0.5}}"#),
+        );
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+        println!("add_edge({u},{v}) -> {}", resp.trim());
+    }
+    println!(
+        "5 incremental graph deltas on N={n}: {:.1} ms/delta",
+        1e3 * t0.elapsed().as_secs_f64() / 5.0
     );
 
     // A few Thompson steps.

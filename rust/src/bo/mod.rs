@@ -107,6 +107,17 @@ pub struct ThompsonPolicy {
     refit_every: usize,
     refit_steps: usize,
     log_transform: bool,
+    /// Warm-start each draw's data-column solve at the previous step's
+    /// `α_y` (ROADMAP item: carry the posterior solves in policy
+    /// state). One BO step changes a single observation, so the
+    /// systems are nearly identical; the rng stream of the draws is
+    /// untouched — only the CG iteration count drops.
+    pub warm_start: bool,
+    /// Previous step's data-column solve (the warm-start seed).
+    prev_alpha: Option<Vec<f64>>,
+    /// Total block-CG iterations spent in posterior draws so far —
+    /// reported by `exp bo-*` to show the warm-start win.
+    pub cg_iters: usize,
 }
 
 impl ThompsonPolicy {
@@ -126,6 +137,9 @@ impl ThompsonPolicy {
             refit_every: cfg.refit_every,
             refit_steps: cfg.refit_steps,
             log_transform: cfg.log_transform,
+            warm_start: true,
+            prev_alpha: None,
+            cg_iters: 0,
         }
     }
 
@@ -162,7 +176,16 @@ impl Policy for ThompsonPolicy {
                 self.model.fit(self.refit_steps, 0.05, rng);
             }
         }
-        let sample = self.model.posterior_sample(rng);
+        // Pathwise Thompson draw, warm-started at the previous step's
+        // data-column solve (same rng stream as `posterior_sample`).
+        let warm = if self.warm_start {
+            self.prev_alpha.as_deref()
+        } else {
+            None
+        };
+        let (sample, alpha_y, stats) = self.model.thompson_sample_warm(rng, warm);
+        self.prev_alpha = Some(alpha_y);
+        self.cg_iters += stats.iter().map(|s| s.iterations).sum::<usize>();
         // Argmax over unqueried nodes.
         let queried: std::collections::HashSet<usize> =
             nodes.iter().cloned().collect();
@@ -477,6 +500,45 @@ mod tests {
             warm < cold,
             "warm-started re-solve must take strictly fewer iterations: \
              warm {warm} vs cold {cold}"
+        );
+    }
+
+    #[test]
+    fn thompson_policy_warm_start_saves_cg_iterations() {
+        // Two identical policies fed the same growing observation
+        // sequence with identical rng streams — the only difference is
+        // the warm-start flag, so the fluctuation columns cost the
+        // same and the warm data columns must win in total.
+        let n = 300;
+        let g = generators::ring(n);
+        let h = bump_objective(n);
+        let cfg = BoConfig {
+            n_init: 5,
+            n_steps: 0,
+            noise: 0.01,
+            walk: WalkConfig { n_walks: 64, max_len: 4, threads: 1, ..Default::default() },
+            ..Default::default()
+        };
+        let mut rng_w = Rng::new(1);
+        let mut warm_p = ThompsonPolicy::new(&g, &cfg, &mut rng_w);
+        let mut rng_c = Rng::new(1);
+        let mut cold_p = ThompsonPolicy::new(&g, &cfg, &mut rng_c);
+        cold_p.warm_start = false;
+        let nodes: Vec<usize> = (0..30).map(|i| (i * 7) % n).collect();
+        for step in 5..30 {
+            let observed: Vec<(usize, f64)> =
+                nodes[..step].iter().map(|&i| (i, h(i))).collect();
+            let mut ra = Rng::new(100 + step as u64);
+            let mut rb = ra.clone();
+            warm_p.next_query(&observed, &mut ra);
+            cold_p.next_query(&observed, &mut rb);
+        }
+        assert!(
+            warm_p.cg_iters < cold_p.cg_iters,
+            "warm-started policy must spend strictly fewer CG iterations: \
+             warm {} vs cold {}",
+            warm_p.cg_iters,
+            cold_p.cg_iters
         );
     }
 

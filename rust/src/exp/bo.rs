@@ -146,7 +146,19 @@ pub fn run_benchmark(
             let run = match policy_kind {
                 "grf-thompson" => {
                     let mut p = ThompsonPolicy::new(&b.graph, cfg, &mut rng);
-                    run_policy(&mut p, &h, b.optimum, n, cfg, &mut rng)
+                    let run = run_policy(&mut p, &h, b.optimum, n, cfg, &mut rng);
+                    // Warm-start observability (ROADMAP item): the
+                    // policy carries the previous step's posterior
+                    // solve, so this count is strictly lower than a
+                    // cold-start run of the same trajectory.
+                    println!(
+                        "[bo] {} seed {seed}: grf-thompson spent {} block-CG \
+                         iterations across {} draws (warm-started)",
+                        b.name,
+                        p.cg_iters,
+                        run.queries.len() - cfg.n_init.min(n)
+                    );
+                    run
                 }
                 "random" => {
                     let mut p = RandomPolicy::new(n);

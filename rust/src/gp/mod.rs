@@ -9,5 +9,5 @@ pub mod modulation;
 pub mod woodbury;
 
 pub use exact::{ExactGp, ExactKernel};
-pub use model::{GpModel, SolveConfig, TrainStep};
+pub use model::{DeltaOutcome, GpModel, SolveConfig, TrainStep};
 pub use modulation::{Hypers, Modulation};

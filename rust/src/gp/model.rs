@@ -20,6 +20,7 @@ use crate::linalg::cg::{block_cg_solve, pcg_solve, CgStats};
 use crate::linalg::{column_dots, dot};
 use crate::sparse::ell::{spmm_dispatch, spmv_dispatch};
 use crate::sparse::{Csr, Ell, FeatureLayout};
+use crate::stream::{GraphDelta, StreamingFeatures};
 use crate::util::parallel::num_threads;
 use crate::util::rng::Rng;
 use crate::walks::{CombinedFeatures, WalkComponents};
@@ -77,6 +78,22 @@ pub struct TrainStep {
     pub sigma_n2: f64,
 }
 
+/// What [`GpModel::apply_graph_delta`] did: incremental-work counters
+/// plus the refreshed posterior-mean solve for chaining warm starts.
+#[derive(Clone, Debug)]
+pub struct DeltaOutcome {
+    /// Walks actually re-run (the delta endpoints' visit sets).
+    pub resampled_walks: usize,
+    /// Feature rows rebuilt and patched into the model.
+    pub patched_rows: usize,
+    pub added_node: Option<usize>,
+    pub compacted: bool,
+    /// Refreshed α = H⁻¹ (m y) on the mutated graph — feed it back as
+    /// `warm` on the next delta.
+    pub alpha: Vec<f64>,
+    pub solve_stats: CgStats,
+}
+
 /// Sparse GRF Gaussian process.
 pub struct GpModel {
     /// Cached walk components + union pattern for fast recombination.
@@ -87,8 +104,11 @@ pub struct GpModel {
     /// Observations embedded in R^N (zero off-train).
     pub y: Vec<f64>,
     pub solve: SolveConfig,
-    /// Transposes of each C_l (for modulation gradients).
-    c_t: Vec<Csr>,
+    /// Transposes of each C_l (for modulation gradients). None = stale
+    /// (invalidated by a graph delta); lazily rebuilt on the next
+    /// `lml_grad`, so serving-path deltas don't pay for operands only
+    /// hyperparameter fitting reads.
+    c_t: std::cell::RefCell<Option<Vec<Csr>>>,
     /// Current Φ and Φᵀ (refreshed after each hyperparameter change).
     phi: Csr,
     phi_t: Csr,
@@ -151,7 +171,7 @@ impl GpModel {
             mask,
             y,
             solve: SolveConfig::default(),
-            c_t,
+            c_t: std::cell::RefCell::new(Some(c_t)),
             phi,
             phi_t,
             scratch: std::cell::RefCell::new((
@@ -217,6 +237,87 @@ impl GpModel {
             self.y[i] = v;
         }
         *self.jacobi_cache.borrow_mut() = None;
+    }
+
+    /// Apply a graph mutation to a live model: the stream resamples
+    /// only the invalidated walks, then exactly the affected feature
+    /// rows are patched through ([`CombinedFeatures::patch_rows`]), the
+    /// gram operator refreshed (Φ/Φᵀ recombined, modulation-gradient
+    /// operands rebuilt, layout/Jacobi caches invalidated), and the
+    /// posterior-mean system re-solved via
+    /// [`GpModel::solve_system_block_warm`] seeded from the pre-delta
+    /// solution `warm` (zero-padded if the graph grew).
+    ///
+    /// After this returns, the model is **bit-identical** to one built
+    /// from scratch on the mutated graph with the same per-walk seeds
+    /// (same components, same union pattern, same solves) — the
+    /// streaming subsystem's correctness anchor.
+    pub fn apply_graph_delta(
+        &mut self,
+        stream: &mut StreamingFeatures,
+        delta: &GraphDelta,
+        warm: Option<&[f64]>,
+    ) -> Result<DeltaOutcome, String> {
+        if stream.n() != self.n() {
+            return Err(format!(
+                "stream tracks {} nodes, model {} — not the same graph",
+                stream.n(),
+                self.n()
+            ));
+        }
+        let n_len = self.features.components.n_coeffs();
+        if stream.config().max_len + 1 != n_len {
+            return Err(format!(
+                "stream l_max+1 = {} != model modulation length {n_len}",
+                stream.config().max_len + 1
+            ));
+        }
+        let summary = stream.apply_delta(delta)?;
+        let n = stream.n();
+        let mut patches: std::collections::BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>> =
+            Default::default();
+        for &r in &summary.affected_rows {
+            patches.insert(
+                r,
+                (0..n_len)
+                    .map(|l| stream.component_row(l, r as usize))
+                    .collect(),
+            );
+        }
+        self.features.patch_rows(n, &patches);
+        if self.mask.len() < n {
+            // Node insertion: grow the observation embedding and the
+            // operator scratch (new nodes start unobserved).
+            self.mask.resize(n, 0.0);
+            self.y.resize(n, 0.0);
+            let mut guard = self.scratch.borrow_mut();
+            guard.0.resize(n, 0.0);
+            guard.1.resize(n, 0.0);
+            guard.2.resize(n, 0.0);
+        }
+        // The modulation-gradient operands C_lᵀ are only read by
+        // `lml_grad`; invalidate them here and rebuild lazily so the
+        // serving-path delta cost stays independent of fitting.
+        *self.c_t.borrow_mut() = None;
+        self.refresh_features();
+        let rhs: Vec<f64> =
+            self.mask.iter().zip(&self.y).map(|(m, y)| m * y).collect();
+        let x0: Option<Vec<f64>> = warm.map(|w| {
+            let mut v = vec![0.0; n];
+            let k = w.len().min(n);
+            v[..k].copy_from_slice(&w[..k]);
+            v
+        });
+        let (alpha, stats) = self.solve_system_block_warm(&rhs, 1, x0.as_deref());
+        let solve_stats = stats.into_iter().next().expect("one column");
+        Ok(DeltaOutcome {
+            resampled_walks: summary.resampled.len(),
+            patched_rows: summary.affected_rows.len(),
+            added_node: summary.added_node,
+            compacted: summary.compacted,
+            alpha,
+            solve_stats,
+        })
     }
 
     // ------------------------------------------------------------------
@@ -304,6 +405,28 @@ impl GpModel {
         } else {
             self.phi.matvec(&self.phi_t.matvec(x))
         }
+    }
+
+    /// Cached C_lᵀ operands for the modulation gradients: rebuilt on
+    /// first use after a graph delta invalidated them.
+    fn c_t_cached(&self) -> std::cell::Ref<'_, Vec<Csr>> {
+        {
+            let mut cache = self.c_t.borrow_mut();
+            if cache.is_none() {
+                let threads = self.solve.effective_threads();
+                *cache = Some(
+                    self.features
+                        .components
+                        .c
+                        .iter()
+                        .map(|c| c.transpose_par(threads))
+                        .collect(),
+                );
+            }
+        }
+        std::cell::Ref::map(self.c_t.borrow(), |c| {
+            c.as_ref().expect("filled above")
+        })
     }
 
     /// Cached Jacobi diagonal for the solvers: computed on first use
@@ -443,7 +566,8 @@ impl GpModel {
             acc
         };
         let mut grad_f = vec![0.0; n_coeff];
-        for (l, ct) in self.c_t.iter().enumerate() {
+        let c_t = self.c_t_cached();
+        for (l, ct) in c_t.iter().enumerate() {
             let c_v = proj(ct, &solves); // C_lᵀ V
             let c_z = proj(ct, &rhs); // C_lᵀ Z
             let d_cv_pz = column_dots(&c_v, &phi_z, ncols);
@@ -596,6 +720,62 @@ impl GpModel {
         (0..b)
             .map(|j| (0..n).map(|i| g[i * b + j] + corr[i * b + j]).collect())
             .collect()
+    }
+
+    /// One pathwise Thompson draw with a warm-startable conditioning
+    /// solve. Consumes the **same rng stream** as
+    /// [`GpModel::posterior_sample`] (w, then per-node noise), but
+    /// splits the conditioning solve `H α = m (y − g − σ ε)` by
+    /// linearity into a 2-column block `[m y, m (g + σ ε)]` with
+    /// `α = α_y − α_f`: the `α_y` (data) column changes slowly across
+    /// BO steps, so the *previous* step's `α_y` is an excellent warm
+    /// start, while the fluctuation column is freshly random and
+    /// starts cold. Both columns share the operator SpMMs, so the
+    /// split costs no extra matrix traffic.
+    ///
+    /// Returns `(sample, α_y, per-column CG stats)`; feed `α_y` back as
+    /// `warm` on the next draw ([`crate::bo::ThompsonPolicy`] does).
+    pub fn thompson_sample_warm(
+        &self,
+        rng: &mut Rng,
+        warm: Option<&[f64]>,
+    ) -> (Vec<f64>, Vec<f64>, Vec<CgStats>) {
+        let n = self.n();
+        let k = self.phi.n_cols;
+        let threads = self.solve.effective_threads();
+        let par = threads > 1 && n > 4096;
+        let sigma = self.hypers.sigma_n2().sqrt();
+        let w = rng.normal_vec(k);
+        let eps = rng.normal_vec(n);
+        let g = if par {
+            self.phi.matvec_par(&w, threads)
+        } else {
+            self.phi.matvec(&w)
+        };
+        let mut rhs = vec![0.0; n * 2];
+        for i in 0..n {
+            let m = self.mask[i];
+            rhs[i * 2] = m * self.y[i];
+            rhs[i * 2 + 1] = m * (g[i] + sigma * eps[i]);
+        }
+        let x0: Option<Vec<f64>> = warm.filter(|wv| wv.len() == n).map(|wv| {
+            let mut v = vec![0.0; n * 2];
+            for i in 0..n {
+                v[i * 2] = wv[i];
+            }
+            v
+        });
+        let (sol, stats) = self.solve_system_block_warm(&rhs, 2, x0.as_deref());
+        let mut alpha_y = vec![0.0; n];
+        let mut malpha = vec![0.0; n];
+        for i in 0..n {
+            alpha_y[i] = sol[i * 2];
+            malpha[i] = self.mask[i] * (sol[i * 2] - sol[i * 2 + 1]);
+        }
+        let corr = self.apply_kernel(&malpha);
+        let sample: Vec<f64> =
+            (0..n).map(|i| g[i] + corr[i]).collect();
+        (sample, alpha_y, stats)
     }
 
     /// Predictive mean + variance at every node, variance estimated
@@ -908,6 +1088,111 @@ mod tests {
         }
         // The blocked path consumed exactly the serial stream.
         assert_eq!(rng_block.next_u64(), rng_serial.next_u64());
+    }
+
+    #[test]
+    fn apply_graph_delta_matches_rebuilt_model_bitwise() {
+        use crate::stream::{GraphDelta, StreamingFeatures};
+        let g = generators::grid2d(5, 5);
+        let cfg = WalkConfig { n_walks: 40, max_len: 4, threads: 1, ..Default::default() };
+        let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 4), 0.1);
+        let mut stream = StreamingFeatures::new(
+            g.clone(),
+            cfg.clone(),
+            hypers.modulation.coeffs(),
+            9,
+        );
+        let train: Vec<usize> = (0..25).step_by(3).collect();
+        let y: Vec<f64> =
+            train.iter().map(|&i| (i as f64 * 0.3).sin()).collect();
+        let mut model = GpModel::new(stream.components(), hypers.clone(), &train, &y);
+        let rhs0: Vec<f64> =
+            model.mask.iter().zip(&model.y).map(|(m, y)| m * y).collect();
+        let (alpha0, _) = model.solve_system(&rhs0);
+        let delta = GraphDelta::AddEdge { u: 0, v: 12, w: 0.8 };
+        let out = model
+            .apply_graph_delta(&mut stream, &delta, Some(&alpha0))
+            .unwrap();
+        assert!(out.solve_stats.converged, "{:?}", out.solve_stats);
+        assert!(out.resampled_walks > 0 && out.patched_rows > 0);
+        // Only part of the graph may be touched: the incremental
+        // update must not have resampled every walk.
+        assert!(
+            out.resampled_walks < 25 * cfg.n_walks,
+            "delta resampled all walks"
+        );
+        // Reference: a model built from scratch on the mutated graph
+        // under the same per-walk seeds.
+        let full = StreamingFeatures::new(
+            stream.graph().clone(),
+            cfg.clone(),
+            hypers.modulation.coeffs(),
+            9,
+        );
+        let model2 = GpModel::new(full.components(), hypers.clone(), &train, &y);
+        let (m1, s1) = model.posterior_mean();
+        let (m2, s2) = model2.posterior_mean();
+        assert_eq!(s1.iterations, s2.iterations);
+        assert!(m1 == m2, "patched model must match rebuilt model bitwise");
+        // Node insertion grows the embedding and keeps the model usable.
+        let out2 = model
+            .apply_graph_delta(&mut stream, &GraphDelta::AddNode, Some(&out.alpha))
+            .unwrap();
+        assert_eq!(out2.added_node, Some(25));
+        assert_eq!(model.n(), 26);
+        let (mean, st) = model.posterior_mean();
+        assert!(st.converged);
+        assert_eq!(mean.len(), 26);
+        // Mismatched stream/model is rejected, state intact.
+        let mut other = StreamingFeatures::new(
+            generators::ring(10),
+            cfg.clone(),
+            hypers.modulation.coeffs(),
+            1,
+        );
+        assert!(model
+            .apply_graph_delta(&mut other, &GraphDelta::AddNode, None)
+            .is_err());
+        assert_eq!(model.n(), 26);
+    }
+
+    #[test]
+    fn thompson_sample_warm_matches_posterior_sample() {
+        // Same rng stream, same draw up to CG tolerance; the returned
+        // α_y warm-starts the next draw into strictly fewer iterations.
+        let (model, _) = small_model(19);
+        let n = model.n();
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = rng_a.clone();
+        let (sample, alpha_y, stats) = model.thompson_sample_warm(&mut rng_a, None);
+        let reference = model.posterior_sample(&mut rng_b);
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "rng streams diverged");
+        let scale = reference
+            .iter()
+            .fold(0.0f64, |a, v| a.max(v.abs()))
+            .max(1.0);
+        for i in 0..n {
+            assert!(
+                (sample[i] - reference[i]).abs() < 1e-4 * scale,
+                "node {i}: split draw {} vs serial {}",
+                sample[i],
+                reference[i]
+            );
+        }
+        assert!(stats.iter().all(|s| s.converged));
+        // Re-draw warm-started at α_y: the data column must converge in
+        // strictly fewer iterations than its cold counterpart.
+        let mut rng_c = Rng::new(78);
+        let mut rng_d = rng_c.clone();
+        let (_, _, st_cold) = model.thompson_sample_warm(&mut rng_c, None);
+        let (_, _, st_warm) =
+            model.thompson_sample_warm(&mut rng_d, Some(&alpha_y));
+        assert!(
+            st_warm[0].iterations < st_cold[0].iterations,
+            "warm α_y column: {} !< {}",
+            st_warm[0].iterations,
+            st_cold[0].iterations
+        );
     }
 
     #[test]

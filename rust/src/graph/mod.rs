@@ -202,6 +202,84 @@ impl Graph {
             Err(_) => 0.0,
         }
     }
+
+    // ------------------------------------------------------------------
+    // Mutable ops (streaming / dynamic-graph subsystem)
+    // ------------------------------------------------------------------
+
+    /// Append an isolated node; returns its id. O(1).
+    pub fn add_node(&mut self) -> usize {
+        let n = self.num_nodes();
+        self.offsets.push(*self.offsets.last().unwrap());
+        n
+    }
+
+    /// Insert `(col, w)` into row `row` keeping the row sorted; if the
+    /// entry exists, sum the weight (matching `from_edges` duplicate
+    /// merging). Degree bookkeeping = the offsets shift of rows > row.
+    fn upsert_entry(&mut self, row: usize, col: u32, w: f64) {
+        let (s, e) = (self.offsets[row], self.offsets[row + 1]);
+        match self.targets[s..e].binary_search(&col) {
+            Ok(k) => self.weights[s + k] += w,
+            Err(k) => {
+                self.targets.insert(s + k, col);
+                self.weights.insert(s + k, w);
+                for o in &mut self.offsets[row + 1..] {
+                    *o += 1;
+                }
+            }
+        }
+    }
+
+    /// Remove `(col, _)` from row `row`; returns false if absent.
+    fn remove_entry(&mut self, row: usize, col: u32) -> bool {
+        let (s, e) = (self.offsets[row], self.offsets[row + 1]);
+        match self.targets[s..e].binary_search(&col) {
+            Ok(k) => {
+                self.targets.remove(s + k);
+                self.weights.remove(s + k);
+                for o in &mut self.offsets[row + 1..] {
+                    *o -= 1;
+                }
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Add (or reinforce: weights sum, as in `from_edges`) the
+    /// undirected edge (u, v). Self-loops store a single directed
+    /// entry. O(N + E) worst case for the CSR splice — the cost the
+    /// streaming subsystem amortises is the *walk resample*, not this.
+    pub fn add_edge(&mut self, u: usize, v: usize, w: f64) {
+        let n = self.num_nodes();
+        assert!(u < n && v < n, "add_edge out of range");
+        self.upsert_entry(u, v as u32, w);
+        if u != v {
+            self.upsert_entry(v, u as u32, w);
+        }
+    }
+
+    /// Remove the undirected edge (u, v) entirely (both directions).
+    /// Returns false (graph unchanged) if the edge is absent.
+    pub fn remove_edge(&mut self, u: usize, v: usize) -> bool {
+        let n = self.num_nodes();
+        assert!(u < n && v < n, "remove_edge out of range");
+        if !self.has_entry(u, v) {
+            return false;
+        }
+        self.remove_entry(u, v as u32);
+        if u != v {
+            let removed = self.remove_entry(v, u as u32);
+            debug_assert!(removed, "asymmetric edge ({u},{v})");
+        }
+        true
+    }
+
+    /// Structural presence of entry (i, j) regardless of weight value.
+    fn has_entry(&self, i: usize, j: usize) -> bool {
+        self.neighbors(i).binary_search(&(j as u32)).is_ok()
+    }
 }
 
 #[cfg(test)]
@@ -250,5 +328,47 @@ mod tests {
         assert!((g.weighted_degree(0) - 4.0).abs() < 1e-12);
         assert!((g.avg_degree() - 2.0).abs() < 1e-12);
         assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn mutable_ops_match_from_edges() {
+        // Building incrementally must end at the same CSR as the batch
+        // constructor over the final edge list.
+        let mut g = Graph::from_edges(3, &[(0, 1, 1.0)]);
+        let id = g.add_node();
+        assert_eq!(id, 3);
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.degree(3), 0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(0, 3, 0.5);
+        g.add_edge(0, 1, 0.25); // reinforce: weights sum
+        g.validate().unwrap();
+        let want = Graph::from_edges(
+            4,
+            &[(0, 1, 1.25), (1, 2, 2.0), (0, 3, 0.5)],
+        );
+        assert_eq!(g.offsets, want.offsets);
+        assert_eq!(g.targets, want.targets);
+        for (a, b) in g.weights.iter().zip(&want.weights) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // Removal restores the pre-edge structure.
+        assert!(g.remove_edge(0, 3));
+        assert!(!g.remove_edge(0, 3));
+        assert_eq!(g.degree(3), 0);
+        assert_eq!(g.degree(0), 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn mutable_self_loop_single_entry() {
+        let mut g = Graph::from_edges(2, &[(0, 1, 1.0)]);
+        g.add_edge(1, 1, 3.0);
+        assert_eq!(g.degree(1), 2);
+        assert!((g.edge_weight(1, 1) - 3.0).abs() < 1e-12);
+        g.validate().unwrap();
+        assert!(g.remove_edge(1, 1));
+        assert_eq!(g.degree(1), 1);
+        g.validate().unwrap();
     }
 }

@@ -27,6 +27,7 @@ pub mod linalg;
 pub mod runtime;
 pub mod server;
 pub mod sparse;
+pub mod stream;
 pub mod util;
 pub mod vgp;
 pub mod walks;

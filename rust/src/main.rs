@@ -13,11 +13,12 @@
 
 use anyhow::{bail, Result};
 use grfgp::exp;
-use grfgp::gp::{GpModel, Hypers, Modulation};
+use grfgp::gp::{Hypers, Modulation};
 use grfgp::graph::generators;
+use grfgp::stream::StreamingFeatures;
 use grfgp::util::cli::Args;
 use grfgp::util::rng::Rng;
-use grfgp::walks::{sample_components, WalkConfig};
+use grfgp::walks::WalkConfig;
 
 const USAGE: &str = "\
 grfgp — Graph Random Features for Scalable Gaussian Processes
@@ -115,18 +116,20 @@ fn run_serve(args: &Args) -> Result<()> {
         threads: args.usize("threads", 0),
     };
     eprintln!(
-        "sampling GRF components: n={} walks={} l_max={}",
+        "sampling GRF components (indexed, per-walk streams): n={} walks={} l_max={}",
         graph.num_nodes(),
         cfg.n_walks,
         cfg.max_len
     );
-    let comps = sample_components(&graph, &cfg, seed);
     let hypers = Hypers::new(
         Modulation::diffusion(1.0, 1.0, cfg.max_len),
         args.f64("noise", 0.1),
     );
-    let model = GpModel::new(comps, hypers, &[], &[]);
-    grfgp::server::serve(model, &addr, seed)
+    // The streaming state backs the server's dynamic-graph ops
+    // (add_edge / remove_edge / add_node patch features incrementally).
+    let stream =
+        StreamingFeatures::new(graph, cfg, hypers.modulation.coeffs(), seed);
+    grfgp::server::serve(stream, hypers, &addr, seed)
 }
 
 fn run_info(args: &Args) -> Result<()> {

@@ -1,24 +1,54 @@
 //! Request parsing + micro-batching.
 //!
 //! The batcher coalesces requests that can share one model-lock
-//! acquisition. Predict requests arriving within the batching window
-//! are merged into a single `predict` over the union of their nodes
-//! (the expensive part — posterior mean solve + pathwise variance
-//! samples — is shared), then results are scattered back per request.
+//! acquisition, in two classes:
+//!
+//! * **Predict** requests arriving within the batching window are
+//!   merged into a single `predict` over the union of their nodes (the
+//!   expensive part — posterior mean solve + pathwise variance samples
+//!   — is shared), then results are scattered back per request.
+//! * **Write** requests (`observe`, `add_edge`, `remove_edge`,
+//!   `add_node`) are coalesced into one ordered batch applied under a
+//!   single lock: runs of observations flush with one `set_data`, and
+//!   each graph delta runs one incremental feature patch + warm
+//!   re-solve ([`crate::gp::GpModel::apply_graph_delta`]).
+//!
+//! Leadership is take-based: after the window, whichever participant
+//! still finds its batch pending takes it out, runs it, and publishes
+//! the results in a per-generation `done` map that participants drain
+//! (entries are removed once every span is claimed). A pending batch
+//! is never replaced: requests that cannot join (key mismatch, full
+//! batch) execute solo instead, so a batch can never be evicted
+//! before its results reach every client. An **idle fast path** skips
+//! the batching window when the model lock is uncontended — there is
+//! nothing to coalesce with, so serial clients pay no window latency.
 
-use super::ServerState;
+use super::{ModelState, ServerState};
 use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
 use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 /// Parsed request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Observe { node: usize, y: f64 },
     Predict { nodes: Vec<usize>, samples: usize },
+    AddEdge { u: usize, v: usize, w: f64 },
+    RemoveEdge { u: usize, v: usize },
+    AddNode,
     Sample,
     Thompson,
     Stats,
     Shutdown,
+}
+
+/// How the batcher routes a request.
+enum BatchClass {
+    Direct,
+    Predict(usize),
+    Write,
 }
 
 impl Request {
@@ -52,6 +82,30 @@ impl Request {
                     j.get("samples").and_then(Json::as_usize).unwrap_or(16);
                 Ok(Request::Predict { nodes, samples })
             }
+            "add_edge" => {
+                let u = j
+                    .get("u")
+                    .and_then(Json::as_usize)
+                    .ok_or("add_edge needs u")?;
+                let v = j
+                    .get("v")
+                    .and_then(Json::as_usize)
+                    .ok_or("add_edge needs v")?;
+                let w = j.get("w").and_then(Json::as_f64).unwrap_or(1.0);
+                Ok(Request::AddEdge { u, v, w })
+            }
+            "remove_edge" => {
+                let u = j
+                    .get("u")
+                    .and_then(Json::as_usize)
+                    .ok_or("remove_edge needs u")?;
+                let v = j
+                    .get("v")
+                    .and_then(Json::as_usize)
+                    .ok_or("remove_edge needs v")?;
+                Ok(Request::RemoveEdge { u, v })
+            }
+            "add_node" => Ok(Request::AddNode),
             "sample" => Ok(Request::Sample),
             "thompson" => Ok(Request::Thompson),
             "stats" => Ok(Request::Stats),
@@ -60,10 +114,14 @@ impl Request {
         }
     }
 
-    fn batch_key(&self) -> Option<usize> {
+    fn class(&self) -> BatchClass {
         match self {
-            Request::Predict { samples, .. } => Some(*samples),
-            _ => None,
+            Request::Predict { samples, .. } => BatchClass::Predict(*samples),
+            Request::Observe { .. }
+            | Request::AddEdge { .. }
+            | Request::RemoveEdge { .. }
+            | Request::AddNode => BatchClass::Write,
+            _ => BatchClass::Direct,
         }
     }
 }
@@ -103,129 +161,361 @@ impl Response {
     }
 }
 
-struct PendingBatch {
+struct PendingPredict {
+    generation: u64,
+    /// Batch key: the `samples` parameter (requests must agree on it).
     key: usize,
     nodes: Vec<usize>,
     /// (offset, len) per participant, in arrival order.
     spans: Vec<(usize, usize)>,
-    /// Results, filled by the leader.
-    result: Option<(Vec<f64>, Vec<f64>)>,
-    generation: u64,
 }
 
-/// Micro-batcher: the first predict request in a window becomes the
-/// leader; followers that arrive while the leader is waiting join the
-/// batch. `max_batch` bounds the union size.
+struct PredictDone {
+    mu: Vec<f64>,
+    var: Vec<f64>,
+    /// Graph version at compute time — lets clients detect whether a
+    /// response predates a graph delta they already saw acknowledged.
+    graph_version: u64,
+    parts: usize,
+    claimed: usize,
+    /// Publication time: entries older than [`RESULT_TIMEOUT`] can have
+    /// no live claimant (every deadline predates publication + timeout)
+    /// and are swept.
+    published: std::time::Instant,
+}
+
+struct PendingWrites {
+    generation: u64,
+    reqs: Vec<Request>,
+}
+
+struct WriteDone {
+    results: Vec<Response>,
+    claimed: usize,
+    /// See [`PredictDone::published`].
+    published: std::time::Instant,
+}
+
+struct PredictSlot {
+    next_gen: u64,
+    pending: Option<PendingPredict>,
+    done: HashMap<u64, PredictDone>,
+}
+
+struct WriteSlot {
+    next_gen: u64,
+    pending: Option<PendingWrites>,
+    done: HashMap<u64, WriteDone>,
+}
+
+/// Micro-batcher: the first request of a class in a window opens a
+/// batch; compatible requests arriving while it is pending join it.
+/// `max_batch` bounds the union size of a predict batch and the length
+/// of a write batch.
 pub struct Batcher {
     max_batch: usize,
-    pending: Mutex<Option<PendingBatch>>,
-    cv: Condvar,
+    predicts: Mutex<PredictSlot>,
+    pcv: Condvar,
+    writes: Mutex<WriteSlot>,
+    wcv: Condvar,
 }
+
+/// How long a joiner waits for stragglers before taking leadership.
+const BATCH_WINDOW: Duration = Duration::from_millis(2);
+/// Upper bound on waiting for a leader's results.
+const RESULT_TIMEOUT: Duration = Duration::from_secs(30);
 
 impl Batcher {
     pub fn new(max_batch: usize) -> Batcher {
         Batcher {
             max_batch,
-            pending: Mutex::new(None),
-            cv: Condvar::new(),
+            predicts: Mutex::new(PredictSlot {
+                next_gen: 0,
+                pending: None,
+                done: HashMap::new(),
+            }),
+            pcv: Condvar::new(),
+            writes: Mutex::new(WriteSlot {
+                next_gen: 0,
+                pending: None,
+                done: HashMap::new(),
+            }),
+            wcv: Condvar::new(),
         }
     }
 
-    /// Execute a request, batching predicts.
+    /// Execute a request, batching predicts and writes.
     pub fn submit(&self, state: &ServerState, req: Request) -> Response {
-        let Some(key) = req.batch_key() else {
-            return super::handle(state, &req);
-        };
-        let Request::Predict { nodes, samples } = req else {
-            unreachable!()
-        };
-        // Try to join or create a batch.
-        let (generation, span) = {
-            let mut guard = self.pending.lock().unwrap();
-            match guard.as_mut() {
-                Some(b)
-                    if b.key == key
-                        && b.result.is_none()
-                        && b.spans.len() < self.max_batch =>
-                {
+        match req.class() {
+            BatchClass::Direct => super::handle(state, &req),
+            BatchClass::Write => self.submit_write(state, req),
+            BatchClass::Predict(key) => {
+                let Request::Predict { nodes, .. } = req else {
+                    unreachable!()
+                };
+                self.submit_predict(state, nodes, key)
+            }
+        }
+    }
+
+    /// Shared-lock predict computation + result gather + version stamp.
+    fn predict_under_lock(
+        state: &ServerState,
+        ms: &mut ModelState,
+        nodes: &[usize],
+        key: usize,
+    ) -> (Vec<f64>, Vec<f64>, u64) {
+        let mut rng = ms.rng.split(0xBA7C);
+        ms.rng = ms.rng.split(3);
+        let (mean, variance) = ms.model.predict(key, &mut rng);
+        let mu: Vec<f64> = nodes.iter().map(|&i| mean[i]).collect();
+        let vv: Vec<f64> = nodes.iter().map(|&i| variance[i]).collect();
+        // Read the version inside the lock: the response is exactly as
+        // fresh as this snapshot.
+        (mu, vv, state.graph_version.load(Ordering::SeqCst))
+    }
+
+    fn predict_response(mu: &[f64], var: &[f64], parts: usize, version: u64) -> Response {
+        Response::ok(vec![
+            ("mean", Json::arr_f64(mu)),
+            ("var", Json::arr_f64(var)),
+            ("batched", Json::Num(parts as f64)),
+            ("graph_version", Json::Num(version as f64)),
+        ])
+    }
+
+    fn submit_predict(
+        &self,
+        state: &ServerState,
+        nodes: Vec<usize>,
+        key: usize,
+    ) -> Response {
+        // Validate up front against the lock-free node-count mirror
+        // (nodes stay valid: the graph only grows, and the mirror is
+        // updated before any delta is acknowledged).
+        let n = state.n_nodes.load(Ordering::SeqCst);
+        if let Some(&bad) = nodes.iter().find(|&&i| i >= n) {
+            return Response::error(format!("node {bad} out of range"));
+        }
+        // Idle fast path: an uncontended model means there is nothing
+        // to coalesce with — skip the batching window entirely.
+        if let Ok(mut ms) = state.model.try_lock() {
+            let (mu, var, version) =
+                Self::predict_under_lock(state, &mut ms, &nodes, key);
+            drop(ms);
+            state.requests_served.fetch_add(1, Ordering::Relaxed);
+            return Self::predict_response(&mu, &var, 1, version);
+        }
+        // Join the pending batch if compatible, open one if none is
+        // pending; an incompatible pending batch (different samples
+        // key, or full) is left intact and this request runs solo.
+        let joined = {
+            let mut slot = self.predicts.lock().unwrap();
+            match slot.pending.as_mut() {
+                Some(b) if b.key == key && b.spans.len() < self.max_batch => {
                     let span = (b.nodes.len(), nodes.len());
                     b.nodes.extend_from_slice(&nodes);
                     b.spans.push(span);
-                    (b.generation, span)
+                    Some((b.generation, span))
                 }
-                _ => {
-                    let generation = guard
-                        .as_ref()
-                        .map(|b| b.generation + 1)
-                        .unwrap_or(0);
-                    *guard = Some(PendingBatch {
+                Some(_) => None,
+                None => {
+                    let generation = slot.next_gen;
+                    slot.next_gen += 1;
+                    let span = (0, nodes.len());
+                    slot.pending = Some(PendingPredict {
+                        generation,
                         key,
                         nodes: nodes.clone(),
-                        spans: vec![(0, nodes.len())],
-                        result: None,
-                        generation,
+                        spans: vec![span],
                     });
-                    (generation, (0, nodes.len()))
+                    Some((generation, span))
                 }
             }
         };
-        // Tiny batching window so concurrent clients can pile on.
-        std::thread::sleep(std::time::Duration::from_millis(2));
-        // Leader = whoever gets the lock first with result unset.
-        let mut guard = self.pending.lock().unwrap();
-        let needs_run = matches!(
-            guard.as_ref(),
-            Some(b) if b.generation == generation && b.result.is_none()
-        );
-        if needs_run {
-            let batch_nodes = guard.as_ref().unwrap().nodes.clone();
-            drop(guard);
-            let full = {
+        let Some((generation, span)) = joined else {
+            // Solo slow path (blocking lock).
+            let mut ms = state.model.lock().unwrap();
+            let (mu, var, version) =
+                Self::predict_under_lock(state, &mut ms, &nodes, key);
+            drop(ms);
+            state.requests_served.fetch_add(1, Ordering::Relaxed);
+            return Self::predict_response(&mu, &var, 1, version);
+        };
+        std::thread::sleep(BATCH_WINDOW);
+        // Leader = whoever still finds its batch pending; it takes the
+        // batch out, so late arrivals open a fresh one.
+        let batch = {
+            let mut slot = self.predicts.lock().unwrap();
+            let mine = matches!(
+                slot.pending.as_ref(),
+                Some(b) if b.generation == generation
+            );
+            if mine {
+                slot.pending.take()
+            } else {
+                None
+            }
+        };
+        if let Some(b) = batch {
+            let (mu, var, version) = {
                 let mut ms = state.model.lock().unwrap();
-                let mut rng = ms.rng.split(0xBA7C);
-                ms.rng = ms.rng.split(3);
-                ms.model.predict(key, &mut rng)
+                Self::predict_under_lock(state, &mut ms, &b.nodes, b.key)
             };
-            let mut g2 = self.pending.lock().unwrap();
-            if let Some(b) = g2.as_mut() {
-                if b.generation == generation {
-                    let mu: Vec<f64> =
-                        batch_nodes.iter().map(|&i| full.0[i]).collect();
-                    let var: Vec<f64> =
-                        batch_nodes.iter().map(|&i| full.1[i]).collect();
-                    b.result = Some((mu, var));
-                }
-            }
-            self.cv.notify_all();
-            guard = g2;
+            let mut slot = self.predicts.lock().unwrap();
+            // Bounded-stale sweep: a participant that timed out never
+            // claims its span, so its entry could linger — drop entries
+            // older than the claim deadline (no live claimant remains;
+            // claimants' deadlines start before publication).
+            slot.done
+                .retain(|_, d| d.published.elapsed() < RESULT_TIMEOUT);
+            slot.done.insert(
+                b.generation,
+                PredictDone {
+                    mu,
+                    var,
+                    graph_version: version,
+                    parts: b.spans.len(),
+                    claimed: 0,
+                    published: std::time::Instant::now(),
+                },
+            );
+            drop(slot);
+            self.pcv.notify_all();
         }
-        // Wait for the leader (or ourselves) to have filled results.
+        // Claim this request's span of the published results (hard
+        // deadline — spurious wakeups from other batches must not
+        // restart the clock).
+        let deadline = std::time::Instant::now() + RESULT_TIMEOUT;
+        let mut slot = self.predicts.lock().unwrap();
         loop {
-            match guard.as_ref() {
-                Some(b) if b.generation == generation => {
-                    if let Some((mu, var)) = &b.result {
-                        let (off, len) = span;
-                        let m = mu[off..off + len].to_vec();
-                        let v = var[off..off + len].to_vec();
-                        state
-                            .requests_served
-                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        return Response::ok(vec![
-                            ("mean", Json::arr_f64(&m)),
-                            ("var", Json::arr_f64(&v)),
-                            ("batched", Json::Num(b.spans.len() as f64)),
-                        ]);
-                    }
+            if let Some(done) = slot.done.get_mut(&generation) {
+                let (off, len) = span;
+                let m = done.mu[off..off + len].to_vec();
+                let v = done.var[off..off + len].to_vec();
+                let parts = done.parts;
+                let version = done.graph_version;
+                done.claimed += 1;
+                if done.claimed >= parts {
+                    slot.done.remove(&generation);
                 }
-                _ => {
-                    return Response::error("batch evicted before completion")
+                state
+                    .requests_served
+                    .fetch_add(1, Ordering::Relaxed);
+                return Self::predict_response(&m, &v, parts, version);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Response::error("predict batch timed out");
+            }
+            let (g, _) = self.pcv.wait_timeout(slot, deadline - now).unwrap();
+            slot = g;
+        }
+    }
+
+    fn submit_write(&self, state: &ServerState, req: Request) -> Response {
+        // Idle fast path: uncontended model → apply immediately; the
+        // common serial-client observe stream pays no window latency.
+        if let Ok(mut ms) = state.model.try_lock() {
+            let resp = ms
+                .apply_writes(std::slice::from_ref(&req), state)
+                .pop()
+                .expect("one response per write");
+            drop(ms);
+            state.requests_served.fetch_add(1, Ordering::Relaxed);
+            return resp;
+        }
+        // Join the pending write batch, open one if none is pending; a
+        // full batch is left intact and this request runs solo.
+        let joined = {
+            let mut slot = self.writes.lock().unwrap();
+            match slot.pending.as_mut() {
+                Some(b) if b.reqs.len() < self.max_batch => {
+                    b.reqs.push(req.clone());
+                    Some((b.generation, b.reqs.len() - 1))
+                }
+                Some(_) => None,
+                None => {
+                    let generation = slot.next_gen;
+                    slot.next_gen += 1;
+                    slot.pending = Some(PendingWrites {
+                        generation,
+                        reqs: vec![req.clone()],
+                    });
+                    Some((generation, 0))
                 }
             }
-            let (g, _timeout) = self
-                .cv
-                .wait_timeout(guard, std::time::Duration::from_secs(5))
-                .unwrap();
-            guard = g;
+        };
+        let Some((generation, idx)) = joined else {
+            // Solo slow path (blocking lock), preserving write order
+            // within this connection.
+            let mut ms = state.model.lock().unwrap();
+            let resp = ms
+                .apply_writes(std::slice::from_ref(&req), state)
+                .pop()
+                .expect("one response per write");
+            drop(ms);
+            state.requests_served.fetch_add(1, Ordering::Relaxed);
+            return resp;
+        };
+        std::thread::sleep(BATCH_WINDOW);
+        let batch = {
+            let mut slot = self.writes.lock().unwrap();
+            let mine = matches!(
+                slot.pending.as_ref(),
+                Some(b) if b.generation == generation
+            );
+            if mine {
+                slot.pending.take()
+            } else {
+                None
+            }
+        };
+        if let Some(b) = batch {
+            let results = {
+                let mut ms = state.model.lock().unwrap();
+                ms.apply_writes(&b.reqs, state)
+            };
+            let mut slot = self.writes.lock().unwrap();
+            slot.done
+                .retain(|_, d| d.published.elapsed() < RESULT_TIMEOUT);
+            slot.done.insert(
+                b.generation,
+                WriteDone {
+                    results,
+                    claimed: 0,
+                    published: std::time::Instant::now(),
+                },
+            );
+            drop(slot);
+            self.wcv.notify_all();
+        }
+        let deadline = std::time::Instant::now() + RESULT_TIMEOUT;
+        let mut slot = self.writes.lock().unwrap();
+        loop {
+            if let Some(done) = slot.done.get_mut(&generation) {
+                let resp = done
+                    .results
+                    .get(idx)
+                    .cloned()
+                    .unwrap_or_else(|| {
+                        Response::error("write batch result missing")
+                    });
+                done.claimed += 1;
+                if done.claimed >= done.results.len() {
+                    slot.done.remove(&generation);
+                }
+                state
+                    .requests_served
+                    .fetch_add(1, Ordering::Relaxed);
+                return resp;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Response::error("write batch timed out");
+            }
+            let (g, _) = self.wcv.wait_timeout(slot, deadline - now).unwrap();
+            slot = g;
         }
     }
 }
@@ -252,6 +542,29 @@ mod tests {
         assert_eq!(Request::parse(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
         assert!(Request::parse(r#"{"op":"nope"}"#).is_err());
         assert!(Request::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn parse_graph_mutation_ops() {
+        assert_eq!(
+            Request::parse(r#"{"op":"add_edge","u":3,"v":7,"w":0.5}"#).unwrap(),
+            Request::AddEdge { u: 3, v: 7, w: 0.5 }
+        );
+        // Weight defaults to 1.0.
+        assert_eq!(
+            Request::parse(r#"{"op":"add_edge","u":1,"v":2}"#).unwrap(),
+            Request::AddEdge { u: 1, v: 2, w: 1.0 }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"remove_edge","u":4,"v":0}"#).unwrap(),
+            Request::RemoveEdge { u: 4, v: 0 }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"add_node"}"#).unwrap(),
+            Request::AddNode
+        );
+        assert!(Request::parse(r#"{"op":"add_edge","u":1}"#).is_err());
+        assert!(Request::parse(r#"{"op":"remove_edge","v":1}"#).is_err());
     }
 
     #[test]

@@ -5,64 +5,225 @@
 //! requests are routed into a shared queue, and a worker pool owns the
 //! GP model behind a mutex, micro-batching compatible requests (e.g.
 //! several `predict` requests are merged into one posterior evaluation
-//! under a single lock acquisition / feature borrow).
+//! under a single lock acquisition / feature borrow, and graph
+//! mutations coalesce with observations into one ordered write batch).
 //!
 //! Protocol (one JSON object per line):
 //!   {"op":"observe","node":17,"y":0.42}
 //!   {"op":"predict","nodes":[1,2,3],"samples":16}
-//!   {"op":"sample"}                       → full posterior draw argmax
-//!   {"op":"thompson"}                     → next query node
+//!   {"op":"add_edge","u":3,"v":7,"w":0.5}     → incremental GRF patch
+//!   {"op":"remove_edge","u":3,"v":7}          → incremental GRF patch
+//!   {"op":"add_node"}                         → appends isolated node
+//!   {"op":"sample"}                           → full posterior draw argmax
+//!   {"op":"thompson"}                         → next query node
 //!   {"op":"stats"}
 //!   {"op":"shutdown"}
 //! Responses: {"ok":true, ...} or {"ok":false,"error":"..."}.
+//!
+//! ## Dynamic-graph lifecycle
+//!
+//! The server owns a [`StreamingFeatures`] next to the model. A graph
+//! mutation does **not** rebuild the features: only the walks whose
+//! trajectories visited the delta endpoints are resampled, the affected
+//! feature rows are patched through the model
+//! ([`GpModel::apply_graph_delta`]), and the posterior-mean system is
+//! re-solved warm-started from the pre-delta solution (carried in
+//! [`ModelState::alpha`]). Patched rows accumulate in a delta row-store
+//! overlay that compacts periodically, re-running the `to_ell_auto`
+//! layout policy on the fresh Φ.
+//!
+//! Each successful mutation bumps `graph_version` (monotone, reported
+//! by `stats`); every `add_edge`/`remove_edge`/`add_node` response
+//! carries the post-delta version and every `predict` response carries
+//! the version its numbers were computed under, so a client that saw a
+//! delta acknowledged at version `k` can reject any prediction stamped
+//! `< k` as stale. Batched predictions are stamped under the same model
+//! lock that computes them, so a response can never carry a version
+//! newer than its numbers.
 
 pub mod batcher;
 
 use crate::gp::model::GpModel;
+use crate::gp::Hypers;
+use crate::stream::{GraphDelta, StreamingFeatures};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use batcher::{Batcher, Request, Response};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Server shared state.
 pub struct ServerState {
     pub model: Mutex<ModelState>,
     pub requests_served: AtomicU64,
+    /// Bumped once per applied graph delta; predictions are stamped
+    /// with the version they were computed under.
+    pub graph_version: AtomicU64,
+    /// Monotone node count mirror (updated under the model lock) — lets
+    /// request validation run without contending on the model mutex.
+    pub n_nodes: AtomicUsize,
     pub shutdown: AtomicBool,
 }
 
 /// The mutable model + data the workers operate on.
 pub struct ModelState {
     pub model: GpModel,
+    /// Incrementally maintained walk/feature state of the served graph.
+    pub stream: StreamingFeatures,
     pub observations: Vec<(usize, f64)>,
     pub rng: Rng,
+    /// Posterior-mean solve carried across graph deltas — the warm
+    /// start for the next delta's re-solve.
+    pub alpha: Option<Vec<f64>>,
 }
 
 impl ModelState {
+    /// Build the served model from the streaming state (the model's
+    /// components are the stream's, so deltas patch consistently).
+    pub fn new(stream: StreamingFeatures, hypers: Hypers, seed: u64) -> ModelState {
+        let model = GpModel::new(stream.components(), hypers, &[], &[]);
+        ModelState {
+            model,
+            stream,
+            observations: Vec::new(),
+            rng: Rng::new(seed),
+            alpha: None,
+        }
+    }
+
     fn refresh(&mut self) {
         let nodes: Vec<usize> =
             self.observations.iter().map(|(i, _)| *i).collect();
         let ys: Vec<f64> = self.observations.iter().map(|(_, v)| *v).collect();
         self.model.set_data(&nodes, &ys);
     }
+
+    /// Apply one coalesced write batch (observes + graph deltas) in
+    /// arrival order under the already-held model lock. Runs of
+    /// observations flush with a single `set_data` (before the next
+    /// delta, so its warm re-solve sees them; at the end otherwise);
+    /// each delta runs one incremental feature patch + warm re-solve.
+    pub fn apply_writes(
+        &mut self,
+        reqs: &[Request],
+        state: &ServerState,
+    ) -> Vec<Response> {
+        let mut out = Vec::with_capacity(reqs.len());
+        let mut dirty_obs = false;
+        for req in reqs {
+            match req {
+                Request::Observe { node, y } => {
+                    if *node >= self.model.n() {
+                        out.push(Response::error(format!(
+                            "node {node} out of range"
+                        )));
+                        continue;
+                    }
+                    self.observations.push((*node, *y));
+                    dirty_obs = true;
+                    out.push(Response::ok(vec![(
+                        "n_obs",
+                        Json::Num(self.observations.len() as f64),
+                    )]));
+                }
+                Request::AddEdge { u, v, w } => {
+                    out.push(self.apply_delta(
+                        GraphDelta::AddEdge { u: *u, v: *v, w: *w },
+                        &mut dirty_obs,
+                        state,
+                    ));
+                }
+                Request::RemoveEdge { u, v } => {
+                    out.push(self.apply_delta(
+                        GraphDelta::RemoveEdge { u: *u, v: *v },
+                        &mut dirty_obs,
+                        state,
+                    ));
+                }
+                Request::AddNode => {
+                    out.push(self.apply_delta(
+                        GraphDelta::AddNode,
+                        &mut dirty_obs,
+                        state,
+                    ));
+                }
+                other => out.push(Response::error(format!(
+                    "non-write request {other:?} in write batch"
+                ))),
+            }
+        }
+        if dirty_obs {
+            self.refresh();
+        }
+        out
+    }
+
+    fn apply_delta(
+        &mut self,
+        delta: GraphDelta,
+        dirty_obs: &mut bool,
+        state: &ServerState,
+    ) -> Response {
+        if *dirty_obs {
+            self.refresh();
+            *dirty_obs = false;
+        }
+        let warm = self.alpha.take();
+        match self.model.apply_graph_delta(
+            &mut self.stream,
+            &delta,
+            warm.as_deref(),
+        ) {
+            Ok(outcome) => {
+                let version =
+                    state.graph_version.fetch_add(1, Ordering::SeqCst) + 1;
+                state.n_nodes.store(self.model.n(), Ordering::SeqCst);
+                let mut fields = vec![
+                    ("graph_version", Json::Num(version as f64)),
+                    (
+                        "resampled_walks",
+                        Json::Num(outcome.resampled_walks as f64),
+                    ),
+                    ("patched_rows", Json::Num(outcome.patched_rows as f64)),
+                    (
+                        "cg_iters",
+                        Json::Num(outcome.solve_stats.iterations as f64),
+                    ),
+                    ("compacted", Json::Bool(outcome.compacted)),
+                ];
+                if let Some(id) = outcome.added_node {
+                    fields.push(("node", Json::Num(id as f64)));
+                }
+                self.alpha = Some(outcome.alpha);
+                Response::ok(fields)
+            }
+            Err(e) => {
+                // A failed delta did not change the graph; the taken
+                // warm start is still valid for the next one.
+                self.alpha = warm;
+                Response::error(e)
+            }
+        }
+    }
 }
 
-/// Handle one already-parsed request against the state.
+/// Handle one already-parsed request against the state. Write requests
+/// run as a single-element write batch (the batcher coalesces longer
+/// ones).
 pub fn handle(state: &ServerState, req: &Request) -> Response {
     state.requests_served.fetch_add(1, Ordering::Relaxed);
     match req {
-        Request::Observe { node, y } => {
+        Request::Observe { .. }
+        | Request::AddEdge { .. }
+        | Request::RemoveEdge { .. }
+        | Request::AddNode => {
             let mut ms = state.model.lock().unwrap();
-            if *node >= ms.model.n() {
-                return Response::error(format!("node {node} out of range"));
-            }
-            ms.observations.push((*node, *y));
-            ms.refresh();
-            Response::ok(vec![("n_obs", Json::Num(ms.observations.len() as f64))])
+            ms.apply_writes(std::slice::from_ref(req), state)
+                .pop()
+                .expect("one response per write")
         }
         Request::Predict { nodes, samples } => {
             let mut ms = state.model.lock().unwrap();
@@ -76,6 +237,10 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
             Response::ok(vec![
                 ("mean", Json::arr_f64(&mu)),
                 ("var", Json::arr_f64(&vv)),
+                (
+                    "graph_version",
+                    Json::Num(state.graph_version.load(Ordering::SeqCst) as f64),
+                ),
             ])
         }
         Request::Sample => {
@@ -114,7 +279,24 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
             let ms = state.model.lock().unwrap();
             Response::ok(vec![
                 ("n_nodes", Json::Num(ms.model.n() as f64)),
+                ("n_edges", Json::Num(ms.stream.graph().num_edges() as f64)),
                 ("n_obs", Json::Num(ms.observations.len() as f64)),
+                (
+                    "graph_version",
+                    Json::Num(state.graph_version.load(Ordering::SeqCst) as f64),
+                ),
+                (
+                    "deltas_applied",
+                    Json::Num(ms.stream.deltas_applied as f64),
+                ),
+                (
+                    "walks_resampled",
+                    Json::Num(ms.stream.walks_resampled_total as f64),
+                ),
+                (
+                    "overlay_rows",
+                    Json::Num(ms.stream.overlay_rows() as f64),
+                ),
                 (
                     "requests",
                     Json::Num(state.requests_served.load(Ordering::Relaxed) as f64),
@@ -149,23 +331,35 @@ fn client_loop(stream: TcpStream, state: Arc<ServerState>, batcher: Arc<Batcher>
     Ok(())
 }
 
-/// Serve `model` on `addr` until a shutdown request arrives.
-pub fn serve(model: GpModel, addr: &str, seed: u64) -> Result<()> {
+/// Serve the streaming state on `addr` until a shutdown request
+/// arrives. The GP model is built from the stream's components, so
+/// graph deltas patch both consistently.
+pub fn serve(
+    stream: StreamingFeatures,
+    hypers: Hypers,
+    addr: &str,
+    seed: u64,
+) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     let local = listener.local_addr()?;
     eprintln!("grfgp server listening on {local}");
-    serve_on(model, listener, seed)
+    serve_on(stream, hypers, listener, seed)
 }
 
 /// Serve on an already-bound listener (tests bind port 0 themselves).
-pub fn serve_on(model: GpModel, listener: TcpListener, seed: u64) -> Result<()> {
+pub fn serve_on(
+    stream: StreamingFeatures,
+    hypers: Hypers,
+    listener: TcpListener,
+    seed: u64,
+) -> Result<()> {
+    let ms = ModelState::new(stream, hypers, seed);
+    let n0 = ms.model.n();
     let state = Arc::new(ServerState {
-        model: Mutex::new(ModelState {
-            model,
-            observations: Vec::new(),
-            rng: Rng::new(seed),
-        }),
+        model: Mutex::new(ms),
         requests_served: AtomicU64::new(0),
+        graph_version: AtomicU64::new(0),
+        n_nodes: AtomicUsize::new(n0),
         shutdown: AtomicBool::new(false),
     });
     let batcher = Arc::new(Batcher::new(8));

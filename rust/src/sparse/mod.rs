@@ -410,6 +410,39 @@ impl Csr {
         b.build()
     }
 
+    /// Copy with the given rows replaced and the shape possibly grown —
+    /// the compaction/patch primitive of the streaming subsystem. Each
+    /// patch row must be sorted by column; indices `>= self.n_rows`
+    /// append new rows (gaps become empty rows). One linear pass, no
+    /// sorting: O(nnz) memcpy.
+    pub fn with_replaced_rows(
+        &self,
+        n_rows: usize,
+        n_cols: usize,
+        patches: &std::collections::BTreeMap<u32, (Vec<u32>, Vec<f64>)>,
+    ) -> Csr {
+        assert!(n_rows >= self.n_rows && n_cols >= self.n_cols);
+        let extra: usize = patches.values().map(|(c, _)| c.len()).sum();
+        let mut offsets = Vec::with_capacity(n_rows + 1);
+        offsets.push(0usize);
+        let mut cols = Vec::with_capacity(self.cols.len() + extra);
+        let mut vals = Vec::with_capacity(self.vals.len() + extra);
+        for r in 0..n_rows {
+            if let Some((pc, pv)) = patches.get(&(r as u32)) {
+                debug_assert_eq!(pc.len(), pv.len());
+                debug_assert!(pc.windows(2).all(|w| w[0] < w[1]));
+                cols.extend_from_slice(pc);
+                vals.extend_from_slice(pv);
+            } else if r < self.n_rows {
+                let (rc, rv) = self.row(r);
+                cols.extend_from_slice(rc);
+                vals.extend_from_slice(rv);
+            }
+            offsets.push(cols.len());
+        }
+        Csr { n_rows, n_cols, offsets, cols, vals }
+    }
+
     /// Dense expansion (tests / small-N baselines only).
     pub fn to_dense(&self) -> Vec<Vec<f64>> {
         let mut out = vec![vec![0.0; self.n_cols]; self.n_rows];
@@ -509,6 +542,38 @@ mod tests {
             );
         }
         b.build()
+    }
+
+    #[test]
+    fn with_replaced_rows_splices_and_grows() {
+        use std::collections::BTreeMap;
+        proptest(16, |prng| {
+            let n = 4 + prng.below(12);
+            let m = random_csr(prng, n, n, 3 * n);
+            let mut patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = BTreeMap::new();
+            // Replace a couple of rows, empty one, append one past the end.
+            patches.insert(0, (vec![1u32, 3], vec![2.5, -1.0]));
+            patches.insert((n / 2) as u32, (Vec::new(), Vec::new()));
+            patches.insert(n as u32 + 1, (vec![0u32], vec![7.0]));
+            let out = m.with_replaced_rows(n + 2, n + 2, &patches);
+            prop_assert!(out.n_rows == n + 2 && out.n_cols == n + 2, "shape");
+            prop_assert!(
+                *out.offsets.last().unwrap() == out.cols.len(),
+                "offsets consistent"
+            );
+            for r in 0..n + 2 {
+                let (cols, vals) = out.row(r);
+                if let Some((pc, pv)) = patches.get(&(r as u32)) {
+                    prop_assert!(cols == &pc[..] && vals == &pv[..], "patched row {r}");
+                } else if r < n {
+                    let (oc, ov) = m.row(r);
+                    prop_assert!(cols == oc && vals == ov, "kept row {r}");
+                } else {
+                    prop_assert!(cols.is_empty(), "gap row {r} should be empty");
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,721 @@
+//! Streaming graph subsystem: incremental GRF maintenance for dynamic
+//! graphs.
+//!
+//! The paper's pipeline assumes a frozen graph — a single `add_edge`
+//! would force a full O(N^{3/2}) walk resample and feature rebuild.
+//! But GRF walks are **node-local**: an edge delta touching (u, v)
+//! only changes the transition behaviour *at* u and v, so a walk whose
+//! trajectory never stepped through either endpoint replays
+//! bit-identically under its own RNG stream
+//! ([`crate::walks::walk_rng`]). [`StreamingFeatures`] exploits this:
+//!
+//! * every walk `(node, t)` is independently seeded, and the sampler
+//!   emits a **visit index** `visit[j] = [(node, t), ...]` of the walks
+//!   that stepped through `j` ([`crate::walks::sample_components_indexed`]);
+//! * a [`GraphDelta`] invalidates exactly `visit[u] ∪ visit[v]`; only
+//!   those walks are re-run, and only the rows of the affected *source*
+//!   nodes are rebuilt ([`crate::walks::rows_from_walks`] — the same
+//!   code path the full sampler uses, which is what makes the
+//!   incremental update **bit-identical** to a from-scratch rebuild of
+//!   the mutated graph under the same per-walk seeds);
+//! * patched rows live in a **delta row-store** overlaying the
+//!   compacted base CSRs; when the overlay exceeds its threshold the
+//!   store compacts (one O(nnz) splice per matrix) and re-runs the
+//!   [`crate::sparse::FeatureLayout`] selection (`to_ell_auto` policy)
+//!   on the fresh Φ.
+//!
+//! Cost per delta: O(|visit[u]| + |visit[v]|) walk re-runs plus the
+//! affected-row rebuild — independent of N for bounded-degree graphs
+//! (Theorem 1 bounds the visit counts w.h.p.), against O(N · n_walks)
+//! for the full resample. See `benches/hotpath.rs` (`stream_delta` vs
+//! `stream_full_rebuild` rows).
+
+use crate::graph::Graph;
+use crate::sparse::{Csr, Ell, FeatureLayout};
+use crate::walks::{
+    resample_walk, rows_from_walks, sample_components_indexed, NodeWalks,
+    WalkComponents, WalkConfig,
+};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One mutation of the served graph.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GraphDelta {
+    /// Add (or reinforce: weights sum) the undirected edge (u, v).
+    AddEdge { u: usize, v: usize, w: f64 },
+    /// Remove the undirected edge (u, v).
+    RemoveEdge { u: usize, v: usize },
+    /// Append an isolated node.
+    AddNode,
+}
+
+/// What a delta actually touched — the incrementality contract.
+#[derive(Clone, Debug)]
+pub struct DeltaSummary {
+    /// Walks that were re-run, exactly `visit[u] ∪ visit[v]` of the
+    /// pre-delta visit index (all walks of the new node for
+    /// [`GraphDelta::AddNode`]).
+    pub resampled: Vec<(u32, u32)>,
+    /// Source rows whose feature rows were rebuilt (sorted).
+    pub affected_rows: Vec<u32>,
+    /// Id of the appended node, for [`GraphDelta::AddNode`].
+    pub added_node: Option<usize>,
+    /// Whether this delta triggered an overlay compaction.
+    pub compacted: bool,
+}
+
+/// A patched row: per-length component rows + the combined Φ row.
+#[derive(Clone, Debug)]
+struct RowPatch {
+    per_len: Vec<(Vec<u32>, Vec<f64>)>,
+    phi: (Vec<u32>, Vec<f64>),
+}
+
+/// Incrementally maintained GRF features over a mutable graph.
+///
+/// Holds the graph, the per-walk deposit store, the visit index, the
+/// compacted base matrices (per-length components and the combined Φ
+/// under a fixed modulation `f`), and the delta row-store overlay.
+/// [`StreamingFeatures::apply_delta`] is the only mutation entry point;
+/// the correctness anchor (property-tested below) is that the state
+/// after any delta sequence is bit-identical to
+/// [`StreamingFeatures::new`] on the mutated graph.
+pub struct StreamingFeatures {
+    graph: Graph,
+    cfg: WalkConfig,
+    seed: u64,
+    /// Modulation coefficients of the maintained Φ = Σ_l f_l C_l.
+    f: Vec<f64>,
+    /// Current weighted degrees (empty unless `cfg.normalize`).
+    norm_deg: Vec<f64>,
+    store: Vec<NodeWalks>,
+    visit: Vec<Vec<(u32, u32)>>,
+    /// Compacted per-length component matrices.
+    base: Vec<Csr>,
+    /// Compacted combined feature matrix Φ(f).
+    phi_base: Csr,
+    /// Delta row-store: rows rebuilt since the last compaction.
+    overlay: BTreeMap<u32, RowPatch>,
+    /// Compact when the overlay holds at least this many rows.
+    compact_threshold: usize,
+    /// Layout policy re-run on Φ at every compaction.
+    layout: FeatureLayout,
+    /// ELL operand selected at the last compaction (None = CSR or
+    /// policy rejection); stale while the overlay is non-empty.
+    phi_ell: Option<Ell>,
+    /// Lifetime counters (observability for the server stats op).
+    pub deltas_applied: usize,
+    pub walks_resampled_total: usize,
+    pub compactions: usize,
+}
+
+/// Combine per-length rows into the Φ row: gather `(col, f_l · v)` in
+/// length order, sort by column, merge runs. Shared by the full build
+/// and the patcher so both produce bitwise-equal rows. Zero
+/// coefficients still contribute pattern entries (the row pattern is
+/// the union pattern, as in [`crate::walks::CombinedFeatures`]).
+fn combine_row(per_len: &[(Vec<u32>, Vec<f64>)], f: &[f64]) -> (Vec<u32>, Vec<f64>) {
+    debug_assert_eq!(per_len.len(), f.len());
+    let mut ent: Vec<(u32, f64)> = Vec::new();
+    for ((cols, vals), &fl) in per_len.iter().zip(f) {
+        for (c, v) in cols.iter().zip(vals) {
+            ent.push((*c, fl * v));
+        }
+    }
+    ent.sort_unstable_by_key(|&(c, _)| c);
+    let mut cols = Vec::with_capacity(ent.len());
+    let mut vals = Vec::with_capacity(ent.len());
+    let mut k = 0;
+    while k < ent.len() {
+        let c = ent[k].0;
+        let mut v = 0.0;
+        while k < ent.len() && ent[k].0 == c {
+            v += ent[k].1;
+            k += 1;
+        }
+        cols.push(c);
+        vals.push(v);
+    }
+    (cols, vals)
+}
+
+/// Assemble Φ = Σ_l f_l C_l row-by-row through [`combine_row`] — the
+/// single constructor shared by the fresh build and the modulation
+/// swap (the bit-identity between those paths depends on it).
+fn build_phi(base: &[Csr], n_cols: usize, f: &[f64]) -> Csr {
+    let n = base.first().map(|c| c.n_rows).unwrap_or(0);
+    let mut offsets = Vec::with_capacity(n + 1);
+    offsets.push(0usize);
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    let mut scratch: Vec<(Vec<u32>, Vec<f64>)> = Vec::with_capacity(f.len());
+    for r in 0..n {
+        scratch.clear();
+        for c in base {
+            let (rc, rv) = c.row(r);
+            scratch.push((rc.to_vec(), rv.to_vec()));
+        }
+        let (pc, pv) = combine_row(&scratch, f);
+        cols.extend_from_slice(&pc);
+        vals.extend_from_slice(&pv);
+        offsets.push(cols.len());
+    }
+    Csr { n_rows: n, n_cols, offsets, cols, vals }
+}
+
+impl StreamingFeatures {
+    /// Full (parallel) build on a static graph — also the reference the
+    /// incremental path is tested against.
+    pub fn new(graph: Graph, cfg: WalkConfig, f: Vec<f64>, seed: u64) -> StreamingFeatures {
+        assert_eq!(f.len(), cfg.max_len + 1, "modulation length != l_max+1");
+        let n = graph.num_nodes();
+        let iw = sample_components_indexed(&graph, &cfg, seed);
+        let norm_deg: Vec<f64> = if cfg.normalize {
+            (0..n).map(|i| graph.weighted_degree(i).max(1e-12)).collect()
+        } else {
+            Vec::new()
+        };
+        let base = iw.components.c;
+        let phi_base = build_phi(&base, n, &f);
+        let layout = FeatureLayout::Auto;
+        let phi_ell = phi_base.select_ell(layout);
+        StreamingFeatures {
+            graph,
+            cfg,
+            seed,
+            f,
+            norm_deg,
+            store: iw.store,
+            visit: iw.visit,
+            base,
+            phi_base,
+            overlay: BTreeMap::new(),
+            compact_threshold: (n / 8).max(64),
+            layout,
+            phi_ell,
+            deltas_applied: 0,
+            walks_resampled_total: 0,
+            compactions: 0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.graph.num_nodes()
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn config(&self) -> &WalkConfig {
+        &self.cfg
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn modulation(&self) -> &[f64] {
+        &self.f
+    }
+
+    /// Rows currently held in the delta row-store.
+    pub fn overlay_rows(&self) -> usize {
+        self.overlay.len()
+    }
+
+    /// Overlay size that triggers compaction (default `max(64, n/8)`).
+    pub fn set_compact_threshold(&mut self, rows: usize) {
+        self.compact_threshold = rows.max(1);
+    }
+
+    /// The layout policy re-run on Φ at each compaction.
+    pub fn set_layout(&mut self, layout: FeatureLayout) {
+        self.layout = layout;
+        self.phi_ell = self.phi_base.select_ell(layout);
+    }
+
+    /// ELL operand of the compacted Φ (as of the last compaction;
+    /// `None` when the policy kept CSR or the overlay pre-empts it).
+    pub fn phi_ell(&self) -> Option<&Ell> {
+        if self.overlay.is_empty() {
+            self.phi_ell.as_ref()
+        } else {
+            None
+        }
+    }
+
+    /// All walks whose trajectories stepped through any of `nodes` —
+    /// the invalidation set of a delta touching those endpoints.
+    pub fn visiting_walks(&self, nodes: &[usize]) -> BTreeSet<(u32, u32)> {
+        let mut out = BTreeSet::new();
+        for &i in nodes {
+            if i < self.visit.len() {
+                out.extend(self.visit[i].iter().copied());
+            }
+        }
+        out
+    }
+
+    /// Current content of component row `r` at length `l` (overlay wins
+    /// over base; rows beyond the base are empty until patched).
+    pub fn component_row(&self, l: usize, r: usize) -> (Vec<u32>, Vec<f64>) {
+        if let Some(p) = self.overlay.get(&(r as u32)) {
+            p.per_len[l].clone()
+        } else if r < self.base[l].n_rows {
+            let (c, v) = self.base[l].row(r);
+            (c.to_vec(), v.to_vec())
+        } else {
+            (Vec::new(), Vec::new())
+        }
+    }
+
+    /// Materialise the current per-length components (base + overlay).
+    pub fn components(&self) -> WalkComponents {
+        let n = self.n();
+        let c = (0..self.base.len())
+            .map(|l| {
+                let patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = self
+                    .overlay
+                    .iter()
+                    .map(|(&r, p)| (r, p.per_len[l].clone()))
+                    .collect();
+                self.base[l].with_replaced_rows(n, n, &patches)
+            })
+            .collect();
+        WalkComponents::new(c)
+    }
+
+    /// Materialise the current Φ (base + overlay).
+    pub fn phi_snapshot(&self) -> Csr {
+        let n = self.n();
+        if self.overlay.is_empty() && self.phi_base.n_rows == n {
+            return self.phi_base.clone();
+        }
+        let patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = self
+            .overlay
+            .iter()
+            .map(|(&r, p)| (r, p.phi.clone()))
+            .collect();
+        self.phi_base.with_replaced_rows(n, n, &patches)
+    }
+
+    /// Swap the modulation and recombine every Φ row (components are
+    /// untouched — walks don't depend on `f`). O(nnz).
+    pub fn set_modulation(&mut self, f: Vec<f64>) {
+        assert_eq!(f.len(), self.cfg.max_len + 1);
+        self.f = f;
+        // Rebuild phi_base from the base components, then the overlay
+        // Φ rows from their per-length patches.
+        self.phi_base = build_phi(&self.base, self.phi_base.n_cols, &self.f);
+        let f = self.f.clone();
+        for p in self.overlay.values_mut() {
+            p.phi = combine_row(&p.per_len, &f);
+        }
+        self.phi_ell = self.phi_base.select_ell(self.layout);
+    }
+
+    /// Apply one graph mutation: resample exactly the invalidated
+    /// walks, rebuild the affected rows into the overlay, maybe
+    /// compact. Errors leave the state untouched.
+    pub fn apply_delta(&mut self, delta: &GraphDelta) -> Result<DeltaSummary, String> {
+        let n = self.n();
+        let invalid = match *delta {
+            GraphDelta::AddEdge { u, v, w } => {
+                if u >= n || v >= n {
+                    return Err(format!("add_edge ({u},{v}) out of range (n={n})"));
+                }
+                if !w.is_finite() || w <= 0.0 {
+                    return Err(format!("add_edge weight {w} must be finite and > 0"));
+                }
+                let invalid = self.visiting_walks(&[u, v]);
+                self.graph.add_edge(u, v, w);
+                self.update_norm_deg(&[u, v]);
+                invalid
+            }
+            GraphDelta::RemoveEdge { u, v } => {
+                if u >= n || v >= n {
+                    return Err(format!("remove_edge ({u},{v}) out of range (n={n})"));
+                }
+                let invalid = self.visiting_walks(&[u, v]);
+                if !self.graph.remove_edge(u, v) {
+                    return Err(format!("remove_edge ({u},{v}): no such edge"));
+                }
+                self.update_norm_deg(&[u, v]);
+                invalid
+            }
+            GraphDelta::AddNode => {
+                let id = self.graph.add_node();
+                if self.cfg.normalize {
+                    self.norm_deg
+                        .push(self.graph.weighted_degree(id).max(1e-12));
+                }
+                self.visit.push(Vec::new());
+                self.store.push(NodeWalks {
+                    offsets: vec![0],
+                    deposits: Vec::new(),
+                });
+                (0..self.cfg.n_walks)
+                    .map(|t| (id as u32, t as u32))
+                    .collect()
+            }
+        };
+        let added_node = match delta {
+            GraphDelta::AddNode => Some(self.n() - 1),
+            _ => None,
+        };
+        let mut summary = self.resample(&invalid);
+        summary.added_node = added_node;
+        self.deltas_applied += 1;
+        self.walks_resampled_total += summary.resampled.len();
+        if self.overlay.len() >= self.compact_threshold {
+            self.compact();
+            summary.compacted = true;
+        }
+        Ok(summary)
+    }
+
+    /// Merge the overlay into the base matrices and re-run the
+    /// `to_ell_auto` layout policy on the fresh Φ.
+    pub fn compact(&mut self) {
+        let n = self.n();
+        for l in 0..self.base.len() {
+            let patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = self
+                .overlay
+                .iter()
+                .map(|(&r, p)| (r, p.per_len[l].clone()))
+                .collect();
+            self.base[l] = self.base[l].with_replaced_rows(n, n, &patches);
+        }
+        let patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = self
+            .overlay
+            .iter()
+            .map(|(&r, p)| (r, p.phi.clone()))
+            .collect();
+        self.phi_base = self.phi_base.with_replaced_rows(n, n, &patches);
+        self.overlay.clear();
+        self.phi_ell = self.phi_base.select_ell(self.layout);
+        self.compactions += 1;
+    }
+
+    fn update_norm_deg(&mut self, nodes: &[usize]) {
+        if self.cfg.normalize {
+            for &i in nodes {
+                self.norm_deg[i] = self.graph.weighted_degree(i).max(1e-12);
+            }
+        }
+    }
+
+    /// Re-run the given walks on the current graph, rebuild the rows of
+    /// their source nodes, and stage them in the overlay.
+    fn resample(&mut self, invalid: &BTreeSet<(u32, u32)>) -> DeltaSummary {
+        let n_len = self.cfg.max_len + 1;
+        let inv_n = 1.0 / self.cfg.n_walks as f64;
+        let mut by_node: BTreeMap<u32, BTreeSet<u32>> = BTreeMap::new();
+        for &(i, t) in invalid {
+            by_node.entry(i).or_default().insert(t);
+        }
+        let mut affected_rows = Vec::with_capacity(by_node.len());
+        let mut seen: Vec<u32> = Vec::new();
+        for (&i, ts) in &by_node {
+            let iu = i as usize;
+            let old = std::mem::take(&mut self.store[iu]);
+            let mut nw = NodeWalks {
+                offsets: Vec::with_capacity(self.cfg.n_walks + 1),
+                deposits: Vec::new(),
+            };
+            nw.offsets.push(0);
+            for t in 0..self.cfg.n_walks {
+                let start = nw.deposits.len();
+                if ts.contains(&(t as u32)) {
+                    // Drop the walk's old visit entries...
+                    if t < old.n_walks() {
+                        seen.clear();
+                        seen.extend(old.walk(t).iter().map(|&(j, _)| j));
+                        seen.sort_unstable();
+                        seen.dedup();
+                        for &j in &seen {
+                            let lst = &mut self.visit[j as usize];
+                            if let Some(p) =
+                                lst.iter().position(|&e| e == (i, t as u32))
+                            {
+                                lst.swap_remove(p);
+                            }
+                        }
+                    }
+                    // ...re-run it under its own stream...
+                    resample_walk(
+                        &self.graph,
+                        &self.cfg,
+                        &self.norm_deg,
+                        iu,
+                        t,
+                        self.seed,
+                        &mut nw.deposits,
+                    );
+                    // ...and index the new trajectory.
+                    seen.clear();
+                    seen.extend(nw.deposits[start..].iter().map(|&(j, _)| j));
+                    seen.sort_unstable();
+                    seen.dedup();
+                    for &j in &seen {
+                        self.visit[j as usize].push((i, t as u32));
+                    }
+                } else {
+                    nw.deposits.extend_from_slice(old.walk(t));
+                }
+                nw.offsets.push(nw.deposits.len() as u32);
+            }
+            let per_len = rows_from_walks(&nw, n_len, inv_n);
+            let phi = combine_row(&per_len, &self.f);
+            self.store[iu] = nw;
+            self.overlay.insert(i, RowPatch { per_len, phi });
+            affected_rows.push(i);
+        }
+        DeltaSummary {
+            resampled: invalid.iter().copied().collect(),
+            affected_rows,
+            added_node: None,
+            compacted: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
+
+    fn random_graph(rng: &mut Rng, n: usize, p: f64) -> (Graph, Vec<(u32, u32, f64)>) {
+        let mut edges = Vec::new();
+        for i in 0..n as u32 {
+            for j in (i + 1)..n as u32 {
+                if rng.bernoulli(p) {
+                    edges.push((i, j, 0.2 + 0.8 * rng.uniform()));
+                }
+            }
+        }
+        (Graph::from_edges(n, &edges), edges)
+    }
+
+    fn test_cfg(rng: &mut Rng) -> WalkConfig {
+        WalkConfig {
+            n_walks: 6 + rng.below(6),
+            p_halt: 0.15,
+            max_len: 3,
+            reweight: true,
+            normalize: rng.bernoulli(0.5),
+            threads: 1,
+        }
+    }
+
+    fn random_delta(g: &Graph, rng: &mut Rng) -> GraphDelta {
+        let n = g.num_nodes();
+        match rng.below(4) {
+            0 => GraphDelta::AddNode,
+            1 => {
+                // Remove a random existing edge if any.
+                let with_deg: Vec<usize> =
+                    (0..n).filter(|&i| g.degree(i) > 0).collect();
+                if with_deg.is_empty() {
+                    GraphDelta::AddNode
+                } else {
+                    let u = with_deg[rng.below(with_deg.len())];
+                    let v = g.neighbors(u)[rng.below(g.degree(u))] as usize;
+                    GraphDelta::RemoveEdge { u, v }
+                }
+            }
+            _ => {
+                let u = rng.below(n);
+                let v = rng.below(n);
+                GraphDelta::AddEdge { u, v, w: 0.2 + 0.8 * rng.uniform() }
+            }
+        }
+    }
+
+    /// Acceptance property: for random graphs, random deltas, and fixed
+    /// seeds, the incremental state is bit-identical to a from-scratch
+    /// rebuild of the mutated graph, and only walks that visited the
+    /// delta endpoints were resampled.
+    #[test]
+    fn incremental_matches_full_rebuild_bitwise() {
+        proptest(8, |rng| {
+            let n = 8 + rng.below(10);
+            let (g, _) = random_graph(rng, n, 0.25);
+            let cfg = test_cfg(rng);
+            let f = vec![1.0, 0.6, 0.3, 0.1];
+            let seed = rng.next_u64();
+            let mut s =
+                StreamingFeatures::new(g.clone(), cfg.clone(), f.clone(), seed);
+            // Exercise both the overlay path and per-delta compaction.
+            let threshold = if rng.bernoulli(0.5) { 1 } else { usize::MAX };
+            s.set_compact_threshold(threshold);
+            let mut g2 = g;
+            for step in 0..5 {
+                let delta = random_delta(&g2, rng);
+                // Expected invalidation set from the PRE-delta index.
+                let expect: BTreeSet<(u32, u32)> = match delta {
+                    GraphDelta::AddEdge { u, v, .. }
+                    | GraphDelta::RemoveEdge { u, v } => {
+                        s.visiting_walks(&[u, v])
+                    }
+                    GraphDelta::AddNode => (0..cfg.n_walks)
+                        .map(|t| (g2.num_nodes() as u32, t as u32))
+                        .collect(),
+                };
+                // Mirror the delta on the reference graph.
+                match delta {
+                    GraphDelta::AddEdge { u, v, w } => g2.add_edge(u, v, w),
+                    GraphDelta::RemoveEdge { u, v } => {
+                        g2.remove_edge(u, v);
+                    }
+                    GraphDelta::AddNode => {
+                        g2.add_node();
+                    }
+                }
+                let sum = s.apply_delta(&delta).unwrap();
+                let got: BTreeSet<(u32, u32)> =
+                    sum.resampled.iter().copied().collect();
+                prop_assert!(
+                    got == expect,
+                    "step {step}: resampled {got:?} != visit-index set {expect:?}"
+                );
+                let full = StreamingFeatures::new(
+                    g2.clone(),
+                    cfg.clone(),
+                    f.clone(),
+                    seed,
+                );
+                prop_assert!(
+                    s.phi_snapshot() == full.phi_snapshot(),
+                    "step {step} ({delta:?}): Φ not bit-identical to rebuild"
+                );
+                let (a, b) = (s.components().c, full.components().c);
+                for l in 0..a.len() {
+                    prop_assert!(
+                        a[l] == b[l],
+                        "step {step}: component {l} not bit-identical"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_roundtrip_restores_state_bitwise() {
+        // add_edge followed by remove_edge restores the graph, so the
+        // resampled walks rerun their original trajectories and Φ must
+        // come back bit-identical. A path graph guarantees (0, 9) is
+        // initially absent.
+        let edges: Vec<(u32, u32, f64)> =
+            (0..13).map(|i| (i, i + 1, 1.0)).collect();
+        let g = Graph::from_edges(14, &edges);
+        let cfg = WalkConfig { n_walks: 8, max_len: 3, threads: 1, ..Default::default() };
+        let f = vec![1.0, 0.5, 0.25, 0.125];
+        let mut s = StreamingFeatures::new(g, cfg, f, 42);
+        s.set_compact_threshold(usize::MAX);
+        let before = s.phi_snapshot();
+        s.apply_delta(&GraphDelta::AddEdge { u: 0, v: 9, w: 0.7 }).unwrap();
+        assert!(s.phi_snapshot() != before, "delta should change Φ");
+        s.apply_delta(&GraphDelta::RemoveEdge { u: 0, v: 9 }).unwrap();
+        assert!(s.phi_snapshot() == before, "roundtrip must restore Φ bitwise");
+    }
+
+    #[test]
+    fn add_node_rows_and_dimensions() {
+        let mut rng = Rng::new(3);
+        let (g, _) = random_graph(&mut rng, 10, 0.3);
+        let cfg = WalkConfig { n_walks: 5, max_len: 2, threads: 1, ..Default::default() };
+        let f = vec![2.0, 0.5, 0.25];
+        let mut s = StreamingFeatures::new(g, cfg, f, 7);
+        let sum = s.apply_delta(&GraphDelta::AddNode).unwrap();
+        assert_eq!(sum.added_node, Some(10));
+        assert_eq!(sum.resampled.len(), 5);
+        let phi = s.phi_snapshot();
+        assert_eq!(phi.n_rows, 11);
+        assert_eq!(phi.n_cols, 11);
+        // Isolated node: every walk deposits load 1.0 at l=0 only, so
+        // its Φ row is exactly f_0 at the diagonal.
+        let (cols, vals) = phi.row(10);
+        assert_eq!(cols, &[10u32]);
+        assert!((vals[0] - 2.0).abs() < 1e-12);
+        // The new node can then be wired in.
+        s.apply_delta(&GraphDelta::AddEdge { u: 10, v: 0, w: 1.0 }).unwrap();
+        assert!(s.phi_snapshot().row(10).0.len() >= 1);
+    }
+
+    #[test]
+    fn compaction_preserves_state_and_reselects_layout() {
+        let mut rng = Rng::new(9);
+        let (g, _) = random_graph(&mut rng, 16, 0.25);
+        let cfg = WalkConfig { n_walks: 6, max_len: 3, threads: 1, ..Default::default() };
+        let f = vec![1.0, 0.5, 0.25, 0.125];
+        let mut s = StreamingFeatures::new(g, cfg, f, 5);
+        s.set_compact_threshold(usize::MAX);
+        for k in 0..4 {
+            s.apply_delta(&GraphDelta::AddEdge { u: k, v: k + 5, w: 0.5 }).unwrap();
+        }
+        assert!(s.overlay_rows() > 0);
+        let phi_overlay = s.phi_snapshot();
+        let comps_overlay = s.components();
+        s.compact();
+        assert_eq!(s.overlay_rows(), 0);
+        assert!(s.phi_snapshot() == phi_overlay, "compaction changed Φ");
+        let comps = s.components();
+        for l in 0..comps.c.len() {
+            assert!(comps.c[l] == comps_overlay.c[l], "compaction changed C_{l}");
+        }
+        assert_eq!(s.compactions, 1);
+        // Layout policy re-ran: under Auto on these near-uniform rows
+        // it must produce *a* decision without disturbing Φ (the
+        // operand is only a memory layout).
+        let _ = s.phi_ell();
+    }
+
+    #[test]
+    fn errors_leave_state_untouched() {
+        let mut rng = Rng::new(11);
+        let (g, _) = random_graph(&mut rng, 8, 0.4);
+        let cfg = WalkConfig { n_walks: 4, max_len: 2, threads: 1, ..Default::default() };
+        let mut s = StreamingFeatures::new(g, cfg, vec![1.0, 0.5, 0.25], 1);
+        let before = s.phi_snapshot();
+        assert!(s.apply_delta(&GraphDelta::AddEdge { u: 0, v: 99, w: 1.0 }).is_err());
+        assert!(s
+            .apply_delta(&GraphDelta::AddEdge { u: 0, v: 1, w: -1.0 })
+            .is_err());
+        // Removing a non-edge: find a non-adjacent pair.
+        let mut non_edge = None;
+        'outer: for u in 0..8 {
+            for v in 0..8 {
+                if u != v && s.graph().edge_weight(u, v) == 0.0 {
+                    non_edge = Some((u, v));
+                    break 'outer;
+                }
+            }
+        }
+        if let Some((u, v)) = non_edge {
+            assert!(s.apply_delta(&GraphDelta::RemoveEdge { u, v }).is_err());
+        }
+        assert!(s.phi_snapshot() == before);
+        assert_eq!(s.deltas_applied, 0);
+    }
+
+    #[test]
+    fn modulation_swap_matches_fresh_build() {
+        let mut rng = Rng::new(21);
+        let (g, _) = random_graph(&mut rng, 12, 0.3);
+        let cfg = WalkConfig { n_walks: 5, max_len: 2, threads: 1, ..Default::default() };
+        let mut s = StreamingFeatures::new(g.clone(), cfg.clone(), vec![1.0, 0.5, 0.25], 3);
+        s.set_compact_threshold(usize::MAX);
+        s.apply_delta(&GraphDelta::AddEdge { u: 1, v: 7, w: 0.9 }).unwrap();
+        let f2 = vec![0.3, 1.2, 0.8];
+        s.set_modulation(f2.clone());
+        let mut g2 = g;
+        g2.add_edge(1, 7, 0.9);
+        let full = StreamingFeatures::new(g2, cfg, f2, 3);
+        assert!(s.phi_snapshot() == full.phi_snapshot());
+    }
+}

@@ -83,7 +83,11 @@ pub fn bench_auto<T>(name: &str, budget_s: f64, mut f: impl FnMut() -> T) -> Ben
 
 /// One machine-readable benchmark record: `name` identifies the
 /// kernel/path, `n` the problem size, `b` the block width (1 for
-/// single-RHS), `ns_per_op` the mean wall time.
+/// single-RHS), `ns_per_op` the mean wall time. Two conventional
+/// exceptions keep the schema stable for non-timing records:
+/// `*_iters` rows carry an iteration count in `b` (ns_per_op 0), and
+/// `metric_*` rows carry a dimensionless end-task value in
+/// `ns_per_op`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BenchRow {
     pub name: String,

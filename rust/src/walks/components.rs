@@ -77,26 +77,33 @@ impl WalkComponents {
         for v in &mut pattern.vals {
             *v = 0.0;
         }
-        // Scatter map per length: position of each entry in the pattern.
-        let maps = self
-            .c
-            .iter()
-            .map(|m| {
-                let mut map = Vec::with_capacity(m.nnz());
-                for r in 0..n {
-                    let (cols, _) = m.row(r);
-                    let (pc, _) = pattern.row(r);
-                    let base = pattern.offsets[r];
-                    for c in cols {
-                        let k = pc.binary_search(c).expect("pattern covers entry");
-                        map.push((base + k) as u32);
-                    }
-                }
-                map
-            })
-            .collect();
+        let maps = build_maps(self, &pattern);
         CombinedFeatures { components: self.clone(), pattern, maps }
     }
+}
+
+/// Scatter map per length: position of each component entry in the
+/// union pattern. Shared by [`WalkComponents::prepare`] and the row
+/// patcher ([`CombinedFeatures::patch_rows`]).
+fn build_maps(components: &WalkComponents, pattern: &Csr) -> Vec<Vec<u32>> {
+    let n = pattern.n_rows;
+    components
+        .c
+        .iter()
+        .map(|m| {
+            let mut map = Vec::with_capacity(m.nnz());
+            for r in 0..n {
+                let (cols, _) = m.row(r);
+                let (pc, _) = pattern.row(r);
+                let base = pattern.offsets[r];
+                for c in cols {
+                    let k = pc.binary_search(c).expect("pattern covers entry");
+                    map.push((base + k) as u32);
+                }
+            }
+            map
+        })
+        .collect()
 }
 
 /// Union-pattern recombiner: `combine_into` refreshes the value array of
@@ -144,6 +151,48 @@ impl CombinedFeatures {
     /// what `GpModel`'s ELL auto-layout policy effectively decides on.
     pub fn row_width_stats(&self) -> RowWidthStats {
         self.pattern.row_width_stats()
+    }
+
+    /// Patch the given rows of every component matrix (growing the
+    /// shape to `n` rows/cols if a node was appended), rebuild the
+    /// union-pattern rows for exactly those rows, and refresh the
+    /// scatter maps — the model-side half of a streaming graph delta.
+    ///
+    /// `patches[r][l] = (cols, vals)` must be sorted by column. The
+    /// patched pattern is identical to what a fresh
+    /// [`WalkComponents::prepare`] of the patched components would
+    /// build (sorted union of the per-length row patterns), so later
+    /// recombinations stay bitwise equal to the rebuilt-from-scratch
+    /// path. The pattern's **value** array is left stale: call
+    /// [`CombinedFeatures::combine_into`] before reading Φ.
+    pub fn patch_rows(
+        &mut self,
+        n: usize,
+        patches: &std::collections::BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>>,
+    ) {
+        let n_len = self.components.c.len();
+        for l in 0..n_len {
+            let per_l: std::collections::BTreeMap<u32, (Vec<u32>, Vec<f64>)> =
+                patches.iter().map(|(&r, pl)| (r, pl[l].clone())).collect();
+            self.components.c[l] =
+                self.components.c[l].with_replaced_rows(n, n, &per_l);
+        }
+        let pattern_patches: std::collections::BTreeMap<u32, (Vec<u32>, Vec<f64>)> =
+            patches
+                .iter()
+                .map(|(&r, pl)| {
+                    let mut cols: Vec<u32> = pl
+                        .iter()
+                        .flat_map(|(c, _)| c.iter().copied())
+                        .collect();
+                    cols.sort_unstable();
+                    cols.dedup();
+                    let zeros = vec![0.0; cols.len()];
+                    (r, (cols, zeros))
+                })
+                .collect();
+        self.pattern = self.pattern.with_replaced_rows(n, n, &pattern_patches);
+        self.maps = build_maps(&self.components, &self.pattern);
     }
 }
 
@@ -221,6 +270,40 @@ mod tests {
         assert!(union.max >= max_component);
         assert!(union.nnz <= sum_nnz);
         assert_eq!(union.n_rows, 30);
+    }
+
+    #[test]
+    fn patch_rows_matches_fresh_prepare() {
+        use std::collections::BTreeMap;
+        let mut rng = Rng::new(5);
+        let comps = random_components(&mut rng, 20, 3);
+        let mut prepared = comps.prepare();
+        // New content for rows 2 and 7, plus appended row 20 (growth
+        // to 22 with an empty gap row 21).
+        let mut patches: BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>> = BTreeMap::new();
+        for &r in &[2u32, 7, 20] {
+            let per_len: Vec<(Vec<u32>, Vec<f64>)> = (0..3)
+                .map(|_| {
+                    let mut cols: Vec<u32> =
+                        (0..4).map(|_| rng.below(22) as u32).collect();
+                    cols.sort_unstable();
+                    cols.dedup();
+                    let vals: Vec<f64> =
+                        cols.iter().map(|_| rng.normal()).collect();
+                    (cols, vals)
+                })
+                .collect();
+            patches.insert(r, per_len);
+        }
+        prepared.patch_rows(22, &patches);
+        // Reference: prepare() from scratch on the patched components.
+        let mut fresh = prepared.components.prepare();
+        assert_eq!(prepared.pattern.offsets, fresh.pattern.offsets);
+        assert_eq!(prepared.pattern.cols, fresh.pattern.cols);
+        let f = vec![0.7, -0.3, 1.1];
+        let a = prepared.combine_into(&f).clone();
+        let b = fresh.combine_into(&f);
+        assert!(a == *b, "patched recombination differs from fresh prepare");
     }
 
     #[test]

@@ -65,6 +65,91 @@ struct ChunkOut {
     per_len: Vec<(Vec<u32>, Vec<u32>, Vec<f64>)>,
 }
 
+/// All deposit records of one source node's walks, flattened:
+/// walk `t` deposited `deposits[offsets[t]..offsets[t+1]]`, one entry
+/// per visited step in step order (so index `l` within the slice is
+/// the deposit into `C_l`). This is the replayable raw material of the
+/// streaming subsystem: a single walk can be swapped out and the
+/// node's component rows rebuilt bit-identically.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeWalks {
+    pub offsets: Vec<u32>,
+    pub deposits: Vec<(u32, f64)>,
+}
+
+impl NodeWalks {
+    pub fn n_walks(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    #[inline]
+    pub fn walk(&self, t: usize) -> &[(u32, f64)] {
+        &self.deposits[self.offsets[t] as usize..self.offsets[t + 1] as usize]
+    }
+}
+
+/// Output of [`sample_components_indexed`]: the component matrices plus
+/// the per-walk deposit store and the **visit index**
+/// `visit[j] = [(source, walk), ...]` listing every walk whose
+/// trajectory stepped through node `j`. An edge delta touching (u, v)
+/// invalidates exactly `visit[u] ∪ visit[v]` (walk transitions are
+/// node-local: a walk that never visited either endpoint replays
+/// bit-identically under its per-walk RNG stream).
+pub struct IndexedWalks {
+    pub components: WalkComponents,
+    pub store: Vec<NodeWalks>,
+    pub visit: Vec<Vec<(u32, u32)>>,
+}
+
+/// The deterministic per-walk RNG stream: walk `t` from node `i` under
+/// `seed`. Unlike [`sample_components`] (one sequential stream per
+/// node), every walk is independently seeded so any single walk can be
+/// resampled in isolation — the invariant the streaming subsystem's
+/// incremental maintenance is built on.
+#[inline]
+pub fn walk_rng(seed: u64, node: usize, walk: usize) -> Rng {
+    Rng::new(seed).split(node as u64).split(walk as u64)
+}
+
+/// Rebuild the per-length component rows of one source node from its
+/// walk records: deposits are replayed in walk order per length, then
+/// deduped exactly like the samplers do (sort by target, merge runs,
+/// scale by 1/n_walks). Both the full indexed sampler and the
+/// incremental patcher call this, which is what makes an incremental
+/// update bit-identical to a from-scratch rebuild.
+pub fn rows_from_walks(
+    nw: &NodeWalks,
+    n_len: usize,
+    inv_n: f64,
+) -> Vec<(Vec<u32>, Vec<f64>)> {
+    let mut per_len: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n_len];
+    for t in 0..nw.n_walks() {
+        for (l, &d) in nw.walk(t).iter().enumerate() {
+            per_len[l].push(d);
+        }
+    }
+    per_len
+        .into_iter()
+        .map(|mut dep| {
+            dep.sort_unstable_by_key(|&(j, _)| j);
+            let mut cols = Vec::new();
+            let mut vals = Vec::new();
+            let mut k = 0;
+            while k < dep.len() {
+                let j = dep[k].0;
+                let mut v = 0.0;
+                while k < dep.len() && dep[k].0 == j {
+                    v += dep[k].1;
+                    k += 1;
+                }
+                cols.push(j);
+                vals.push(v * inv_n);
+            }
+            (cols, vals)
+        })
+        .collect()
+}
+
 /// Simulate the GRF walks and build the per-length component matrices.
 ///
 /// Deterministic given `seed` regardless of thread count: node `i`
@@ -86,13 +171,18 @@ pub fn sample_components(g: &Graph, cfg: &WalkConfig, seed: u64) -> WalkComponen
             (0..n_len).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
         // Scratch: deposits of one source node, per length.
         let mut deposits: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n_len];
+        let mut rec: Vec<(u32, f64)> = Vec::with_capacity(n_len);
         for i in s..e {
             let mut rng = base.split(i as u64);
             for d in deposits.iter_mut() {
                 d.clear();
             }
             for _ in 0..cfg.n_walks {
-                walk_once(g, cfg, &norm_deg, i, &mut rng, &mut deposits);
+                rec.clear();
+                walk_once_record(g, cfg, &norm_deg, i, &mut rng, &mut rec);
+                for (l, &d) in rec.iter().enumerate() {
+                    deposits[l].push(d);
+                }
             }
             // Dedup per (row, length): sort by target, merge runs.
             let inv_n = 1.0 / cfg.n_walks as f64;
@@ -150,20 +240,128 @@ pub fn sample_components(g: &Graph, cfg: &WalkConfig, seed: u64) -> WalkComponen
     WalkComponents::new(c)
 }
 
-/// One walk from `source`: deposit loads into `deposits[l]`.
+/// Per-chunk output of the indexed sampler.
+struct IndexedChunkOut {
+    start: usize,
+    per_len: Vec<(Vec<u32>, Vec<u32>, Vec<f64>)>,
+    store: Vec<NodeWalks>,
+    /// (visited node, source node, walk idx), deduped per walk.
+    visits: Vec<(u32, u32, u32)>,
+}
+
+/// Indexed variant of [`sample_components`] for dynamic graphs: every
+/// walk `(i, t)` runs on its own RNG stream ([`walk_rng`]), and the
+/// sampler additionally emits the per-walk deposit store and the visit
+/// index. Deterministic given `seed` regardless of thread count.
+///
+/// The component estimates differ from [`sample_components`] only in
+/// the RNG scheme (both are unbiased with the same variance); the
+/// per-walk streams cost one extra seeding per walk, which buys walk
+/// isolation: resampling any subset of walks and rebuilding the
+/// affected rows via [`rows_from_walks`] is bit-identical to a full
+/// resample in which only those walks changed.
+pub fn sample_components_indexed(g: &Graph, cfg: &WalkConfig, seed: u64) -> IndexedWalks {
+    let n = g.num_nodes();
+    let n_len = cfg.max_len + 1;
+    let threads = cfg.effective_threads();
+    let norm_deg: Vec<f64> = if cfg.normalize {
+        (0..n).map(|i| g.weighted_degree(i).max(1e-12)).collect()
+    } else {
+        Vec::new()
+    };
+    let inv_n = 1.0 / cfg.n_walks as f64;
+
+    let chunks: Vec<IndexedChunkOut> = par_map_chunks(n, threads, |s, e, _| {
+        let mut per_len: Vec<(Vec<u32>, Vec<u32>, Vec<f64>)> =
+            (0..n_len).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
+        let mut store = Vec::with_capacity(e - s);
+        let mut visits = Vec::new();
+        let mut seen: Vec<u32> = Vec::with_capacity(n_len);
+        for i in s..e {
+            let mut nw = NodeWalks::default();
+            nw.offsets.push(0);
+            for t in 0..cfg.n_walks {
+                let mut rng = walk_rng(seed, i, t);
+                walk_once_record(g, cfg, &norm_deg, i, &mut rng, &mut nw.deposits);
+                let start = *nw.offsets.last().unwrap() as usize;
+                nw.offsets.push(nw.deposits.len() as u32);
+                // Visit entries: distinct nodes on this trajectory.
+                seen.clear();
+                seen.extend(nw.deposits[start..].iter().map(|&(j, _)| j));
+                seen.sort_unstable();
+                seen.dedup();
+                for &j in &seen {
+                    visits.push((j, i as u32, t as u32));
+                }
+            }
+            for (l, (cols, vals)) in
+                rows_from_walks(&nw, n_len, inv_n).into_iter().enumerate()
+            {
+                let (rows, ccols, cvals) = &mut per_len[l];
+                rows.push(cols.len() as u32);
+                ccols.extend_from_slice(&cols);
+                cvals.extend_from_slice(&vals);
+            }
+            store.push(nw);
+        }
+        IndexedChunkOut { start: s, per_len, store, visits }
+    });
+
+    // Stitch the per-length CSRs (same prefix-sum concat as the legacy
+    // sampler) and scatter the visit triples chunk-by-chunk (chunks are
+    // ordered, so the index layout is thread-count independent).
+    let stitch = |l: usize| -> Csr {
+        let total_nnz: usize = chunks.iter().map(|ch| ch.per_len[l].1.len()).sum();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0usize);
+        let mut cols = Vec::with_capacity(total_nnz);
+        let mut vals = Vec::with_capacity(total_nnz);
+        for ch in &chunks {
+            debug_assert_eq!(ch.start, offsets.len() - 1);
+            let (rows, ccols, cvals) = &ch.per_len[l];
+            for &rl in rows {
+                offsets.push(offsets.last().unwrap() + rl as usize);
+            }
+            cols.extend_from_slice(ccols);
+            vals.extend_from_slice(cvals);
+        }
+        Csr { n_rows: n, n_cols: n, offsets, cols, vals }
+    };
+    let c: Vec<Csr> = par_map_chunks(n_len, threads.min(n_len), |s, e, _| {
+        (s..e).map(stitch).collect::<Vec<Csr>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+
+    let mut store = Vec::with_capacity(n);
+    let mut visit: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n];
+    for ch in chunks {
+        store.extend(ch.store);
+        for (j, src, t) in ch.visits {
+            visit[j as usize].push((src, t));
+        }
+    }
+    IndexedWalks { components: WalkComponents::new(c), store, visit }
+}
+
+/// One walk from `source`: append one `(node, load)` record per visited
+/// step to `rec` (index within the appended run = subwalk length `l`).
+/// The deposit/termination/step order matches Alg. 2 exactly, so both
+/// samplers (and the streaming resampler) share this single walker.
 #[inline]
-fn walk_once(
+fn walk_once_record(
     g: &Graph,
     cfg: &WalkConfig,
     norm_deg: &[f64],
     source: usize,
     rng: &mut Rng,
-    deposits: &mut [Vec<(u32, f64)>],
+    rec: &mut Vec<(u32, f64)>,
 ) {
     let mut current = source;
     let mut load = 1.0f64;
     for l in 0..=cfg.max_len {
-        deposits[l].push((current as u32, load));
+        rec.push((current as u32, load));
         if l == cfg.max_len {
             break;
         }
@@ -192,6 +390,24 @@ fn walk_once(
         };
         current = next;
     }
+}
+
+/// Re-run a single walk `(source, walk)` on the (possibly mutated)
+/// graph under its deterministic stream, appending its deposit records
+/// to `rec`. `norm_deg` must hold the **current** weighted degrees when
+/// `cfg.normalize` (empty otherwise) — exactly what the full sampler
+/// would see. This is the streaming subsystem's incremental kernel.
+pub fn resample_walk(
+    g: &Graph,
+    cfg: &WalkConfig,
+    norm_deg: &[f64],
+    source: usize,
+    walk: usize,
+    seed: u64,
+    rec: &mut Vec<(u32, f64)>,
+) {
+    let mut rng = walk_rng(seed, source, walk);
+    walk_once_record(g, cfg, norm_deg, source, &mut rng, rec);
 }
 
 /// Convenience: sample components and immediately combine them with a
@@ -320,6 +536,85 @@ mod tests {
         let suma: f64 = da.iter().flatten().sum();
         let sumb: f64 = db.iter().flatten().sum();
         assert!(suma > 3.0 * sumb, "suma={suma} sumb={sumb}");
+    }
+
+    #[test]
+    fn indexed_sampler_deterministic_and_visit_exact() {
+        let g = generators::grid2d(6, 6);
+        let cfg1 = WalkConfig { n_walks: 12, max_len: 3, threads: 1, ..Default::default() };
+        let cfg4 = WalkConfig { threads: 4, ..cfg1.clone() };
+        let a = sample_components_indexed(&g, &cfg1, 7);
+        let b = sample_components_indexed(&g, &cfg4, 7);
+        for l in 0..a.components.c.len() {
+            assert_eq!(a.components.c[l], b.components.c[l], "length {l}");
+        }
+        assert_eq!(a.store, b.store);
+        assert_eq!(a.visit, b.visit);
+        // Visit index is exactly the inverted deposit map, deduped.
+        let n = g.num_nodes();
+        let mut expect: Vec<std::collections::BTreeSet<(u32, u32)>> =
+            vec![Default::default(); n];
+        for (i, nw) in a.store.iter().enumerate() {
+            for t in 0..nw.n_walks() {
+                for &(j, _) in nw.walk(t) {
+                    expect[j as usize].insert((i as u32, t as u32));
+                }
+            }
+        }
+        for j in 0..n {
+            let got: std::collections::BTreeSet<(u32, u32)> =
+                a.visit[j].iter().copied().collect();
+            assert_eq!(got.len(), a.visit[j].len(), "dup visit entries at {j}");
+            assert_eq!(got, expect[j], "visit index mismatch at node {j}");
+        }
+        // Component rows are exactly rows_from_walks of the store.
+        let inv_n = 1.0 / cfg1.n_walks as f64;
+        for (i, nw) in a.store.iter().enumerate() {
+            let rows = rows_from_walks(nw, cfg1.max_len + 1, inv_n);
+            for (l, (cols, vals)) in rows.into_iter().enumerate() {
+                let (rc, rv) = a.components.c[l].row(i);
+                assert_eq!(rc, &cols[..], "node {i} length {l} cols");
+                assert_eq!(rv, &vals[..], "node {i} length {l} vals");
+            }
+        }
+    }
+
+    #[test]
+    fn indexed_sampler_unbiased_for_adjacency_powers() {
+        // Same oracle as the legacy sampler, per-walk streams: E[C_l] = W^l.
+        let mut edges = vec![];
+        let mut rng = Rng::new(5);
+        for i in 0u32..6 {
+            for j in (i + 1)..6 {
+                if rng.bernoulli(0.6) {
+                    edges.push((i, j, 0.3 + 0.4 * rng.uniform()));
+                }
+            }
+        }
+        let g = Graph::from_edges(6, &edges);
+        let cfg = WalkConfig {
+            n_walks: 40_000,
+            p_halt: 0.25,
+            max_len: 2,
+            reweight: true,
+            normalize: false,
+            threads: 2,
+        };
+        let iw = sample_components_indexed(&g, &cfg, 999);
+        let powers = adjacency_powers(&g, cfg.max_len);
+        for l in 0..=cfg.max_len {
+            let dense = iw.components.c[l].to_dense();
+            for i in 0..6 {
+                for j in 0..6 {
+                    let got = dense[i][j];
+                    let expect = powers[l][(i, j)];
+                    assert!(
+                        (got - expect).abs() < 0.15 * (1.0 + expect.abs()),
+                        "l={l} ({i},{j}): {got} vs {expect}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

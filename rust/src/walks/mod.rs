@@ -19,4 +19,8 @@ pub mod components;
 pub mod engine;
 
 pub use components::{CombinedFeatures, WalkComponents};
-pub use engine::{sample_components, sample_features, WalkConfig};
+pub use engine::{
+    resample_walk, rows_from_walks, sample_components,
+    sample_components_indexed, sample_features, walk_rng, IndexedWalks,
+    NodeWalks, WalkConfig,
+};

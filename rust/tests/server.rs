@@ -1,28 +1,27 @@
 //! Integration: the GP inference server — protocol round-trips,
 //! concurrent clients, batching invariants (no request dropped or
-//! duplicated, responses routed to the right client).
+//! duplicated, responses routed to the right client), and the
+//! dynamic-graph ops (incremental add_edge/remove_edge/add_node with
+//! the staleness guarantee: once a delta is acknowledged, no later
+//! prediction is served from the pre-delta feature matrix).
 
-use grfgp::gp::{GpModel, Hypers, Modulation};
+use grfgp::gp::{Hypers, Modulation};
 use grfgp::graph::generators;
+use grfgp::stream::StreamingFeatures;
 use grfgp::util::json::Json;
-use grfgp::walks::{sample_components, WalkConfig};
+use grfgp::walks::WalkConfig;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
 fn start_server(n: usize) -> std::net::SocketAddr {
     let g = generators::ring(n);
     let cfg = WalkConfig { n_walks: 32, p_halt: 0.1, max_len: 3, threads: 1, ..Default::default() };
-    let comps = sample_components(&g, &cfg, 0);
-    let model = GpModel::new(
-        comps,
-        Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1),
-        &[],
-        &[],
-    );
+    let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+    let stream = StreamingFeatures::new(g, cfg, hypers.modulation.coeffs(), 0);
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     std::thread::spawn(move || {
-        grfgp::server::serve_on(model, listener, 7).unwrap();
+        grfgp::server::serve_on(stream, hypers, listener, 7).unwrap();
     });
     addr
 }
@@ -127,5 +126,117 @@ fn concurrent_predicts_are_batched_and_correct() {
         }
     }
     let mut c = Client::connect(addr);
+    c.call(r#"{"op":"shutdown"}"#);
+}
+
+#[test]
+fn graph_deltas_apply_incrementally_and_stamp_predictions() {
+    let addr = start_server(256);
+    let mut c = Client::connect(addr);
+    for i in 0..6 {
+        c.call(&format!(
+            r#"{{"op":"observe","node":{},"y":{}}}"#,
+            i * 40,
+            (i as f64 * 0.7).sin()
+        ));
+    }
+    // Baseline prediction at version 0.
+    let p0 = c.call(r#"{"op":"predict","nodes":[5],"samples":4}"#);
+    assert_eq!(p0.get("graph_version").unwrap().as_usize(), Some(0));
+
+    // add_edge: incremental (resamples a strict subset of walks),
+    // warm-solved, version bumped.
+    let r = c.call(r#"{"op":"add_edge","u":5,"v":130,"w":0.8}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    assert_eq!(r.get("graph_version").unwrap().as_usize(), Some(1));
+    let resampled = r.get("resampled_walks").unwrap().as_usize().unwrap();
+    assert!(resampled > 0 && resampled < 256 * 32, "resampled={resampled}");
+    assert!(r.get("patched_rows").unwrap().as_usize().unwrap() > 0);
+
+    // Staleness guard: after the delta is acknowledged, predictions
+    // are computed from (and stamped with) the post-delta state.
+    let p1 = c.call(r#"{"op":"predict","nodes":[5],"samples":4}"#);
+    assert_eq!(p1.get("ok").unwrap().as_bool(), Some(true), "{p1:?}");
+    assert_eq!(p1.get("graph_version").unwrap().as_usize(), Some(1));
+
+    // remove_edge restores the ring; removing it again is an error.
+    let r = c.call(r#"{"op":"remove_edge","u":5,"v":130}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    assert_eq!(r.get("graph_version").unwrap().as_usize(), Some(2));
+    let bad = c.call(r#"{"op":"remove_edge","u":5,"v":130}"#);
+    assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+
+    // add_node grows the graph; the new node is immediately servable.
+    let r = c.call(r#"{"op":"add_node"}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    assert_eq!(r.get("node").unwrap().as_usize(), Some(256));
+    let p = c.call(r#"{"op":"predict","nodes":[256],"samples":4}"#);
+    assert_eq!(p.get("ok").unwrap().as_bool(), Some(true), "{p:?}");
+    assert!(p.get("mean").unwrap().as_arr().unwrap()[0]
+        .as_f64()
+        .unwrap()
+        .is_finite());
+
+    let s = c.call(r#"{"op":"stats"}"#);
+    assert_eq!(s.get("n_nodes").unwrap().as_usize(), Some(257));
+    assert_eq!(s.get("graph_version").unwrap().as_usize(), Some(3));
+    assert_eq!(s.get("deltas_applied").unwrap().as_usize(), Some(3));
+
+    c.call(r#"{"op":"shutdown"}"#);
+}
+
+#[test]
+fn mixed_write_traffic_coalesces_and_scatters_correctly() {
+    let addr = start_server(384);
+    // Concurrent clients: observes and graph deltas interleaved. Every
+    // client must get its own well-formed response, observation counts
+    // must add up, and all deltas must land.
+    let handles: Vec<_> = (0..8)
+        .map(|k| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                if k % 2 == 0 {
+                    // Observer client: 4 observations each.
+                    for j in 0..4 {
+                        let node = (k * 40 + j * 7) % 384;
+                        let r = c.call(&format!(
+                            r#"{{"op":"observe","node":{node},"y":{}}}"#,
+                            (node as f64 * 0.1).sin()
+                        ));
+                        assert_eq!(
+                            r.get("ok").unwrap().as_bool(),
+                            Some(true),
+                            "observer {k}: {r:?}"
+                        );
+                        assert!(r.get("n_obs").unwrap().as_usize().unwrap() >= 1);
+                    }
+                } else {
+                    // Mutator client: one edge toggle.
+                    let (u, v) = (k * 13 % 384, (k * 13 + 192) % 384);
+                    let r = c.call(&format!(
+                        r#"{{"op":"add_edge","u":{u},"v":{v},"w":0.4}}"#
+                    ));
+                    assert_eq!(
+                        r.get("ok").unwrap().as_bool(),
+                        Some(true),
+                        "mutator {k}: {r:?}"
+                    );
+                    assert!(r.get("graph_version").unwrap().as_usize().unwrap() >= 1);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut c = Client::connect(addr);
+    let s = c.call(r#"{"op":"stats"}"#);
+    assert_eq!(s.get("n_obs").unwrap().as_usize(), Some(16), "{s:?}");
+    assert_eq!(s.get("deltas_applied").unwrap().as_usize(), Some(4), "{s:?}");
+    assert_eq!(s.get("graph_version").unwrap().as_usize(), Some(4), "{s:?}");
+    // Post-delta predictions reflect every acknowledged delta.
+    let p = c.call(r#"{"op":"predict","nodes":[0,100],"samples":4}"#);
+    assert_eq!(p.get("ok").unwrap().as_bool(), Some(true), "{p:?}");
+    assert_eq!(p.get("graph_version").unwrap().as_usize(), Some(4));
     c.call(r#"{"op":"shutdown"}"#);
 }
