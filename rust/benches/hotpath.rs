@@ -31,6 +31,12 @@
 //! * `metric_*` rows — dimensionless end-task values in `ns_per_op`
 //!   (EllF32 LML-gradient deviation, final BO regret per layout), the
 //!   data behind the ROADMAP "f32-by-default" decision.
+//!
+//! PR 4 additions: `stream_delta_batch` vs `stream_delta_sequential` —
+//! 64 hub-incident edge deltas on a power-law (Barabási–Albert) graph
+//! through `StreamingFeatures::apply_delta_batch` (one union
+//! invalidation + parallel resample) vs 64 single-delta applies. Set
+//! `HOTPATH_PROFILE=quick` for the small-size CI profile (same schema).
 
 use grfgp::bo::{run_policy, BoConfig, ThompsonPolicy};
 use grfgp::gp::{GpModel, Hypers, Modulation};
@@ -57,9 +63,15 @@ fn main() {
     let mut rng = Rng::new(0);
     let threads = num_threads();
     let mut rows: Vec<BenchRow> = Vec::new();
-    println!("== hotpath microbenches (threads={threads}) ==");
+    // HOTPATH_PROFILE=quick: small sizes for the CI perf-trajectory
+    // profile (same row schema, minutes not tens of minutes).
+    let quick = std::env::var("HOTPATH_PROFILE")
+        .map(|v| v == "quick")
+        .unwrap_or(false);
+    let sizes: &[usize] = if quick { &[4096] } else { &[16_384, 131_072] };
+    println!("== hotpath microbenches (threads={threads}, quick={quick}) ==");
 
-    for &n in &[16_384usize, 131_072] {
+    for &n in sizes {
         let g = generators::ring(n);
         let cfg = WalkConfig { n_walks: 100, p_halt: 0.1, max_len: 3, ..Default::default() };
         let comps = sample_components(&g, &cfg, 1);
@@ -338,8 +350,96 @@ fn main() {
             0.0,
         ));
 
+        // --- Batched deltas on a power-law graph -----------------------
+        // 64 edge deltas incident to a handful of hubs: sequential
+        // application resamples each hub's (large) visitor set once per
+        // delta; the batch path resamples the union once, in parallel,
+        // and rebuilds each affected row once. This is the acceptance
+        // contrast for the batched delta engine (`apply_delta_batch` is
+        // property-tested bit-identical to both paths).
+        {
+            let mut brng = Rng::new(42);
+            let npl = (n / 4).max(2048);
+            let gpl = generators::barabasi_albert(npl, 3, &mut brng);
+            let cfgpl = WalkConfig {
+                n_walks: 32,
+                p_halt: 0.1,
+                max_len: 3,
+                ..Default::default()
+            };
+            let fpl = vec![1.0, 0.5, 0.25, 0.12];
+            let mut by_deg: Vec<usize> = (0..npl).collect();
+            by_deg.sort_by_key(|&i| std::cmp::Reverse(gpl.degree(i)));
+            let k_deltas = 64usize;
+            // Chords from 8 hubs to fresh non-neighbors: skipping
+            // existing edges keeps the add/undo cycle a true roundtrip
+            // (reinforcing an existing edge and then removing it would
+            // permanently delete it from the measured graph).
+            let mut vtx = npl / 2;
+            let adds: Vec<GraphDelta> = (0..k_deltas)
+                .map(|k| {
+                    let u = by_deg[k % 8];
+                    let mut v = vtx;
+                    while gpl.has_edge(u, v) || v == u {
+                        v += 1;
+                    }
+                    vtx = v + 1;
+                    GraphDelta::AddEdge { u, v, w: 0.5 }
+                })
+                .collect();
+            let undo: Vec<GraphDelta> = adds
+                .iter()
+                .rev()
+                .map(|d| match *d {
+                    GraphDelta::AddEdge { u, v, .. } => {
+                        GraphDelta::RemoveEdge { u, v }
+                    }
+                    _ => unreachable!(),
+                })
+                .collect();
+            let mut s_seq =
+                StreamingFeatures::new(gpl.clone(), cfgpl.clone(), fpl.clone(), 33);
+            let r = bench(
+                &format!("stream_delta_sequential/n={npl}/K={k_deltas}"),
+                1,
+                3,
+                || {
+                    for d in adds.iter().chain(&undo) {
+                        s_seq.apply_delta(d).unwrap();
+                    }
+                    s_seq.overlay_rows()
+                },
+            );
+            let seq_s = r.mean_s;
+            rows.push(BenchRow::new(
+                "stream_delta_sequential",
+                npl,
+                k_deltas,
+                seq_s,
+            ));
+            let mut s_bat =
+                StreamingFeatures::new(gpl.clone(), cfgpl.clone(), fpl, 33);
+            let r = bench(
+                &format!("stream_delta_batch/n={npl}/K={k_deltas}"),
+                1,
+                3,
+                || {
+                    s_bat.apply_delta_batch(&adds).unwrap();
+                    s_bat.apply_delta_batch(&undo).unwrap();
+                    s_bat.overlay_rows()
+                },
+            );
+            rows.push(BenchRow::new("stream_delta_batch", npl, k_deltas, r.mean_s));
+            println!(
+                "stream delta batch speedup (n={npl}, {k_deltas} deltas): {:.1}x",
+                seq_s / r.mean_s.max(1e-12)
+            );
+        }
+
         // --- End-task f32 metrics (ROADMAP: flip EllF32 by default?) --
-        if n == 16_384 {
+        // Gated on the profile's first size so the quick CI profile
+        // still emits the metric_* rows the trajectory tracks.
+        if n == sizes[0] {
             // Relative L2 deviation of the stochastic LML gradient
             // under the f32-valued operator (same probe stream).
             model.solve.layout = FeatureLayout::Auto;

@@ -94,6 +94,24 @@ pub struct DeltaOutcome {
     pub solve_stats: CgStats,
 }
 
+/// What [`GpModel::apply_graph_delta_batch`] did: one union feature
+/// patch + one warm re-solve shared by the whole batch, plus per-delta
+/// acks for the server protocol.
+#[derive(Clone, Debug)]
+pub struct BatchDeltaOutcome {
+    /// One ack per input delta, in order.
+    pub deltas: Vec<crate::stream::DeltaAck>,
+    /// Union of walks re-run (each exactly once, on the final graph).
+    pub resampled_walks: usize,
+    /// Feature rows rebuilt and patched (once per batch).
+    pub patched_rows: usize,
+    pub compacted: bool,
+    /// Refreshed α = H⁻¹ (m y) on the mutated graph — feed it back as
+    /// `warm` on the next delta or batch.
+    pub alpha: Vec<f64>,
+    pub solve_stats: CgStats,
+}
+
 /// Sparse GRF Gaussian process.
 pub struct GpModel {
     /// Cached walk components + union pattern for fast recombination.
@@ -129,6 +147,16 @@ pub struct GpModel {
     /// `model.solve.layout = …` assignment takes effect on the next
     /// operator application.
     ell_cache: std::cell::RefCell<Option<EllSelection>>,
+    /// Count of full Φ transposes taken (`transpose_par`) —
+    /// observability for the delta path, which patches Φᵀ by
+    /// column-scatter instead and must leave this untouched.
+    phi_transposes: std::cell::Cell<usize>,
+    /// Modulation coefficients Φ/Φᵀ were last combined under. The
+    /// delta path's partial recombination is only valid while this
+    /// matches the live hypers; a mismatch (hypers mutated without
+    /// `refresh_features`) falls back to a full refresh instead of
+    /// silently mixing two modulations.
+    phi_f: Vec<f64>,
 }
 
 /// (policy it was built under, Φ operand, Φᵀ operand).
@@ -163,7 +191,8 @@ impl GpModel {
             .map(|c| c.transpose_par(threads))
             .collect();
         let mut features = components.prepare();
-        let phi = features.combine_into(&hypers.modulation.coeffs()).clone();
+        let phi_f = hypers.modulation.coeffs();
+        let phi = features.combine_into(&phi_f).clone();
         let phi_t = phi.transpose_par(threads);
         GpModel {
             features,
@@ -182,7 +211,16 @@ impl GpModel {
             scratch_blk: std::cell::RefCell::new((Vec::new(), Vec::new())),
             jacobi_cache: std::cell::RefCell::new(None),
             ell_cache: std::cell::RefCell::new(None),
+            phi_transposes: std::cell::Cell::new(1),
+            phi_f,
         }
+    }
+
+    /// How many full Φ transposes (`transpose_par`) this model has run
+    /// (1 from the constructor, +1 per `refresh_features`). The graph
+    /// delta path patches Φᵀ incrementally and must not move this.
+    pub fn phi_transposes(&self) -> usize {
+        self.phi_transposes.get()
     }
 
     pub fn n(&self) -> usize {
@@ -201,6 +239,8 @@ impl GpModel {
         let f = self.hypers.modulation.coeffs();
         self.phi = self.features.combine_into(&f).clone();
         self.phi_t = self.phi.transpose_par(self.solve.effective_threads());
+        self.phi_transposes.set(self.phi_transposes.get() + 1);
+        self.phi_f = f;
         *self.jacobi_cache.borrow_mut() = None;
         *self.ell_cache.borrow_mut() = None;
     }
@@ -258,6 +298,34 @@ impl GpModel {
         delta: &GraphDelta,
         warm: Option<&[f64]>,
     ) -> Result<DeltaOutcome, String> {
+        let out = self.apply_graph_delta_batch(
+            stream,
+            std::slice::from_ref(delta),
+            warm,
+        )?;
+        Ok(DeltaOutcome {
+            resampled_walks: out.resampled_walks,
+            patched_rows: out.patched_rows,
+            added_node: out.deltas[0].added_node,
+            compacted: out.compacted,
+            alpha: out.alpha,
+            solve_stats: out.solve_stats,
+        })
+    }
+
+    /// Batched [`GpModel::apply_graph_delta`]: the stream applies the
+    /// whole batch with one union invalidation + parallel resample
+    /// ([`StreamingFeatures::apply_delta_batch`]), then the model pays
+    /// **one** union row patch, one incremental operator refresh, and
+    /// one warm re-solve for the entire batch. The post-batch model is
+    /// bit-identical to one built from scratch on the mutated graph
+    /// under the same per-walk seeds.
+    pub fn apply_graph_delta_batch(
+        &mut self,
+        stream: &mut StreamingFeatures,
+        deltas: &[GraphDelta],
+        warm: Option<&[f64]>,
+    ) -> Result<BatchDeltaOutcome, String> {
         if stream.n() != self.n() {
             return Err(format!(
                 "stream tracks {} nodes, model {} — not the same graph",
@@ -272,8 +340,16 @@ impl GpModel {
                 stream.config().max_len + 1
             ));
         }
-        let summary = stream.apply_delta(delta)?;
+        let summary = stream.apply_delta_batch(deltas)?;
         let n = stream.n();
+        // Old Φ row supports of the affected rows: the Φᵀ rows that
+        // must *drop* entries (gains are read off the patched Φ below).
+        let old_supports: Vec<(u32, Vec<u32>)> = summary
+            .affected_rows
+            .iter()
+            .filter(|&&r| (r as usize) < self.phi.n_rows)
+            .map(|&r| (r, self.phi.row(r as usize).0.to_vec()))
+            .collect();
         let mut patches: std::collections::BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>> =
             Default::default();
         for &r in &summary.affected_rows {
@@ -299,7 +375,23 @@ impl GpModel {
         // `lml_grad`; invalidate them here and rebuild lazily so the
         // serving-path delta cost stays independent of fitting.
         *self.c_t.borrow_mut() = None;
-        self.refresh_features();
+        // Incremental operator refresh: recombine only the patched Φ
+        // rows (the modulation is unchanged on the delta path, so every
+        // other slot already holds the current combination) and
+        // column-scatter them into Φᵀ — no `transpose_par` here. If the
+        // hypers were mutated without `refresh_features` the partial
+        // invariant is void: fall back to the full refresh rather than
+        // silently mixing two modulations.
+        let f = self.hypers.modulation.coeffs();
+        if f == self.phi_f {
+            self.features.recombine_rows(&f, &summary.affected_rows);
+            self.phi = self.features.current();
+            self.patch_phi_t(n, &summary.affected_rows, &old_supports);
+            *self.jacobi_cache.borrow_mut() = None;
+            *self.ell_cache.borrow_mut() = None;
+        } else {
+            self.refresh_features();
+        }
         let rhs: Vec<f64> =
             self.mask.iter().zip(&self.y).map(|(m, y)| m * y).collect();
         let x0: Option<Vec<f64>> = warm.map(|w| {
@@ -310,14 +402,79 @@ impl GpModel {
         });
         let (alpha, stats) = self.solve_system_block_warm(&rhs, 1, x0.as_deref());
         let solve_stats = stats.into_iter().next().expect("one column");
-        Ok(DeltaOutcome {
+        Ok(BatchDeltaOutcome {
+            deltas: summary.deltas,
             resampled_walks: summary.resampled.len(),
             patched_rows: summary.affected_rows.len(),
-            added_node: summary.added_node,
             compacted: summary.compacted,
             alpha,
             solve_stats,
         })
+    }
+
+    /// Column-scatter the changed Φ rows into Φᵀ. Changing Φ rows `R`
+    /// changes exactly the Φᵀ rows in `∪_r (old support ∪ new support)`:
+    /// each such row drops its entries with column ∈ R and merge-inserts
+    /// the fresh entries (sorted by source row, values copied), then one
+    /// [`Csr::with_replaced_rows`] pass splices them. Bitwise equal to
+    /// `phi.transpose_par(..)` — same per-row ordering (source rows
+    /// ascending), same value bits — at O(touched rows + nnz memcpy)
+    /// instead of a full two-pass counting sort.
+    fn patch_phi_t(
+        &mut self,
+        n: usize,
+        affected: &[u32],
+        old_supports: &[(u32, Vec<u32>)],
+    ) {
+        use std::collections::{BTreeMap, BTreeSet};
+        // Fresh entries of the affected rows, bucketed per column j.
+        // `affected` is sorted ascending, so each bucket comes out
+        // sorted by source row.
+        let mut adds: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = BTreeMap::new();
+        for &r in affected {
+            let (cols, vals) = self.phi.row(r as usize);
+            for (c, v) in cols.iter().zip(vals) {
+                let e = adds.entry(*c).or_default();
+                e.0.push(r);
+                e.1.push(*v);
+            }
+        }
+        let mut touched: BTreeSet<u32> = adds.keys().copied().collect();
+        for (_, cols) in old_supports {
+            touched.extend(cols.iter().copied());
+        }
+        let empty = (Vec::new(), Vec::new());
+        let mut patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = BTreeMap::new();
+        for &j in &touched {
+            let (oc, ov) = if (j as usize) < self.phi_t.n_rows {
+                self.phi_t.row(j as usize)
+            } else {
+                (&[][..], &[][..])
+            };
+            let (ac, av) = adds.get(&j).unwrap_or(&empty);
+            let mut cols = Vec::with_capacity(oc.len() + ac.len());
+            let mut vals = Vec::with_capacity(oc.len() + ac.len());
+            let mut ai = 0;
+            for (c, v) in oc.iter().zip(ov) {
+                if affected.binary_search(c).is_ok() {
+                    continue; // this column's Φ row was rebuilt: drop
+                }
+                while ai < ac.len() && ac[ai] < *c {
+                    cols.push(ac[ai]);
+                    vals.push(av[ai]);
+                    ai += 1;
+                }
+                cols.push(*c);
+                vals.push(*v);
+            }
+            while ai < ac.len() {
+                cols.push(ac[ai]);
+                vals.push(av[ai]);
+                ai += 1;
+            }
+            patches.insert(j, (cols, vals));
+        }
+        self.phi_t = self.phi_t.with_replaced_rows(n, n, &patches);
     }
 
     // ------------------------------------------------------------------
@@ -1154,6 +1311,167 @@ mod tests {
             .apply_graph_delta(&mut other, &GraphDelta::AddNode, None)
             .is_err());
         assert_eq!(model.n(), 26);
+    }
+
+    #[test]
+    fn apply_graph_delta_patches_phi_t_without_transpose() {
+        use crate::stream::{GraphDelta, StreamingFeatures};
+        let g = generators::grid2d(5, 5);
+        let cfg = WalkConfig { n_walks: 30, max_len: 4, threads: 1, ..Default::default() };
+        let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 4), 0.1);
+        let mut stream = StreamingFeatures::new(
+            g,
+            cfg.clone(),
+            hypers.modulation.coeffs(),
+            5,
+        );
+        let train: Vec<usize> = (0..25).step_by(4).collect();
+        let y: Vec<f64> =
+            train.iter().map(|&i| (i as f64 * 0.2).cos()).collect();
+        let mut model =
+            GpModel::new(stream.components(), hypers, &train, &y);
+        let transposes_before = model.phi_transposes();
+        for delta in [
+            GraphDelta::AddEdge { u: 1, v: 14, w: 0.6 },
+            GraphDelta::AddNode,
+            GraphDelta::AddEdge { u: 25, v: 2, w: 0.3 },
+            GraphDelta::RemoveEdge { u: 1, v: 14 },
+            GraphDelta::AddEdge { u: 7, v: 7, w: 0.8 }, // self-loop
+        ] {
+            let out = model
+                .apply_graph_delta(&mut stream, &delta, None)
+                .unwrap();
+            assert!(out.solve_stats.converged, "{delta:?}: {:?}", out.solve_stats);
+            // The incrementally patched Φᵀ must be bitwise the full
+            // transpose of the patched Φ...
+            assert!(
+                model.phi_t == model.phi.transpose(),
+                "{delta:?}: patched Φᵀ != transpose(Φ)"
+            );
+        }
+        // ...without ever running a full transpose on the delta path.
+        assert_eq!(
+            model.phi_transposes(),
+            transposes_before,
+            "delta path ran transpose_par"
+        );
+    }
+
+    #[test]
+    fn delta_after_unrefreshed_hypers_change_falls_back_to_full_refresh() {
+        use crate::stream::{GraphDelta, StreamingFeatures};
+        let g = generators::grid2d(4, 4);
+        let cfg = WalkConfig { n_walks: 20, max_len: 4, threads: 1, ..Default::default() };
+        let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 4), 0.1);
+        let mut stream = StreamingFeatures::new(
+            g,
+            cfg,
+            hypers.modulation.coeffs(),
+            3,
+        );
+        let train = vec![0usize, 5, 10];
+        let y = vec![0.3, -0.2, 0.8];
+        let mut model = GpModel::new(stream.components(), hypers, &train, &y);
+        // Mutate the public hypers WITHOUT refresh_features: the delta
+        // path must detect the stale combination and do a full refresh
+        // (one transpose) instead of mixing two modulations.
+        let mut p = model.hypers.params();
+        p[0] += 0.25;
+        model.hypers.set_params(&p);
+        let before = model.phi_transposes();
+        model
+            .apply_graph_delta(
+                &mut stream,
+                &GraphDelta::AddEdge { u: 1, v: 10, w: 0.5 },
+                None,
+            )
+            .unwrap();
+        assert_eq!(model.phi_transposes(), before + 1, "fallback must refresh");
+        // Φ/Φᵀ are coherent under the NEW modulation.
+        let expect = model
+            .features
+            .combine_into(&model.hypers.modulation.coeffs())
+            .clone();
+        assert!(model.phi == expect, "Φ must be the new-modulation combination");
+        assert!(model.phi_t == model.phi.transpose());
+        // Subsequent deltas take the incremental path again.
+        let before = model.phi_transposes();
+        model
+            .apply_graph_delta(
+                &mut stream,
+                &GraphDelta::AddEdge { u: 2, v: 9, w: 0.4 },
+                None,
+            )
+            .unwrap();
+        assert_eq!(model.phi_transposes(), before, "incremental path restored");
+        assert!(model.phi_t == model.phi.transpose());
+    }
+
+    #[test]
+    fn apply_graph_delta_batch_matches_rebuilt_model_bitwise() {
+        use crate::stream::{GraphDelta, StreamingFeatures};
+        let g = generators::grid2d(5, 5);
+        let cfg = WalkConfig { n_walks: 40, max_len: 4, threads: 2, ..Default::default() };
+        let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 4), 0.1);
+        let mut stream = StreamingFeatures::new(
+            g,
+            cfg.clone(),
+            hypers.modulation.coeffs(),
+            9,
+        );
+        let train: Vec<usize> = (0..25).step_by(3).collect();
+        let y: Vec<f64> =
+            train.iter().map(|&i| (i as f64 * 0.3).sin()).collect();
+        let mut model =
+            GpModel::new(stream.components(), hypers.clone(), &train, &y);
+        let rhs0: Vec<f64> =
+            model.mask.iter().zip(&model.y).map(|(m, y)| m * y).collect();
+        let (alpha0, _) = model.solve_system(&rhs0);
+        let deltas = vec![
+            GraphDelta::AddEdge { u: 0, v: 12, w: 0.8 },
+            GraphDelta::AddEdge { u: 3, v: 19, w: 0.5 },
+            GraphDelta::AddNode,
+            GraphDelta::AddEdge { u: 25, v: 6, w: 0.4 },
+            GraphDelta::RemoveEdge { u: 0, v: 12 },
+            GraphDelta::AddEdge { u: 11, v: 11, w: 0.7 }, // self-loop
+        ];
+        let out = model
+            .apply_graph_delta_batch(&mut stream, &deltas, Some(&alpha0))
+            .unwrap();
+        assert!(out.solve_stats.converged, "{:?}", out.solve_stats);
+        assert_eq!(out.deltas.len(), deltas.len(), "one ack per delta");
+        assert_eq!(out.deltas[2].added_node, Some(25));
+        assert!(out.patched_rows > 0);
+        assert_eq!(model.n(), 26);
+        // Reference: a model built from scratch on the mutated graph
+        // under the same per-walk seeds — posterior bitwise equal.
+        let full = StreamingFeatures::new(
+            stream.graph().clone(),
+            cfg,
+            hypers.modulation.coeffs(),
+            9,
+        );
+        let model2 = GpModel::new(full.components(), hypers, &train, &y);
+        let (m1, s1) = model.posterior_mean();
+        let (m2, s2) = model2.posterior_mean();
+        assert_eq!(s1.iterations, s2.iterations);
+        assert!(m1 == m2, "batched model must match rebuilt model bitwise");
+        assert!(model.phi_t == model.phi.transpose());
+        // A failing batch (validation) leaves model and stream intact.
+        let n_before = model.n();
+        assert!(model
+            .apply_graph_delta_batch(
+                &mut stream,
+                &[
+                    GraphDelta::AddEdge { u: 0, v: 1, w: 0.5 },
+                    GraphDelta::AddEdge { u: 0, v: 9999, w: 0.5 },
+                ],
+                None,
+            )
+            .is_err());
+        assert_eq!(model.n(), n_before);
+        let (m3, _) = model.posterior_mean();
+        assert!(m3 == m1, "failed batch must not move the model");
     }
 
     #[test]

@@ -4,19 +4,61 @@ pub mod generators;
 pub mod io;
 pub mod stats;
 
-/// Undirected weighted graph in CSR (compressed sparse row) form.
+/// Undirected weighted graph in CSR (compressed sparse row) form with a
+/// staged per-row edge buffer for mutations.
 ///
 /// Both directions of every undirected edge are stored, so `neighbors(i)`
 /// is a single contiguous slice. Node ids are `u32` (graphs up to ~4B
 /// nodes; the paper's largest is 1.13M).
+///
+/// ## Per-row edge buffer (streaming mutations)
+///
+/// A structural `add_edge`/`remove_edge` does **not** splice the global
+/// CSR arrays (that costs O(N + nnz) in offset shifts and `Vec::insert`
+/// moves). Instead the touched row is *staged*: its full sorted content
+/// is copied out once (copy-on-write, O(deg)) into [`Graph::staged`],
+/// and further mutations of that row edit the staged copy in place
+/// (O(deg) per insert/remove after an O(log deg) search). Invariants:
+///
+/// * a staged row always holds the row's **complete** current adjacency,
+///   sorted by target with duplicates merged — exactly the canonical
+///   CSR row shape — so every read path returns contiguous slices with
+///   identical content and ordering to a freshly built CSR (walk
+///   determinism depends on that ordering);
+/// * the base CSR arrays keep the *pre-staging* content of staged rows
+///   (dead storage until [`Graph::compact`]); all accessors route
+///   through [`Graph::row`], which prefers the staged copy;
+/// * `n_directed` tracks the live directed-entry count across base +
+///   staged rows (`targets.len()` whenever no row is staged);
+/// * weight-only reinforcement of an existing entry mutates in place
+///   (base or staged) — no staging needed, the structure is unchanged.
+///
+/// [`Graph::compact`] folds the staged rows back into one canonical CSR
+/// in a single O(nnz) pass; the streaming subsystem calls it alongside
+/// its own feature-overlay compaction.
 #[derive(Clone, Debug)]
 pub struct Graph {
-    /// Row pointer, length n+1.
+    /// Row pointer, length n+1 (base CSR; see the staging invariants).
     pub offsets: Vec<usize>,
-    /// Column indices (neighbor ids), length 2|E|.
+    /// Column indices (neighbor ids), length 2|E| of the base CSR.
     pub targets: Vec<u32>,
     /// Edge weights, parallel to `targets`.
     pub weights: Vec<f64>,
+    /// Staged copy-on-write rows: node id → full sorted row content,
+    /// overriding the base CSR row until the next `compact()`.
+    staged: std::collections::BTreeMap<u32, StagedRow>,
+    /// Live directed entries across base + staged rows.
+    n_directed: usize,
+    /// Live self-loop entries (stored once each) — keeps `num_edges`
+    /// O(1) instead of an O(N) per-node scan.
+    n_self_loops: usize,
+}
+
+/// One staged adjacency row (full sorted content, see [`Graph`] docs).
+#[derive(Clone, Debug, Default)]
+struct StagedRow {
+    targets: Vec<u32>,
+    weights: Vec<f64>,
 }
 
 impl Graph {
@@ -49,7 +91,14 @@ impl Graph {
                 cursor[b as usize] += 1;
             }
         }
-        let mut g = Graph { offsets, targets, weights };
+        let mut g = Graph {
+            offsets,
+            targets,
+            weights,
+            staged: std::collections::BTreeMap::new(),
+            n_directed: 0,
+            n_self_loops: 0,
+        };
         g.sort_and_merge_duplicates();
         g
     }
@@ -62,6 +111,7 @@ impl Graph {
         let mut new_targets = Vec::with_capacity(self.targets.len());
         let mut new_weights = Vec::with_capacity(self.weights.len());
         let mut row: Vec<(u32, f64)> = Vec::new();
+        let mut self_loops = 0usize;
         for i in 0..n {
             row.clear();
             let (s, e) = (self.offsets[i], self.offsets[i + 1]);
@@ -77,6 +127,9 @@ impl Graph {
                     w += row[j].1;
                     j += 1;
                 }
+                if t as usize == i {
+                    self_loops += 1;
+                }
                 new_targets.push(t);
                 new_weights.push(w);
             }
@@ -85,35 +138,49 @@ impl Graph {
         self.offsets = new_offsets;
         self.targets = new_targets;
         self.weights = new_weights;
+        self.n_directed = self.targets.len();
+        self.n_self_loops = self_loops;
     }
 
     pub fn num_nodes(&self) -> usize {
         self.offsets.len() - 1
     }
 
-    /// Number of undirected edges (self-loops count once).
+    /// Number of undirected edges (self-loops count once). O(1): both
+    /// counters are maintained across mutations, so the server stats
+    /// path never scans the rows under the model lock.
     pub fn num_edges(&self) -> usize {
-        let directed = self.targets.len();
-        let self_loops = (0..self.num_nodes())
-            .map(|i| self.neighbors(i).iter().filter(|&&t| t as usize == i).count())
-            .sum::<usize>();
-        (directed - self_loops) / 2 + self_loops
+        (self.n_directed - self.n_self_loops) / 2 + self.n_self_loops
+    }
+
+    /// Adjacency row of node `i`: `(targets, weights)`, sorted by
+    /// target. Prefers the staged copy (see the struct docs) so every
+    /// reader sees the post-mutation row without a CSR splice.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        if !self.staged.is_empty() {
+            if let Some(s) = self.staged.get(&(i as u32)) {
+                return (&s.targets, &s.weights);
+            }
+        }
+        let (a, b) = (self.offsets[i], self.offsets[i + 1]);
+        (&self.targets[a..b], &self.weights[a..b])
     }
 
     #[inline]
     pub fn neighbors(&self, i: usize) -> &[u32] {
-        &self.targets[self.offsets[i]..self.offsets[i + 1]]
+        self.row(i).0
     }
 
     #[inline]
     pub fn neighbor_weights(&self, i: usize) -> &[f64] {
-        &self.weights[self.offsets[i]..self.offsets[i + 1]]
+        self.row(i).1
     }
 
     /// Unweighted degree of node i.
     #[inline]
     pub fn degree(&self, i: usize) -> usize {
-        self.offsets[i + 1] - self.offsets[i]
+        self.row(i).0.len()
     }
 
     /// Weighted degree (row sum of W).
@@ -129,11 +196,13 @@ impl Graph {
         if self.num_nodes() == 0 {
             return 0.0;
         }
-        self.targets.len() as f64 / self.num_nodes() as f64
+        self.n_directed as f64 / self.num_nodes() as f64
     }
 
     pub fn max_edge_weight(&self) -> f64 {
-        self.weights.iter().cloned().fold(0.0, f64::max)
+        (0..self.num_nodes())
+            .flat_map(|i| self.neighbor_weights(i).iter().cloned())
+            .fold(0.0, f64::max)
     }
 
     /// Dense adjacency matrix (for small-N exact baselines / tests).
@@ -167,15 +236,40 @@ impl Graph {
         for w in &mut self.weights {
             *w *= factor;
         }
+        for s in self.staged.values_mut() {
+            for w in &mut s.weights {
+                *w *= factor;
+            }
+        }
     }
 
-    /// Check structural invariants (CSR sorted, symmetric). Test helper.
+    /// Check structural invariants (CSR sorted, symmetric, staged-row
+    /// bookkeeping). Test helper.
     pub fn validate(&self) -> Result<(), String> {
         let n = self.num_nodes();
         if *self.offsets.last().unwrap() != self.targets.len()
             || self.targets.len() != self.weights.len()
         {
             return Err("offsets/targets/weights inconsistent".into());
+        }
+        if let Some(&k) = self.staged.keys().next_back() {
+            if k as usize >= n {
+                return Err(format!("staged row {k} out of range (n={n})"));
+            }
+        }
+        let live: usize = (0..n).map(|i| self.degree(i)).sum();
+        if live != self.n_directed {
+            return Err(format!(
+                "n_directed {} != live entry count {live}",
+                self.n_directed
+            ));
+        }
+        let loops = (0..n).filter(|&i| self.has_entry(i, i)).count();
+        if loops != self.n_self_loops {
+            return Err(format!(
+                "n_self_loops {} != live self-loop count {loops}",
+                self.n_self_loops
+            ));
         }
         for i in 0..n {
             let nb = self.neighbors(i);
@@ -216,30 +310,75 @@ impl Graph {
 
     /// Insert `(col, w)` into row `row` keeping the row sorted; if the
     /// entry exists, sum the weight (matching `from_edges` duplicate
-    /// merging). Degree bookkeeping = the offsets shift of rows > row.
+    /// merging). A structural insert stages the row (copy-on-write, see
+    /// the struct docs) instead of splicing the global CSR: O(deg) per
+    /// mutation, not O(N + nnz).
     fn upsert_entry(&mut self, row: usize, col: u32, w: f64) {
-        let (s, e) = (self.offsets[row], self.offsets[row + 1]);
-        match self.targets[s..e].binary_search(&col) {
-            Ok(k) => self.weights[s + k] += w,
+        if let Some(s) = self.staged.get_mut(&(row as u32)) {
+            match s.targets.binary_search(&col) {
+                Ok(k) => s.weights[k] += w,
+                Err(k) => {
+                    s.targets.insert(k, col);
+                    s.weights.insert(k, w);
+                    self.n_directed += 1;
+                    if row as u32 == col {
+                        self.n_self_loops += 1;
+                    }
+                }
+            }
+            return;
+        }
+        let (a, b) = (self.offsets[row], self.offsets[row + 1]);
+        match self.targets[a..b].binary_search(&col) {
+            // Weight-only reinforcement: structure unchanged, edit the
+            // base entry in place (no staging needed).
+            Ok(k) => self.weights[a + k] += w,
             Err(k) => {
-                self.targets.insert(s + k, col);
-                self.weights.insert(s + k, w);
-                for o in &mut self.offsets[row + 1..] {
-                    *o += 1;
+                let mut s = StagedRow {
+                    targets: self.targets[a..b].to_vec(),
+                    weights: self.weights[a..b].to_vec(),
+                };
+                s.targets.insert(k, col);
+                s.weights.insert(k, w);
+                self.staged.insert(row as u32, s);
+                self.n_directed += 1;
+                if row as u32 == col {
+                    self.n_self_loops += 1;
                 }
             }
         }
     }
 
     /// Remove `(col, _)` from row `row`; returns false if absent.
+    /// Structural removals stage the row like [`Graph::upsert_entry`].
     fn remove_entry(&mut self, row: usize, col: u32) -> bool {
-        let (s, e) = (self.offsets[row], self.offsets[row + 1]);
-        match self.targets[s..e].binary_search(&col) {
+        if let Some(s) = self.staged.get_mut(&(row as u32)) {
+            return match s.targets.binary_search(&col) {
+                Ok(k) => {
+                    s.targets.remove(k);
+                    s.weights.remove(k);
+                    self.n_directed -= 1;
+                    if row as u32 == col {
+                        self.n_self_loops -= 1;
+                    }
+                    true
+                }
+                Err(_) => false,
+            };
+        }
+        let (a, b) = (self.offsets[row], self.offsets[row + 1]);
+        match self.targets[a..b].binary_search(&col) {
             Ok(k) => {
-                self.targets.remove(s + k);
-                self.weights.remove(s + k);
-                for o in &mut self.offsets[row + 1..] {
-                    *o -= 1;
+                let mut s = StagedRow {
+                    targets: self.targets[a..b].to_vec(),
+                    weights: self.weights[a..b].to_vec(),
+                };
+                s.targets.remove(k);
+                s.weights.remove(k);
+                self.staged.insert(row as u32, s);
+                self.n_directed -= 1;
+                if row as u32 == col {
+                    self.n_self_loops -= 1;
                 }
                 true
             }
@@ -247,10 +386,45 @@ impl Graph {
         }
     }
 
+    /// Number of rows currently held in the staged edge buffer.
+    pub fn staged_rows(&self) -> usize {
+        self.staged.len()
+    }
+
+    /// Fold the staged rows back into one canonical CSR (single O(nnz)
+    /// pass) and clear the buffer. The streaming subsystem calls this
+    /// alongside its feature-overlay compaction; reads are identical
+    /// before and after.
+    pub fn compact(&mut self) {
+        if self.staged.is_empty() {
+            return;
+        }
+        let n = self.num_nodes();
+        let staged = std::mem::take(&mut self.staged);
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0usize);
+        let mut targets = Vec::with_capacity(self.n_directed);
+        let mut weights = Vec::with_capacity(self.n_directed);
+        for i in 0..n {
+            if let Some(s) = staged.get(&(i as u32)) {
+                targets.extend_from_slice(&s.targets);
+                weights.extend_from_slice(&s.weights);
+            } else {
+                let (a, b) = (self.offsets[i], self.offsets[i + 1]);
+                targets.extend_from_slice(&self.targets[a..b]);
+                weights.extend_from_slice(&self.weights[a..b]);
+            }
+            offsets.push(targets.len());
+        }
+        self.offsets = offsets;
+        self.targets = targets;
+        self.weights = weights;
+        debug_assert_eq!(self.n_directed, self.targets.len());
+    }
+
     /// Add (or reinforce: weights sum, as in `from_edges`) the
     /// undirected edge (u, v). Self-loops store a single directed
-    /// entry. O(N + E) worst case for the CSR splice — the cost the
-    /// streaming subsystem amortises is the *walk resample*, not this.
+    /// entry. O(deg + log deg) via the staged per-row edge buffer.
     pub fn add_edge(&mut self, u: usize, v: usize, w: f64) {
         let n = self.num_nodes();
         assert!(u < n && v < n, "add_edge out of range");
@@ -279,6 +453,13 @@ impl Graph {
     /// Structural presence of entry (i, j) regardless of weight value.
     fn has_entry(&self, i: usize, j: usize) -> bool {
         self.neighbors(i).binary_search(&(j as u32)).is_ok()
+    }
+
+    /// Structural presence of the undirected edge (u, v) — what
+    /// [`Graph::remove_edge`] checks before removing. Public so batch
+    /// validators can pre-check a delta sequence without mutating.
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.has_entry(u, v)
     }
 }
 
@@ -343,6 +524,11 @@ mod tests {
         g.add_edge(0, 3, 0.5);
         g.add_edge(0, 1, 0.25); // reinforce: weights sum
         g.validate().unwrap();
+        // Structural inserts stage their rows instead of splicing.
+        assert!(g.staged_rows() > 0);
+        g.compact();
+        assert_eq!(g.staged_rows(), 0);
+        g.validate().unwrap();
         let want = Graph::from_edges(
             4,
             &[(0, 1, 1.25), (1, 2, 2.0), (0, 3, 0.5)],
@@ -358,6 +544,50 @@ mod tests {
         assert_eq!(g.degree(3), 0);
         assert_eq!(g.degree(0), 1);
         g.validate().unwrap();
+    }
+
+    #[test]
+    fn staged_buffer_reads_match_compacted() {
+        // Property: after any interleaving of mutations, every accessor
+        // answers identically before and after compact(), and the
+        // compacted CSR equals the batch constructor on the final edges.
+        let mut g = Graph::from_edges(
+            6,
+            &[(0, 1, 1.0), (1, 2, 0.5), (2, 3, 2.0), (4, 4, 0.25)],
+        );
+        g.add_edge(0, 5, 0.7);
+        g.add_edge(3, 3, 1.5); // staged self-loop
+        assert!(g.remove_edge(1, 2));
+        g.add_edge(0, 1, 0.5); // weight-only: no staging of row 0's entry
+        let before: Vec<(Vec<u32>, Vec<f64>, f64)> = (0..6)
+            .map(|i| {
+                (
+                    g.neighbors(i).to_vec(),
+                    g.neighbor_weights(i).to_vec(),
+                    g.weighted_degree(i),
+                )
+            })
+            .collect();
+        let (ne, avg) = (g.num_edges(), g.avg_degree());
+        g.validate().unwrap();
+        g.compact();
+        g.validate().unwrap();
+        for (i, (nb, wt, wd)) in before.iter().enumerate() {
+            assert_eq!(g.neighbors(i), &nb[..], "row {i} targets");
+            assert_eq!(g.neighbor_weights(i), &wt[..], "row {i} weights");
+            assert!((g.weighted_degree(i) - wd).abs() < 1e-12);
+        }
+        assert_eq!(g.num_edges(), ne);
+        assert!((g.avg_degree() - avg).abs() < 1e-12);
+        let want = Graph::from_edges(
+            6,
+            &[(0, 1, 1.5), (2, 3, 2.0), (4, 4, 0.25), (0, 5, 0.7), (3, 3, 1.5)],
+        );
+        assert_eq!(g.offsets, want.offsets);
+        assert_eq!(g.targets, want.targets);
+        for (a, b) in g.weights.iter().zip(&want.weights) {
+            assert!((a - b).abs() < 1e-12);
+        }
     }
 
     #[test]

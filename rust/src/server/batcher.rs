@@ -210,10 +210,18 @@ struct WriteSlot {
 
 /// Micro-batcher: the first request of a class in a window opens a
 /// batch; compatible requests arriving while it is pending join it.
-/// `max_batch` bounds the union size of a predict batch and the length
-/// of a write batch.
+/// `max_batch` bounds the **participant count** of a predict batch and
+/// the length of a write batch; `max_union_nodes` independently bounds
+/// the union node count of a predict batch (the size of the shared
+/// solve — without it, `max_batch` many-node requests could build an
+/// unboundedly large batched predict).
 pub struct Batcher {
     max_batch: usize,
+    /// Cap on `Σ |nodes|` across a predict batch's participants.
+    max_union_nodes: usize,
+    /// Upper bound on waiting for a leader's results; also the age past
+    /// which a published `done` entry can have no live claimant.
+    result_timeout: Duration,
     predicts: Mutex<PredictSlot>,
     pcv: Condvar,
     writes: Mutex<WriteSlot>,
@@ -222,13 +230,25 @@ pub struct Batcher {
 
 /// How long a joiner waits for stragglers before taking leadership.
 const BATCH_WINDOW: Duration = Duration::from_millis(2);
-/// Upper bound on waiting for a leader's results.
+/// Default upper bound on waiting for a leader's results.
 const RESULT_TIMEOUT: Duration = Duration::from_secs(30);
 
 impl Batcher {
     pub fn new(max_batch: usize) -> Batcher {
+        Batcher::with_limits(max_batch, max_batch * 64, RESULT_TIMEOUT)
+    }
+
+    /// Construct with explicit caps — tests shrink `result_timeout` to
+    /// exercise the stale-entry sweeps without 30s waits.
+    pub fn with_limits(
+        max_batch: usize,
+        max_union_nodes: usize,
+        result_timeout: Duration,
+    ) -> Batcher {
         Batcher {
             max_batch,
+            max_union_nodes,
+            result_timeout,
             predicts: Mutex::new(PredictSlot {
                 next_gen: 0,
                 pending: None,
@@ -308,31 +328,9 @@ impl Batcher {
         }
         // Join the pending batch if compatible, open one if none is
         // pending; an incompatible pending batch (different samples
-        // key, or full) is left intact and this request runs solo.
-        let joined = {
-            let mut slot = self.predicts.lock().unwrap();
-            match slot.pending.as_mut() {
-                Some(b) if b.key == key && b.spans.len() < self.max_batch => {
-                    let span = (b.nodes.len(), nodes.len());
-                    b.nodes.extend_from_slice(&nodes);
-                    b.spans.push(span);
-                    Some((b.generation, span))
-                }
-                Some(_) => None,
-                None => {
-                    let generation = slot.next_gen;
-                    slot.next_gen += 1;
-                    let span = (0, nodes.len());
-                    slot.pending = Some(PendingPredict {
-                        generation,
-                        key,
-                        nodes: nodes.clone(),
-                        spans: vec![span],
-                    });
-                    Some((generation, span))
-                }
-            }
-        };
+        // key, participant cap, or union-size cap) is left intact and
+        // this request runs solo.
+        let joined = self.join_predict(&nodes, key);
         let Some((generation, span)) = joined else {
             // Solo slow path (blocking lock).
             let mut ms = state.model.lock().unwrap();
@@ -366,9 +364,11 @@ impl Batcher {
             // Bounded-stale sweep: a participant that timed out never
             // claims its span, so its entry could linger — drop entries
             // older than the claim deadline (no live claimant remains;
-            // claimants' deadlines start before publication).
+            // claimants' deadlines start before publication). The claim
+            // path runs the same sweep, covering quiescent traffic.
+            let timeout = self.result_timeout;
             slot.done
-                .retain(|_, d| d.published.elapsed() < RESULT_TIMEOUT);
+                .retain(|_, d| d.published.elapsed() < timeout);
             slot.done.insert(
                 b.generation,
                 PredictDone {
@@ -383,10 +383,70 @@ impl Batcher {
             drop(slot);
             self.pcv.notify_all();
         }
-        // Claim this request's span of the published results (hard
-        // deadline — spurious wakeups from other batches must not
-        // restart the clock).
-        let deadline = std::time::Instant::now() + RESULT_TIMEOUT;
+        match self.claim_predict(generation, span) {
+            Some((m, v, parts, version)) => {
+                state.requests_served.fetch_add(1, Ordering::Relaxed);
+                Self::predict_response(&m, &v, parts, version)
+            }
+            None => Response::error("predict batch timed out"),
+        }
+    }
+
+    /// Join (or open) the pending predict batch. Returns the
+    /// `(generation, span)` ticket, or `None` when the pending batch is
+    /// incompatible: different `samples` key, participant count at
+    /// `max_batch`, or the union node count would exceed
+    /// `max_union_nodes`.
+    fn join_predict(
+        &self,
+        nodes: &[usize],
+        key: usize,
+    ) -> Option<(u64, (usize, usize))> {
+        let mut slot = self.predicts.lock().unwrap();
+        match slot.pending.as_mut() {
+            Some(b)
+                if b.key == key
+                    && b.spans.len() < self.max_batch
+                    && b.nodes.len() + nodes.len() <= self.max_union_nodes =>
+            {
+                let span = (b.nodes.len(), nodes.len());
+                b.nodes.extend_from_slice(nodes);
+                b.spans.push(span);
+                Some((b.generation, span))
+            }
+            Some(_) => None,
+            None => {
+                let generation = slot.next_gen;
+                slot.next_gen += 1;
+                let span = (0, nodes.len());
+                slot.pending = Some(PendingPredict {
+                    generation,
+                    key,
+                    nodes: nodes.to_vec(),
+                    spans: vec![span],
+                });
+                Some((generation, span))
+            }
+        }
+    }
+
+    /// Wait for and claim this participant's span of the published
+    /// results (hard deadline — spurious wakeups from other batches
+    /// must not restart the clock). After a *failed* lookup, each
+    /// wakeup also sweeps `done` entries older than `result_timeout`:
+    /// the publish-path sweep only runs when a later leader publishes,
+    /// so under quiescent traffic a timed-out participant's entry
+    /// would otherwise linger forever. The own-generation lookup comes
+    /// **before** the sweep so a claimant descheduled past the timeout
+    /// still collects its published result instead of evicting it;
+    /// sweeping other entries is safe because their claimants'
+    /// deadlines started before publication.
+    fn claim_predict(
+        &self,
+        generation: u64,
+        span: (usize, usize),
+    ) -> Option<(Vec<f64>, Vec<f64>, usize, u64)> {
+        let deadline = std::time::Instant::now() + self.result_timeout;
         let mut slot = self.predicts.lock().unwrap();
         loop {
             if let Some(done) = slot.done.get_mut(&generation) {
@@ -399,14 +459,13 @@ impl Batcher {
                 if done.claimed >= parts {
                     slot.done.remove(&generation);
                 }
-                state
-                    .requests_served
-                    .fetch_add(1, Ordering::Relaxed);
-                return Self::predict_response(&m, &v, parts, version);
+                return Some((m, v, parts, version));
             }
+            let timeout = self.result_timeout;
+            slot.done.retain(|_, d| d.published.elapsed() < timeout);
             let now = std::time::Instant::now();
             if now >= deadline {
-                return Response::error("predict batch timed out");
+                return None;
             }
             let (g, _) = self.pcv.wait_timeout(slot, deadline - now).unwrap();
             slot = g;
@@ -477,8 +536,9 @@ impl Batcher {
                 ms.apply_writes(&b.reqs, state)
             };
             let mut slot = self.writes.lock().unwrap();
+            let timeout = self.result_timeout;
             slot.done
-                .retain(|_, d| d.published.elapsed() < RESULT_TIMEOUT);
+                .retain(|_, d| d.published.elapsed() < timeout);
             slot.done.insert(
                 b.generation,
                 WriteDone {
@@ -490,7 +550,19 @@ impl Batcher {
             drop(slot);
             self.wcv.notify_all();
         }
-        let deadline = std::time::Instant::now() + RESULT_TIMEOUT;
+        match self.claim_write(generation, idx) {
+            Some(resp) => {
+                state.requests_served.fetch_add(1, Ordering::Relaxed);
+                resp
+            }
+            None => Response::error("write batch timed out"),
+        }
+    }
+
+    /// Write-side twin of [`Batcher::claim_predict`]: own-generation
+    /// lookup first, stale-entry sweep after each failed lookup.
+    fn claim_write(&self, generation: u64, idx: usize) -> Option<Response> {
+        let deadline = std::time::Instant::now() + self.result_timeout;
         let mut slot = self.writes.lock().unwrap();
         loop {
             if let Some(done) = slot.done.get_mut(&generation) {
@@ -505,14 +577,13 @@ impl Batcher {
                 if done.claimed >= done.results.len() {
                     slot.done.remove(&generation);
                 }
-                state
-                    .requests_served
-                    .fetch_add(1, Ordering::Relaxed);
-                return resp;
+                return Some(resp);
             }
+            let timeout = self.result_timeout;
+            slot.done.retain(|_, d| d.published.elapsed() < timeout);
             let now = std::time::Instant::now();
             if now >= deadline {
-                return Response::error("write batch timed out");
+                return None;
             }
             let (g, _) = self.wcv.wait_timeout(slot, deadline - now).unwrap();
             slot = g;
@@ -565,6 +636,117 @@ mod tests {
         );
         assert!(Request::parse(r#"{"op":"add_edge","u":1}"#).is_err());
         assert!(Request::parse(r#"{"op":"remove_edge","v":1}"#).is_err());
+    }
+
+    #[test]
+    fn predict_join_caps_participants_and_union_size() {
+        // max_batch bounds participants; max_union_nodes bounds the
+        // total node count of the shared solve.
+        let b = Batcher::with_limits(3, 5, RESULT_TIMEOUT);
+        let (g0, s0) = b.join_predict(&[1, 2, 3], 16).expect("opens a batch");
+        assert_eq!(s0, (0, 3));
+        // 3 + 3 > 5: union cap rejects even though participants < 3.
+        assert!(b.join_predict(&[4, 5, 6], 16).is_none());
+        // 3 + 2 <= 5 fits.
+        let (g1, s1) = b.join_predict(&[7, 8], 16).expect("joins under caps");
+        assert_eq!(g1, g0);
+        assert_eq!(s1, (3, 2));
+        // Key mismatch rejects regardless of size.
+        assert!(b.join_predict(&[9], 8).is_none());
+        // Union is exactly full: even one more node is rejected.
+        assert!(b.join_predict(&[9], 16).is_none());
+        // Participant cap: shrink to a fresh batcher with roomy union.
+        let b2 = Batcher::with_limits(2, 100, RESULT_TIMEOUT);
+        b2.join_predict(&[1], 4).unwrap();
+        b2.join_predict(&[2], 4).unwrap();
+        assert!(
+            b2.join_predict(&[3], 4).is_none(),
+            "third participant must run solo"
+        );
+    }
+
+    #[test]
+    fn claim_path_sweeps_stale_done_entries() {
+        // A timed-out participant's published entry must not linger
+        // forever under quiescent traffic: the *claim* path sweeps
+        // entries older than the (shrunken) result timeout — but only
+        // after the claimant's own lookup, so a claimant descheduled
+        // past the timeout still collects its result.
+        let timeout = Duration::from_millis(25);
+        let b = Batcher::with_limits(8, 512, timeout);
+        {
+            let mut slot = b.predicts.lock().unwrap();
+            slot.done.insert(
+                7,
+                PredictDone {
+                    mu: vec![1.0],
+                    var: vec![2.0],
+                    graph_version: 3,
+                    parts: 1,
+                    claimed: 0,
+                    published: std::time::Instant::now(),
+                },
+            );
+        }
+        std::thread::sleep(Duration::from_millis(60)); // age past timeout
+        let (m, v, parts, version) = b
+            .claim_predict(7, (0, 1))
+            .expect("own aged entry must still be claimable");
+        assert_eq!(m, vec![1.0]);
+        assert_eq!(v, vec![2.0]);
+        assert_eq!((parts, version), (1, 3));
+        // Generation 10: published, one of two participants claimed,
+        // the other timed out — the lingering case. A later claim (even
+        // one that itself times out) sweeps it.
+        {
+            let mut slot = b.predicts.lock().unwrap();
+            slot.done.insert(
+                10,
+                PredictDone {
+                    mu: vec![4.0],
+                    var: vec![1.0],
+                    graph_version: 0,
+                    parts: 2,
+                    claimed: 1,
+                    published: std::time::Instant::now(),
+                },
+            );
+        }
+        std::thread::sleep(Duration::from_millis(60)); // age it out
+        assert!(
+            b.claim_predict(99, (0, 0)).is_none(),
+            "unpublished generation times out"
+        );
+        let slot = b.predicts.lock().unwrap();
+        assert!(
+            slot.done.is_empty(),
+            "stale entry must be swept on the claim path"
+        );
+    }
+
+    #[test]
+    fn write_claim_sweeps_and_times_out() {
+        let timeout = Duration::from_millis(25);
+        let b = Batcher::with_limits(8, 512, timeout);
+        {
+            let mut slot = b.writes.lock().unwrap();
+            slot.done.insert(
+                3,
+                WriteDone {
+                    results: vec![Response::ok(vec![])],
+                    claimed: 0,
+                    published: std::time::Instant::now(),
+                },
+            );
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        // Claiming a generation that was never published times out
+        // quickly under the shrunken timeout and sweeps the stale one.
+        let started = std::time::Instant::now();
+        assert!(b.claim_write(99, 0).is_none());
+        assert!(started.elapsed() < Duration::from_secs(5));
+        let slot = b.writes.lock().unwrap();
+        assert!(slot.done.is_empty(), "stale write entry not swept");
     }
 
     #[test]

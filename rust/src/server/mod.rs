@@ -30,7 +30,12 @@
 //! re-solved warm-started from the pre-delta solution (carried in
 //! [`ModelState::alpha`]). Patched rows accumulate in a delta row-store
 //! overlay that compacts periodically, re-running the `to_ell_auto`
-//! layout policy on the fresh Φ.
+//! layout policy on the fresh Φ. Runs of **consecutive graph deltas in
+//! a write batch coalesce into one engine call**
+//! ([`GpModel::apply_graph_delta_batch`]): one union invalidation,
+//! one parallel walk resample, one row patch, and one warm re-solve
+//! serve the whole run, while every delta is still acknowledged under
+//! its own monotone `graph_version`.
 //!
 //! Each successful mutation bumps `graph_version` (monotone, reported
 //! by `stats`); every `add_edge`/`remove_edge`/`add_node` response
@@ -104,56 +109,73 @@ impl ModelState {
     /// Apply one coalesced write batch (observes + graph deltas) in
     /// arrival order under the already-held model lock. Runs of
     /// observations flush with a single `set_data` (before the next
-    /// delta, so its warm re-solve sees them; at the end otherwise);
-    /// each delta runs one incremental feature patch + warm re-solve.
+    /// delta run, so its warm re-solve sees them; at the end
+    /// otherwise); **runs of consecutive graph deltas coalesce into one
+    /// engine call** ([`GpModel::apply_graph_delta_batch`]: one union
+    /// feature patch + one warm re-solve), with every delta still
+    /// acked under its own monotone `graph_version`.
     pub fn apply_writes(
         &mut self,
         reqs: &[Request],
         state: &ServerState,
     ) -> Vec<Response> {
+        fn as_delta(req: &Request) -> Option<GraphDelta> {
+            match req {
+                Request::AddEdge { u, v, w } => {
+                    Some(GraphDelta::AddEdge { u: *u, v: *v, w: *w })
+                }
+                Request::RemoveEdge { u, v } => {
+                    Some(GraphDelta::RemoveEdge { u: *u, v: *v })
+                }
+                Request::AddNode => Some(GraphDelta::AddNode),
+                _ => None,
+            }
+        }
         let mut out = Vec::with_capacity(reqs.len());
         let mut dirty_obs = false;
-        for req in reqs {
-            match req {
+        let mut i = 0;
+        while i < reqs.len() {
+            if as_delta(&reqs[i]).is_some() {
+                // Coalesce the run of consecutive graph deltas.
+                let mut run = Vec::new();
+                while i < reqs.len() {
+                    match as_delta(&reqs[i]) {
+                        Some(d) => {
+                            run.push(d);
+                            i += 1;
+                        }
+                        None => break,
+                    }
+                }
+                if dirty_obs {
+                    // Flush pending observations first so the batch's
+                    // warm re-solve sees them.
+                    self.refresh();
+                    dirty_obs = false;
+                }
+                out.extend(self.apply_delta_run(&run, state));
+                continue;
+            }
+            match &reqs[i] {
                 Request::Observe { node, y } => {
                     if *node >= self.model.n() {
                         out.push(Response::error(format!(
                             "node {node} out of range"
                         )));
-                        continue;
+                    } else {
+                        self.observations.push((*node, *y));
+                        dirty_obs = true;
+                        out.push(Response::ok(vec![(
+                            "n_obs",
+                            Json::Num(self.observations.len() as f64),
+                        )]));
                     }
-                    self.observations.push((*node, *y));
-                    dirty_obs = true;
-                    out.push(Response::ok(vec![(
-                        "n_obs",
-                        Json::Num(self.observations.len() as f64),
-                    )]));
-                }
-                Request::AddEdge { u, v, w } => {
-                    out.push(self.apply_delta(
-                        GraphDelta::AddEdge { u: *u, v: *v, w: *w },
-                        &mut dirty_obs,
-                        state,
-                    ));
-                }
-                Request::RemoveEdge { u, v } => {
-                    out.push(self.apply_delta(
-                        GraphDelta::RemoveEdge { u: *u, v: *v },
-                        &mut dirty_obs,
-                        state,
-                    ));
-                }
-                Request::AddNode => {
-                    out.push(self.apply_delta(
-                        GraphDelta::AddNode,
-                        &mut dirty_obs,
-                        state,
-                    ));
                 }
                 other => out.push(Response::error(format!(
                     "non-write request {other:?} in write batch"
                 ))),
             }
+            i += 1;
         }
         if dirty_obs {
             self.refresh();
@@ -161,44 +183,83 @@ impl ModelState {
         out
     }
 
-    fn apply_delta(
+    /// Apply a coalesced run of graph deltas: one batched engine call,
+    /// one monotone `graph_version` per delta on the acks. A batch that
+    /// fails up-front validation mutated nothing, so it falls back to
+    /// per-delta application for per-request error granularity (the
+    /// valid deltas still apply, the invalid one gets its own error).
+    fn apply_delta_run(
         &mut self,
-        delta: GraphDelta,
-        dirty_obs: &mut bool,
+        deltas: &[GraphDelta],
         state: &ServerState,
-    ) -> Response {
-        if *dirty_obs {
-            self.refresh();
-            *dirty_obs = false;
+    ) -> Vec<Response> {
+        if deltas.len() == 1 {
+            return vec![self.apply_delta(&deltas[0], state)];
         }
+        let warm = self.alpha.take();
+        match self.model.apply_graph_delta_batch(
+            &mut self.stream,
+            deltas,
+            warm.as_deref(),
+        ) {
+            Ok(out) => {
+                let k = deltas.len() as u64;
+                let base = state.graph_version.fetch_add(k, Ordering::SeqCst);
+                state.n_nodes.store(self.model.n(), Ordering::SeqCst);
+                self.alpha = Some(out.alpha);
+                out.deltas
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, ack)| {
+                        delta_ack(
+                            base + 1 + idx as u64,
+                            out.resampled_walks,
+                            ack.invalidated,
+                            out.patched_rows,
+                            out.solve_stats.iterations,
+                            deltas.len(),
+                            out.compacted,
+                            ack.added_node,
+                        )
+                    })
+                    .collect()
+            }
+            Err(_) => {
+                // Validation failed before any mutation: state is
+                // untouched, re-apply one-by-one so each request gets
+                // its own result.
+                self.alpha = warm;
+                deltas
+                    .iter()
+                    .map(|d| self.apply_delta(d, state))
+                    .collect()
+            }
+        }
+    }
+
+    fn apply_delta(&mut self, delta: &GraphDelta, state: &ServerState) -> Response {
         let warm = self.alpha.take();
         match self.model.apply_graph_delta(
             &mut self.stream,
-            &delta,
+            delta,
             warm.as_deref(),
         ) {
             Ok(outcome) => {
                 let version =
                     state.graph_version.fetch_add(1, Ordering::SeqCst) + 1;
                 state.n_nodes.store(self.model.n(), Ordering::SeqCst);
-                let mut fields = vec![
-                    ("graph_version", Json::Num(version as f64)),
-                    (
-                        "resampled_walks",
-                        Json::Num(outcome.resampled_walks as f64),
-                    ),
-                    ("patched_rows", Json::Num(outcome.patched_rows as f64)),
-                    (
-                        "cg_iters",
-                        Json::Num(outcome.solve_stats.iterations as f64),
-                    ),
-                    ("compacted", Json::Bool(outcome.compacted)),
-                ];
-                if let Some(id) = outcome.added_node {
-                    fields.push(("node", Json::Num(id as f64)));
-                }
+                let resp = delta_ack(
+                    version,
+                    outcome.resampled_walks,
+                    outcome.resampled_walks,
+                    outcome.patched_rows,
+                    outcome.solve_stats.iterations,
+                    1,
+                    outcome.compacted,
+                    outcome.added_node,
+                );
                 self.alpha = Some(outcome.alpha);
-                Response::ok(fields)
+                resp
             }
             Err(e) => {
                 // A failed delta did not change the graph; the taken
@@ -208,6 +269,44 @@ impl ModelState {
             }
         }
     }
+}
+
+/// Shared ack shape for graph deltas, single or coalesced — both paths
+/// build through here so the fields cannot drift:
+/// * `resampled_walks` keeps its per-delta identity from the original
+///   protocol: the size of **this** delta's invalidation set (what a
+///   sequential application would have re-run), so clients summing it
+///   across their acks keep getting per-delta costs;
+/// * `batch_resampled_walks` — walks actually re-run by the engine
+///   call this delta coalesced into (the union; equals
+///   `resampled_walks` when `batched` is 1);
+/// * `patched_rows` / `cg_iters` / `compacted` are engine-call level
+///   and shared by the `batched` acks of one call — they cannot be
+///   attributed per delta.
+#[allow(clippy::too_many_arguments)]
+fn delta_ack(
+    version: u64,
+    batch_resampled: usize,
+    invalidated: usize,
+    patched_rows: usize,
+    cg_iters: usize,
+    batched: usize,
+    compacted: bool,
+    node: Option<usize>,
+) -> Response {
+    let mut fields = vec![
+        ("graph_version", Json::Num(version as f64)),
+        ("resampled_walks", Json::Num(invalidated as f64)),
+        ("batch_resampled_walks", Json::Num(batch_resampled as f64)),
+        ("patched_rows", Json::Num(patched_rows as f64)),
+        ("cg_iters", Json::Num(cg_iters as f64)),
+        ("batched", Json::Num(batched as f64)),
+        ("compacted", Json::Bool(compacted)),
+    ];
+    if let Some(id) = node {
+        fields.push(("node", Json::Num(id as f64)));
+    }
+    Response::ok(fields)
 }
 
 /// Handle one already-parsed request against the state. Write requests
@@ -296,6 +395,10 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
                 (
                     "overlay_rows",
                     Json::Num(ms.stream.overlay_rows() as f64),
+                ),
+                (
+                    "hub_fallback_nodes",
+                    Json::Num(ms.stream.saturated_hubs() as f64),
                 ),
                 (
                     "requests",

@@ -29,9 +29,58 @@
 //! (Theorem 1 bounds the visit counts w.h.p.), against O(N · n_walks)
 //! for the full resample. See `benches/hotpath.rs` (`stream_delta` vs
 //! `stream_full_rebuild` rows).
+//!
+//! ## Batched deltas ([`StreamingFeatures::apply_delta_batch`])
+//!
+//! Heavy mutation traffic arrives in bursts, and per-delta application
+//! wastes work three ways: overlapping invalidation sets resample the
+//! same walks once per delta, each delta rebuilds its affected rows
+//! even when a later delta in the burst invalidates them again, and the
+//! resample loop is serial. The batch path fixes all three:
+//!
+//! 1. every graph mutation in the batch is applied first (cheap via the
+//!    [`Graph`] per-row edge buffer), each delta's invalidation set read
+//!    off the **pre-batch** visit index — sound because trajectories
+//!    only change at resample time, and a walk that visited none of the
+//!    batch's endpoints replays bit-identically on the final graph;
+//! 2. the **union** of the per-delta sets is resampled once, partitioned
+//!    by source node across [`WalkConfig`] worker threads (per-walk RNG
+//!    streams make the result independent of the partition), and each
+//!    affected row is rebuilt exactly once per batch;
+//! 3. the overlay compaction check runs once per batch.
+//!
+//! The correctness anchor is unchanged: the post-batch state is
+//! bit-identical to a from-scratch rebuild of the mutated graph under
+//! the same per-walk seeds (property-tested below with `threads > 1`
+//! and the hub cap active).
+//!
+//! ## Hub cap (power-law visit lists)
+//!
+//! A hub's exact visit list holds one `(source, walk)` entry per walk
+//! that stepped through it — O(n_walks · visitors) memory on power-law
+//! graphs. Each list is therefore capped at `K · n_walks` entries
+//! (default `K = 32`, [`StreamingFeatures::set_hub_cap`]): an over-cap
+//! node falls back to tracking only the **distinct source nodes** of
+//! its visitors, and a delta touching it invalidates *all* `n_walks`
+//! walks of each such source. That is a strict superset of the exact
+//! set, so bit-identity is preserved (an unchanged walk re-runs to the
+//! same trajectory under its own stream) while the memory drops by the
+//! factor `n_walks`. Sources are added on resample but never removed
+//! while saturated (another walk of the same source may still visit);
+//! a stale source only widens future invalidation sets.
+//!
+//! ## Graph edge-buffer coupling
+//!
+//! `Graph::add_edge`/`remove_edge` stage the touched rows in the
+//! graph's per-row edge buffer (O(deg) per mutation, see
+//! [`crate::graph::Graph`] docs) instead of splicing the global CSR;
+//! [`StreamingFeatures::compact`] folds that buffer back into canonical
+//! CSR together with the feature-overlay compaction, so both caches
+//! stay bounded by the same `compact_threshold` policy.
 
 use crate::graph::Graph;
 use crate::sparse::{Csr, Ell, FeatureLayout};
+use crate::util::parallel::par_map_chunks;
 use crate::walks::{
     resample_walk, rows_from_walks, sample_components_indexed, NodeWalks,
     WalkComponents, WalkConfig,
@@ -52,9 +101,10 @@ pub enum GraphDelta {
 /// What a delta actually touched — the incrementality contract.
 #[derive(Clone, Debug)]
 pub struct DeltaSummary {
-    /// Walks that were re-run, exactly `visit[u] ∪ visit[v]` of the
-    /// pre-delta visit index (all walks of the new node for
-    /// [`GraphDelta::AddNode`]).
+    /// Walks that were re-run: `visit[u] ∪ visit[v]` of the pre-delta
+    /// visit index (all walks of the new node for
+    /// [`GraphDelta::AddNode`]). For a hub past the cap this is the
+    /// source-level superset (see the module docs).
     pub resampled: Vec<(u32, u32)>,
     /// Source rows whose feature rows were rebuilt (sorted).
     pub affected_rows: Vec<u32>,
@@ -62,6 +112,110 @@ pub struct DeltaSummary {
     pub added_node: Option<usize>,
     /// Whether this delta triggered an overlay compaction.
     pub compacted: bool,
+}
+
+/// Per-delta slice of a batch outcome (what the server ack reports).
+#[derive(Clone, Debug)]
+pub struct DeltaAck {
+    /// Size of this delta's own invalidation set (before the union).
+    pub invalidated: usize,
+    /// Id of the appended node, for [`GraphDelta::AddNode`].
+    pub added_node: Option<usize>,
+}
+
+/// Outcome of [`StreamingFeatures::apply_delta_batch`]: one union
+/// resample + row rebuild shared by every delta in the batch.
+#[derive(Clone, Debug)]
+pub struct BatchSummary {
+    /// One entry per input delta, in order.
+    pub deltas: Vec<DeltaAck>,
+    /// Union of the per-delta invalidation sets — the walks re-run
+    /// (each exactly once, on the fully mutated graph).
+    pub resampled: Vec<(u32, u32)>,
+    /// Source rows rebuilt (sorted; once per batch, not per delta).
+    pub affected_rows: Vec<u32>,
+    /// Whether this batch triggered an overlay compaction.
+    pub compacted: bool,
+}
+
+/// Per-node visit record with the hub cap applied (module docs).
+#[derive(Clone, Debug)]
+enum VisitList {
+    /// Exact `(source, walk)` entries (unordered; removal swaps).
+    Exact(Vec<(u32, u32)>),
+    /// Over-cap fallback: the distinct source nodes (sorted) with at
+    /// least one walk through this node. Invalidation expands to all
+    /// `n_walks` walks of each source — a superset of the exact set.
+    Sources(Vec<u32>),
+}
+
+impl VisitList {
+    /// Record that walk `(src, t)` visits this node; saturate to
+    /// source-level tracking past `cap` entries.
+    fn push(&mut self, src: u32, t: u32, cap: usize) {
+        match self {
+            VisitList::Exact(v) => v.push((src, t)),
+            VisitList::Sources(s) => {
+                if let Err(k) = s.binary_search(&src) {
+                    s.insert(k, src);
+                }
+                return;
+            }
+        }
+        self.enforce_cap(cap);
+    }
+
+    /// Drop walk `(src, t)` from an exact list. Saturated lists keep
+    /// their sources conservatively (see the module docs).
+    fn remove(&mut self, src: u32, t: u32) {
+        if let VisitList::Exact(v) = self {
+            if let Some(p) = v.iter().position(|&e| e == (src, t)) {
+                v.swap_remove(p);
+            }
+        }
+    }
+
+    /// Convert an over-cap exact list to source-level tracking.
+    fn saturate(&mut self) {
+        if let VisitList::Exact(v) = self {
+            let mut s: Vec<u32> = v.iter().map(|&(src, _)| src).collect();
+            s.sort_unstable();
+            s.dedup();
+            *self = VisitList::Sources(s);
+        }
+    }
+
+    fn enforce_cap(&mut self, cap: usize) {
+        if matches!(self, VisitList::Exact(v) if v.len() > cap) {
+            self.saturate();
+        }
+    }
+
+    /// Expand to the invalidation set: exact entries, or every walk of
+    /// every recorded source when saturated.
+    fn collect_into(&self, n_walks: usize, out: &mut BTreeSet<(u32, u32)>) {
+        match self {
+            VisitList::Exact(v) => out.extend(v.iter().copied()),
+            VisitList::Sources(s) => {
+                for &src in s {
+                    for t in 0..n_walks as u32 {
+                        out.insert((src, t));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-node output of one parallel resample worker, merged serially in
+/// node order so the result is independent of the thread partition.
+struct NodeResample {
+    node: u32,
+    nw: NodeWalks,
+    /// Per resampled walk: (t, distinct nodes of the old trajectory,
+    /// distinct nodes of the new trajectory) — the visit-index edits.
+    walk_visits: Vec<(u32, Vec<u32>, Vec<u32>)>,
+    patch: RowPatch,
 }
 
 /// A patched row: per-length component rows + the combined Φ row.
@@ -89,7 +243,10 @@ pub struct StreamingFeatures {
     /// Current weighted degrees (empty unless `cfg.normalize`).
     norm_deg: Vec<f64>,
     store: Vec<NodeWalks>,
-    visit: Vec<Vec<(u32, u32)>>,
+    visit: Vec<VisitList>,
+    /// Hub cap multiplier: exact visit lists saturate past
+    /// `hub_cap_k · n_walks` entries (module docs).
+    hub_cap_k: usize,
     /// Compacted per-length component matrices.
     base: Vec<Csr>,
     /// Compacted combined feature matrix Φ(f).
@@ -179,6 +336,17 @@ impl StreamingFeatures {
         let phi_base = build_phi(&base, n, &f);
         let layout = FeatureLayout::Auto;
         let phi_ell = phi_base.select_ell(layout);
+        let hub_cap_k = 32;
+        let cap = hub_cap_k * cfg.n_walks;
+        let visit = iw
+            .visit
+            .into_iter()
+            .map(|v| {
+                let mut vl = VisitList::Exact(v);
+                vl.enforce_cap(cap);
+                vl
+            })
+            .collect();
         StreamingFeatures {
             graph,
             cfg,
@@ -186,7 +354,8 @@ impl StreamingFeatures {
             f,
             norm_deg,
             store: iw.store,
-            visit: iw.visit,
+            visit,
+            hub_cap_k,
             base,
             phi_base,
             overlay: BTreeMap::new(),
@@ -229,6 +398,27 @@ impl StreamingFeatures {
         self.compact_threshold = rows.max(1);
     }
 
+    /// Set the hub-cap multiplier `K`: a node's exact visit list
+    /// saturates to source-level tracking past `K · n_walks` entries
+    /// (default 32; see the module docs for the fallback rule).
+    /// Lowering it saturates existing over-cap lists immediately.
+    pub fn set_hub_cap(&mut self, k: usize) {
+        self.hub_cap_k = k.max(1);
+        let cap = self.hub_cap_k * self.cfg.n_walks;
+        for vl in &mut self.visit {
+            vl.enforce_cap(cap);
+        }
+    }
+
+    /// Nodes whose visit lists run in the saturated (source-level)
+    /// fallback — observability for the server stats op.
+    pub fn saturated_hubs(&self) -> usize {
+        self.visit
+            .iter()
+            .filter(|v| matches!(v, VisitList::Sources(_)))
+            .count()
+    }
+
     /// The layout policy re-run on Φ at each compaction.
     pub fn set_layout(&mut self, layout: FeatureLayout) {
         self.layout = layout;
@@ -246,12 +436,14 @@ impl StreamingFeatures {
     }
 
     /// All walks whose trajectories stepped through any of `nodes` —
-    /// the invalidation set of a delta touching those endpoints.
+    /// the invalidation set of a delta touching those endpoints. For a
+    /// saturated hub this expands to every walk of each recorded
+    /// source (a superset; see the module docs).
     pub fn visiting_walks(&self, nodes: &[usize]) -> BTreeSet<(u32, u32)> {
         let mut out = BTreeSet::new();
         for &i in nodes {
             if i < self.visit.len() {
-                out.extend(self.visit[i].iter().copied());
+                self.visit[i].collect_into(self.cfg.n_walks, &mut out);
             }
         }
         out
@@ -306,8 +498,11 @@ impl StreamingFeatures {
         assert_eq!(f.len(), self.cfg.max_len + 1);
         self.f = f;
         // Rebuild phi_base from the base components, then the overlay
-        // Φ rows from their per-length patches.
-        self.phi_base = build_phi(&self.base, self.phi_base.n_cols, &self.f);
+        // Φ rows from their per-length patches. The column count is the
+        // *current* node count, not `phi_base.n_cols` — after a
+        // pre-compaction AddNode the latter is stale (the appended row
+        // lives only in the overlay until the next compaction).
+        self.phi_base = build_phi(&self.base, self.n(), &self.f);
         let f = self.f.clone();
         for p in self.overlay.values_mut() {
             p.phi = combine_row(&p.per_len, &f);
@@ -317,68 +512,155 @@ impl StreamingFeatures {
 
     /// Apply one graph mutation: resample exactly the invalidated
     /// walks, rebuild the affected rows into the overlay, maybe
-    /// compact. Errors leave the state untouched.
+    /// compact. Errors leave the state untouched. A single-delta batch
+    /// through the shared engine ([`StreamingFeatures::apply_delta_batch`]).
     pub fn apply_delta(&mut self, delta: &GraphDelta) -> Result<DeltaSummary, String> {
-        let n = self.n();
-        let invalid = match *delta {
-            GraphDelta::AddEdge { u, v, w } => {
-                if u >= n || v >= n {
-                    return Err(format!("add_edge ({u},{v}) out of range (n={n})"));
-                }
-                if !w.is_finite() || w <= 0.0 {
-                    return Err(format!("add_edge weight {w} must be finite and > 0"));
-                }
-                let invalid = self.visiting_walks(&[u, v]);
-                self.graph.add_edge(u, v, w);
-                self.update_norm_deg(&[u, v]);
-                invalid
-            }
-            GraphDelta::RemoveEdge { u, v } => {
-                if u >= n || v >= n {
-                    return Err(format!("remove_edge ({u},{v}) out of range (n={n})"));
-                }
-                let invalid = self.visiting_walks(&[u, v]);
-                if !self.graph.remove_edge(u, v) {
-                    return Err(format!("remove_edge ({u},{v}): no such edge"));
-                }
-                self.update_norm_deg(&[u, v]);
-                invalid
-            }
-            GraphDelta::AddNode => {
-                let id = self.graph.add_node();
-                if self.cfg.normalize {
-                    self.norm_deg
-                        .push(self.graph.weighted_degree(id).max(1e-12));
-                }
-                self.visit.push(Vec::new());
-                self.store.push(NodeWalks {
-                    offsets: vec![0],
-                    deposits: Vec::new(),
-                });
-                (0..self.cfg.n_walks)
-                    .map(|t| (id as u32, t as u32))
-                    .collect()
-            }
-        };
-        let added_node = match delta {
-            GraphDelta::AddNode => Some(self.n() - 1),
-            _ => None,
-        };
-        let mut summary = self.resample(&invalid);
-        summary.added_node = added_node;
-        self.deltas_applied += 1;
-        self.walks_resampled_total += summary.resampled.len();
-        if self.overlay.len() >= self.compact_threshold {
-            self.compact();
-            summary.compacted = true;
-        }
-        Ok(summary)
+        let batch = self.apply_delta_batch(std::slice::from_ref(delta))?;
+        Ok(DeltaSummary {
+            resampled: batch.resampled,
+            affected_rows: batch.affected_rows,
+            added_node: batch.deltas[0].added_node,
+            compacted: batch.compacted,
+        })
     }
 
-    /// Merge the overlay into the base matrices and re-run the
-    /// `to_ell_auto` layout policy on the fresh Φ.
+    /// Apply a batch of graph mutations with one union invalidation,
+    /// one parallel resample, and one row rebuild per affected node
+    /// (module docs). The whole batch is validated up front against a
+    /// simulated edge overlay, so errors leave the state untouched.
+    pub fn apply_delta_batch(
+        &mut self,
+        deltas: &[GraphDelta],
+    ) -> Result<BatchSummary, String> {
+        if deltas.is_empty() {
+            return Ok(BatchSummary {
+                deltas: Vec::new(),
+                resampled: Vec::new(),
+                affected_rows: Vec::new(),
+                compacted: false,
+            });
+        }
+        self.validate_batch(deltas)?;
+        // Phase 1: apply every graph mutation, reading each delta's
+        // invalidation set off the pre-batch visit index (trajectories
+        // only change at resample time, so the index is stable across
+        // the whole mutation phase; only AddNode appends empty lists).
+        let mut union: BTreeSet<(u32, u32)> = BTreeSet::new();
+        let mut acks = Vec::with_capacity(deltas.len());
+        let mut touched: BTreeSet<usize> = BTreeSet::new();
+        for delta in deltas {
+            let (inv, added_node) = match *delta {
+                GraphDelta::AddEdge { u, v, w } => {
+                    let inv = self.visiting_walks(&[u, v]);
+                    self.graph.add_edge(u, v, w);
+                    touched.insert(u);
+                    touched.insert(v);
+                    (inv, None)
+                }
+                GraphDelta::RemoveEdge { u, v } => {
+                    let inv = self.visiting_walks(&[u, v]);
+                    let removed = self.graph.remove_edge(u, v);
+                    debug_assert!(removed, "validated above");
+                    touched.insert(u);
+                    touched.insert(v);
+                    (inv, None)
+                }
+                GraphDelta::AddNode => {
+                    let id = self.graph.add_node();
+                    self.visit.push(VisitList::Exact(Vec::new()));
+                    self.store.push(NodeWalks {
+                        offsets: vec![0],
+                        deposits: Vec::new(),
+                    });
+                    if self.cfg.normalize {
+                        self.norm_deg.push(0.0);
+                        touched.insert(id);
+                    }
+                    (
+                        (0..self.cfg.n_walks)
+                            .map(|t| (id as u32, t as u32))
+                            .collect(),
+                        Some(id),
+                    )
+                }
+            };
+            acks.push(DeltaAck { invalidated: inv.len(), added_node });
+            union.extend(inv);
+        }
+        // Weighted degrees refresh once, after all mutations — exactly
+        // the values a from-scratch build on the final graph would see.
+        if self.cfg.normalize {
+            for &i in &touched {
+                self.norm_deg[i] = self.graph.weighted_degree(i).max(1e-12);
+            }
+        }
+        // Phase 2: one parallel resample of the union + row rebuild.
+        let (resampled, affected_rows) = self.resample_invalidated(&union);
+        self.deltas_applied += deltas.len();
+        self.walks_resampled_total += resampled.len();
+        let mut compacted = false;
+        if self.overlay.len() >= self.compact_threshold {
+            self.compact();
+            compacted = true;
+        }
+        Ok(BatchSummary {
+            deltas: acks,
+            resampled,
+            affected_rows,
+            compacted,
+        })
+    }
+
+    /// Pre-validate a delta batch against a simulated node count and
+    /// edge overlay — no state is touched, so a failing batch is a
+    /// clean no-op.
+    fn validate_batch(&self, deltas: &[GraphDelta]) -> Result<(), String> {
+        let mut n_sim = self.n();
+        let mut edge_sim: BTreeMap<(usize, usize), bool> = BTreeMap::new();
+        for (k, delta) in deltas.iter().enumerate() {
+            match *delta {
+                GraphDelta::AddEdge { u, v, w } => {
+                    if u >= n_sim || v >= n_sim {
+                        return Err(format!(
+                            "delta {k}: add_edge ({u},{v}) out of range (n={n_sim})"
+                        ));
+                    }
+                    if !w.is_finite() || w <= 0.0 {
+                        return Err(format!(
+                            "delta {k}: add_edge weight {w} must be finite and > 0"
+                        ));
+                    }
+                    edge_sim.insert((u.min(v), u.max(v)), true);
+                }
+                GraphDelta::RemoveEdge { u, v } => {
+                    if u >= n_sim || v >= n_sim {
+                        return Err(format!(
+                            "delta {k}: remove_edge ({u},{v}) out of range (n={n_sim})"
+                        ));
+                    }
+                    let key = (u.min(v), u.max(v));
+                    let present = edge_sim.get(&key).copied().unwrap_or_else(|| {
+                        u < self.n() && v < self.n() && self.graph.has_edge(u, v)
+                    });
+                    if !present {
+                        return Err(format!(
+                            "delta {k}: remove_edge ({u},{v}): no such edge"
+                        ));
+                    }
+                    edge_sim.insert(key, false);
+                }
+                GraphDelta::AddNode => n_sim += 1,
+            }
+        }
+        Ok(())
+    }
+
+    /// Merge the overlay into the base matrices, fold the graph's
+    /// staged per-row edge buffer back into canonical CSR, and re-run
+    /// the `to_ell_auto` layout policy on the fresh Φ.
     pub fn compact(&mut self) {
         let n = self.n();
+        self.graph.compact();
         for l in 0..self.base.len() {
             let patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = self
                 .overlay
@@ -398,86 +680,113 @@ impl StreamingFeatures {
         self.compactions += 1;
     }
 
-    fn update_norm_deg(&mut self, nodes: &[usize]) {
-        if self.cfg.normalize {
-            for &i in nodes {
-                self.norm_deg[i] = self.graph.weighted_degree(i).max(1e-12);
-            }
-        }
-    }
-
-    /// Re-run the given walks on the current graph, rebuild the rows of
-    /// their source nodes, and stage them in the overlay.
-    fn resample(&mut self, invalid: &BTreeSet<(u32, u32)>) -> DeltaSummary {
+    /// Re-run the given walks on the current graph **in parallel**
+    /// (partitioned by source node across the configured worker
+    /// threads), rebuild each affected row once, and stage the patches
+    /// in the overlay. Per-walk RNG streams make every worker output a
+    /// pure function of (graph, seed, walk id), and the visit-index /
+    /// overlay merge runs serially in node order — so the result is
+    /// bit-identical across thread counts and to the old serial path.
+    fn resample_invalidated(
+        &mut self,
+        invalid: &BTreeSet<(u32, u32)>,
+    ) -> (Vec<(u32, u32)>, Vec<u32>) {
         let n_len = self.cfg.max_len + 1;
         let inv_n = 1.0 / self.cfg.n_walks as f64;
         let mut by_node: BTreeMap<u32, BTreeSet<u32>> = BTreeMap::new();
         for &(i, t) in invalid {
             by_node.entry(i).or_default().insert(t);
         }
-        let mut affected_rows = Vec::with_capacity(by_node.len());
-        let mut seen: Vec<u32> = Vec::new();
-        for (&i, ts) in &by_node {
-            let iu = i as usize;
-            let old = std::mem::take(&mut self.store[iu]);
-            let mut nw = NodeWalks {
-                offsets: Vec::with_capacity(self.cfg.n_walks + 1),
-                deposits: Vec::new(),
-            };
-            nw.offsets.push(0);
-            for t in 0..self.cfg.n_walks {
-                let start = nw.deposits.len();
-                if ts.contains(&(t as u32)) {
-                    // Drop the walk's old visit entries...
-                    if t < old.n_walks() {
-                        seen.clear();
-                        seen.extend(old.walk(t).iter().map(|&(j, _)| j));
-                        seen.sort_unstable();
-                        seen.dedup();
-                        for &j in &seen {
-                            let lst = &mut self.visit[j as usize];
-                            if let Some(p) =
-                                lst.iter().position(|&e| e == (i, t as u32))
-                            {
-                                lst.swap_remove(p);
-                            }
+        // Take the old per-walk stores out so the workers own them.
+        let jobs: Vec<(u32, BTreeSet<u32>, NodeWalks)> = by_node
+            .into_iter()
+            .map(|(i, ts)| {
+                let old = std::mem::take(&mut self.store[i as usize]);
+                (i, ts, old)
+            })
+            .collect();
+        let threads = self.cfg.effective_threads().min(jobs.len().max(1));
+        let graph = &self.graph;
+        let cfg = &self.cfg;
+        let norm_deg = &self.norm_deg;
+        let seed = self.seed;
+        let f = &self.f;
+        let results: Vec<Vec<NodeResample>> =
+            par_map_chunks(jobs.len(), threads, |s, e, _| {
+                let mut out = Vec::with_capacity(e - s);
+                let mut seen: Vec<u32> = Vec::new();
+                for (i, ts, old) in &jobs[s..e] {
+                    let iu = *i as usize;
+                    let mut nw = NodeWalks {
+                        offsets: Vec::with_capacity(cfg.n_walks + 1),
+                        deposits: Vec::new(),
+                    };
+                    nw.offsets.push(0);
+                    let mut walk_visits = Vec::with_capacity(ts.len());
+                    for t in 0..cfg.n_walks {
+                        let start = nw.deposits.len();
+                        if ts.contains(&(t as u32)) {
+                            // Distinct nodes of the old trajectory (its
+                            // visit entries to drop)...
+                            let old_nodes = if t < old.n_walks() {
+                                seen.clear();
+                                seen.extend(
+                                    old.walk(t).iter().map(|&(j, _)| j),
+                                );
+                                seen.sort_unstable();
+                                seen.dedup();
+                                seen.clone()
+                            } else {
+                                Vec::new()
+                            };
+                            // ...re-run under its own stream...
+                            resample_walk(
+                                graph, cfg, norm_deg, iu, t, seed,
+                                &mut nw.deposits,
+                            );
+                            // ...and the new trajectory to index.
+                            seen.clear();
+                            seen.extend(
+                                nw.deposits[start..].iter().map(|&(j, _)| j),
+                            );
+                            seen.sort_unstable();
+                            seen.dedup();
+                            walk_visits.push((t as u32, old_nodes, seen.clone()));
+                        } else {
+                            nw.deposits.extend_from_slice(old.walk(t));
                         }
+                        nw.offsets.push(nw.deposits.len() as u32);
                     }
-                    // ...re-run it under its own stream...
-                    resample_walk(
-                        &self.graph,
-                        &self.cfg,
-                        &self.norm_deg,
-                        iu,
-                        t,
-                        self.seed,
-                        &mut nw.deposits,
-                    );
-                    // ...and index the new trajectory.
-                    seen.clear();
-                    seen.extend(nw.deposits[start..].iter().map(|&(j, _)| j));
-                    seen.sort_unstable();
-                    seen.dedup();
-                    for &j in &seen {
-                        self.visit[j as usize].push((i, t as u32));
-                    }
-                } else {
-                    nw.deposits.extend_from_slice(old.walk(t));
+                    let per_len = rows_from_walks(&nw, n_len, inv_n);
+                    let phi = combine_row(&per_len, f);
+                    out.push(NodeResample {
+                        node: *i,
+                        nw,
+                        walk_visits,
+                        patch: RowPatch { per_len, phi },
+                    });
                 }
-                nw.offsets.push(nw.deposits.len() as u32);
+                out
+            });
+        // Serial merge in node order: visit-index edits + overlay
+        // staging (identical edit sequence to the old serial loop).
+        let cap = self.hub_cap_k * self.cfg.n_walks;
+        let mut affected_rows = Vec::new();
+        for nr in results.into_iter().flatten() {
+            let i = nr.node;
+            for (t, old_nodes, new_nodes) in &nr.walk_visits {
+                for &j in old_nodes {
+                    self.visit[j as usize].remove(i, *t);
+                }
+                for &j in new_nodes {
+                    self.visit[j as usize].push(i, *t, cap);
+                }
             }
-            let per_len = rows_from_walks(&nw, n_len, inv_n);
-            let phi = combine_row(&per_len, &self.f);
-            self.store[iu] = nw;
-            self.overlay.insert(i, RowPatch { per_len, phi });
+            self.store[i as usize] = nr.nw;
+            self.overlay.insert(i, nr.patch);
             affected_rows.push(i);
         }
-        DeltaSummary {
-            resampled: invalid.iter().copied().collect(),
-            affected_rows,
-            added_node: None,
-            compacted: false,
-        }
+        (invalid.iter().copied().collect(), affected_rows)
     }
 }
 
@@ -602,6 +911,248 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Acceptance property (batch engine): random batches of deltas,
+    /// worker threads > 1, hub cap active — the batched state is
+    /// bit-identical to a from-scratch rebuild of the mutated graph,
+    /// and to the same deltas applied one at a time.
+    #[test]
+    fn batched_deltas_match_rebuild_and_sequential_bitwise() {
+        proptest(6, |rng| {
+            let n = 8 + rng.below(10);
+            let (g, _) = random_graph(rng, n, 0.3);
+            let cfg = WalkConfig {
+                n_walks: 6 + rng.below(4),
+                p_halt: 0.15,
+                max_len: 3,
+                reweight: true,
+                normalize: rng.bernoulli(0.5),
+                threads: 2 + rng.below(3),
+            };
+            let f = vec![1.0, 0.6, 0.3, 0.1];
+            let seed = rng.next_u64();
+            let mut batched =
+                StreamingFeatures::new(g.clone(), cfg.clone(), f.clone(), seed);
+            let mut serial =
+                StreamingFeatures::new(g.clone(), cfg.clone(), f.clone(), seed);
+            // Saturate hub visit lists immediately so the source-level
+            // fallback is exercised, and flip compaction on one side.
+            batched.set_hub_cap(1);
+            serial.set_hub_cap(1);
+            batched.set_compact_threshold(if rng.bernoulli(0.5) {
+                1
+            } else {
+                usize::MAX
+            });
+            serial.set_compact_threshold(usize::MAX);
+            let mut g2 = g;
+            for round in 0..3 {
+                let k = 1 + rng.below(5);
+                let mut deltas = Vec::with_capacity(k);
+                for _ in 0..k {
+                    // Draw against the evolving reference graph so
+                    // RemoveEdge targets stay valid within the batch.
+                    let d = random_delta(&g2, rng);
+                    match d {
+                        GraphDelta::AddEdge { u, v, w } => g2.add_edge(u, v, w),
+                        GraphDelta::RemoveEdge { u, v } => {
+                            g2.remove_edge(u, v);
+                        }
+                        GraphDelta::AddNode => {
+                            g2.add_node();
+                        }
+                    }
+                    deltas.push(d);
+                }
+                let out = batched.apply_delta_batch(&deltas).unwrap();
+                prop_assert!(
+                    out.deltas.len() == deltas.len(),
+                    "round {round}: one ack per delta"
+                );
+                for d in &deltas {
+                    serial.apply_delta(d).unwrap();
+                }
+                let full = StreamingFeatures::new(
+                    g2.clone(),
+                    cfg.clone(),
+                    f.clone(),
+                    seed,
+                );
+                prop_assert!(
+                    batched.phi_snapshot() == full.phi_snapshot(),
+                    "round {round}: batched Φ != rebuild"
+                );
+                prop_assert!(
+                    batched.phi_snapshot() == serial.phi_snapshot(),
+                    "round {round}: batched Φ != sequential"
+                );
+                let (a, b) = (batched.components().c, full.components().c);
+                for l in 0..a.len() {
+                    prop_assert!(
+                        a[l] == b[l],
+                        "round {round}: component {l} != rebuild"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_validation_errors_leave_state_untouched() {
+        let mut rng = Rng::new(15);
+        let (g, _) = random_graph(&mut rng, 10, 0.4);
+        let cfg = WalkConfig { n_walks: 4, max_len: 2, threads: 2, ..Default::default() };
+        let mut s = StreamingFeatures::new(g, cfg, vec![1.0, 0.5, 0.25], 2);
+        let before = s.phi_snapshot();
+        let g0 = s.graph().clone();
+        // Second delta removes an edge the batch never added and the
+        // graph does not have: the whole batch must be a no-op.
+        let mut non_edge = None;
+        'outer: for u in 0..10 {
+            for v in 0..10 {
+                if u != v && !s.graph().has_edge(u, v) {
+                    non_edge = Some((u, v));
+                    break 'outer;
+                }
+            }
+        }
+        let (u, v) = non_edge.expect("sparse graph has a non-edge");
+        let bad = vec![
+            GraphDelta::AddEdge { u: 0, v: 1, w: 0.5 },
+            GraphDelta::RemoveEdge { u, v },
+        ];
+        assert!(s.apply_delta_batch(&bad).is_err());
+        assert!(s.phi_snapshot() == before);
+        assert_eq!(s.deltas_applied, 0);
+        assert_eq!(s.graph().num_edges(), g0.num_edges());
+        // A remove of an edge added earlier in the same batch is valid.
+        let good = vec![
+            GraphDelta::AddEdge { u, v, w: 0.5 },
+            GraphDelta::RemoveEdge { u, v },
+        ];
+        let out = s.apply_delta_batch(&good).unwrap();
+        assert_eq!(out.deltas.len(), 2);
+        assert!(s.phi_snapshot() == before, "add+remove roundtrip in one batch");
+    }
+
+    #[test]
+    fn self_loop_deltas_match_rebuild_bitwise() {
+        // add_edge(u,u) / remove_edge(u,u) through the streaming path:
+        // the walk transition treats the loop as one directed entry and
+        // num_edges counts it once — both defined on the static path,
+        // here exercised through mutations.
+        let edges: Vec<(u32, u32, f64)> =
+            (0..11).map(|i| (i, i + 1, 1.0)).collect();
+        let g = Graph::from_edges(12, &edges);
+        let cfg = WalkConfig { n_walks: 8, max_len: 3, threads: 2, ..Default::default() };
+        let f = vec![1.0, 0.5, 0.25, 0.125];
+        let mut s = StreamingFeatures::new(g.clone(), cfg.clone(), f.clone(), 23);
+        let before = s.phi_snapshot();
+        let e0 = s.graph().num_edges();
+        let sum = s
+            .apply_delta(&GraphDelta::AddEdge { u: 3, v: 3, w: 0.9 })
+            .unwrap();
+        assert!(!sum.resampled.is_empty(), "walks visit node 3");
+        assert_eq!(s.graph().num_edges(), e0 + 1, "self-loop counts once");
+        assert_eq!(s.graph().degree(3), 3, "single directed entry");
+        let mut g2 = g.clone();
+        g2.add_edge(3, 3, 0.9);
+        let full = StreamingFeatures::new(g2, cfg.clone(), f.clone(), 23);
+        assert!(
+            s.phi_snapshot() == full.phi_snapshot(),
+            "self-loop add not bit-identical to rebuild"
+        );
+        s.apply_delta(&GraphDelta::RemoveEdge { u: 3, v: 3 }).unwrap();
+        assert_eq!(s.graph().num_edges(), e0);
+        assert!(
+            s.phi_snapshot() == before,
+            "self-loop roundtrip must restore Φ bitwise"
+        );
+        // And through the batch path, mixed with a normal edge.
+        let out = s
+            .apply_delta_batch(&[
+                GraphDelta::AddEdge { u: 5, v: 5, w: 0.4 },
+                GraphDelta::AddEdge { u: 0, v: 7, w: 0.6 },
+                GraphDelta::RemoveEdge { u: 5, v: 5 },
+            ])
+            .unwrap();
+        assert_eq!(out.deltas.len(), 3);
+        let mut g3 = g;
+        g3.add_edge(0, 7, 0.6);
+        let full3 = StreamingFeatures::new(g3, cfg, f, 23);
+        assert!(s.phi_snapshot() == full3.phi_snapshot());
+    }
+
+    #[test]
+    fn modulation_swap_after_pre_compaction_add_node() {
+        // Regression: set_modulation used the stale phi_base.n_cols to
+        // rebuild Φ after a pre-compaction AddNode. The swapped state
+        // must stay bitwise equal to a fresh build of the mutated graph
+        // under the new modulation, before and after compaction.
+        let mut rng = Rng::new(31);
+        let (g, _) = random_graph(&mut rng, 10, 0.3);
+        let cfg = WalkConfig { n_walks: 5, max_len: 2, threads: 1, ..Default::default() };
+        let mut s =
+            StreamingFeatures::new(g.clone(), cfg.clone(), vec![1.0, 0.5, 0.25], 13);
+        s.set_compact_threshold(usize::MAX);
+        s.apply_delta(&GraphDelta::AddNode).unwrap();
+        assert!(s.overlay_rows() > 0, "AddNode row must be pre-compaction");
+        let f2 = vec![0.4, 1.1, 0.7];
+        s.set_modulation(f2.clone());
+        let mut g2 = g;
+        g2.add_node();
+        let full = StreamingFeatures::new(g2, cfg, f2, 13);
+        let snap = s.phi_snapshot();
+        assert_eq!(snap.n_rows, 11);
+        assert_eq!(snap.n_cols, 11);
+        assert!(snap == full.phi_snapshot(), "swap after AddNode diverged");
+        s.compact();
+        assert!(
+            s.phi_snapshot() == full.phi_snapshot(),
+            "compaction after the swap diverged"
+        );
+    }
+
+    #[test]
+    fn hub_cap_saturates_and_stays_bit_identical() {
+        // A star graph makes the centre a hub visited by every spoke
+        // walk; with K = 1 the centre's list saturates to source-level
+        // tracking, invalidation becomes the all-walks superset, and
+        // deltas must stay bit-identical to a rebuild.
+        let edges: Vec<(u32, u32, f64)> =
+            (1..16).map(|i| (0, i, 1.0)).collect();
+        let g = Graph::from_edges(16, &edges);
+        let cfg = WalkConfig { n_walks: 6, max_len: 3, threads: 2, ..Default::default() };
+        let f = vec![1.0, 0.5, 0.25, 0.125];
+        let mut s = StreamingFeatures::new(g.clone(), cfg.clone(), f.clone(), 3);
+        s.set_hub_cap(1);
+        assert!(s.saturated_hubs() > 0, "star centre must saturate at K=1");
+        // Invalidation at the centre covers whole sources: every
+        // (src, t) of a listed source appears.
+        let inv = s.visiting_walks(&[0]);
+        let sources: BTreeSet<u32> = inv.iter().map(|&(i, _)| i).collect();
+        for &src in &sources {
+            for t in 0..cfg.n_walks as u32 {
+                assert!(inv.contains(&(src, t)), "src {src} walk {t} missing");
+            }
+        }
+        let sum = s
+            .apply_delta(&GraphDelta::AddEdge { u: 0, v: 5, w: 0.5 })
+            .unwrap();
+        let got: BTreeSet<(u32, u32)> = sum.resampled.iter().copied().collect();
+        assert!(
+            inv.is_subset(&got),
+            "delta at the hub must resample its whole invalidation set"
+        );
+        let mut g2 = g;
+        g2.add_edge(0, 5, 0.5);
+        let full = StreamingFeatures::new(g2, cfg, f, 3);
+        assert!(
+            s.phi_snapshot() == full.phi_snapshot(),
+            "hub-cap fallback broke bit-identity"
+        );
     }
 
     #[test]

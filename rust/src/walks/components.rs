@@ -108,6 +108,7 @@ fn build_maps(components: &WalkComponents, pattern: &Csr) -> Vec<Vec<u32>> {
 
 /// Union-pattern recombiner: `combine_into` refreshes the value array of
 /// the shared pattern in O(total nnz) with zero allocation.
+#[derive(Clone)]
 pub struct CombinedFeatures {
     pub components: WalkComponents,
     /// Union sparsity pattern; `vals` holds the latest combination.
@@ -144,6 +145,43 @@ impl CombinedFeatures {
     /// Clone out the current combination.
     pub fn current(&self) -> Csr {
         self.pattern.clone()
+    }
+
+    /// Recompute the combined values of exactly `rows` under `f`,
+    /// leaving every other slot of `pattern.vals` untouched.
+    ///
+    /// Steady-state invariant of the streaming delta path: between
+    /// hyperparameter updates the modulation is fixed, so after
+    /// [`CombinedFeatures::patch_rows`] only the patched rows' values
+    /// are stale — everything else already holds the combination under
+    /// the same `f`. The per-slot accumulation (length-major, with the
+    /// `f_l == 0` skip) replays [`CombinedFeatures::combine_into`]
+    /// exactly, so the partially recombined pattern is **bitwise** what
+    /// a full recombination would produce.
+    pub fn recombine_rows(&mut self, f: &[f64], rows: &[u32]) {
+        assert_eq!(f.len(), self.components.c.len());
+        for &r in rows {
+            let (s, e) = (
+                self.pattern.offsets[r as usize],
+                self.pattern.offsets[r as usize + 1],
+            );
+            for v in &mut self.pattern.vals[s..e] {
+                *v = 0.0;
+            }
+        }
+        for (l, map) in self.maps.iter().enumerate() {
+            let fl = f[l];
+            if fl == 0.0 {
+                continue;
+            }
+            let c = &self.components.c[l];
+            for &r in rows {
+                let (s, e) = (c.offsets[r as usize], c.offsets[r as usize + 1]);
+                for k in s..e {
+                    self.pattern.vals[map[k] as usize] += fl * c.vals[k];
+                }
+            }
+        }
     }
 
     /// Row-width distribution of Φ's union pattern (invariant under
@@ -304,6 +342,39 @@ mod tests {
         let a = prepared.combine_into(&f).clone();
         let b = fresh.combine_into(&f);
         assert!(a == *b, "patched recombination differs from fresh prepare");
+    }
+
+    #[test]
+    fn recombine_rows_matches_full_combination_bitwise() {
+        use std::collections::BTreeMap;
+        let mut rng = Rng::new(9);
+        let comps = random_components(&mut rng, 15, 3);
+        let f = vec![0.8, -0.4, 1.3];
+        let mut a = comps.prepare();
+        a.combine_into(&f);
+        let mut b = a.clone();
+        // Patch rows 1 and 9 in both, then recombine: partially in `a`,
+        // fully in `b` — the value arrays must be bitwise equal.
+        let mut patches: BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>> = BTreeMap::new();
+        for &r in &[1u32, 9] {
+            let per_len: Vec<(Vec<u32>, Vec<f64>)> = (0..3)
+                .map(|_| {
+                    let mut cols: Vec<u32> =
+                        (0..4).map(|_| rng.below(15) as u32).collect();
+                    cols.sort_unstable();
+                    cols.dedup();
+                    let vals: Vec<f64> =
+                        cols.iter().map(|_| rng.normal()).collect();
+                    (cols, vals)
+                })
+                .collect();
+            patches.insert(r, per_len);
+        }
+        a.patch_rows(15, &patches);
+        b.patch_rows(15, &patches);
+        a.recombine_rows(&f, &[1, 9]);
+        let full = b.combine_into(&f);
+        assert!(a.pattern == *full, "partial recombination differs from full");
     }
 
     #[test]

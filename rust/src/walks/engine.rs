@@ -365,7 +365,8 @@ fn walk_once_record(
         if l == cfg.max_len {
             break;
         }
-        let deg = g.degree(current);
+        let (nb, wts) = g.row(current);
+        let deg = nb.len();
         if deg == 0 {
             break; // isolated node: walk cannot continue
         }
@@ -374,8 +375,8 @@ fn walk_once_record(
             break;
         }
         let k = rng.below(deg);
-        let next = g.neighbors(current)[k] as usize;
-        let mut w = g.neighbor_weights(current)[k];
+        let next = nb[k] as usize;
+        let mut w = wts[k];
         if cfg.normalize {
             // Effective matrix entry: Wn_uv = w / sqrt(d_u d_v).
             w /= (norm_deg[current] * norm_deg[next]).sqrt();

@@ -240,3 +240,74 @@ fn mixed_write_traffic_coalesces_and_scatters_correctly() {
     assert_eq!(p.get("graph_version").unwrap().as_usize(), Some(4));
     c.call(r#"{"op":"shutdown"}"#);
 }
+
+#[test]
+fn self_loop_deltas_roundtrip_through_server() {
+    let addr = start_server(128);
+    let mut c = Client::connect(addr);
+    let s0 = c.call(r#"{"op":"stats"}"#);
+    let e0 = s0.get("n_edges").unwrap().as_usize().unwrap();
+
+    // add_edge(u,u): valid delta, single directed entry, counts once.
+    let r = c.call(r#"{"op":"add_edge","u":9,"v":9,"w":0.6}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    assert_eq!(r.get("graph_version").unwrap().as_usize(), Some(1));
+    assert!(r.get("resampled_walks").unwrap().as_usize().unwrap() > 0);
+    let s1 = c.call(r#"{"op":"stats"}"#);
+    assert_eq!(s1.get("n_edges").unwrap().as_usize(), Some(e0 + 1), "{s1:?}");
+
+    // Predictions still serve and are stamped post-delta.
+    let p = c.call(r#"{"op":"predict","nodes":[9],"samples":4}"#);
+    assert_eq!(p.get("ok").unwrap().as_bool(), Some(true), "{p:?}");
+    assert_eq!(p.get("graph_version").unwrap().as_usize(), Some(1));
+    assert!(p.get("mean").unwrap().as_arr().unwrap()[0]
+        .as_f64()
+        .unwrap()
+        .is_finite());
+
+    // remove_edge(u,u) restores the edge count; removing again errors.
+    let r = c.call(r#"{"op":"remove_edge","u":9,"v":9}"#);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    assert_eq!(r.get("graph_version").unwrap().as_usize(), Some(2));
+    let s2 = c.call(r#"{"op":"stats"}"#);
+    assert_eq!(s2.get("n_edges").unwrap().as_usize(), Some(e0), "{s2:?}");
+    let bad = c.call(r#"{"op":"remove_edge","u":9,"v":9}"#);
+    assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "{bad:?}");
+
+    c.call(r#"{"op":"shutdown"}"#);
+}
+
+#[test]
+fn concurrent_deltas_get_distinct_monotone_versions() {
+    // Coalesced delta runs must still stamp one monotone graph_version
+    // per delta: with 6 concurrent mutators, the acked versions are a
+    // permutation of 1..=6 regardless of how the write batcher grouped
+    // them into engine calls.
+    let addr = start_server(256);
+    let handles: Vec<_> = (0..6)
+        .map(|k| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let (u, v) = (k * 11 % 256, (k * 11 + 128) % 256);
+                let r = c.call(&format!(
+                    r#"{{"op":"add_edge","u":{u},"v":{v},"w":0.3}}"#
+                ));
+                assert_eq!(
+                    r.get("ok").unwrap().as_bool(),
+                    Some(true),
+                    "mutator {k}: {r:?}"
+                );
+                r.get("graph_version").unwrap().as_usize().unwrap()
+            })
+        })
+        .collect();
+    let mut versions: Vec<usize> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    versions.sort_unstable();
+    assert_eq!(versions, vec![1, 2, 3, 4, 5, 6], "versions not distinct/monotone");
+    let mut c = Client::connect(addr);
+    let s = c.call(r#"{"op":"stats"}"#);
+    assert_eq!(s.get("graph_version").unwrap().as_usize(), Some(6), "{s:?}");
+    assert_eq!(s.get("deltas_applied").unwrap().as_usize(), Some(6), "{s:?}");
+    c.call(r#"{"op":"shutdown"}"#);
+}
