@@ -37,6 +37,16 @@
 //! through `StreamingFeatures::apply_delta_batch` (one union
 //! invalidation + parallel resample) vs 64 single-delta applies. Set
 //! `HOTPATH_PROFILE=quick` for the small-size CI profile (same schema).
+//!
+//! PR 5 additions: `model_delta_batch_overlay` vs
+//! `model_delta_batch_memcpy` — the same K-delta model-level batch
+//! with patches staged in the Φ/Φᵀ/feature row-store overlays
+//! (sub-linear, the default) vs compacted back to base CSRs after
+//! every batch (the old per-batch O(total nnz) memcpy profile). The
+//! `BENCH_hotpath.json` trajectory is now **enforced**: CI gates each
+//! run against the committed `BENCH_baseline.json` via
+//! `src/bin/bench_gate.rs` (median-normalised, >1.5× slowdown of any
+//! matched row fails the workflow).
 
 use grfgp::bo::{run_policy, BoConfig, ThompsonPolicy};
 use grfgp::gp::{GpModel, Hypers, Modulation};
@@ -433,6 +443,83 @@ fn main() {
             println!(
                 "stream delta batch speedup (n={npl}, {k_deltas} deltas): {:.1}x",
                 seq_s / r.mean_s.max(1e-12)
+            );
+        }
+
+        // --- Model-side delta patching: overlay vs per-batch memcpy ---
+        // The same K-delta roundtrip batch through the full model path
+        // (stream resample + feature patch + Φ/Φᵀ maintenance + a
+        // short, iteration-capped re-solve), in two modes:
+        // * `model_delta_batch_overlay` — the default sub-linear path:
+        //   patches stay in the Φ/Φᵀ/feature row-store overlays, so
+        //   the patch stage costs O(touched nnz);
+        // * `model_delta_batch_memcpy` — `compact_model_overlays()`
+        //   after every batch, restoring the pre-overlay cost profile
+        //   (one O(total nnz) splice per operand per batch — a lower
+        //   bound on the old clone+splice+build_maps path).
+        // The deltas touch a fixed set of rows, so as n grows the
+        // overlay row should stay ~flat (it tracks touched nnz plus
+        // the O(n) solve vectors) while the memcpy row grows with
+        // total feature nnz.
+        {
+            let k_deltas = 16usize;
+            let adds: Vec<GraphDelta> = (0..k_deltas)
+                .map(|k| GraphDelta::AddEdge {
+                    u: (11 * k + 5) % 64,
+                    v: ((11 * k + 5) % 64 + n / 2) % n,
+                    w: 0.5,
+                })
+                .collect();
+            let undo: Vec<GraphDelta> = adds
+                .iter()
+                .rev()
+                .map(|d| match *d {
+                    GraphDelta::AddEdge { u, v, .. } => {
+                        GraphDelta::RemoveEdge { u, v }
+                    }
+                    _ => unreachable!(),
+                })
+                .collect();
+            let fdm = vec![1.0, 0.5, 0.25, 0.12];
+            let hy = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+            let mut run_mode = |tag: &str, compact_every_batch: bool| {
+                let mut s =
+                    StreamingFeatures::new(g.clone(), cfg.clone(), fdm.clone(), 19);
+                s.set_compact_threshold(usize::MAX);
+                let mut m = GpModel::new(s.components(), hy.clone(), &train, &y);
+                m.solve.max_iters = 8; // bound the (identical) solve cost
+                let r = bench(
+                    &format!("model_delta_batch_{tag}/n={n}/K={k_deltas}"),
+                    1,
+                    5,
+                    || {
+                        let o1 =
+                            m.apply_graph_delta_batch(&mut s, &adds, None).unwrap();
+                        if compact_every_batch {
+                            m.compact_model_overlays();
+                        }
+                        let o2 =
+                            m.apply_graph_delta_batch(&mut s, &undo, None).unwrap();
+                        if compact_every_batch {
+                            m.compact_model_overlays();
+                        }
+                        o1.patched_rows + o2.patched_rows
+                    },
+                );
+                rows.push(BenchRow::new(
+                    &format!("model_delta_batch_{tag}"),
+                    n,
+                    k_deltas,
+                    r.mean_s,
+                ));
+                r.mean_s
+            };
+            let overlay_s = run_mode("overlay", false);
+            let memcpy_s = run_mode("memcpy", true);
+            println!(
+                "model delta patch overlay vs memcpy (n={n}, {k_deltas} deltas): \
+                 {:.1}x",
+                memcpy_s / overlay_s.max(1e-12)
             );
         }
 

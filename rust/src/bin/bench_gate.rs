@@ -1,0 +1,106 @@
+//! CI perf-regression gate over the `BENCH_hotpath.json` trajectory.
+//!
+//! ```text
+//! bench_gate <current.json> <baseline.json> [threshold]
+//! ```
+//!
+//! Compares the fresh quick-profile bench run against the committed
+//! baseline ([`grfgp::util::bench::gate_rows`]): rows are matched on
+//! `(name, n, b)`, each row's current/baseline ratio is normalised by
+//! the **median** ratio of the whole suite (so a uniformly
+//! faster/slower CI runner shifts nothing), and any row whose
+//! normalised slowdown exceeds the threshold (default 1.5×) fails the
+//! process with exit code 1. `metric_*` rows, `*_iters` rows, rows
+//! missing from the baseline, and sub-floor micro-timings are never
+//! gated (see `gate_rows` docs).
+//!
+//! Environment overrides: `BENCH_GATE_THRESHOLD` (default 1.5),
+//! `BENCH_GATE_MIN_NS` (noise floor, default 10000 = 10µs).
+//!
+//! ## Refreshing the baseline
+//!
+//! The committed `BENCH_baseline.json` should track the quick profile
+//! of a known-good commit. After a deliberate perf-affecting change
+//! (or to re-seed from real hardware), run
+//!
+//! ```text
+//! HOTPATH_PROFILE=quick cargo bench --bench hotpath
+//! cp rust/BENCH_hotpath.json BENCH_baseline.json   # repo root
+//! ```
+//!
+//! and commit the new baseline together with the change that moved it.
+
+use grfgp::util::bench::{gate_rows, parse_rows_json};
+use std::process::ExitCode;
+
+fn read_rows(path: &str) -> Result<Vec<grfgp::util::bench::BenchRow>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {path}: {e}"))?;
+    parse_rows_json(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() < 3 {
+        eprintln!("usage: bench_gate <current.json> <baseline.json> [threshold]");
+        return ExitCode::from(2);
+    }
+    let threshold: f64 = args
+        .get(3)
+        .cloned()
+        .or_else(|| std::env::var("BENCH_GATE_THRESHOLD").ok())
+        .map(|s| s.parse().expect("threshold must be a number"))
+        .unwrap_or(1.5);
+    let min_ns: f64 = std::env::var("BENCH_GATE_MIN_NS")
+        .ok()
+        .map(|s| s.parse().expect("BENCH_GATE_MIN_NS must be a number"))
+        .unwrap_or(10_000.0);
+    let (current, baseline) = match (read_rows(&args[1]), read_rows(&args[2])) {
+        (Ok(c), Ok(b)) => (c, b),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench_gate: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = gate_rows(&current, &baseline, threshold, min_ns);
+    println!(
+        "bench_gate: {} rows matched, {} skipped, median ratio {:.3} \
+         (machine-speed scale), threshold {threshold}x",
+        report.matched.len(),
+        report.skipped,
+        report.median_ratio
+    );
+    for m in &report.matched {
+        println!(
+            "  {:<32} n={:<7} b={:<3} {:>12.0} -> {:>12.0} ns  ratio {:>6.2}  norm {:>6.2}{}",
+            m.name,
+            m.n,
+            m.b,
+            m.baseline_ns,
+            m.current_ns,
+            m.ratio,
+            m.normalized,
+            if m.normalized > threshold { "  << REGRESSION" } else { "" }
+        );
+    }
+    if report.matched.is_empty() {
+        println!(
+            "bench_gate: WARNING — no gateable rows matched the baseline; \
+             refresh BENCH_baseline.json from this run's BENCH_hotpath.json \
+             (see the doc header of src/bin/bench_gate.rs)."
+        );
+        return ExitCode::SUCCESS;
+    }
+    if report.regressions.is_empty() {
+        println!("bench_gate: OK — no row regressed past {threshold}x (normalised)");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "bench_gate: FAIL — {} row(s) regressed past {threshold}x \
+             (normalised); if intentional, refresh BENCH_baseline.json \
+             (doc header of src/bin/bench_gate.rs)",
+            report.regressions.len()
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -13,13 +13,42 @@
 //! vector. An optional Jacobi preconditioner (masked Φ row norms,
 //! `O(nnz)`) cuts the iteration count on ill-conditioned kernels; it is
 //! on by default via [`SolveConfig::precondition`].
+//!
+//! ## Two-level overlay: sub-linear graph deltas (O(touched nnz))
+//!
+//! A dynamic-graph delta flows through two delta row-stores that share
+//! one compaction policy:
+//!
+//! 1. **Stream overlay** — [`StreamingFeatures`] resamples only the
+//!    invalidated walks and stages the rebuilt feature rows over its
+//!    compacted base CSRs (see `stream` module docs).
+//! 2. **Model overlay** — this model mirrors that design for its own
+//!    operands: Φ and Φᵀ live in [`crate::sparse::RowOverlay`]s, and
+//!    [`CombinedFeatures`] keeps per-row pattern segments + relative
+//!    scatter maps for the patched rows. A delta batch therefore costs
+//!    O(touched nnz) model-side: no Φ clone, no full Φᵀ splice, no
+//!    full scatter-map rebuild (each is counter-guarded —
+//!    [`GpModel::phi_transposes`], [`GpModel::phi_overlay_stats`],
+//!    `CombinedFeatures::full_map_builds`). Φᵀ is maintained by
+//!    column-scatter ([`crate::sparse::RowOverlay::patch_transpose_rows`]),
+//!    bitwise equal to a full transpose of the patched Φ.
+//!
+//! Both levels compact on the **same cadence**: when the stream's
+//! overlay crosses its threshold and folds
+//! ([`crate::stream::BatchSummary::compacted`]), the model folds its
+//! Φ/Φᵀ/feature overlays too ([`GpModel::compact_model_overlays`]) and
+//! the `to_ell_auto` layout policy re-runs on the fresh operands (the
+//! packed ELL selection is pre-empted while an overlay is live, exactly
+//! like the stream's `phi_ell`). Between compactions every product
+//! dispatches overlay-then-base per row — bitwise identical to the
+//! compacted matrix, so the correctness anchor (patched model ==
+//! from-scratch rebuild, bit for bit) is untouched.
 
 use crate::gp::adam::Adam;
 use crate::gp::modulation::Hypers;
 use crate::linalg::cg::{block_cg_solve, pcg_solve, CgStats};
 use crate::linalg::{column_dots, dot};
-use crate::sparse::ell::{spmm_dispatch, spmv_dispatch};
-use crate::sparse::{Csr, Ell, FeatureLayout};
+use crate::sparse::{Csr, Ell, FeatureLayout, RowOverlay};
 use crate::stream::{GraphDelta, StreamingFeatures};
 use crate::util::parallel::num_threads;
 use crate::util::rng::Rng;
@@ -127,9 +156,11 @@ pub struct GpModel {
     /// `lml_grad`, so serving-path deltas don't pay for operands only
     /// hyperparameter fitting reads.
     c_t: std::cell::RefCell<Option<Vec<Csr>>>,
-    /// Current Φ and Φᵀ (refreshed after each hyperparameter change).
-    phi: Csr,
-    phi_t: Csr,
+    /// Current Φ and Φᵀ as compacted-base + delta-row overlays: a
+    /// hyperparameter refresh rebuilds the bases; a graph delta stages
+    /// O(touched) row patches and leaves the bases alone (module docs).
+    phi: RowOverlay,
+    phi_t: RowOverlay,
     /// Scratch buffers for the masked gram operator — the CG hot path
     /// must not allocate per iteration (EXPERIMENTS.md §Perf).
     scratch: std::cell::RefCell<(Vec<f64>, Vec<f64>, Vec<f64>)>,
@@ -193,7 +224,8 @@ impl GpModel {
         let mut features = components.prepare();
         let phi_f = hypers.modulation.coeffs();
         let phi = features.combine_into(&phi_f).clone();
-        let phi_t = phi.transpose_par(threads);
+        let phi_t = RowOverlay::from(phi.transpose_par(threads));
+        let phi = RowOverlay::from(phi);
         GpModel {
             features,
             hypers,
@@ -223,6 +255,35 @@ impl GpModel {
         self.phi_transposes.get()
     }
 
+    /// Overlay observability for the sub-linear delta path:
+    /// `(phi_overlay_rows, phi_t_overlay_rows, phi_compactions,
+    /// phi_t_compactions)`. Delta batches grow the first two and leave
+    /// the compaction counts alone until the stream's compaction
+    /// cadence fires (counter-guarded in the tests).
+    pub fn phi_overlay_stats(&self) -> (usize, usize, usize, usize) {
+        (
+            self.phi.overlay_rows(),
+            self.phi_t.overlay_rows(),
+            self.phi.compactions(),
+            self.phi_t.compactions(),
+        )
+    }
+
+    /// Fold the model-side overlays (Φ, Φᵀ, and the feature
+    /// recombiner's row store) back into compacted bases — one O(nnz)
+    /// splice each. Runs automatically on the stream's compaction
+    /// cadence ([`GpModel::apply_graph_delta_batch`]); callers that
+    /// want the per-batch memcpy cost profile back (memory-tight
+    /// deployments, the `model_delta_batch_memcpy` bench contrast) can
+    /// invoke it after every batch. The packed ELL operands re-select
+    /// lazily from the fresh bases at the next application.
+    pub fn compact_model_overlays(&mut self) {
+        self.features.compact();
+        self.phi.compact();
+        self.phi_t.compact();
+        *self.ell_cache.borrow_mut() = None;
+    }
+
     pub fn n(&self) -> usize {
         self.mask.len()
     }
@@ -237,8 +298,12 @@ impl GpModel {
     /// under `solve.layout`) at the next operator application.
     fn refresh_features(&mut self) {
         let f = self.hypers.modulation.coeffs();
-        self.phi = self.features.combine_into(&f).clone();
-        self.phi_t = self.phi.transpose_par(self.solve.effective_threads());
+        // `combine_into` folds any pending feature overlay first, so
+        // the rebuilt Φ/Φᵀ start a fresh compacted generation.
+        let phi = self.features.combine_into(&f).clone();
+        let phi_t = phi.transpose_par(self.solve.effective_threads());
+        self.phi = RowOverlay::from(phi);
+        self.phi_t = RowOverlay::from(phi_t);
         self.phi_transposes.set(self.phi_transposes.get() + 1);
         self.phi_f = f;
         *self.jacobi_cache.borrow_mut() = None;
@@ -347,7 +412,7 @@ impl GpModel {
         let old_supports: Vec<(u32, Vec<u32>)> = summary
             .affected_rows
             .iter()
-            .filter(|&&r| (r as usize) < self.phi.n_rows)
+            .filter(|&&r| (r as usize) < self.phi.n_rows())
             .map(|&r| (r, self.phi.row(r as usize).0.to_vec()))
             .collect();
         let mut patches: std::collections::BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>> =
@@ -360,6 +425,9 @@ impl GpModel {
                     .collect(),
             );
         }
+        // O(touched nnz): the affected rows' pattern segments +
+        // relative scatter maps land in the feature overlay — no
+        // component splice, no full map rebuild.
         self.features.patch_rows(n, &patches);
         if self.mask.len() < n {
             // Node insertion: grow the observation embedding and the
@@ -377,18 +445,57 @@ impl GpModel {
         *self.c_t.borrow_mut() = None;
         // Incremental operator refresh: recombine only the patched Φ
         // rows (the modulation is unchanged on the delta path, so every
-        // other slot already holds the current combination) and
-        // column-scatter them into Φᵀ — no `transpose_par` here. If the
-        // hypers were mutated without `refresh_features` the partial
-        // invariant is void: fall back to the full refresh rather than
-        // silently mixing two modulations.
+        // other slot already holds the current combination), stage them
+        // in the Φ overlay, and column-scatter into the Φᵀ overlay — no
+        // Φ clone, no Φᵀ splice, no `transpose_par` here. If the hypers
+        // were mutated without `refresh_features` the partial invariant
+        // is void: fall back to the full refresh rather than silently
+        // mixing two modulations.
         let f = self.hypers.modulation.coeffs();
         if f == self.phi_f {
             self.features.recombine_rows(&f, &summary.affected_rows);
-            self.phi = self.features.current();
-            self.patch_phi_t(n, &summary.affected_rows, &old_supports);
-            *self.jacobi_cache.borrow_mut() = None;
+            self.phi.grow(n, n);
+            for &r in &summary.affected_rows {
+                let (cols, vals) = self.features.pattern_row(r as usize);
+                self.phi.patch_row(r, cols.to_vec(), vals.to_vec());
+            }
+            self.phi_t.patch_transpose_rows(
+                &self.phi,
+                &summary.affected_rows,
+                &old_supports,
+            );
+            // Patch the Jacobi diagonal in place rather than dropping
+            // it: only the touched rows' ‖φ_i‖² moved (mask and σ² are
+            // delta-invariant on this branch), so the cached
+            // preconditioner stays O(touched) too. Appended nodes are
+            // unobserved, d = σ². Entry-for-entry what a fresh
+            // `jacobi_diag` would compute (same accumulation order).
+            {
+                let mut cache = self.jacobi_cache.borrow_mut();
+                if let Some(d) = cache.as_mut() {
+                    let sigma2 = self.hypers.sigma_n2();
+                    d.resize(n, sigma2);
+                    for &r in &summary.affected_rows {
+                        let i = r as usize;
+                        d[i] = sigma2;
+                        if self.mask[i] != 0.0 {
+                            let (_, vals) = self.phi.row(i);
+                            let mut acc = 0.0;
+                            for v in vals {
+                                acc += v * v;
+                            }
+                            d[i] += acc;
+                        }
+                    }
+                }
+            }
             *self.ell_cache.borrow_mut() = None;
+            // Shared compaction cadence: when the stream folded its
+            // overlay this batch, fold the model-side overlays too and
+            // let the layout policy re-select on the fresh bases.
+            if summary.compacted {
+                self.compact_model_overlays();
+            }
         } else {
             self.refresh_features();
         }
@@ -412,71 +519,6 @@ impl GpModel {
         })
     }
 
-    /// Column-scatter the changed Φ rows into Φᵀ. Changing Φ rows `R`
-    /// changes exactly the Φᵀ rows in `∪_r (old support ∪ new support)`:
-    /// each such row drops its entries with column ∈ R and merge-inserts
-    /// the fresh entries (sorted by source row, values copied), then one
-    /// [`Csr::with_replaced_rows`] pass splices them. Bitwise equal to
-    /// `phi.transpose_par(..)` — same per-row ordering (source rows
-    /// ascending), same value bits — at O(touched rows + nnz memcpy)
-    /// instead of a full two-pass counting sort.
-    fn patch_phi_t(
-        &mut self,
-        n: usize,
-        affected: &[u32],
-        old_supports: &[(u32, Vec<u32>)],
-    ) {
-        use std::collections::{BTreeMap, BTreeSet};
-        // Fresh entries of the affected rows, bucketed per column j.
-        // `affected` is sorted ascending, so each bucket comes out
-        // sorted by source row.
-        let mut adds: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = BTreeMap::new();
-        for &r in affected {
-            let (cols, vals) = self.phi.row(r as usize);
-            for (c, v) in cols.iter().zip(vals) {
-                let e = adds.entry(*c).or_default();
-                e.0.push(r);
-                e.1.push(*v);
-            }
-        }
-        let mut touched: BTreeSet<u32> = adds.keys().copied().collect();
-        for (_, cols) in old_supports {
-            touched.extend(cols.iter().copied());
-        }
-        let empty = (Vec::new(), Vec::new());
-        let mut patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = BTreeMap::new();
-        for &j in &touched {
-            let (oc, ov) = if (j as usize) < self.phi_t.n_rows {
-                self.phi_t.row(j as usize)
-            } else {
-                (&[][..], &[][..])
-            };
-            let (ac, av) = adds.get(&j).unwrap_or(&empty);
-            let mut cols = Vec::with_capacity(oc.len() + ac.len());
-            let mut vals = Vec::with_capacity(oc.len() + ac.len());
-            let mut ai = 0;
-            for (c, v) in oc.iter().zip(ov) {
-                if affected.binary_search(c).is_ok() {
-                    continue; // this column's Φ row was rebuilt: drop
-                }
-                while ai < ac.len() && ac[ai] < *c {
-                    cols.push(ac[ai]);
-                    vals.push(av[ai]);
-                    ai += 1;
-                }
-                cols.push(*c);
-                vals.push(*v);
-            }
-            while ai < ac.len() {
-                cols.push(ac[ai]);
-                vals.push(av[ai]);
-                ai += 1;
-            }
-            patches.insert(j, (cols, vals));
-        }
-        self.phi_t = self.phi_t.with_replaced_rows(n, n, &patches);
-    }
-
     // ------------------------------------------------------------------
     // Masked gram operator
     // ------------------------------------------------------------------
@@ -486,9 +528,10 @@ impl GpModel {
     /// Both the serial and the threaded SpMVs run through the reusable
     /// scratch buffers — no allocation per CG iteration on either path.
     /// The operands are whatever `solve.layout` selected (native ELL
-    /// when Φ's rows are regular enough, CSR otherwise); the blocked
-    /// variant uses the same selection so single- and multi-RHS solves
-    /// stay in bitwise lockstep.
+    /// when Φ's rows are regular enough and the overlays are compacted,
+    /// the overlay-aware CSR dispatch otherwise); the blocked variant
+    /// uses the same selection so single- and multi-RHS solves stay in
+    /// bitwise lockstep.
     fn apply_h(&self, x: &[f64], out: &mut [f64]) {
         let n = self.n();
         let threads = self.solve.effective_threads();
@@ -501,8 +544,8 @@ impl GpModel {
         for i in 0..n {
             mx[i] = self.mask[i] * x[i];
         }
-        spmv_dispatch(&self.phi_t, phi_t_ell.as_ref(), mx, mid, threads, par);
-        spmv_dispatch(&self.phi, phi_ell.as_ref(), mid, prod, threads, par);
+        self.phi_t.spmv(phi_t_ell.as_ref(), mx, mid, threads, par);
+        self.phi.spmv(phi_ell.as_ref(), mid, prod, threads, par);
         for i in 0..n {
             out[i] = self.mask[i] * prod[i] + sigma2 * x[i];
         }
@@ -513,7 +556,7 @@ impl GpModel {
     /// block-CG iteration streams Φ/Φᵀ once instead of `ncols` times.
     fn apply_h_block(&self, x: &[f64], ncols: usize, out: &mut [f64]) {
         let n = self.n();
-        let k = self.phi.n_cols;
+        let k = self.phi.n_cols();
         let threads = self.solve.effective_threads();
         let sigma2 = self.hypers.sigma_n2();
         debug_assert_eq!(x.len(), n * ncols);
@@ -532,8 +575,8 @@ impl GpModel {
                 mx[base + j] = m * x[base + j];
             }
         }
-        spmm_dispatch(&self.phi_t, phi_t_ell.as_ref(), mx, ncols, mid, threads, par);
-        spmm_dispatch(&self.phi, phi_ell.as_ref(), mid, ncols, out, threads, par);
+        self.phi_t.spmm(phi_t_ell.as_ref(), mx, ncols, mid, threads, par);
+        self.phi.spmm(phi_ell.as_ref(), mid, ncols, out, threads, par);
         for i in 0..n {
             let m = self.mask[i];
             let base = i * ncols;
@@ -565,18 +608,32 @@ impl GpModel {
     }
 
     /// Cached C_lᵀ operands for the modulation gradients: rebuilt on
-    /// first use after a graph delta invalidated them.
+    /// first use after a graph delta invalidated them. Materialises
+    /// each component through the feature overlay
+    /// ([`CombinedFeatures::component_csr`]) so a training step between
+    /// compactions sees the patched rows.
     fn c_t_cached(&self) -> std::cell::Ref<'_, Vec<Csr>> {
         {
             let mut cache = self.c_t.borrow_mut();
             if cache.is_none() {
                 let threads = self.solve.effective_threads();
+                let n = self.features.n();
                 *cache = Some(
-                    self.features
-                        .components
-                        .c
-                        .iter()
-                        .map(|c| c.transpose_par(threads))
+                    (0..self.features.components.c.len())
+                        .map(|l| {
+                            let base = &self.features.components.c[l];
+                            if self.features.overlay_rows() == 0
+                                && base.n_rows == n
+                            {
+                                // Compacted: transpose the borrowed
+                                // base directly, no materialise clone.
+                                base.transpose_par(threads)
+                            } else {
+                                self.features
+                                    .component_csr(l)
+                                    .transpose_par(threads)
+                            }
+                        })
                         .collect(),
                 );
             }
@@ -701,8 +758,16 @@ impl GpModel {
                 mat.matmat(x, ncols)
             }
         };
-        let phi_v = proj(&self.phi_t, &solves); // Φᵀ V
-        let phi_z = proj(&self.phi_t, &rhs); // Φᵀ Z
+        // Φᵀ is an overlay operand: its own (overlay-aware) SpMM.
+        let proj_t = |x: &[f64]| -> Vec<f64> {
+            if par {
+                self.phi_t.matmat_par(x, ncols, threads)
+            } else {
+                self.phi_t.matmat(x, ncols)
+            }
+        };
+        let phi_v = proj_t(&solves); // Φᵀ V
+        let phi_z = proj_t(&rhs); // Φᵀ Z
 
         // --- gradient w.r.t. modulation coefficients ----------------------
         // quad_l  = αᵀ ∂H α     = 2 (C_lᵀα)·(Φᵀα)
@@ -824,7 +889,7 @@ impl GpModel {
         }
         let n = self.n();
         let b = n_samples;
-        let k = self.phi.n_cols;
+        let k = self.phi.n_cols();
         let threads = self.solve.effective_threads();
         let par = threads > 1 && n > 4096;
         let sigma = self.hypers.sigma_n2().sqrt();
@@ -898,7 +963,7 @@ impl GpModel {
         warm: Option<&[f64]>,
     ) -> (Vec<f64>, Vec<f64>, Vec<CgStats>) {
         let n = self.n();
-        let k = self.phi.n_cols;
+        let k = self.phi.n_cols();
         let threads = self.solve.effective_threads();
         let par = threads > 1 && n > 4096;
         let sigma = self.hypers.sigma_n2().sqrt();
@@ -1223,7 +1288,7 @@ mod tests {
         assert_eq!(samples.len(), n_samples);
         let sigma = model.hypers.sigma_n2().sqrt();
         for (j, sample) in samples.iter().enumerate() {
-            let w = rng_serial.normal_vec(model.phi.n_cols);
+            let w = rng_serial.normal_vec(model.phi.n_cols());
             let g = model.phi.matvec(&w);
             let rhs: Vec<f64> = (0..n)
                 .map(|i| {
@@ -1472,6 +1537,197 @@ mod tests {
         assert_eq!(model.n(), n_before);
         let (m3, _) = model.posterior_mean();
         assert!(m3 == m1, "failed batch must not move the model");
+    }
+
+    /// Acceptance guard of the sub-linear delta path: a run of delta
+    /// batches must not clone Φ, splice Φᵀ, transpose, or rebuild the
+    /// scatter maps — every counter stays put while the overlays grow —
+    /// and the overlay-backed model stays bitwise a rebuilt one.
+    #[test]
+    fn delta_batches_stay_on_overlays_without_memcpy() {
+        use crate::stream::{GraphDelta, StreamingFeatures};
+        let g = generators::grid2d(6, 6);
+        let cfg = WalkConfig { n_walks: 30, max_len: 4, threads: 2, ..Default::default() };
+        let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 4), 0.1);
+        let mut stream = StreamingFeatures::new(
+            g,
+            cfg.clone(),
+            hypers.modulation.coeffs(),
+            21,
+        );
+        // Keep the stream (and therefore the model) from compacting so
+        // the steady overlay state is what gets asserted.
+        stream.set_compact_threshold(usize::MAX);
+        let train: Vec<usize> = (0..36).step_by(4).collect();
+        let y: Vec<f64> =
+            train.iter().map(|&i| (i as f64 * 0.2).cos()).collect();
+        let mut model =
+            GpModel::new(stream.components(), hypers.clone(), &train, &y);
+        let transposes0 = model.phi_transposes();
+        assert_eq!(model.features.full_map_builds(), 1);
+        let batches: Vec<Vec<GraphDelta>> = vec![
+            vec![
+                GraphDelta::AddEdge { u: 0, v: 20, w: 0.7 },
+                GraphDelta::AddEdge { u: 3, v: 33, w: 0.4 },
+            ],
+            vec![GraphDelta::AddNode, GraphDelta::AddEdge { u: 36, v: 5, w: 0.5 }],
+            vec![
+                GraphDelta::RemoveEdge { u: 0, v: 20 },
+                GraphDelta::AddEdge { u: 7, v: 7, w: 0.9 },
+            ],
+        ];
+        for batch in &batches {
+            let out = model
+                .apply_graph_delta_batch(&mut stream, batch, None)
+                .unwrap();
+            assert!(out.patched_rows > 0);
+        }
+        // Counters: no transpose, no full map rebuild, no compaction —
+        // and the overlays actually hold the patched rows.
+        assert_eq!(model.phi_transposes(), transposes0, "delta path transposed");
+        assert_eq!(
+            model.features.full_map_builds(),
+            1,
+            "delta path rebuilt all scatter maps"
+        );
+        let (phi_rows, phi_t_rows, phi_comp, phi_t_comp) =
+            model.phi_overlay_stats();
+        assert!(phi_rows > 0 && phi_t_rows > 0, "overlays unused");
+        assert_eq!((phi_comp, phi_t_comp), (0, 0), "delta path compacted");
+        // Overlay-backed operands are bitwise the rebuilt model's.
+        let full = StreamingFeatures::new(
+            stream.graph().clone(),
+            cfg,
+            hypers.modulation.coeffs(),
+            21,
+        );
+        let model2 = GpModel::new(full.components(), hypers, &train, &y);
+        let (m1, s1) = model.posterior_mean();
+        let (m2, s2) = model2.posterior_mean();
+        assert_eq!(s1.iterations, s2.iterations);
+        assert!(m1 == m2, "overlay model != rebuilt model");
+        assert!(model.phi_t == model.phi.transpose());
+        // Training still works off the overlays (C_lᵀ rebuilt through
+        // the overlay-aware materialisation).
+        let mut rng = Rng::new(2);
+        let (grad, step) = model.lml_grad(&mut rng);
+        let mut rng = Rng::new(2);
+        let (grad2, step2) = model2.lml_grad(&mut rng);
+        assert_eq!(step.cg_iters, step2.cg_iters);
+        assert!(grad == grad2, "overlay lml_grad != rebuilt lml_grad");
+        // Explicit fold: bitwise no-op on the operands.
+        model.compact_model_overlays();
+        let (r0, r1, c0, c1) = model.phi_overlay_stats();
+        assert_eq!((r0, r1), (0, 0));
+        assert!(c0 >= 1 && c1 >= 1);
+        let (m3, _) = model.posterior_mean();
+        assert!(m3 == m1, "compaction moved the posterior");
+    }
+
+    /// Shared compaction cadence: when the stream folds its overlay
+    /// mid-batch, the model folds Φ/Φᵀ/features too — and nothing
+    /// observable moves.
+    #[test]
+    fn model_overlays_compact_on_stream_cadence() {
+        use crate::stream::{GraphDelta, StreamingFeatures};
+        let g = generators::grid2d(5, 5);
+        let cfg = WalkConfig { n_walks: 25, max_len: 4, threads: 1, ..Default::default() };
+        let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 4), 0.1);
+        let mut stream = StreamingFeatures::new(
+            g,
+            cfg.clone(),
+            hypers.modulation.coeffs(),
+            4,
+        );
+        stream.set_compact_threshold(1); // every batch compacts
+        let train: Vec<usize> = (0..25).step_by(5).collect();
+        let y: Vec<f64> = train.iter().map(|&i| (i as f64).sin()).collect();
+        let mut model =
+            GpModel::new(stream.components(), hypers.clone(), &train, &y);
+        let out = model
+            .apply_graph_delta_batch(
+                &mut stream,
+                &[GraphDelta::AddEdge { u: 1, v: 13, w: 0.6 }],
+                None,
+            )
+            .unwrap();
+        assert!(out.compacted, "threshold 1 must compact");
+        let (phi_rows, phi_t_rows, phi_comp, phi_t_comp) =
+            model.phi_overlay_stats();
+        assert_eq!((phi_rows, phi_t_rows), (0, 0), "overlays must be folded");
+        assert!(phi_comp >= 1 && phi_t_comp >= 1, "compaction counters");
+        let full = StreamingFeatures::new(
+            stream.graph().clone(),
+            cfg,
+            hypers.modulation.coeffs(),
+            4,
+        );
+        let model2 = GpModel::new(full.components(), hypers, &train, &y);
+        let (m1, _) = model.posterior_mean();
+        let (m2, _) = model2.posterior_mean();
+        assert!(m1 == m2, "compacted model != rebuilt model");
+        assert!(model.phi_t == model.phi.transpose());
+    }
+
+    /// Regression (add_node growth path): a batch that appends a node
+    /// and immediately wires it up must scatter the fresh column into a
+    /// correctly grown Φᵀ — bitwise the full transpose — rather than a
+    /// stale-width one, including when the very next batch touches the
+    /// new node again.
+    #[test]
+    fn add_node_then_delta_scatters_into_grown_phi_t() {
+        use crate::stream::{GraphDelta, StreamingFeatures};
+        let g = generators::ring(18);
+        let cfg = WalkConfig { n_walks: 24, max_len: 3, threads: 1, ..Default::default() };
+        let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+        let mut stream = StreamingFeatures::new(
+            g,
+            cfg.clone(),
+            hypers.modulation.coeffs(),
+            6,
+        );
+        stream.set_compact_threshold(usize::MAX);
+        let train: Vec<usize> = (0..18).step_by(3).collect();
+        let y: Vec<f64> = train.iter().map(|&i| (i as f64 * 0.4).sin()).collect();
+        let mut model =
+            GpModel::new(stream.components(), hypers.clone(), &train, &y);
+        let transposes0 = model.phi_transposes();
+        // Batch 1: append the node (pre-compaction: its rows live only
+        // in the overlays).
+        let out = model
+            .apply_graph_delta_batch(&mut stream, &[GraphDelta::AddNode], None)
+            .unwrap();
+        assert_eq!(out.deltas[0].added_node, Some(18));
+        assert!(model.phi_t == model.phi.transpose(), "after AddNode");
+        // Batch 2: a delta touching the freshly added node — its Φ row
+        // gains off-diagonal entries that must land in Φᵀ rows/columns
+        // that only exist in the grown shape.
+        model
+            .apply_graph_delta_batch(
+                &mut stream,
+                &[
+                    GraphDelta::AddEdge { u: 18, v: 2, w: 0.8 },
+                    GraphDelta::AddEdge { u: 18, v: 11, w: 0.3 },
+                ],
+                None,
+            )
+            .unwrap();
+        assert_eq!(model.phi_transposes(), transposes0, "no transpose allowed");
+        assert!(
+            model.phi_t == model.phi.transpose(),
+            "fresh column scattered into a stale-width Φᵀ"
+        );
+        // And the whole model matches a rebuild.
+        let full = StreamingFeatures::new(
+            stream.graph().clone(),
+            cfg,
+            hypers.modulation.coeffs(),
+            6,
+        );
+        let model2 = GpModel::new(full.components(), hypers, &train, &y);
+        let (m1, _) = model.posterior_mean();
+        let (m2, _) = model2.posterior_mean();
+        assert!(m1 == m2, "post-growth model != rebuilt model");
     }
 
     #[test]

@@ -21,8 +21,10 @@
 
 pub mod ell;
 pub mod ops;
+pub mod row_overlay;
 
 pub use ell::{Ell, FeatureLayout, RowWidthStats};
+pub use row_overlay::RowOverlay;
 
 use crate::util::parallel;
 use crate::util::parallel::SendPtr;

@@ -17,15 +17,24 @@
 //! native ELL layout — bit-identical in f64, and with optionally
 //! f32-stored values ([`FeatureLayout::EllF32`]) that halve the value
 //! traffic of the bandwidth-bound kernels.
+//!
+//! Φ and Φᵀ are held as [`RowOverlay`]s: a streaming caller can patch
+//! individual feature rows ([`GramOperator::patch_phi_rows`]) in
+//! O(touched nnz) — Φᵀ maintained by incremental column-scatter, no
+//! splice, no transpose — and every apply path dispatches
+//! overlay-then-base per row, bitwise identical to the compacted
+//! operator. The packed ELL operands are only selected while the
+//! overlays are compacted (an overlay pre-empts them, exactly as in
+//! `GpModel`).
 
-use super::ell::{spmm_dispatch, spmv_dispatch};
-use super::{Csr, Ell, FeatureLayout};
+use super::{Csr, Ell, FeatureLayout, RowOverlay};
 use crate::util::parallel;
 
-/// Reusable operator around Φ (and its precomputed transpose).
+/// Reusable operator around Φ (and its incrementally maintained
+/// transpose).
 pub struct GramOperator {
-    pub phi: Csr,
-    pub phi_t: Csr,
+    pub phi: RowOverlay,
+    pub phi_t: RowOverlay,
     /// Observation-noise variance σ².
     pub sigma2: f64,
     /// Optional {0,1} training mask (None = all nodes).
@@ -50,12 +59,16 @@ pub struct GramOperator {
 }
 
 impl GramOperator {
-    pub fn new(phi: Csr, sigma2: f64) -> GramOperator {
+    /// Build from a feature matrix — a CSR (wrapped as a compacted
+    /// overlay) or an existing [`RowOverlay`]; the transpose operand
+    /// is derived fresh either way.
+    pub fn new(phi: impl Into<RowOverlay>, sigma2: f64) -> GramOperator {
+        let phi: RowOverlay = phi.into();
         // Bit-identical to the serial transpose; pays off at the sizes
         // where the gram operator is actually used.
-        let phi_t = phi.transpose_par(parallel::num_threads());
-        let mid = phi.n_cols;
-        let n = phi.n_rows;
+        let phi_t = RowOverlay::from(phi.transpose_par(parallel::num_threads()));
+        let mid = phi.n_cols();
+        let n = phi.n_rows();
         GramOperator {
             phi,
             phi_t,
@@ -74,7 +87,7 @@ impl GramOperator {
     }
 
     pub fn with_mask(mut self, mask: Vec<f64>) -> Self {
-        assert_eq!(mask.len(), self.phi.n_rows);
+        assert_eq!(mask.len(), self.phi.n_rows());
         self.mask = Some(mask);
         self
     }
@@ -124,7 +137,7 @@ impl GramOperator {
     }
 
     pub fn n(&self) -> usize {
-        self.phi.n_rows
+        self.phi.n_rows()
     }
 
     /// Number of stored nonzeros in Φ (the paper's O(N) memory object).
@@ -150,16 +163,14 @@ impl GramOperator {
         };
         // Same scratch discipline on every operand/thread combination:
         // no allocation per application.
-        spmv_dispatch(
-            &self.phi_t,
+        self.phi_t.spmv(
             self.phi_t_ell.as_ref(),
             masked_x,
             &mut self.buf_mid,
             self.threads,
             par,
         );
-        spmv_dispatch(
-            &self.phi,
+        self.phi.spmv(
             self.phi_ell.as_ref(),
             &self.buf_mid,
             y,
@@ -195,7 +206,7 @@ impl GramOperator {
     pub fn apply_block_into(&mut self, x: &[f64], ncols: usize, y: &mut [f64]) {
         assert!(ncols > 0, "block width must be positive");
         let n = self.n();
-        let k = self.phi.n_cols;
+        let k = self.phi.n_cols();
         debug_assert_eq!(x.len(), n * ncols);
         debug_assert_eq!(y.len(), n * ncols);
         self.ensure_ops();
@@ -215,8 +226,7 @@ impl GramOperator {
             None => x,
         };
         let par = self.threads > 1 && n > 4096;
-        spmm_dispatch(
-            &self.phi_t,
+        self.phi_t.spmm(
             self.phi_t_ell.as_ref(),
             masked_x,
             ncols,
@@ -224,8 +234,7 @@ impl GramOperator {
             self.threads,
             par,
         );
-        spmm_dispatch(
-            &self.phi,
+        self.phi.spmm(
             self.phi_ell.as_ref(),
             &self.blk_mid,
             ncols,
@@ -272,9 +281,58 @@ impl GramOperator {
         y
     }
 
+    /// Patch feature rows through the overlays — the streaming caller's
+    /// O(touched nnz) path: Φ rows `(r, cols, vals)` (sorted by row
+    /// index AND by column within a row) replace their predecessors,
+    /// and Φᵀ is maintained by incremental column-scatter
+    /// ([`RowOverlay::patch_transpose_rows`], bitwise equal to a full
+    /// transpose of the patched Φ). `n` grows the operator for appended
+    /// rows; the packed ELL operands re-select lazily at the next
+    /// application (pre-empted while an overlay is live).
+    pub fn patch_phi_rows(&mut self, n: usize, rows: &[(u32, Vec<u32>, Vec<f64>)]) {
+        debug_assert!(rows.windows(2).all(|w| w[0].0 < w[1].0));
+        // Growth conflates rows and columns, which is only meaningful
+        // for the square (node-feature) operator; a rectangular Φ must
+        // not be silently widened.
+        assert_eq!(
+            self.phi.n_rows(),
+            self.phi.n_cols(),
+            "patch_phi_rows growth requires a square Φ"
+        );
+        let affected: Vec<u32> = rows.iter().map(|(r, _, _)| *r).collect();
+        self.phi.grow(n, n);
+        let old_supports: Vec<(u32, Vec<u32>)> = affected
+            .iter()
+            .map(|&r| (r, self.phi.row(r as usize).0.to_vec()))
+            .collect();
+        for (r, cols, vals) in rows {
+            self.phi.patch_row(*r, cols.clone(), vals.clone());
+        }
+        self.phi_t
+            .patch_transpose_rows(&self.phi, &affected, &old_supports);
+        if let Some(m) = &mut self.mask {
+            m.resize(n, 0.0);
+        }
+        self.buf_in.resize(n, 0.0);
+        self.buf_mid.resize(self.phi.n_cols(), 0.0);
+        self.ops_ready = false;
+        self.phi_ell = None;
+        self.phi_t_ell = None;
+    }
+
+    /// Fold the Φ/Φᵀ overlays back into compacted bases (one O(nnz)
+    /// splice each) and let the layout policy re-select.
+    pub fn compact(&mut self) {
+        self.phi.compact();
+        self.phi_t.compact();
+        self.ops_ready = false;
+        self.phi_ell = None;
+        self.phi_t_ell = None;
+    }
+
     /// Prior sample g = Φ w, Cov(g) = ΦΦᵀ = K̂ (paper §3.2).
     pub fn prior_sample(&self, w: &[f64]) -> Vec<f64> {
-        debug_assert_eq!(w.len(), self.phi.n_cols);
+        debug_assert_eq!(w.len(), self.phi.n_cols());
         if self.threads > 1 && self.n() > 4096 {
             self.phi.matvec_par(w, self.threads)
         } else {
@@ -316,9 +374,11 @@ impl GramOperator {
 /// `O(nnz(Φ))` pass: `d_i = m_i ‖φ_i‖² + σ²` (masked-out rows of the
 /// operator are `σ² e_i`, and `m_i ∈ {0,1}` makes `m_i² = m_i`).
 /// Shared by [`GramOperator::jacobi_diag`] and `GpModel::jacobi_diag`
-/// so the preconditioner has exactly one definition.
-pub fn jacobi_diag(phi: &Csr, mask: Option<&[f64]>, sigma2: f64) -> Vec<f64> {
-    let n = phi.n_rows;
+/// so the preconditioner has exactly one definition. Rows read through
+/// the overlay dispatch, so a patched-but-uncompacted Φ contributes
+/// its current content.
+pub fn jacobi_diag(phi: &RowOverlay, mask: Option<&[f64]>, sigma2: f64) -> Vec<f64> {
+    let n = phi.n_rows();
     let mut d = vec![sigma2; n];
     for i in 0..n {
         if let Some(m) = mask {
@@ -635,6 +695,66 @@ mod tests {
                 y64[i]
             );
         }
+    }
+
+    #[test]
+    fn patched_operator_matches_rebuilt_operator_bitwise() {
+        // Overlay-aware apply path: patch rows through the overlays,
+        // then compare every application bitwise against an operator
+        // rebuilt from the materialised patched Φ — before and after
+        // compaction.
+        proptest(12, |rng| {
+            let n = 4 + rng.below(20);
+            let phi = random_phi(rng, n);
+            let mask: Vec<f64> = (0..n)
+                .map(|_| if rng.bernoulli(0.6) { 1.0 } else { 0.0 })
+                .collect();
+            let mut op =
+                GramOperator::new(phi, 0.25).with_mask(mask.clone());
+            // Warm the operand selection, then patch: the selection
+            // must refresh (overlay pre-empts ELL) instead of serving
+            // stale packed values.
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let _ = op.apply(&x);
+            let mut rows: Vec<u32> =
+                (0..1 + rng.below(4)).map(|_| rng.below(n) as u32).collect();
+            rows.sort_unstable();
+            rows.dedup();
+            let patches: Vec<(u32, Vec<u32>, Vec<f64>)> = rows
+                .iter()
+                .map(|&r| {
+                    let mut cols: Vec<u32> =
+                        (0..3).map(|_| rng.below(n) as u32).collect();
+                    cols.sort_unstable();
+                    cols.dedup();
+                    let vals: Vec<f64> =
+                        cols.iter().map(|_| 0.4 * rng.normal()).collect();
+                    (r, cols, vals)
+                })
+                .collect();
+            op.patch_phi_rows(n, &patches);
+            let mut reference =
+                GramOperator::new(op.phi.to_csr(), 0.25).with_mask(mask);
+            prop_assert!(
+                op.phi_t == op.phi.to_csr().transpose(),
+                "patched Φᵀ != transpose of patched Φ"
+            );
+            let y = op.apply(&x);
+            prop_assert!(y == reference.apply(&x), "patched apply differs");
+            let b = 1 + rng.below(4);
+            let xb: Vec<f64> = (0..n * b).map(|_| rng.normal()).collect();
+            prop_assert!(
+                op.apply_block(&xb, b) == reference.apply_block(&xb, b),
+                "patched apply_block differs"
+            );
+            prop_assert!(
+                op.jacobi_diag() == reference.jacobi_diag(),
+                "patched jacobi differs"
+            );
+            op.compact();
+            prop_assert!(op.apply(&x) == y, "compaction moved the operator");
+            Ok(())
+        });
     }
 
     #[test]

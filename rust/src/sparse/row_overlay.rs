@@ -1,0 +1,605 @@
+//! Delta row-store overlay over a compacted base CSR — the model-side
+//! half of the streaming subsystem's sub-linear patching story.
+//!
+//! [`crate::stream::StreamingFeatures`] stages patched feature rows in
+//! an overlay so a graph delta costs O(touched rows), not an O(nnz)
+//! splice. Before this type existed the *model* still paid O(nnz)
+//! memcpys per delta batch: Φ was cloned out of the recombiner and Φᵀ
+//! spliced through [`Csr::with_replaced_rows`]. [`RowOverlay`] mirrors
+//! the stream's overlay inside the model: reads (`row`, the
+//! SpMV/SpMM kernels) dispatch overlay-then-base per row, writes
+//! ([`RowOverlay::patch_row`]) stage O(row nnz) patches, and
+//! [`RowOverlay::compact`] folds everything back into canonical CSR on
+//! the same cadence the stream compacts its own overlay.
+//!
+//! Numerical contract: every kernel replays the CSR per-row
+//! accumulation order exactly — a row's entries come either from the
+//! overlay patch or the base slice, both sorted by column — so an
+//! overlay matrix is **bitwise** interchangeable with its materialised
+//! CSR ([`RowOverlay::to_csr`]) in every product. The ELL fast path
+//! ([`RowOverlay::select_ell`]) is only offered while compacted, like
+//! the stream's `phi_ell`; between compactions the per-row dispatch
+//! kernels serve.
+//!
+//! [`RowOverlay::patch_transpose_rows`] is the shared incremental
+//! transpose maintenance: given that rows `R` of a primal matrix
+//! changed, it updates `self = primalᵀ` by column-scatter into overlay
+//! rows — O(touched rows/entries), bitwise equal to a fresh
+//! [`Csr::transpose_par`] of the patched primal. Both
+//! `GpModel::apply_graph_delta_batch` and
+//! [`crate::sparse::ops::GramOperator::patch_phi_rows`] go through it.
+
+use super::{Csr, Ell, FeatureLayout};
+use crate::util::parallel;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A sparse matrix as (compacted base CSR) + (per-row patch overlay).
+#[derive(Clone, Debug)]
+pub struct RowOverlay {
+    /// Compacted base; rows not in the overlay read from here.
+    base: Csr,
+    /// Patched rows (sorted by column) staged since the last
+    /// compaction. Keys may exceed `base.n_rows` (appended rows).
+    overlay: BTreeMap<u32, (Vec<u32>, Vec<f64>)>,
+    /// Logical shape (>= base shape while grown rows are pending).
+    n_rows: usize,
+    n_cols: usize,
+    /// Lifetime compaction count — observability for the counter tests
+    /// guarding the sub-linear delta path.
+    compactions: usize,
+}
+
+impl From<Csr> for RowOverlay {
+    fn from(base: Csr) -> RowOverlay {
+        let (n_rows, n_cols) = (base.n_rows, base.n_cols);
+        RowOverlay {
+            base,
+            overlay: BTreeMap::new(),
+            n_rows,
+            n_cols,
+            compactions: 0,
+        }
+    }
+}
+
+impl RowOverlay {
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Rows currently staged in the overlay.
+    pub fn overlay_rows(&self) -> usize {
+        self.overlay.len()
+    }
+
+    /// Lifetime count of [`RowOverlay::compact`] calls that folded a
+    /// non-empty overlay (the O(nnz) splices the delta path avoids).
+    pub fn compactions(&self) -> usize {
+        self.compactions
+    }
+
+    /// Whether reads can go straight to the base CSR (no overlay rows,
+    /// no pending growth).
+    pub fn is_compacted(&self) -> bool {
+        self.overlay.is_empty()
+            && self.base.n_rows == self.n_rows
+            && self.base.n_cols == self.n_cols
+    }
+
+    /// The compacted base. Rows in the overlay shadow it; callers that
+    /// need exact current content should use [`RowOverlay::row`].
+    pub fn base(&self) -> &Csr {
+        &self.base
+    }
+
+    /// Logical stored nonzeros (base rows not shadowed + overlay rows).
+    pub fn nnz(&self) -> usize {
+        let mut nnz = self.base.nnz();
+        for (&r, (cols, _)) in &self.overlay {
+            if (r as usize) < self.base.n_rows {
+                let (bc, _) = self.base.row(r as usize);
+                nnz -= bc.len();
+            }
+            nnz += cols.len();
+        }
+        nnz
+    }
+
+    /// Row `i`, overlay-then-base dispatch. Rows beyond the base that
+    /// have no patch yet are empty.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        debug_assert!(i < self.n_rows);
+        if let Some((cols, vals)) = self.overlay.get(&(i as u32)) {
+            (cols, vals)
+        } else if i < self.base.n_rows {
+            self.base.row(i)
+        } else {
+            (&[], &[])
+        }
+    }
+
+    /// Grow the logical shape (monotone; node insertion). Reads of the
+    /// new rows return empty until they are patched.
+    pub fn grow(&mut self, n_rows: usize, n_cols: usize) {
+        assert!(n_rows >= self.n_rows && n_cols >= self.n_cols);
+        self.n_rows = n_rows;
+        self.n_cols = n_cols;
+    }
+
+    /// Stage new content for row `r` (sorted by column, `< n_cols`) —
+    /// O(row nnz), no splice. `r` may address a freshly grown row.
+    pub fn patch_row(&mut self, r: u32, cols: Vec<u32>, vals: Vec<f64>) {
+        assert!((r as usize) < self.n_rows, "row {r} out of range");
+        assert_eq!(cols.len(), vals.len());
+        debug_assert!(cols.windows(2).all(|w| w[0] < w[1]), "row not sorted");
+        // Hard bound check once per patch: the SpMV/SpMM inner loops
+        // gather x unchecked against this invariant.
+        for &c in &cols {
+            assert!((c as usize) < self.n_cols, "col {c} out of range");
+        }
+        self.overlay.insert(r, (cols, vals));
+    }
+
+    /// Fold the overlay into the base (one O(nnz) splice) and clear it.
+    /// No-op while compacted, so it is safe to call on any cadence.
+    pub fn compact(&mut self) {
+        if self.is_compacted() {
+            return;
+        }
+        self.base =
+            self.base
+                .with_replaced_rows(self.n_rows, self.n_cols, &self.overlay);
+        self.overlay.clear();
+        self.compactions += 1;
+    }
+
+    /// Materialise the current content as canonical CSR (clone of the
+    /// base when compacted).
+    pub fn to_csr(&self) -> Csr {
+        if self.is_compacted() {
+            return self.base.clone();
+        }
+        self.base
+            .with_replaced_rows(self.n_rows, self.n_cols, &self.overlay)
+    }
+
+    /// Dense expansion (tests / small-N oracles only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut out = vec![vec![0.0; self.n_cols]; self.n_rows];
+        for (r, row) in out.iter_mut().enumerate() {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                row[*c as usize] += v;
+            }
+        }
+        out
+    }
+
+    /// Transpose of the current content as CSR (tests / construction).
+    pub fn transpose(&self) -> Csr {
+        self.to_csr().transpose()
+    }
+
+    /// Thread-parallel transpose of the current content, bitwise equal
+    /// to [`RowOverlay::transpose`]. Skips the materialise clone when
+    /// compacted.
+    pub fn transpose_par(&self, threads: usize) -> Csr {
+        if self.is_compacted() {
+            self.base.transpose_par(threads)
+        } else {
+            self.to_csr().transpose_par(threads)
+        }
+    }
+
+    /// Run the ELL layout policy — only while compacted (an overlay
+    /// pre-empts the packed operand exactly like the stream's
+    /// `phi_ell`; the per-row dispatch kernels serve until the next
+    /// compaction re-runs `to_ell_auto`).
+    pub fn select_ell(&self, layout: FeatureLayout) -> Option<Ell> {
+        if self.is_compacted() {
+            self.base.select_ell(layout)
+        } else {
+            None
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Kernels: bitwise the CSR kernels on the same logical matrix.
+    // ------------------------------------------------------------------
+
+    /// Rows [s, e) of y = A x into `out[0..e-s]` — the CSR inner loop
+    /// with per-row overlay dispatch.
+    #[inline]
+    fn rows_matvec(&self, x: &[f64], s: usize, e: usize, out: &mut [f64]) {
+        for i in s..e {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0.0;
+            for (c, v) in cols.iter().zip(vals) {
+                // SAFETY: *c < n_cols == x.len(); base rows by CSR
+                // construction, overlay rows asserted in `patch_row`.
+                acc += v * unsafe { x.get_unchecked(*c as usize) };
+            }
+            out[i - s] = acc;
+        }
+    }
+
+    /// Rows [s, e) of Y = A X (row-major `ncols` block) into `out`.
+    #[inline]
+    fn rows_matmat(&self, x: &[f64], ncols: usize, s: usize, e: usize, out: &mut [f64]) {
+        for i in s..e {
+            let (cols, vals) = self.row(i);
+            let yi = &mut out[(i - s) * ncols..(i - s + 1) * ncols];
+            yi.fill(0.0);
+            for (c, v) in cols.iter().zip(vals) {
+                let base = *c as usize * ncols;
+                // SAFETY: *c < n_cols (see rows_matvec), so the slice is
+                // in bounds by the callers' hard-asserted shape contract.
+                let xr = unsafe { x.get_unchecked(base..base + ncols) };
+                for (yj, xj) in yi.iter_mut().zip(xr) {
+                    *yj += v * xj;
+                }
+            }
+        }
+    }
+
+    /// y = A x into a caller-provided buffer (serial).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        if self.is_compacted() {
+            return self.base.matvec_into(x, y);
+        }
+        self.rows_matvec(x, 0, self.n_rows, y);
+    }
+
+    /// Allocating wrapper over [`RowOverlay::matvec_into`].
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Thread-parallel y = A x over disjoint row chunks,
+    /// allocation-free.
+    pub fn matvec_par_into(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        if self.is_compacted() {
+            return self.base.matvec_par_into(x, y, threads);
+        }
+        parallel::par_rows_mut(y, 1, threads, |s, e, ys| {
+            self.rows_matvec(x, s, e, ys);
+        });
+    }
+
+    /// Allocating wrapper over [`RowOverlay::matvec_par_into`].
+    pub fn matvec_par(&self, x: &[f64], threads: usize) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_par_into(x, &mut y, threads);
+        y
+    }
+
+    /// SpMM Y = A X over a row-major `n_cols × ncols` block.
+    pub fn matmat_into(&self, x: &[f64], ncols: usize, y: &mut [f64]) {
+        assert!(ncols > 0, "block width must be positive");
+        assert_eq!(x.len(), self.n_cols * ncols);
+        assert_eq!(y.len(), self.n_rows * ncols);
+        if self.is_compacted() {
+            return self.base.matmat_into(x, ncols, y);
+        }
+        self.rows_matmat(x, ncols, 0, self.n_rows, y);
+    }
+
+    /// Allocating wrapper over [`RowOverlay::matmat_into`].
+    pub fn matmat(&self, x: &[f64], ncols: usize) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows * ncols];
+        self.matmat_into(x, ncols, &mut y);
+        y
+    }
+
+    /// Thread-parallel SpMM over disjoint row chunks, allocation-free.
+    pub fn matmat_par_into(&self, x: &[f64], ncols: usize, y: &mut [f64], threads: usize) {
+        assert!(ncols > 0, "block width must be positive");
+        assert_eq!(x.len(), self.n_cols * ncols);
+        assert_eq!(y.len(), self.n_rows * ncols);
+        if self.is_compacted() {
+            return self.base.matmat_par_into(x, ncols, y, threads);
+        }
+        parallel::par_rows_mut(y, ncols, threads, |s, e, rows| {
+            self.rows_matmat(x, ncols, s, e, rows);
+        });
+    }
+
+    /// Allocating wrapper over [`RowOverlay::matmat_par_into`].
+    pub fn matmat_par(&self, x: &[f64], ncols: usize, threads: usize) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows * ncols];
+        self.matmat_par_into(x, ncols, &mut y, threads);
+        y
+    }
+
+    /// y = A x through the selected operand: the ELL when a layout
+    /// policy produced one (valid only while compacted — callers hold
+    /// selections from [`RowOverlay::select_ell`], which returns `None`
+    /// otherwise), the overlay-aware CSR path else. The overlay-aware
+    /// sibling of [`crate::sparse::ell::spmv_dispatch`].
+    #[inline]
+    pub fn spmv(&self, ell: Option<&Ell>, x: &[f64], y: &mut [f64], threads: usize, par: bool) {
+        match ell {
+            Some(e) if par => e.matvec_par_into(x, y, threads),
+            Some(e) => e.matvec_into(x, y),
+            None if par => self.matvec_par_into(x, y, threads),
+            None => self.matvec_into(x, y),
+        }
+    }
+
+    /// Blocked Y = A X through the selected operand (see
+    /// [`RowOverlay::spmv`]) — the overlay-aware sibling of
+    /// [`crate::sparse::ell::spmm_dispatch`].
+    #[inline]
+    pub fn spmm(
+        &self,
+        ell: Option<&Ell>,
+        x: &[f64],
+        ncols: usize,
+        y: &mut [f64],
+        threads: usize,
+        par: bool,
+    ) {
+        match ell {
+            Some(e) if par => e.matmat_par_into(x, ncols, y, threads),
+            Some(e) => e.matmat_into(x, ncols, y),
+            None if par => self.matmat_par_into(x, ncols, y, threads),
+            None => self.matmat_into(x, ncols, y),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Incremental transpose maintenance
+    // ------------------------------------------------------------------
+
+    /// Column-scatter the changed primal rows into `self = primalᵀ`.
+    ///
+    /// `affected` (sorted ascending) are the primal rows whose content
+    /// changed; `old_supports` their column supports *before* the
+    /// change (the transpose rows that must drop entries — additions
+    /// are read off the current `primal`). Changing primal rows `R`
+    /// changes exactly the transpose rows in
+    /// `∪_r (old support ∪ new support)`: each such row drops its
+    /// entries with column ∈ R and merge-inserts the fresh entries
+    /// (sorted by source row, values copied). The merged rows are
+    /// staged as overlay patches — O(touched rows + touched nnz), no
+    /// splice — and the result is **bitwise** the full
+    /// [`Csr::transpose_par`] of the patched primal (same per-row
+    /// ordering: source rows ascending, same value bits).
+    ///
+    /// The shape is grown to `primal`'s transposed shape first, so a
+    /// freshly appended primal row (a new column of the transpose)
+    /// scatters into a correctly sized matrix rather than a
+    /// stale-width one.
+    pub fn patch_transpose_rows(
+        &mut self,
+        primal: &RowOverlay,
+        affected: &[u32],
+        old_supports: &[(u32, Vec<u32>)],
+    ) {
+        debug_assert!(affected.windows(2).all(|w| w[0] < w[1]));
+        self.grow(primal.n_cols(), primal.n_rows());
+        // Fresh entries of the affected primal rows, bucketed per
+        // column j. `affected` is sorted ascending, so each bucket
+        // comes out sorted by source row.
+        let mut adds: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = BTreeMap::new();
+        for &r in affected {
+            let (cols, vals) = primal.row(r as usize);
+            for (c, v) in cols.iter().zip(vals) {
+                let e = adds.entry(*c).or_default();
+                e.0.push(r);
+                e.1.push(*v);
+            }
+        }
+        let mut touched: BTreeSet<u32> = adds.keys().copied().collect();
+        for (_, cols) in old_supports {
+            touched.extend(cols.iter().copied());
+        }
+        // Merge each touched transpose row against its current content
+        // (overlay-aware read), then stage the results. The reads all
+        // complete before the first write, so a row merged later never
+        // sees a half-patched sibling.
+        let empty = (Vec::new(), Vec::new());
+        let mut patches: Vec<(u32, Vec<u32>, Vec<f64>)> =
+            Vec::with_capacity(touched.len());
+        for &j in &touched {
+            let (oc, ov) = self.row(j as usize);
+            let (ac, av) = adds.get(&j).unwrap_or(&empty);
+            let mut cols = Vec::with_capacity(oc.len() + ac.len());
+            let mut vals = Vec::with_capacity(oc.len() + ac.len());
+            let mut ai = 0;
+            for (c, v) in oc.iter().zip(ov) {
+                if affected.binary_search(c).is_ok() {
+                    continue; // this column's primal row was rebuilt: drop
+                }
+                while ai < ac.len() && ac[ai] < *c {
+                    cols.push(ac[ai]);
+                    vals.push(av[ai]);
+                    ai += 1;
+                }
+                cols.push(*c);
+                vals.push(*v);
+            }
+            while ai < ac.len() {
+                cols.push(ac[ai]);
+                vals.push(av[ai]);
+                ai += 1;
+            }
+            patches.push((j, cols, vals));
+        }
+        for (j, cols, vals) in patches {
+            self.patch_row(j, cols, vals);
+        }
+    }
+}
+
+/// Logical equality: same shape, same per-row content (bitwise values)
+/// regardless of how rows are split between base and overlay.
+impl PartialEq for RowOverlay {
+    fn eq(&self, other: &RowOverlay) -> bool {
+        if self.n_rows != other.n_rows || self.n_cols != other.n_cols {
+            return false;
+        }
+        (0..self.n_rows).all(|r| self.row(r) == other.row(r))
+    }
+}
+
+/// Logical equality against a materialised CSR (shape + rows).
+impl PartialEq<Csr> for RowOverlay {
+    fn eq(&self, other: &Csr) -> bool {
+        if self.n_rows != other.n_rows || self.n_cols != other.n_cols {
+            return false;
+        }
+        (0..self.n_rows).all(|r| self.row(r) == other.row(r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::sparse::CooBuilder;
+    use crate::util::proptest::proptest;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rng: &mut Rng, n_rows: usize, n_cols: usize, nnz: usize) -> Csr {
+        let mut b = CooBuilder::new(n_rows, n_cols);
+        for _ in 0..nnz {
+            b.push(
+                rng.below(n_rows) as u32,
+                rng.below(n_cols) as u32,
+                rng.normal(),
+            );
+        }
+        b.build()
+    }
+
+    fn random_row(rng: &mut Rng, n_cols: usize, width: usize) -> (Vec<u32>, Vec<f64>) {
+        let mut cols: Vec<u32> =
+            (0..width).map(|_| rng.below(n_cols) as u32).collect();
+        cols.sort_unstable();
+        cols.dedup();
+        let vals: Vec<f64> = cols.iter().map(|_| rng.normal()).collect();
+        (cols, vals)
+    }
+
+    /// Patch random rows (including grown ones), then compare every
+    /// read and every kernel bitwise against the materialised CSR.
+    #[test]
+    fn overlay_reads_and_kernels_match_materialised_csr_bitwise() {
+        proptest(16, |rng| {
+            let n = 4 + rng.below(20);
+            let m = 4 + rng.below(20);
+            let base = random_csr(rng, n, m, 3 * n);
+            let mut ov = RowOverlay::from(base.clone());
+            let (gn, gm) = (n + rng.below(3), m + rng.below(3));
+            ov.grow(gn, gm);
+            let n_patch = 1 + rng.below(5);
+            for _ in 0..n_patch {
+                let r = rng.below(gn) as u32;
+                let (cols, vals) = random_row(rng, gm, 1 + rng.below(5));
+                ov.patch_row(r, cols, vals);
+            }
+            let reference = ov.to_csr();
+            prop_assert!(ov == reference, "PartialEq<Csr> disagrees");
+            for r in 0..gn {
+                let (oc, ovl) = ov.row(r);
+                let (rc, rv) = reference.row(r);
+                prop_assert!(oc == rc && ovl == rv, "row {r} differs");
+            }
+            prop_assert!(ov.nnz() == reference.nnz(), "nnz accounting");
+            let x: Vec<f64> = (0..gm).map(|_| rng.normal()).collect();
+            let y = ov.matvec(&x);
+            prop_assert!(y == reference.matvec(&x), "matvec differs");
+            prop_assert!(
+                ov.matvec_par(&x, 4) == y,
+                "parallel matvec differs from serial"
+            );
+            let b = 1 + rng.below(4);
+            let xb: Vec<f64> = (0..gm * b).map(|_| rng.normal()).collect();
+            let yb = ov.matmat(&xb, b);
+            prop_assert!(yb == reference.matmat(&xb, b), "matmat differs");
+            prop_assert!(
+                ov.matmat_par(&xb, b, 3) == yb,
+                "parallel matmat differs from serial"
+            );
+            // Compaction folds without changing a bit, and re-enables
+            // the packed operand selection.
+            let comp_before = ov.compactions();
+            ov.compact();
+            prop_assert!(ov.is_compacted(), "compact must clear the overlay");
+            prop_assert!(ov.compactions() == comp_before + 1, "counter");
+            prop_assert!(ov == reference, "compaction changed content");
+            prop_assert!(ov.matvec(&x) == y, "compacted matvec differs");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn select_ell_only_when_compacted() {
+        let mut rng = Rng::new(5);
+        // Near-uniform rows so Auto accepts.
+        let mut b = CooBuilder::new(32, 32);
+        for i in 0..32u32 {
+            for k in 0..4u32 {
+                b.push(i, (i + k) % 32, rng.normal());
+            }
+        }
+        let csr = b.build();
+        let mut ov = RowOverlay::from(csr);
+        assert!(ov.select_ell(FeatureLayout::Auto).is_some());
+        ov.patch_row(3, vec![1, 5], vec![0.5, -0.5]);
+        assert!(
+            ov.select_ell(FeatureLayout::Auto).is_none(),
+            "overlay must pre-empt the packed operand"
+        );
+        ov.compact();
+        assert!(ov.select_ell(FeatureLayout::Auto).is_some());
+    }
+
+    /// patch_transpose_rows == transpose_par of the patched primal,
+    /// bitwise, across repeated patch generations and growth.
+    #[test]
+    fn patch_transpose_rows_matches_full_transpose_bitwise() {
+        proptest(16, |rng| {
+            let n = 5 + rng.below(15);
+            let base = random_csr(rng, n, n, 3 * n);
+            let mut primal = RowOverlay::from(base.clone());
+            let mut t = RowOverlay::from(base.transpose());
+            for generation in 0..3 {
+                // Maybe grow (square: node insertion semantics).
+                let gn = primal.n_rows() + rng.below(2);
+                primal.grow(gn, gn);
+                let mut rows: Vec<u32> =
+                    (0..1 + rng.below(4)).map(|_| rng.below(gn) as u32).collect();
+                rows.sort_unstable();
+                rows.dedup();
+                let old_supports: Vec<(u32, Vec<u32>)> = rows
+                    .iter()
+                    .map(|&r| (r, primal.row(r as usize).0.to_vec()))
+                    .collect();
+                for &r in &rows {
+                    let (cols, vals) = random_row(rng, gn, 1 + rng.below(5));
+                    primal.patch_row(r, cols, vals);
+                }
+                t.patch_transpose_rows(&primal, &rows, &old_supports);
+                let full = primal.to_csr().transpose_par(2);
+                prop_assert!(
+                    t == full,
+                    "generation {generation}: patched transpose != full"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -69,6 +69,17 @@
 //! while saturated (another walk of the same source may still visit);
 //! a stale source only widens future invalidation sets.
 //!
+//! **Exactification at compaction**: a saturated hub whose traffic has
+//! shrunk (edges removed, walks rerouted) would otherwise stay on the
+//! conservative source-level fallback forever.
+//! [`StreamingFeatures::compact`] therefore re-derives each
+//! small-enough saturated node's exact visit list from the per-walk
+//! deposit store (the trajectories are the ground truth, and the
+//! recorded source set is always a superset of the true sources) and,
+//! when the exact list fits under the cap, returns the node to precise
+//! invalidation — strictly smaller future resamples, features
+//! untouched.
+//!
 //! ## Graph edge-buffer coupling
 //!
 //! `Graph::add_edge`/`remove_edge` stage the touched rows in the
@@ -77,6 +88,20 @@
 //! [`StreamingFeatures::compact`] folds that buffer back into canonical
 //! CSR together with the feature-overlay compaction, so both caches
 //! stay bounded by the same `compact_threshold` policy.
+//!
+//! ## Two-level overlay (stream vs model)
+//!
+//! This module's overlay is the **first** of two levels. The GP model
+//! keeps its own: `GpModel` holds Φ/Φᵀ as
+//! [`crate::sparse::RowOverlay`]s and the recombiner stages per-row
+//! pattern segments, so a delta batch is O(touched nnz) end-to-end —
+//! walk resample here, operand patch there, **no** O(total nnz) clone
+//! or splice on either side. The model folds its overlays whenever
+//! this stream reports a compaction
+//! ([`BatchSummary::compacted`]), so both levels share one
+//! threshold/cadence policy and the `to_ell_auto` layout re-selection
+//! happens together on both fresh Φs. See the `gp::model` module docs
+//! for the model half.
 
 use crate::graph::Graph;
 use crate::sparse::{Csr, Ell, FeatureLayout};
@@ -656,11 +681,14 @@ impl StreamingFeatures {
     }
 
     /// Merge the overlay into the base matrices, fold the graph's
-    /// staged per-row edge buffer back into canonical CSR, and re-run
-    /// the `to_ell_auto` layout policy on the fresh Φ.
+    /// staged per-row edge buffer back into canonical CSR, re-run
+    /// the `to_ell_auto` layout policy on the fresh Φ, and exactify
+    /// saturated hubs whose traffic has shrunk under the cap
+    /// (module docs).
     pub fn compact(&mut self) {
         let n = self.n();
         self.graph.compact();
+        self.exactify_hubs();
         for l in 0..self.base.len() {
             let patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = self
                 .overlay
@@ -678,6 +706,46 @@ impl StreamingFeatures {
         self.overlay.clear();
         self.phi_ell = self.phi_base.select_ell(self.layout);
         self.compactions += 1;
+    }
+
+    /// Return saturated hubs to precise invalidation where possible:
+    /// for each [`VisitList::Sources`] node with a small enough source
+    /// set, replay the recorded sources' trajectories out of the
+    /// deposit store to recover the **exact** `(source, walk)` visitor
+    /// list, and install it when it fits under the cap. The recorded
+    /// source set is always a superset of the true sources (sources
+    /// are only ever added while saturated), so the re-derived list is
+    /// exactly what a from-scratch build's visit index would hold —
+    /// future deltas at the node resample a (weak) subset of what the
+    /// source-level fallback would have, with bit-identical features.
+    fn exactify_hubs(&mut self) {
+        let cap = self.hub_cap_k * self.cfg.n_walks;
+        for j in 0..self.visit.len() {
+            let sources = match &self.visit[j] {
+                // Work bound, not a correctness gate: the replay below
+                // costs O(|s| · n_walks · walk_len), so only attempt
+                // hubs whose recorded source set has shrunk to roughly
+                // cap scale (a still-hot hub with thousands of live
+                // sources would fail the exact-size check anyway).
+                VisitList::Sources(s) if s.len() <= cap => s.clone(),
+                _ => continue,
+            };
+            let mut exact: Vec<(u32, u32)> = Vec::new();
+            'derive: for &src in &sources {
+                let nw = &self.store[src as usize];
+                for t in 0..nw.n_walks() {
+                    if nw.walk(t).iter().any(|&(node, _)| node as usize == j) {
+                        exact.push((src, t as u32));
+                        if exact.len() > cap {
+                            break 'derive;
+                        }
+                    }
+                }
+            }
+            if exact.len() <= cap {
+                self.visit[j] = VisitList::Exact(exact);
+            }
+        }
     }
 
     /// Re-run the given walks on the current graph **in parallel**
@@ -1152,6 +1220,78 @@ mod tests {
         assert!(
             s.phi_snapshot() == full.phi_snapshot(),
             "hub-cap fallback broke bit-identity"
+        );
+    }
+
+    /// Exactification at compaction: a hub saturated under heavy
+    /// traffic returns to precise (strictly smaller) invalidation once
+    /// its traffic shrinks, with bit-identical features throughout.
+    #[test]
+    fn compaction_exactifies_shrunken_hubs() {
+        // Star: centre 0, spokes 1..=5. Every spoke walk visits the
+        // centre, so with K=2 (cap = 16 < ~44 visitors) it saturates.
+        let edges: Vec<(u32, u32, f64)> =
+            (1..6).map(|i| (0, i, 1.0)).collect();
+        let g = Graph::from_edges(6, &edges);
+        let cfg = WalkConfig { n_walks: 8, max_len: 3, threads: 2, ..Default::default() };
+        let f = vec![1.0, 0.5, 0.25, 0.125];
+        let mut s = StreamingFeatures::new(g, cfg.clone(), f.clone(), 77);
+        s.set_compact_threshold(usize::MAX);
+        s.set_hub_cap(2);
+        assert!(s.saturated_hubs() > 0, "star centre must saturate at K=2");
+        // Shrink the hub's traffic: cut all spokes but 1. The stale
+        // sources stay recorded (superset invariant), so the
+        // invalidation set at the centre remains the full source
+        // expansion until compaction.
+        for v in 2..6 {
+            s.apply_delta(&GraphDelta::RemoveEdge { u: 0, v }).unwrap();
+        }
+        let before = s.visiting_walks(&[0]);
+        assert!(
+            before.len() >= 2 * cfg.n_walks,
+            "pre-compaction set should still carry stale sources"
+        );
+        s.compact();
+        assert_eq!(
+            s.saturated_hubs(),
+            0,
+            "all nodes fit under the cap after the cut"
+        );
+        let after = s.visiting_walks(&[0]);
+        assert!(
+            after.len() < before.len(),
+            "exactified hub must resample strictly less: {} !< {}",
+            after.len(),
+            before.len()
+        );
+        assert!(
+            after.is_subset(&before),
+            "exact list must be a subset of the conservative expansion"
+        );
+        // Only walks of the two still-connected sources (and the
+        // centre itself) can visit the centre now.
+        for &(src, _) in &after {
+            assert!(src == 0 || src == 1, "impossible visitor source {src}");
+        }
+        // Features were never touched by the index maintenance, and a
+        // post-exactification delta stays bit-identical to a rebuild.
+        let sum = s
+            .apply_delta(&GraphDelta::AddEdge { u: 0, v: 3, w: 0.7 })
+            .unwrap();
+        let got: BTreeSet<(u32, u32)> = sum.resampled.iter().copied().collect();
+        assert!(
+            got.len() <= after.len() + 2 * cfg.n_walks,
+            "exactified delta resampled more than visitors + endpoint walks"
+        );
+        let full = StreamingFeatures::new(
+            s.graph().clone(),
+            cfg,
+            f,
+            77,
+        );
+        assert!(
+            s.phi_snapshot() == full.phi_snapshot(),
+            "exactification broke bit-identity"
         );
     }
 

@@ -137,6 +137,149 @@ pub fn write_rows_json(path: &str, rows: &[BenchRow]) -> std::io::Result<()> {
     std::fs::write(path, rows_to_json(rows))
 }
 
+/// Parse a `BENCH_*.json` file back into rows (the inverse of
+/// [`rows_to_json`], tolerant of any writer that emits the same
+/// schema).
+pub fn parse_rows_json(text: &str) -> Result<Vec<BenchRow>, String> {
+    use crate::util::json::Json;
+    let parsed = Json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+    let arr = parsed
+        .as_arr()
+        .ok_or_else(|| "top level must be an array".to_string())?;
+    let mut rows = Vec::with_capacity(arr.len());
+    for (i, obj) in arr.iter().enumerate() {
+        let name = obj
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("row {i}: missing name"))?
+            .to_string();
+        let n = obj
+            .get("n")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| format!("row {i}: missing n"))?;
+        let b = obj
+            .get("b")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| format!("row {i}: missing b"))?;
+        let ns_per_op = obj
+            .get("ns_per_op")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("row {i}: missing ns_per_op"))?;
+        rows.push(BenchRow { name, n, b, ns_per_op });
+    }
+    Ok(rows)
+}
+
+/// One gated comparison of a bench row against the committed baseline
+/// (see [`gate_rows`]).
+#[derive(Clone, Debug)]
+pub struct GateRow {
+    pub name: String,
+    pub n: usize,
+    pub b: usize,
+    pub baseline_ns: f64,
+    pub current_ns: f64,
+    /// current / baseline.
+    pub ratio: f64,
+    /// ratio / (median ratio across all matched rows) — the
+    /// machine-speed-normalised slowdown the gate thresholds on.
+    pub normalized: f64,
+}
+
+/// Outcome of [`gate_rows`].
+#[derive(Clone, Debug)]
+pub struct GateReport {
+    /// Every row that was compared (regressions included), sorted by
+    /// descending normalised ratio.
+    pub matched: Vec<GateRow>,
+    /// The subset whose normalised ratio exceeded the threshold.
+    pub regressions: Vec<GateRow>,
+    /// Rows skipped (non-timing rows, unmatched keys, sub-floor
+    /// timings).
+    pub skipped: usize,
+    /// Median current/baseline ratio across matched rows (1.0 when
+    /// nothing matched) — the machine-speed scale factor.
+    pub median_ratio: f64,
+}
+
+/// The CI perf-regression gate: compare `current` bench rows against a
+/// committed `baseline`, failing any row whose **median-normalised**
+/// slowdown exceeds `threshold` (1.5 = "50% slower than the fleet-wide
+/// drift of this run").
+///
+/// Rows are matched on the full `(name, n, b)` key. Skipped (never
+/// gated): `metric_*` rows (dimensionless end-task values), `*_iters`
+/// rows (counts ride in `b` with `ns_per_op` 0), rows absent from the
+/// baseline (new benches must not fail the gate retroactively), and
+/// rows where either side is below `min_ns` (micro-rows whose jitter
+/// exceeds any honest threshold).
+///
+/// The **median normalisation** is what makes a committed baseline
+/// portable across machines: a runner that is uniformly 2× slower
+/// than the baseline host moves every ratio to ~2, the median absorbs
+/// it, and only a *relative* regression of one path against the rest
+/// of the suite trips the gate.
+pub fn gate_rows(
+    current: &[BenchRow],
+    baseline: &[BenchRow],
+    threshold: f64,
+    min_ns: f64,
+) -> GateReport {
+    use std::collections::HashMap;
+    let base: HashMap<(&str, usize, usize), f64> = baseline
+        .iter()
+        .map(|r| ((r.name.as_str(), r.n, r.b), r.ns_per_op))
+        .collect();
+    let mut matched: Vec<GateRow> = Vec::new();
+    let mut skipped = 0usize;
+    for row in current {
+        let gateable = !row.name.starts_with("metric_")
+            && !row.name.ends_with("_iters")
+            && row.ns_per_op > 0.0;
+        let Some(&baseline_ns) = (if gateable {
+            base.get(&(row.name.as_str(), row.n, row.b))
+        } else {
+            None
+        }) else {
+            skipped += 1;
+            continue;
+        };
+        if baseline_ns <= 0.0 || row.ns_per_op < min_ns || baseline_ns < min_ns {
+            // Either side under the noise floor: micro-timings jitter
+            // past any honest threshold, so the row never gates.
+            skipped += 1;
+            continue;
+        }
+        matched.push(GateRow {
+            name: row.name.clone(),
+            n: row.n,
+            b: row.b,
+            baseline_ns,
+            current_ns: row.ns_per_op,
+            ratio: row.ns_per_op / baseline_ns,
+            normalized: 0.0, // filled below
+        });
+    }
+    let median_ratio = if matched.is_empty() {
+        1.0
+    } else {
+        let mut ratios: Vec<f64> = matched.iter().map(|m| m.ratio).collect();
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ratios[ratios.len() / 2]
+    };
+    let scale = if median_ratio > 0.0 { median_ratio } else { 1.0 };
+    for m in &mut matched {
+        m.normalized = m.ratio / scale;
+    }
+    matched.sort_by(|a, b| b.normalized.partial_cmp(&a.normalized).unwrap());
+    let regressions = matched
+        .iter()
+        .filter(|m| m.normalized > threshold)
+        .cloned()
+        .collect();
+    GateReport { matched, regressions, skipped, median_ratio }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,5 +331,85 @@ mod tests {
         assert_eq!(text, rows_to_json(&rows));
         // Empty input is still a valid (empty) array.
         assert_eq!(Json::parse(&rows_to_json(&[])).unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn parse_rows_json_roundtrips() {
+        let rows = vec![
+            BenchRow::new("csr_spmm", 4096, 8, 1.25e-3),
+            BenchRow::new("stream_delta", 4096, 1, 3.1e-5),
+        ];
+        let parsed = parse_rows_json(&rows_to_json(&rows)).unwrap();
+        assert_eq!(parsed.len(), 2);
+        for (a, b) in rows.iter().zip(&parsed) {
+            assert_eq!(a.name, b.name);
+            assert_eq!((a.n, a.b), (b.n, b.b));
+            assert!((a.ns_per_op - b.ns_per_op).abs() <= 0.05);
+        }
+        assert!(parse_rows_json("not json").is_err());
+        assert!(parse_rows_json("{\"a\": 1}").is_err());
+        assert!(parse_rows_json("[{\"name\": \"x\"}]").is_err());
+    }
+
+    #[test]
+    fn gate_flags_relative_regressions_only() {
+        let mk = |name: &str, ns: f64| BenchRow::new(name, 4096, 1, ns * 1e-9);
+        let baseline = vec![
+            mk("a", 100_000.0),
+            mk("b", 200_000.0),
+            mk("c", 300_000.0),
+            mk("d", 400_000.0),
+        ];
+        // Uniformly 2x slower machine: every ratio 2.0, median absorbs
+        // it, nothing regresses.
+        let uniform: Vec<BenchRow> = baseline
+            .iter()
+            .map(|r| BenchRow { ns_per_op: r.ns_per_op * 2.0, ..r.clone() })
+            .collect();
+        let rep = gate_rows(&uniform, &baseline, 1.5, 1_000.0);
+        assert_eq!(rep.matched.len(), 4);
+        assert!((rep.median_ratio - 2.0).abs() < 1e-9);
+        assert!(rep.regressions.is_empty(), "{:?}", rep.regressions);
+        // One path 4x slower while the rest hold: that one fails.
+        let mut skewed = baseline.clone();
+        skewed[2].ns_per_op *= 4.0;
+        let rep = gate_rows(&skewed, &baseline, 1.5, 1_000.0);
+        assert_eq!(rep.regressions.len(), 1);
+        assert_eq!(rep.regressions[0].name, "c");
+        assert!(rep.regressions[0].normalized > 3.0);
+        // ...and a 1.4x drift stays under the 1.5 threshold.
+        let mut mild = baseline.clone();
+        mild[0].ns_per_op *= 1.4;
+        let rep = gate_rows(&mild, &baseline, 1.5, 1_000.0);
+        assert!(rep.regressions.is_empty(), "{:?}", rep.regressions);
+    }
+
+    #[test]
+    fn gate_skips_metrics_iters_unmatched_and_subfloor_rows() {
+        let baseline = vec![
+            BenchRow::new("spmv", 4096, 1, 1e-4),
+            BenchRow::new("tiny", 4096, 1, 2e-9),
+            BenchRow { name: "metric_bo_regret_f64".into(), n: 2048, b: 1, ns_per_op: 0.02 },
+            BenchRow { name: "stream_delta_solve_warm_iters".into(), n: 4096, b: 12, ns_per_op: 0.0 },
+        ];
+        let current = vec![
+            BenchRow::new("spmv", 4096, 1, 1.1e-4),
+            // 100x "slower" but both sides under the noise floor.
+            BenchRow::new("tiny", 4096, 1, 2e-7),
+            // Metric value moved: not a timing, never gated.
+            BenchRow { name: "metric_bo_regret_f64".into(), n: 2048, b: 1, ns_per_op: 0.9 },
+            BenchRow { name: "stream_delta_solve_warm_iters".into(), n: 4096, b: 40, ns_per_op: 0.0 },
+            // New bench absent from the baseline: skipped, not failed.
+            BenchRow::new("brand_new", 4096, 1, 1e-3),
+        ];
+        let rep = gate_rows(&current, &baseline, 1.5, 10_000.0);
+        assert_eq!(rep.matched.len(), 1, "{:?}", rep.matched);
+        assert_eq!(rep.matched[0].name, "spmv");
+        assert_eq!(rep.skipped, 4);
+        assert!(rep.regressions.is_empty());
+        // Empty baseline: everything skips, gate passes vacuously.
+        let rep = gate_rows(&current, &[], 1.5, 10_000.0);
+        assert!(rep.matched.is_empty() && rep.regressions.is_empty());
+        assert_eq!(rep.median_ratio, 1.0);
     }
 }

@@ -4,8 +4,26 @@
 //! the union sparsity pattern and per-length scatter maps are
 //! precomputed once ([`CombinedFeatures`]); each recombination is then
 //! a single fused scatter pass with no allocation or sorting.
+//!
+//! ## Row-segmented patching (streaming deltas)
+//!
+//! A graph delta rebuilds a handful of rows. [`CombinedFeatures`]
+//! therefore keeps two stores, mirroring the stream's delta row-store:
+//! the **compacted base** (component CSRs + union pattern + flat
+//! scatter maps) and a **per-row overlay** of patched rows, each
+//! carrying its own pattern segment and *row-relative* scatter maps.
+//! [`CombinedFeatures::patch_rows`] only derives the affected rows'
+//! segments — O(touched nnz), no CSR splice, no full map rebuild — and
+//! [`CombinedFeatures::recombine_rows`] recombines exactly those rows.
+//! [`CombinedFeatures::compact`] folds the overlay back (one O(nnz)
+//! splice per matrix, map slots shifted arithmetically — bitwise the
+//! maps a fresh [`WalkComponents::prepare`] would build). The full
+//! rebuild `build_maps` only runs in `prepare`, guarded by the
+//! [`CombinedFeatures::full_map_builds`] counter so the delta path can
+//! prove it never pays it.
 
 use crate::sparse::{CooBuilder, Csr, RowWidthStats};
+use std::collections::BTreeMap;
 
 /// The output of the walk engine: `c[l][i][j]` estimates `(W^l)[i][j]`.
 #[derive(Clone, Debug)]
@@ -78,13 +96,22 @@ impl WalkComponents {
             *v = 0.0;
         }
         let maps = build_maps(self, &pattern);
-        CombinedFeatures { components: self.clone(), pattern, maps }
+        CombinedFeatures {
+            components: self.clone(),
+            pattern,
+            maps,
+            overlay: BTreeMap::new(),
+            n,
+            full_map_builds: 1,
+        }
     }
 }
 
-/// Scatter map per length: position of each component entry in the
-/// union pattern. Shared by [`WalkComponents::prepare`] and the row
-/// patcher ([`CombinedFeatures::patch_rows`]).
+/// Scatter map per length: flat position of each component entry in the
+/// union pattern's value array. The **full** rebuild — only
+/// [`WalkComponents::prepare`] runs it; the streaming delta path
+/// derives per-row segments instead ([`CombinedFeatures::patch_rows`])
+/// and proves it via [`CombinedFeatures::full_map_builds`].
 fn build_maps(components: &WalkComponents, pattern: &Csr) -> Vec<Vec<u32>> {
     let n = pattern.n_rows;
     components
@@ -106,26 +133,71 @@ fn build_maps(components: &WalkComponents, pattern: &Csr) -> Vec<Vec<u32>> {
         .collect()
 }
 
+/// One patched row staged in the [`CombinedFeatures`] overlay: its
+/// per-length component rows, its union-pattern segment (cols + the
+/// current combination values), and per-length **row-relative** scatter
+/// maps (position of each component entry within the pattern row —
+/// invariant under changes to every other row, which is what makes
+/// per-row derivation sound).
+#[derive(Clone, Debug)]
+struct PatchedRow {
+    per_len: Vec<(Vec<u32>, Vec<f64>)>,
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+    rel: Vec<Vec<u32>>,
+}
+
 /// Union-pattern recombiner: `combine_into` refreshes the value array of
-/// the shared pattern in O(total nnz) with zero allocation.
+/// the shared pattern in O(total nnz) with zero allocation, and the
+/// streaming delta path patches + recombines single rows in
+/// O(row nnz) through the overlay (module docs).
 #[derive(Clone)]
 pub struct CombinedFeatures {
+    /// Compacted base component matrices. Rows staged in the overlay
+    /// shadow these until the next [`CombinedFeatures::compact`]; use
+    /// [`CombinedFeatures::component_row`] / `component_csr` for
+    /// overlay-aware reads.
     pub components: WalkComponents,
-    /// Union sparsity pattern; `vals` holds the latest combination.
+    /// Compacted base union pattern; `vals` holds the latest
+    /// combination of the base rows (overlay rows carry their own).
     pub pattern: Csr,
     /// For each length l, flat index into `pattern.vals` of each entry
-    /// of `components.c[l]`.
+    /// of `components.c[l]` (aligned to the compacted base).
     maps: Vec<Vec<u32>>,
+    /// Delta row-store: rows patched since the last compaction.
+    overlay: BTreeMap<u32, PatchedRow>,
+    /// Logical node count (>= pattern.n_rows while appended rows are
+    /// pending in the overlay).
+    n: usize,
+    /// Lifetime count of full `build_maps` passes (1 from
+    /// `prepare`) — the delta path derives per-row segments only and
+    /// must not move this.
+    full_map_builds: usize,
 }
 
 impl CombinedFeatures {
     pub fn n(&self) -> usize {
-        self.pattern.n_rows
+        self.n
+    }
+
+    /// Rows currently staged in the delta overlay.
+    pub fn overlay_rows(&self) -> usize {
+        self.overlay.len()
+    }
+
+    /// How many times the full scatter-map rebuild ran (see the field
+    /// doc) — the counter guard of the sub-linear delta path.
+    pub fn full_map_builds(&self) -> usize {
+        self.full_map_builds
     }
 
     /// Recompute Φ(f) into the shared pattern and return a reference.
+    /// Folds any pending overlay first (full recombination wants one
+    /// contiguous Φ) — a no-op in the steady training loop, where the
+    /// overlay is empty.
     pub fn combine_into(&mut self, f: &[f64]) -> &Csr {
         assert_eq!(f.len(), self.components.c.len());
+        self.compact();
         for v in &mut self.pattern.vals {
             *v = 0.0;
         }
@@ -142,13 +214,62 @@ impl CombinedFeatures {
         &self.pattern
     }
 
-    /// Clone out the current combination.
+    /// Materialise the current combination (base + overlay rows) as
+    /// canonical CSR. A clone of the shared pattern when compacted.
     pub fn current(&self) -> Csr {
-        self.pattern.clone()
+        if self.overlay.is_empty() && self.pattern.n_rows == self.n {
+            return self.pattern.clone();
+        }
+        let patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = self
+            .overlay
+            .iter()
+            .map(|(&r, p)| (r, (p.cols.clone(), p.vals.clone())))
+            .collect();
+        self.pattern.with_replaced_rows(self.n, self.n, &patches)
+    }
+
+    /// Union-pattern row `r` with its current combination values
+    /// (overlay wins over base; grown rows are empty until patched).
+    pub fn pattern_row(&self, r: usize) -> (&[u32], &[f64]) {
+        if let Some(p) = self.overlay.get(&(r as u32)) {
+            (&p.cols, &p.vals)
+        } else if r < self.pattern.n_rows {
+            self.pattern.row(r)
+        } else {
+            (&[], &[])
+        }
+    }
+
+    /// Component row `(l, r)` with the overlay applied.
+    pub fn component_row(&self, l: usize, r: usize) -> (&[u32], &[f64]) {
+        if let Some(p) = self.overlay.get(&(r as u32)) {
+            let (c, v) = &p.per_len[l];
+            (c, v)
+        } else if r < self.components.c[l].n_rows {
+            self.components.c[l].row(r)
+        } else {
+            (&[], &[])
+        }
+    }
+
+    /// Materialise component matrix `l` with the overlay applied (a
+    /// clone when compacted) — what the modulation-gradient operands
+    /// transpose.
+    pub fn component_csr(&self, l: usize) -> Csr {
+        if self.overlay.is_empty() && self.components.c[l].n_rows == self.n {
+            return self.components.c[l].clone();
+        }
+        let patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = self
+            .overlay
+            .iter()
+            .map(|(&r, p)| (r, p.per_len[l].clone()))
+            .collect();
+        self.components.c[l]
+            .with_replaced_rows(self.n, self.n, &patches)
     }
 
     /// Recompute the combined values of exactly `rows` under `f`,
-    /// leaving every other slot of `pattern.vals` untouched.
+    /// leaving every other row untouched.
     ///
     /// Steady-state invariant of the streaming delta path: between
     /// hyperparameter updates the modulation is fixed, so after
@@ -156,81 +277,171 @@ impl CombinedFeatures {
     /// are stale — everything else already holds the combination under
     /// the same `f`. The per-slot accumulation (length-major, with the
     /// `f_l == 0` skip) replays [`CombinedFeatures::combine_into`]
-    /// exactly, so the partially recombined pattern is **bitwise** what
-    /// a full recombination would produce.
+    /// exactly, so the partially recombined state is **bitwise** what
+    /// a full recombination would produce. Overlay rows recombine
+    /// through their row-relative maps, base rows through their flat
+    /// segment — same additions, same order.
     pub fn recombine_rows(&mut self, f: &[f64], rows: &[u32]) {
         assert_eq!(f.len(), self.components.c.len());
         for &r in rows {
-            let (s, e) = (
-                self.pattern.offsets[r as usize],
-                self.pattern.offsets[r as usize + 1],
-            );
-            for v in &mut self.pattern.vals[s..e] {
-                *v = 0.0;
-            }
-        }
-        for (l, map) in self.maps.iter().enumerate() {
-            let fl = f[l];
-            if fl == 0.0 {
-                continue;
-            }
-            let c = &self.components.c[l];
-            for &r in rows {
-                let (s, e) = (c.offsets[r as usize], c.offsets[r as usize + 1]);
-                for k in s..e {
-                    self.pattern.vals[map[k] as usize] += fl * c.vals[k];
+            if let Some(p) = self.overlay.get_mut(&r) {
+                for v in &mut p.vals {
+                    *v = 0.0;
+                }
+                for (l, &fl) in f.iter().enumerate() {
+                    if fl == 0.0 {
+                        continue;
+                    }
+                    let (_, cvals) = &p.per_len[l];
+                    for (rel, v) in p.rel[l].iter().zip(cvals) {
+                        p.vals[*rel as usize] += fl * v;
+                    }
+                }
+            } else {
+                let (s, e) = (
+                    self.pattern.offsets[r as usize],
+                    self.pattern.offsets[r as usize + 1],
+                );
+                for v in &mut self.pattern.vals[s..e] {
+                    *v = 0.0;
+                }
+                for (l, &fl) in f.iter().enumerate() {
+                    if fl == 0.0 {
+                        continue;
+                    }
+                    let c = &self.components.c[l];
+                    let map = &self.maps[l];
+                    let (cs, ce) =
+                        (c.offsets[r as usize], c.offsets[r as usize + 1]);
+                    for k in cs..ce {
+                        self.pattern.vals[map[k] as usize] += fl * c.vals[k];
+                    }
                 }
             }
         }
     }
 
     /// Row-width distribution of Φ's union pattern (invariant under
-    /// recombination — the pattern is shared by every Φ(f)). This is
-    /// what `GpModel`'s ELL auto-layout policy effectively decides on.
+    /// recombination — the pattern is shared by every Φ(f)). Reported
+    /// off the compacted base; overlay rows are a vanishing fraction
+    /// between compactions.
     pub fn row_width_stats(&self) -> RowWidthStats {
         self.pattern.row_width_stats()
     }
 
-    /// Patch the given rows of every component matrix (growing the
-    /// shape to `n` rows/cols if a node was appended), rebuild the
-    /// union-pattern rows for exactly those rows, and refresh the
-    /// scatter maps — the model-side half of a streaming graph delta.
+    /// Stage new content for the given rows (growing the logical shape
+    /// to `n` if a node was appended): per row, derive its union
+    /// pattern segment and row-relative scatter maps, and park
+    /// everything in the overlay — **O(touched nnz)**, no component
+    /// splice, no pattern splice, no full map rebuild (the base stores
+    /// are untouched until [`CombinedFeatures::compact`]).
     ///
     /// `patches[r][l] = (cols, vals)` must be sorted by column. The
-    /// patched pattern is identical to what a fresh
+    /// per-row segments are exactly what a fresh
     /// [`WalkComponents::prepare`] of the patched components would
-    /// build (sorted union of the per-length row patterns), so later
-    /// recombinations stay bitwise equal to the rebuilt-from-scratch
-    /// path. The pattern's **value** array is left stale: call
-    /// [`CombinedFeatures::combine_into`] before reading Φ.
+    /// build for those rows (sorted union of the per-length row
+    /// patterns), so later recombinations stay bitwise equal to the
+    /// rebuilt-from-scratch path. The staged **value** segment is left
+    /// stale: call [`CombinedFeatures::recombine_rows`] (or a full
+    /// [`CombinedFeatures::combine_into`]) before reading Φ.
     pub fn patch_rows(
         &mut self,
         n: usize,
-        patches: &std::collections::BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>>,
+        patches: &BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>>,
     ) {
+        assert!(n >= self.n);
+        self.n = n;
         let n_len = self.components.c.len();
-        for l in 0..n_len {
-            let per_l: std::collections::BTreeMap<u32, (Vec<u32>, Vec<f64>)> =
-                patches.iter().map(|(&r, pl)| (r, pl[l].clone())).collect();
-            self.components.c[l] =
-                self.components.c[l].with_replaced_rows(n, n, &per_l);
-        }
-        let pattern_patches: std::collections::BTreeMap<u32, (Vec<u32>, Vec<f64>)> =
-            patches
+        for (&r, per_len) in patches {
+            assert!((r as usize) < n, "patched row {r} out of range");
+            assert_eq!(per_len.len(), n_len);
+            // Union pattern of the row (sorted, deduped — identical to
+            // the CooBuilder union in `prepare`).
+            let mut cols: Vec<u32> = per_len
                 .iter()
-                .map(|(&r, pl)| {
-                    let mut cols: Vec<u32> = pl
-                        .iter()
-                        .flat_map(|(c, _)| c.iter().copied())
-                        .collect();
-                    cols.sort_unstable();
-                    cols.dedup();
-                    let zeros = vec![0.0; cols.len()];
-                    (r, (cols, zeros))
+                .flat_map(|(c, _)| c.iter().copied())
+                .collect();
+            cols.sort_unstable();
+            cols.dedup();
+            // Row-relative scatter maps per length.
+            let rel: Vec<Vec<u32>> = per_len
+                .iter()
+                .map(|(pc, _)| {
+                    pc.iter()
+                        .map(|c| {
+                            cols.binary_search(c).expect("union covers entry")
+                                as u32
+                        })
+                        .collect()
                 })
                 .collect();
-        self.pattern = self.pattern.with_replaced_rows(n, n, &pattern_patches);
-        self.maps = build_maps(&self.components, &self.pattern);
+            let vals = vec![0.0; cols.len()];
+            self.overlay.insert(
+                r,
+                PatchedRow { per_len: per_len.clone(), cols, vals, rel },
+            );
+        }
+    }
+
+    /// Fold the overlay into the base stores: one O(nnz) splice per
+    /// component matrix and the pattern, with the flat scatter maps
+    /// re-derived by **arithmetic slot shifting** (unpatched rows keep
+    /// their relative layout, so their flat slots just move by the
+    /// pattern-offset delta; patched rows materialise their relative
+    /// maps) — bitwise the maps a full `build_maps` would produce,
+    /// without its per-entry binary searches. No-op while compacted.
+    pub fn compact(&mut self) {
+        if self.overlay.is_empty() && self.pattern.n_rows == self.n {
+            return;
+        }
+        let n = self.n;
+        let n_len = self.components.c.len();
+        let old_p_off = self.pattern.offsets.clone();
+        let p_patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = self
+            .overlay
+            .iter()
+            .map(|(&r, p)| (r, (p.cols.clone(), p.vals.clone())))
+            .collect();
+        self.pattern = self.pattern.with_replaced_rows(n, n, &p_patches);
+        for l in 0..n_len {
+            let old_c_off = self.components.c[l].offsets.clone();
+            let old_c_rows = self.components.c[l].n_rows;
+            let c_patches: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = self
+                .overlay
+                .iter()
+                .map(|(&r, p)| (r, p.per_len[l].clone()))
+                .collect();
+            self.components.c[l] =
+                self.components.c[l].with_replaced_rows(n, n, &c_patches);
+            let old_map = std::mem::take(&mut self.maps[l]);
+            let mut new_map =
+                Vec::with_capacity(self.components.c[l].nnz());
+            for r in 0..n {
+                if let Some(p) = self.overlay.get(&(r as u32)) {
+                    let base = self.pattern.offsets[r];
+                    new_map.extend(
+                        p.rel[l].iter().map(|&rel| (base + rel as usize) as u32),
+                    );
+                } else if r < old_c_rows {
+                    let (os, oe) = (old_c_off[r], old_c_off[r + 1]);
+                    let shift =
+                        self.pattern.offsets[r] as i64 - old_p_off[r] as i64;
+                    for k in os..oe {
+                        new_map.push((old_map[k] as i64 + shift) as u32);
+                    }
+                }
+            }
+            self.maps[l] = new_map;
+        }
+        self.overlay.clear();
+    }
+
+    /// Test/diagnostic hook: the flat maps a full rebuild would produce
+    /// for the current (compacted) state — used to pin the compaction
+    /// splice bitwise against `build_maps`.
+    #[cfg(test)]
+    fn rebuilt_maps(&self) -> Vec<Vec<u32>> {
+        build_maps(&self.components, &self.pattern)
     }
 }
 
@@ -256,6 +467,31 @@ mod tests {
             c.push(b.build());
         }
         WalkComponents::new(c)
+    }
+
+    fn random_patches(
+        rng: &mut Rng,
+        rows: &[u32],
+        n: usize,
+        lens: usize,
+    ) -> BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>> {
+        let mut patches: BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>> =
+            BTreeMap::new();
+        for &r in rows {
+            let per_len: Vec<(Vec<u32>, Vec<f64>)> = (0..lens)
+                .map(|_| {
+                    let mut cols: Vec<u32> =
+                        (0..4).map(|_| rng.below(n) as u32).collect();
+                    cols.sort_unstable();
+                    cols.dedup();
+                    let vals: Vec<f64> =
+                        cols.iter().map(|_| rng.normal()).collect();
+                    (cols, vals)
+                })
+                .collect();
+            patches.insert(r, per_len);
+        }
+        patches
     }
 
     #[test]
@@ -310,71 +546,147 @@ mod tests {
         assert_eq!(union.n_rows, 30);
     }
 
+    /// The segmented patch path must be observationally identical to a
+    /// fresh prepare of the patched components: same materialised Φ,
+    /// same recombinations — and after compaction, structurally the
+    /// same pattern and bitwise the same flat maps as a full
+    /// `build_maps`, without ever running one.
     #[test]
     fn patch_rows_matches_fresh_prepare() {
-        use std::collections::BTreeMap;
         let mut rng = Rng::new(5);
         let comps = random_components(&mut rng, 20, 3);
         let mut prepared = comps.prepare();
+        assert_eq!(prepared.full_map_builds(), 1);
         // New content for rows 2 and 7, plus appended row 20 (growth
         // to 22 with an empty gap row 21).
-        let mut patches: BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>> = BTreeMap::new();
-        for &r in &[2u32, 7, 20] {
-            let per_len: Vec<(Vec<u32>, Vec<f64>)> = (0..3)
-                .map(|_| {
-                    let mut cols: Vec<u32> =
-                        (0..4).map(|_| rng.below(22) as u32).collect();
-                    cols.sort_unstable();
-                    cols.dedup();
-                    let vals: Vec<f64> =
-                        cols.iter().map(|_| rng.normal()).collect();
-                    (cols, vals)
-                })
-                .collect();
-            patches.insert(r, per_len);
-        }
+        let patches = random_patches(&mut rng, &[2, 7, 20], 22, 3);
         prepared.patch_rows(22, &patches);
-        // Reference: prepare() from scratch on the patched components.
-        let mut fresh = prepared.components.prepare();
-        assert_eq!(prepared.pattern.offsets, fresh.pattern.offsets);
-        assert_eq!(prepared.pattern.cols, fresh.pattern.cols);
+        assert_eq!(prepared.overlay_rows(), 3);
+        assert_eq!(
+            prepared.full_map_builds(),
+            1,
+            "patch_rows ran a full map rebuild"
+        );
         let f = vec![0.7, -0.3, 1.1];
-        let a = prepared.combine_into(&f).clone();
-        let b = fresh.combine_into(&f);
-        assert!(a == *b, "patched recombination differs from fresh prepare");
+        prepared.recombine_rows(&f, &[2, 7, 20]);
+        // Reference: prepare() from scratch on the patched components.
+        let mut base = comps.clone();
+        for l in 0..3 {
+            let per_l: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = patches
+                .iter()
+                .map(|(&r, pl)| (r, pl[l].clone()))
+                .collect();
+            base.c[l] = base.c[l].with_replaced_rows(22, 22, &per_l);
+        }
+        let mut fresh = base.prepare();
+        // Base rows of `prepared` still hold the PRE-patch combination
+        // (recombine_rows only touched the patched rows) — recombine
+        // everything in the reference AND in a compacted copy.
+        let b = fresh.combine_into(&f).clone();
+        let mut compacted = prepared.clone();
+        compacted.compact();
+        assert_eq!(compacted.overlay_rows(), 0);
+        assert_eq!(compacted.pattern.offsets, fresh.pattern.offsets);
+        assert_eq!(compacted.pattern.cols, fresh.pattern.cols);
+        // Compaction's arithmetic slot shift == the full binary-search
+        // rebuild, bitwise.
+        let rebuilt = compacted.rebuilt_maps();
+        for l in 0..3 {
+            assert_eq!(
+                compacted.maps[l], rebuilt[l],
+                "length {l}: compacted maps != build_maps"
+            );
+        }
+        let full = compacted.combine_into(&f).clone();
+        assert!(full == b, "patched recombination differs from fresh prepare");
+    }
+
+    #[test]
+    fn compaction_slot_shift_matches_full_build_maps_bitwise() {
+        let mut rng = Rng::new(13);
+        let comps = random_components(&mut rng, 25, 3);
+        let mut prepared = comps.prepare();
+        for round in 0..3 {
+            // Patch a few rows, sometimes including one appended row.
+            let mut rows: Vec<u32> = (0..2 + rng.below(3))
+                .map(|_| rng.below(prepared.n() + 1) as u32)
+                .collect();
+            rows.sort_unstable();
+            rows.dedup();
+            let n_new = prepared.n().max(*rows.iter().max().unwrap() as usize + 1);
+            let patches = random_patches(&mut rng, &rows, n_new, 3);
+            prepared.patch_rows(n_new, &patches);
+            prepared.compact();
+            let rebuilt = prepared.rebuilt_maps();
+            for l in 0..3 {
+                assert_eq!(
+                    prepared.maps[l], rebuilt[l],
+                    "round {round}, length {l}: spliced maps != build_maps"
+                );
+            }
+        }
+        assert_eq!(prepared.full_map_builds(), 1, "only prepare may build");
     }
 
     #[test]
     fn recombine_rows_matches_full_combination_bitwise() {
-        use std::collections::BTreeMap;
         let mut rng = Rng::new(9);
         let comps = random_components(&mut rng, 15, 3);
         let f = vec![0.8, -0.4, 1.3];
         let mut a = comps.prepare();
         a.combine_into(&f);
         let mut b = a.clone();
-        // Patch rows 1 and 9 in both, then recombine: partially in `a`,
-        // fully in `b` — the value arrays must be bitwise equal.
-        let mut patches: BTreeMap<u32, Vec<(Vec<u32>, Vec<f64>)>> = BTreeMap::new();
-        for &r in &[1u32, 9] {
-            let per_len: Vec<(Vec<u32>, Vec<f64>)> = (0..3)
-                .map(|_| {
-                    let mut cols: Vec<u32> =
-                        (0..4).map(|_| rng.below(15) as u32).collect();
-                    cols.sort_unstable();
-                    cols.dedup();
-                    let vals: Vec<f64> =
-                        cols.iter().map(|_| rng.normal()).collect();
-                    (cols, vals)
-                })
-                .collect();
-            patches.insert(r, per_len);
-        }
+        // Patch rows 1 and 9 in both, then recombine: partially in `a`
+        // (overlay path), fully in `b` — the materialised combinations
+        // must be bitwise equal, before and after compacting `a`.
+        let patches = random_patches(&mut rng, &[1, 9], 15, 3);
         a.patch_rows(15, &patches);
         b.patch_rows(15, &patches);
         a.recombine_rows(&f, &[1, 9]);
-        let full = b.combine_into(&f);
-        assert!(a.pattern == *full, "partial recombination differs from full");
+        let full = b.combine_into(&f).clone();
+        assert!(
+            a.current() == full,
+            "partial recombination differs from full"
+        );
+        a.compact();
+        assert!(a.current() == full, "compaction changed the combination");
+        // Base-row recombination (no overlay entry) also replays the
+        // full pass bitwise.
+        a.recombine_rows(&f, &[0, 3]);
+        assert!(a.current() == full, "base-row recombine drifted");
+    }
+
+    #[test]
+    fn component_and_pattern_row_reads_are_overlay_aware() {
+        let mut rng = Rng::new(11);
+        let comps = random_components(&mut rng, 12, 3);
+        let mut prepared = comps.prepare();
+        let f = vec![1.0, 0.5, 0.25];
+        prepared.combine_into(&f);
+        let patches = random_patches(&mut rng, &[4, 12], 13, 3);
+        prepared.patch_rows(13, &patches);
+        prepared.recombine_rows(&f, &[4, 12]);
+        for &r in &[4u32, 12] {
+            for l in 0..3 {
+                let (c, _) = prepared.component_row(l, r as usize);
+                assert_eq!(c, &patches[&r][l].0[..], "component row {r} l={l}");
+            }
+        }
+        // Materialised views agree with row reads everywhere.
+        let cur = prepared.current();
+        for r in 0..13 {
+            let (pc, pv) = prepared.pattern_row(r);
+            let (cc, cv) = cur.row(r);
+            assert_eq!(pc, cc, "pattern row {r}");
+            assert_eq!(pv, cv, "pattern vals {r}");
+        }
+        for l in 0..3 {
+            let mat = prepared.component_csr(l);
+            for r in 0..13 {
+                let (c, v) = prepared.component_row(l, r);
+                assert_eq!(mat.row(r), (c, v), "component_csr row {r} l={l}");
+            }
+        }
     }
 
     #[test]

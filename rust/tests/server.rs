@@ -5,10 +5,11 @@
 //! the staleness guarantee: once a delta is acknowledged, no later
 //! prediction is served from the pre-delta feature matrix).
 
-use grfgp::gp::{Hypers, Modulation};
+use grfgp::gp::{GpModel, Hypers, Modulation};
 use grfgp::graph::generators;
 use grfgp::stream::StreamingFeatures;
 use grfgp::util::json::Json;
+use grfgp::util::rng::Rng;
 use grfgp::walks::WalkConfig;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -274,6 +275,112 @@ fn self_loop_deltas_roundtrip_through_server() {
     let bad = c.call(r#"{"op":"remove_edge","u":9,"v":9}"#);
     assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "{bad:?}");
 
+    c.call(r#"{"op":"shutdown"}"#);
+}
+
+/// Mixed traffic across forced overlay-compaction boundaries: delta
+/// batches, observes, and predicts interleave with the stream's
+/// compaction threshold at 1, so every delta folds the stream AND
+/// model overlays mid-serving. `graph_version` must stay monotone and
+/// every served prediction must be **bitwise** what a from-scratch
+/// rebuild of the mutated graph computes under the same rng stream.
+#[test]
+fn compaction_boundary_keeps_predictions_bitwise_and_versions_monotone() {
+    let n = 192;
+    let g = generators::ring(n);
+    let cfg = WalkConfig { n_walks: 24, p_halt: 0.1, max_len: 3, threads: 1, ..Default::default() };
+    let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+    let mut stream = StreamingFeatures::new(
+        g.clone(),
+        cfg.clone(),
+        hypers.modulation.coeffs(),
+        0,
+    );
+    // Force a compaction on every delta batch.
+    stream.set_compact_threshold(1);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let hypers_srv = hypers.clone();
+    std::thread::spawn(move || {
+        grfgp::server::serve_on(stream, hypers_srv, listener, 7).unwrap();
+    });
+    let mut c = Client::connect(addr);
+    let probe_nodes = [0usize, 45, 131];
+    let mut g2 = g;
+    let mut obs: Vec<(usize, f64)> = Vec::new();
+    let mut last_version = 0usize;
+    for (k, &(u, v, w)) in
+        [(3usize, 90usize, 0.8f64), (10, 100, 0.6), (50, 140, 0.5)]
+            .iter()
+            .enumerate()
+    {
+        // Observe...
+        let node = 7 + k * 30;
+        let yv = (node as f64 * 0.3).sin();
+        let r = c.call(&format!(
+            r#"{{"op":"observe","node":{node},"y":{yv}}}"#
+        ));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        obs.push((node, yv));
+        // ...delta (each one crosses a compaction boundary)...
+        let r = c.call(&format!(
+            r#"{{"op":"add_edge","u":{u},"v":{v},"w":{w}}}"#
+        ));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        assert_eq!(
+            r.get("compacted").unwrap().as_bool(),
+            Some(true),
+            "threshold 1 must compact every batch: {r:?}"
+        );
+        let ver = r.get("graph_version").unwrap().as_usize().unwrap();
+        assert!(ver > last_version, "version not monotone: {ver} after {last_version}");
+        last_version = ver;
+        g2.add_edge(u, v, w);
+        // ...predict straight after the fold.
+        let p = c.call(&format!(
+            r#"{{"op":"predict","nodes":[{},{},{}],"samples":4}}"#,
+            probe_nodes[0], probe_nodes[1], probe_nodes[2]
+        ));
+        assert_eq!(p.get("ok").unwrap().as_bool(), Some(true), "{p:?}");
+        assert_eq!(
+            p.get("graph_version").unwrap().as_usize(),
+            Some(ver),
+            "prediction stamped with a stale version"
+        );
+        // Reference: model rebuilt from scratch on the mutated graph,
+        // same observations, same rng stream as the server's predict.
+        let full = StreamingFeatures::new(
+            g2.clone(),
+            cfg.clone(),
+            hypers.modulation.coeffs(),
+            0,
+        );
+        let mut model =
+            GpModel::new(full.components(), hypers.clone(), &[], &[]);
+        let nodes: Vec<usize> = obs.iter().map(|o| o.0).collect();
+        let ys: Vec<f64> = obs.iter().map(|o| o.1).collect();
+        model.set_data(&nodes, &ys);
+        let mut rng = Rng::new(7).split(obs.len() as u64);
+        let (mean, var) = model.predict(4, &mut rng);
+        let served_mean = p.get("mean").unwrap().as_arr().unwrap();
+        let served_var = p.get("var").unwrap().as_arr().unwrap();
+        for (j, &node) in probe_nodes.iter().enumerate() {
+            // The JSON writer emits shortest-roundtrip floats, so the
+            // served numbers parse back to exactly the served bits.
+            assert_eq!(
+                served_mean[j].as_f64().unwrap(),
+                mean[node],
+                "step {k}: mean at node {node} not bitwise the rebuild"
+            );
+            assert_eq!(
+                served_var[j].as_f64().unwrap(),
+                var[node],
+                "step {k}: var at node {node} not bitwise the rebuild"
+            );
+        }
+    }
+    let s = c.call(r#"{"op":"stats"}"#);
+    assert_eq!(s.get("overlay_rows").unwrap().as_usize(), Some(0), "{s:?}");
     c.call(r#"{"op":"shutdown"}"#);
 }
 
