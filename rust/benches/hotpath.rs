@@ -47,10 +47,17 @@
 //! run against the committed `BENCH_baseline.json` via
 //! `src/bin/bench_gate.rs` (median-normalised, >1.5× slowdown of any
 //! matched row fails the workflow).
+//!
+//! PR 6 additions: `wire_decode` vs `wire_decode_garbage` — the
+//! serving edge's bounded streaming frame decoder (`server::wire`) on
+//! a batch of well-formed predict frames vs a hostile mix of binary
+//! junk and frame-cap bombs; `n` carries the frame count and
+//! `ns_per_op` is the whole-batch decode time.
 
 use grfgp::bo::{run_policy, BoConfig, ThompsonPolicy};
 use grfgp::gp::{GpModel, Hypers, Modulation};
 use grfgp::graph::generators;
+use grfgp::server::wire::{WireConfig, WireDecoder};
 use grfgp::sparse::ops::GramOperator;
 use grfgp::sparse::FeatureLayout;
 use grfgp::stream::{GraphDelta, StreamingFeatures};
@@ -598,6 +605,62 @@ fn main() {
                 });
             }
         }
+    }
+
+    // --- Wire decoder throughput (hardened serving edge) -------------
+    // Per-frame cost of the serving edge's decode path: pre-rendered
+    // predict frames streamed through the bounded decoder in 64 KiB
+    // chunks (newline split + depth-capped parse). The garbage row
+    // measures the rejection path — alternating binary junk and
+    // frame-cap bombs — i.e. the cost of surviving a hostile client.
+    {
+        let n_frames = if quick { 4096 } else { 16_384 };
+        let mut blob = Vec::new();
+        for i in 0..n_frames {
+            blob.extend_from_slice(
+                format!(
+                    "{{\"op\":\"predict\",\"nodes\":[{},{}],\"samples\":8}}\n",
+                    i % 1024,
+                    (i * 7) % 1024
+                )
+                .as_bytes(),
+            );
+        }
+        let r = bench(&format!("wire_decode/F={n_frames}"), 1, 5, || {
+            let mut dec = WireDecoder::new(WireConfig::default());
+            let mut out = Vec::new();
+            for chunk in blob.chunks(64 * 1024) {
+                dec.feed(chunk, &mut out);
+            }
+            assert!(out.len() == n_frames && out.iter().all(|f| f.is_ok()));
+            out.len()
+        });
+        rows.push(BenchRow::new("wire_decode", n_frames, 1, r.mean_s));
+
+        let cap = 4096usize;
+        let n_junk = if quick { 512 } else { 2048 };
+        let mut junk = Vec::new();
+        for i in 0..n_junk {
+            if i % 2 == 0 {
+                junk.extend_from_slice(b"\xff\xfe{[garbage\x00\n");
+            } else {
+                junk.resize(junk.len() + 2 * cap, b'[');
+                junk.push(b'\n');
+            }
+        }
+        let r = bench(&format!("wire_decode_garbage/F={n_junk}"), 1, 5, || {
+            let mut dec = WireDecoder::new(WireConfig {
+                max_frame_bytes: cap,
+                ..Default::default()
+            });
+            let mut out = Vec::new();
+            for chunk in junk.chunks(64 * 1024) {
+                dec.feed(chunk, &mut out);
+            }
+            assert!(out.len() == n_junk && out.iter().all(|f| f.is_err()));
+            out.len()
+        });
+        rows.push(BenchRow::new("wire_decode_garbage", n_junk, 1, r.mean_s));
     }
 
     // Machine-readable record for cross-PR perf tracking.

@@ -15,10 +15,14 @@ use anyhow::{bail, Result};
 use grfgp::exp;
 use grfgp::gp::{Hypers, Modulation};
 use grfgp::graph::generators;
+use grfgp::server::wire::WireConfig;
+use grfgp::server::ServerConfig;
 use grfgp::stream::StreamingFeatures;
 use grfgp::util::cli::Args;
+use grfgp::util::json::UnicodeMode;
 use grfgp::util::rng::Rng;
 use grfgp::walks::WalkConfig;
+use std::time::Duration;
 
 const USAGE: &str = "\
 grfgp — Graph Random Features for Scalable Gaussian Processes
@@ -26,6 +30,8 @@ grfgp — Graph Random Features for Scalable Gaussian Processes
 USAGE:
   grfgp exp <scaling|ablation|traffic|wind|bo-synthetic|bo-social|bo-wind|classify|all> [opts]
   grfgp serve [--graph ring --n 4096 --addr 127.0.0.1:7701]
+              [--max-frame-bytes B --max-parse-depth D --unicode strict|replace]
+              [--max-conns C --read-timeout-ms T --idle-timeout-s T --write-timeout-s T]
   grfgp info  [--artifacts artifacts]
 
 Common experiment options:
@@ -129,7 +135,38 @@ fn run_serve(args: &Args) -> Result<()> {
     // (add_edge / remove_edge / add_node patch features incrementally).
     let stream =
         StreamingFeatures::new(graph, cfg, hypers.modulation.coeffs(), seed);
-    grfgp::server::serve(stream, hypers, &addr, seed)
+
+    // Serving-edge limits (see server module docs, "Limits & failure
+    // modes"). `fault_injection` is deliberately not exposed here: the
+    // panic-injection op is for the test harness only.
+    let defaults = ServerConfig::default();
+    let unicode = match args.get_or("unicode", "strict") {
+        "strict" => UnicodeMode::Strict,
+        "replace" => UnicodeMode::Replace,
+        other => bail!("unknown --unicode mode {other:?} (strict|replace)"),
+    };
+    let config = ServerConfig {
+        wire: WireConfig {
+            max_frame_bytes: args
+                .usize("max-frame-bytes", defaults.wire.max_frame_bytes),
+            max_parse_depth: args
+                .usize("max-parse-depth", defaults.wire.max_parse_depth),
+            unicode,
+        },
+        max_connections: args.usize("max-conns", defaults.max_connections),
+        read_timeout: Duration::from_millis(args.u64(
+            "read-timeout-ms",
+            defaults.read_timeout.as_millis() as u64,
+        )),
+        idle_timeout: Duration::from_secs(
+            args.u64("idle-timeout-s", defaults.idle_timeout.as_secs()),
+        ),
+        write_timeout: Duration::from_secs(
+            args.u64("write-timeout-s", defaults.write_timeout.as_secs()),
+        ),
+        fault_injection: false,
+    };
+    grfgp::server::serve_with(stream, hypers, &addr, seed, config)
 }
 
 fn run_info(args: &Args) -> Result<()> {

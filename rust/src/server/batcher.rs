@@ -23,11 +23,12 @@
 //! the batching window when the model lock is uncontended — there is
 //! nothing to coalesce with, so serial clients pay no window latency.
 
+use super::wire::ErrorKind;
 use super::{ModelState, ServerState};
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, PoisonError};
 use std::time::Duration;
 
 /// Parsed request.
@@ -42,6 +43,12 @@ pub enum Request {
     Thompson,
     Stats,
     Shutdown,
+    /// Test-only op (`{"op":"fault","mode":"panic"|"panic_locked"}`):
+    /// panics inside the handler, optionally while holding the model
+    /// lock. Rejected unless `ServerConfig::fault_injection` is on —
+    /// the fault-injection suite uses it to prove panic isolation and
+    /// lock-poison recovery over a real connection.
+    Fault { locked: bool },
 }
 
 /// How the batcher routes a request.
@@ -54,6 +61,13 @@ enum BatchClass {
 impl Request {
     pub fn parse(line: &str) -> Result<Request, String> {
         let j = Json::parse(line).map_err(|e| format!("bad JSON: {e}"))?;
+        Request::from_json(&j)
+    }
+
+    /// Field extraction from an already-parsed frame (the wire decoder
+    /// hands over `Json` values; see `server::wire`). Errors here are
+    /// `protocol`-kind: the JSON was fine, the request was not.
+    pub fn from_json(j: &Json) -> Result<Request, String> {
         let op = j
             .get("op")
             .and_then(Json::as_str)
@@ -110,6 +124,11 @@ impl Request {
             "thompson" => Ok(Request::Thompson),
             "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown),
+            "fault" => match j.get("mode").and_then(Json::as_str) {
+                Some("panic") => Ok(Request::Fault { locked: false }),
+                Some("panic_locked") => Ok(Request::Fault { locked: true }),
+                _ => Err("fault needs mode \"panic\" or \"panic_locked\"".into()),
+            },
             other => Err(format!("unknown op {other:?}")),
         }
     }
@@ -144,10 +163,24 @@ impl Response {
         }
     }
 
+    /// Error reply with the default `protocol` classification (the
+    /// JSON parsed but the request was unusable) — the common case for
+    /// handler-level rejections.
     pub fn error(msg: impl Into<String>) -> Response {
+        Response::fault(ErrorKind::Protocol, msg)
+    }
+
+    /// Error reply with an explicit [`ErrorKind`]. Every error the
+    /// server emits carries `error_kind` so clients can tell their own
+    /// bad input (`parse`/`protocol`) from server conditions
+    /// (`overload`/`internal`).
+    pub fn fault(kind: ErrorKind, msg: impl Into<String>) -> Response {
         Response {
             ok: false,
-            fields: vec![("error".to_string(), Json::Str(msg.into()))],
+            fields: vec![
+                ("error".to_string(), Json::Str(msg.into())),
+                ("error_kind".to_string(), Json::Str(kind.as_str().to_string())),
+            ],
         }
     }
 
@@ -319,7 +352,7 @@ impl Batcher {
         }
         // Idle fast path: an uncontended model means there is nothing
         // to coalesce with — skip the batching window entirely.
-        if let Ok(mut ms) = state.model.try_lock() {
+        if let Some(mut ms) = state.try_model_guard() {
             let (mu, var, version) =
                 Self::predict_under_lock(state, &mut ms, &nodes, key);
             drop(ms);
@@ -333,7 +366,7 @@ impl Batcher {
         let joined = self.join_predict(&nodes, key);
         let Some((generation, span)) = joined else {
             // Solo slow path (blocking lock).
-            let mut ms = state.model.lock().unwrap();
+            let mut ms = state.model_guard();
             let (mu, var, version) =
                 Self::predict_under_lock(state, &mut ms, &nodes, key);
             drop(ms);
@@ -344,7 +377,7 @@ impl Batcher {
         // Leader = whoever still finds its batch pending; it takes the
         // batch out, so late arrivals open a fresh one.
         let batch = {
-            let mut slot = self.predicts.lock().unwrap();
+            let mut slot = self.predicts.lock().unwrap_or_else(PoisonError::into_inner);
             let mine = matches!(
                 slot.pending.as_ref(),
                 Some(b) if b.generation == generation
@@ -357,10 +390,10 @@ impl Batcher {
         };
         if let Some(b) = batch {
             let (mu, var, version) = {
-                let mut ms = state.model.lock().unwrap();
+                let mut ms = state.model_guard();
                 Self::predict_under_lock(state, &mut ms, &b.nodes, b.key)
             };
-            let mut slot = self.predicts.lock().unwrap();
+            let mut slot = self.predicts.lock().unwrap_or_else(PoisonError::into_inner);
             // Bounded-stale sweep: a participant that timed out never
             // claims its span, so its entry could linger — drop entries
             // older than the claim deadline (no live claimant remains;
@@ -388,7 +421,7 @@ impl Batcher {
                 state.requests_served.fetch_add(1, Ordering::Relaxed);
                 Self::predict_response(&m, &v, parts, version)
             }
-            None => Response::error("predict batch timed out"),
+            None => Response::fault(ErrorKind::Internal, "predict batch timed out"),
         }
     }
 
@@ -402,7 +435,7 @@ impl Batcher {
         nodes: &[usize],
         key: usize,
     ) -> Option<(u64, (usize, usize))> {
-        let mut slot = self.predicts.lock().unwrap();
+        let mut slot = self.predicts.lock().unwrap_or_else(PoisonError::into_inner);
         match slot.pending.as_mut() {
             Some(b)
                 if b.key == key
@@ -447,7 +480,7 @@ impl Batcher {
         span: (usize, usize),
     ) -> Option<(Vec<f64>, Vec<f64>, usize, u64)> {
         let deadline = std::time::Instant::now() + self.result_timeout;
-        let mut slot = self.predicts.lock().unwrap();
+        let mut slot = self.predicts.lock().unwrap_or_else(PoisonError::into_inner);
         loop {
             if let Some(done) = slot.done.get_mut(&generation) {
                 let (off, len) = span;
@@ -467,7 +500,10 @@ impl Batcher {
             if now >= deadline {
                 return None;
             }
-            let (g, _) = self.pcv.wait_timeout(slot, deadline - now).unwrap();
+            let (g, _) = self
+                .pcv
+                .wait_timeout(slot, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
             slot = g;
         }
     }
@@ -475,7 +511,7 @@ impl Batcher {
     fn submit_write(&self, state: &ServerState, req: Request) -> Response {
         // Idle fast path: uncontended model → apply immediately; the
         // common serial-client observe stream pays no window latency.
-        if let Ok(mut ms) = state.model.try_lock() {
+        if let Some(mut ms) = state.try_model_guard() {
             let resp = ms
                 .apply_writes(std::slice::from_ref(&req), state)
                 .pop()
@@ -487,7 +523,7 @@ impl Batcher {
         // Join the pending write batch, open one if none is pending; a
         // full batch is left intact and this request runs solo.
         let joined = {
-            let mut slot = self.writes.lock().unwrap();
+            let mut slot = self.writes.lock().unwrap_or_else(PoisonError::into_inner);
             match slot.pending.as_mut() {
                 Some(b) if b.reqs.len() < self.max_batch => {
                     b.reqs.push(req.clone());
@@ -508,7 +544,7 @@ impl Batcher {
         let Some((generation, idx)) = joined else {
             // Solo slow path (blocking lock), preserving write order
             // within this connection.
-            let mut ms = state.model.lock().unwrap();
+            let mut ms = state.model_guard();
             let resp = ms
                 .apply_writes(std::slice::from_ref(&req), state)
                 .pop()
@@ -519,7 +555,7 @@ impl Batcher {
         };
         std::thread::sleep(BATCH_WINDOW);
         let batch = {
-            let mut slot = self.writes.lock().unwrap();
+            let mut slot = self.writes.lock().unwrap_or_else(PoisonError::into_inner);
             let mine = matches!(
                 slot.pending.as_ref(),
                 Some(b) if b.generation == generation
@@ -532,10 +568,10 @@ impl Batcher {
         };
         if let Some(b) = batch {
             let results = {
-                let mut ms = state.model.lock().unwrap();
+                let mut ms = state.model_guard();
                 ms.apply_writes(&b.reqs, state)
             };
-            let mut slot = self.writes.lock().unwrap();
+            let mut slot = self.writes.lock().unwrap_or_else(PoisonError::into_inner);
             let timeout = self.result_timeout;
             slot.done
                 .retain(|_, d| d.published.elapsed() < timeout);
@@ -555,7 +591,7 @@ impl Batcher {
                 state.requests_served.fetch_add(1, Ordering::Relaxed);
                 resp
             }
-            None => Response::error("write batch timed out"),
+            None => Response::fault(ErrorKind::Internal, "write batch timed out"),
         }
     }
 
@@ -563,7 +599,7 @@ impl Batcher {
     /// lookup first, stale-entry sweep after each failed lookup.
     fn claim_write(&self, generation: u64, idx: usize) -> Option<Response> {
         let deadline = std::time::Instant::now() + self.result_timeout;
-        let mut slot = self.writes.lock().unwrap();
+        let mut slot = self.writes.lock().unwrap_or_else(PoisonError::into_inner);
         loop {
             if let Some(done) = slot.done.get_mut(&generation) {
                 let resp = done
@@ -585,7 +621,10 @@ impl Batcher {
             if now >= deadline {
                 return None;
             }
-            let (g, _) = self.wcv.wait_timeout(slot, deadline - now).unwrap();
+            let (g, _) = self
+                .wcv
+                .wait_timeout(slot, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
             slot = g;
         }
     }
@@ -755,6 +794,43 @@ mod tests {
         let j = r.to_json().to_string();
         assert!(j.contains("\"ok\":true"));
         let e = Response::error("boom");
-        assert!(e.to_json().to_string().contains("boom"));
+        let s = e.to_json().to_string();
+        assert!(s.contains("boom"));
+        assert!(s.contains("\"error_kind\":\"protocol\""), "{s}");
+        let i = Response::fault(ErrorKind::Internal, "oops");
+        assert!(i.to_json().to_string().contains("\"error_kind\":\"internal\""));
+    }
+
+    #[test]
+    fn negative_or_fractional_ids_are_rejected_not_truncated() {
+        // `-1 as usize` used to saturate to 0 — a silent write to node
+        // 0. Every id field must reject non-index numbers outright.
+        assert!(Request::parse(r#"{"op":"observe","node":-1,"y":0.5}"#).is_err());
+        assert!(Request::parse(r#"{"op":"observe","node":1.5,"y":0.5}"#).is_err());
+        assert!(Request::parse(r#"{"op":"predict","nodes":[0,-3]}"#).is_err());
+        assert!(Request::parse(r#"{"op":"add_edge","u":-2,"v":1}"#).is_err());
+        assert!(Request::parse(r#"{"op":"remove_edge","u":0,"v":-1}"#).is_err());
+        // `samples` is a tuning knob, not an id: an unusable value
+        // falls back to the default rather than failing the request.
+        assert!(
+            Request::parse(r#"{"op":"predict","nodes":[1],"samples":2.5}"#)
+                .map(|r| r == Request::Predict { nodes: vec![1], samples: 16 })
+                .unwrap_or(false),
+            "absent-or-unusable samples falls back to the default"
+        );
+    }
+
+    #[test]
+    fn parse_fault_op() {
+        assert_eq!(
+            Request::parse(r#"{"op":"fault","mode":"panic"}"#).unwrap(),
+            Request::Fault { locked: false }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"fault","mode":"panic_locked"}"#).unwrap(),
+            Request::Fault { locked: true }
+        );
+        assert!(Request::parse(r#"{"op":"fault"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"fault","mode":"rm -rf"}"#).is_err());
     }
 }

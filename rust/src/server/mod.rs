@@ -18,7 +18,52 @@
 //!   {"op":"thompson"}                         → next query node
 //!   {"op":"stats"}
 //!   {"op":"shutdown"}
-//! Responses: {"ok":true, ...} or {"ok":false,"error":"..."}.
+//! Responses: {"ok":true, ...} or
+//! {"ok":false,"error":"...","error_kind":"parse|protocol|overload|internal"}.
+//!
+//! ## Limits & failure modes
+//!
+//! The wire layer is attacker-facing and every limit below is a
+//! [`ServerConfig`] knob; the listed defaults are what `serve` uses.
+//!
+//! * **Frame cap** (`wire.max_frame_bytes`, 256 KiB): one
+//!   newline-delimited frame may not exceed this. The decoder's
+//!   reassembly buffer is bounded by the same number — an oversized
+//!   frame is *discarded as it streams in* (never stored) and answered
+//!   with exactly one `protocol` error at its terminating newline; the
+//!   connection then resynchronises on the next frame.
+//! * **Depth cap** (`wire.max_parse_depth`, 64): JSON nesting beyond
+//!   this is a `parse` error — `[[[[…` bombs cannot exhaust the stack.
+//!   Lone `\uXXXX` surrogates and invalid UTF-8 are `parse` errors by
+//!   default (`wire.unicode`, see [`wire::UnicodeMode`] for the
+//!   documented lossy `Replace` mode).
+//! * **Connection cap** (`max_connections`, 256): excess connections
+//!   are answered with a single `overload` ("busy") line and closed
+//!   gracefully; the slot frees as soon as an accepted connection
+//!   ends.
+//! * **Timeouts**: reads poll at `read_timeout` (250 ms) so every
+//!   client thread observes shutdown promptly even when its peer is
+//!   idle — this is what makes shutdown complete with idle connections
+//!   attached. A connection with no complete frame for `idle_timeout`
+//!   (10 min) is told so (`protocol` error) and closed; slow-loris
+//!   byte-trickling does not count as progress. Writes block at most
+//!   `write_timeout` (30 s).
+//! * **Error taxonomy**: every error reply carries `error_kind` —
+//!   `parse` (bad JSON), `protocol` (valid JSON, unusable request or
+//!   oversized frame), `overload` (connection cap), `internal`
+//!   (handler panic, batch timeout). Malformed input costs one error
+//!   line, never the connection.
+//! * **Panic isolation**: each request dispatch runs under
+//!   `catch_unwind`; a panicking handler yields an `internal` error on
+//!   that connection and poisons nothing — all locks are acquired with
+//!   poison recovery, so other clients keep being served and shutdown
+//!   still completes. (`fault_injection` enables a test-only
+//!   `{"op":"fault"}` that panics on demand to prove this end to end;
+//!   it is off by default and rejected as `protocol` when off.)
+//! * **Shutdown semantics**: `{"op":"shutdown"}` is acknowledged
+//!   (`{"ok":true,"bye":true}`), then the accept loop stops and every
+//!   client thread exits within one `read_timeout` tick; `serve`
+//!   returns once all connections have drained.
 //!
 //! ## Dynamic-graph lifecycle
 //!
@@ -47,6 +92,7 @@
 //! newer than its numbers.
 
 pub mod batcher;
+pub mod wire;
 
 use crate::gp::model::GpModel;
 use crate::gp::Hypers;
@@ -55,10 +101,48 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use batcher::{Batcher, Request, Response};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError, TryLockError};
+use std::time::{Duration, Instant};
+use wire::{ErrorKind, WireConfig, WireDecoder, WireError};
+
+/// Serving-edge limits and policies (see the module-level "Limits &
+/// failure modes" section for how each behaves when hit).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Per-connection frame/parse limits.
+    pub wire: WireConfig,
+    /// Cap on concurrently served connections; excess connects receive
+    /// one `overload` line and are closed.
+    pub max_connections: usize,
+    /// Socket read timeout — the poll granularity at which idle client
+    /// threads notice shutdown and the idle deadline. Smaller = faster
+    /// shutdown, more wakeups.
+    pub read_timeout: Duration,
+    /// Close a connection that completes no frame for this long.
+    pub idle_timeout: Duration,
+    /// Cap on blocking writes to a slow-reading client.
+    pub write_timeout: Duration,
+    /// Enable the test-only `{"op":"fault"}` panic op (off by default;
+    /// the fault-injection suite turns it on to prove panic isolation).
+    pub fault_injection: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            wire: WireConfig::default(),
+            max_connections: 256,
+            read_timeout: Duration::from_millis(250),
+            idle_timeout: Duration::from_secs(600),
+            write_timeout: Duration::from_secs(30),
+            fault_injection: false,
+        }
+    }
+}
 
 /// Server shared state.
 pub struct ServerState {
@@ -71,6 +155,31 @@ pub struct ServerState {
     /// request validation run without contending on the model mutex.
     pub n_nodes: AtomicUsize,
     pub shutdown: AtomicBool,
+    /// Live connection count, against `config.max_connections`.
+    pub active_connections: AtomicUsize,
+    pub config: ServerConfig,
+}
+
+impl ServerState {
+    /// Model lock with poison recovery. A panicking handler must not
+    /// turn every subsequent request into a poison panic: the panic
+    /// already surfaced as an `internal` error on its own connection,
+    /// and the model invariants the handlers rely on (vector lengths,
+    /// version mirrors) are re-established at the start of each write,
+    /// so serving continues on whatever state the handler left.
+    pub fn model_guard(&self) -> MutexGuard<'_, ModelState> {
+        self.model.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Non-blocking variant of [`ServerState::model_guard`]; `None`
+    /// only when the lock is genuinely contended.
+    pub fn try_model_guard(&self) -> Option<MutexGuard<'_, ModelState>> {
+        match self.model.try_lock() {
+            Ok(g) => Some(g),
+            Err(TryLockError::Poisoned(p)) => Some(p.into_inner()),
+            Err(TryLockError::WouldBlock) => None,
+        }
+    }
 }
 
 /// The mutable model + data the workers operate on.
@@ -319,13 +428,13 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
         | Request::AddEdge { .. }
         | Request::RemoveEdge { .. }
         | Request::AddNode => {
-            let mut ms = state.model.lock().unwrap();
+            let mut ms = state.model_guard();
             ms.apply_writes(std::slice::from_ref(req), state)
                 .pop()
                 .expect("one response per write")
         }
         Request::Predict { nodes, samples } => {
-            let mut ms = state.model.lock().unwrap();
+            let mut ms = state.model_guard();
             if let Some(&bad) = nodes.iter().find(|&&n| n >= ms.model.n()) {
                 return Response::error(format!("node {bad} out of range"));
             }
@@ -343,7 +452,7 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
             ])
         }
         Request::Sample => {
-            let mut ms = state.model.lock().unwrap();
+            let mut ms = state.model_guard();
             let mut rng = ms.rng.split(0x5A);
             ms.rng = ms.rng.split(1); // advance server stream
             let s = ms.model.posterior_sample(&mut rng);
@@ -359,7 +468,7 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
             ])
         }
         Request::Thompson => {
-            let mut ms = state.model.lock().unwrap();
+            let mut ms = state.model_guard();
             let mut rng = ms.rng.split(0x7A);
             ms.rng = ms.rng.split(2);
             let s = ms.model.posterior_sample(&mut rng);
@@ -375,7 +484,7 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
             Response::ok(vec![("next", Json::Num(next as f64))])
         }
         Request::Stats => {
-            let ms = state.model.lock().unwrap();
+            let ms = state.model_guard();
             Response::ok(vec![
                 ("n_nodes", Json::Num(ms.model.n() as f64)),
                 ("n_edges", Json::Num(ms.stream.graph().num_edges() as f64)),
@@ -410,25 +519,127 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
             state.shutdown.store(true, Ordering::SeqCst);
             Response::ok(vec![("bye", Json::Bool(true))])
         }
+        Request::Fault { locked } => {
+            if !state.config.fault_injection {
+                return Response::error(
+                    "fault injection is disabled on this server",
+                );
+            }
+            if *locked {
+                // Poison the model mutex mid-panic: the suite proves
+                // other clients recover the lock and keep serving.
+                let _ms = state.model_guard();
+                panic!("injected fault while holding the model lock");
+            }
+            panic!("injected fault");
+        }
     }
 }
 
-fn client_loop(stream: TcpStream, state: Arc<ServerState>, batcher: Arc<Batcher>) -> Result<()> {
-    let mut writer = stream.try_clone().context("clone stream")?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+/// Decrements the live-connection count on every exit path (normal
+/// EOF, error return, or a panic escaping `catch_unwind`'s closure).
+struct ConnGuard<'a>(&'a ServerState);
+
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        self.0.active_connections.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn write_response(writer: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let mut line = resp.to_json().to_string();
+    line.push('\n');
+    writer.write_all(line.as_bytes())
+}
+
+/// Run one decoded frame to a response. Handler panics are caught here
+/// and become `internal` errors — one poisoned request must not tear
+/// down the connection thread (and through `thread::scope`, the whole
+/// server). `AssertUnwindSafe` is justified by the poison-recovering
+/// lock discipline documented on [`ServerState::model_guard`].
+fn dispatch(state: &ServerState, batcher: &Batcher, frame: &Json) -> Response {
+    let req = match Request::from_json(frame) {
+        Ok(req) => req,
+        Err(e) => return Response::error(e),
+    };
+    match catch_unwind(AssertUnwindSafe(|| batcher.submit(state, req))) {
+        Ok(resp) => resp,
+        Err(payload) => {
+            let what = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Response::fault(ErrorKind::Internal, format!("handler panicked: {what}"))
         }
-        let resp = match Request::parse(&line) {
-            Ok(req) => batcher.submit(&state, req),
-            Err(e) => Response::error(e),
-        };
-        writer.write_all(resp.to_json().to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
+    }
+}
+
+/// Per-connection loop: raw timed reads feed the bounded streaming
+/// decoder; each complete frame gets exactly one reply line. The read
+/// timeout doubles as the shutdown/idle poll, so an idle peer cannot
+/// hold this thread past shutdown (the old `BufReader::lines` loop
+/// blocked forever there).
+fn client_loop(
+    mut stream: TcpStream,
+    state: &ServerState,
+    batcher: &Batcher,
+) -> Result<()> {
+    let cfg = &state.config;
+    stream
+        .set_read_timeout(Some(cfg.read_timeout))
+        .context("set read timeout")?;
+    stream
+        .set_write_timeout(Some(cfg.write_timeout))
+        .context("set write timeout")?;
+    let mut writer = stream.try_clone().context("clone stream")?;
+    let mut decoder = WireDecoder::new(cfg.wire.clone());
+    let mut chunk = vec![0u8; 16 * 1024];
+    let mut frames: Vec<std::result::Result<Json, WireError>> = Vec::new();
+    let mut last_frame = Instant::now();
+    'conn: loop {
         if state.shutdown.load(Ordering::SeqCst) {
             break;
+        }
+        let k = match stream.read(&mut chunk) {
+            // EOF: a partial frame at disconnect is dropped silently
+            // (there is no one left to send the error to).
+            Ok(0) => break,
+            Ok(k) => k,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Read-timeout tick: re-check shutdown (top of loop)
+                // and the idle deadline.
+                if last_frame.elapsed() >= cfg.idle_timeout {
+                    let _ = write_response(
+                        &mut writer,
+                        &Response::error("closing idle connection"),
+                    );
+                    break;
+                }
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        };
+        frames.clear();
+        decoder.feed(&chunk[..k], &mut frames);
+        if !frames.is_empty() {
+            // Completed frames (even erroneous ones) count as progress;
+            // trickling bytes without ever finishing a frame does not.
+            last_frame = Instant::now();
+        }
+        for frame in frames.drain(..) {
+            let resp = match frame {
+                Ok(json) => dispatch(state, batcher, &json),
+                Err(we) => Response::fault(we.kind, we.msg),
+            };
+            write_response(&mut writer, &resp)?;
+            if state.shutdown.load(Ordering::SeqCst) {
+                break 'conn;
+            }
         }
     }
     Ok(())
@@ -443,10 +654,21 @@ pub fn serve(
     addr: &str,
     seed: u64,
 ) -> Result<()> {
+    serve_with(stream, hypers, addr, seed, ServerConfig::default())
+}
+
+/// [`serve`] with explicit serving-edge limits.
+pub fn serve_with(
+    stream: StreamingFeatures,
+    hypers: Hypers,
+    addr: &str,
+    seed: u64,
+    config: ServerConfig,
+) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     let local = listener.local_addr()?;
     eprintln!("grfgp server listening on {local}");
-    serve_on(stream, hypers, listener, seed)
+    serve_on_with(stream, hypers, listener, seed, config)
 }
 
 /// Serve on an already-bound listener (tests bind port 0 themselves).
@@ -456,6 +678,18 @@ pub fn serve_on(
     listener: TcpListener,
     seed: u64,
 ) -> Result<()> {
+    serve_on_with(stream, hypers, listener, seed, ServerConfig::default())
+}
+
+/// [`serve_on`] with explicit serving-edge limits — the full-control
+/// entry point the fault-injection suite drives.
+pub fn serve_on_with(
+    stream: StreamingFeatures,
+    hypers: Hypers,
+    listener: TcpListener,
+    seed: u64,
+    config: ServerConfig,
+) -> Result<()> {
     let ms = ModelState::new(stream, hypers, seed);
     let n0 = ms.model.n();
     let state = Arc::new(ServerState {
@@ -464,6 +698,8 @@ pub fn serve_on(
         graph_version: AtomicU64::new(0),
         n_nodes: AtomicUsize::new(n0),
         shutdown: AtomicBool::new(false),
+        active_connections: AtomicUsize::new(0),
+        config,
     });
     let batcher = Arc::new(Batcher::new(8));
     listener.set_nonblocking(true)?;
@@ -475,11 +711,45 @@ pub fn serve_on(
             match listener.accept() {
                 Ok((stream, _)) => {
                     stream.set_nonblocking(false).ok();
+                    // Connection cap: answer with one typed busy line
+                    // and close (drop) instead of serving. Only the
+                    // accept loop increments the count, so load+add
+                    // cannot race another admission.
+                    let live = state.active_connections.load(Ordering::SeqCst);
+                    if live >= state.config.max_connections {
+                        let mut stream = stream;
+                        let _ = stream
+                            .set_write_timeout(Some(state.config.write_timeout));
+                        let _ = write_response(
+                            &mut stream,
+                            &Response::fault(
+                                ErrorKind::Overload,
+                                format!(
+                                    "server busy: connection cap {} reached",
+                                    state.config.max_connections
+                                ),
+                            ),
+                        );
+                        continue;
+                    }
+                    state.active_connections.fetch_add(1, Ordering::SeqCst);
                     let st = state.clone();
                     let ba = batcher.clone();
                     scope.spawn(move || {
-                        if let Err(e) = client_loop(stream, st, ba) {
-                            eprintln!("client error: {e:#}");
+                        let _guard = ConnGuard(&st);
+                        // Belt-and-braces: client_loop's dispatch already
+                        // catches handler panics; this outer guard keeps
+                        // any unexpected panic (decoder, IO plumbing)
+                        // from propagating into `thread::scope` and
+                        // aborting the whole server.
+                        match catch_unwind(AssertUnwindSafe(|| {
+                            client_loop(stream, &st, &ba)
+                        })) {
+                            Ok(Ok(())) => {}
+                            Ok(Err(e)) => eprintln!("client error: {e:#}"),
+                            Err(_) => {
+                                eprintln!("client thread panicked (isolated)")
+                            }
                         }
                     });
                 }

@@ -1,0 +1,278 @@
+//! Hardened wire layer: bounded incremental frame decoding plus the
+//! server's structured error taxonomy.
+//!
+//! The protocol is newline-delimited JSON. The old read path
+//! (`BufReader::lines`) buffered an unbounded line in memory and only
+//! then parsed it — a single client could hold a multi-gigabyte
+//! allocation with one newline-free stream. [`WireDecoder`] replaces it
+//! with an incremental decoder fed raw bytes as they arrive from the
+//! socket:
+//!
+//! - Memory per connection is bounded: the reassembly buffer never
+//!   holds more than [`WireConfig::max_frame_bytes`]. When a frame
+//!   exceeds the cap the decoder switches to *dropping* mode,
+//!   discarding bytes (counting, not storing them) until the next
+//!   newline, then emits exactly one typed `protocol` error for the
+//!   whole oversized frame and resynchronises.
+//! - Parsing is depth-capped ([`WireConfig::max_parse_depth`]) so
+//!   `[[[[…` bombs fail cleanly instead of exhausting the stack, and
+//!   strict about Unicode by default (lone surrogates and invalid
+//!   UTF-8 are `parse` errors; see [`UnicodeMode`] for the documented
+//!   replace mode).
+//! - Chunk boundaries are invisible: bytes may arrive one at a time or
+//!   in arbitrary splits and the decoded frame stream is identical.
+//!
+//! Every error carries an [`ErrorKind`] so clients can distinguish
+//! their own malformed input (`parse`/`protocol`) from server-side
+//! conditions (`overload`/`internal`) — the taxonomy every error reply
+//! is tagged with (`error_kind` field, see `server` module docs).
+
+use crate::util::json::{Json, ParseOptions, UnicodeMode};
+
+/// Coarse classification for every error reply the server emits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The frame was not valid JSON (bad syntax, nesting past the
+    /// depth cap, invalid Unicode under strict mode).
+    Parse,
+    /// The frame was valid JSON but not a valid request (unknown op,
+    /// missing/ill-typed fields, out-of-range ids, oversized frame).
+    Protocol,
+    /// The server refused the work due to load (connection cap).
+    Overload,
+    /// The server failed internally (handler panic, batch timeout).
+    Internal,
+}
+
+impl ErrorKind {
+    /// Wire spelling of the kind (the `error_kind` response field).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::Parse => "parse",
+            ErrorKind::Protocol => "protocol",
+            ErrorKind::Overload => "overload",
+            ErrorKind::Internal => "internal",
+        }
+    }
+}
+
+/// A typed wire-level error: what went wrong and how it is classified.
+#[derive(Clone, Debug)]
+pub struct WireError {
+    pub kind: ErrorKind,
+    pub msg: String,
+}
+
+impl WireError {
+    pub fn parse(msg: impl Into<String>) -> WireError {
+        WireError { kind: ErrorKind::Parse, msg: msg.into() }
+    }
+
+    pub fn protocol(msg: impl Into<String>) -> WireError {
+        WireError { kind: ErrorKind::Protocol, msg: msg.into() }
+    }
+}
+
+/// Limits for one connection's decoder.
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    /// Hard cap on one newline-delimited frame, in bytes. Also the
+    /// bound on the decoder's reassembly buffer.
+    pub max_frame_bytes: usize,
+    /// JSON nesting cap within a frame (see `ParseOptions::max_depth`).
+    pub max_parse_depth: usize,
+    /// `\uXXXX` surrogate / invalid-UTF-8 policy. Strict by default;
+    /// `Replace` substitutes U+FFFD for callers that prefer lossy
+    /// decoding over rejection.
+    pub unicode: UnicodeMode,
+}
+
+impl Default for WireConfig {
+    fn default() -> WireConfig {
+        WireConfig {
+            max_frame_bytes: 256 * 1024,
+            max_parse_depth: 64,
+            unicode: UnicodeMode::Strict,
+        }
+    }
+}
+
+impl WireConfig {
+    fn parse_options(&self) -> ParseOptions {
+        ParseOptions { max_depth: self.max_parse_depth, unicode: self.unicode }
+    }
+}
+
+/// Incremental newline-delimited JSON frame decoder with bounded
+/// memory. Feed it socket reads as they happen; it emits one
+/// `Result<Json, WireError>` per complete non-blank frame.
+pub struct WireDecoder {
+    cfg: WireConfig,
+    /// Partial-frame reassembly buffer; invariant: `buf.len() <=
+    /// cfg.max_frame_bytes` at all times.
+    buf: Vec<u8>,
+    /// True while discarding an oversized frame (until next newline).
+    dropping: bool,
+    /// Bytes discarded from the frame currently being dropped.
+    dropped: usize,
+}
+
+impl WireDecoder {
+    pub fn new(cfg: WireConfig) -> WireDecoder {
+        assert!(cfg.max_frame_bytes > 0, "max_frame_bytes must be positive");
+        WireDecoder { cfg, buf: Vec::new(), dropping: false, dropped: 0 }
+    }
+
+    /// Bytes currently buffered for a partial frame. Bounded by
+    /// `max_frame_bytes` — tests assert on this to pin the per-
+    /// connection memory bound.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when a partial frame is pending (a disconnect now would be
+    /// mid-frame).
+    pub fn mid_frame(&self) -> bool {
+        !self.buf.is_empty() || self.dropping
+    }
+
+    /// Feed one chunk of bytes; push one result per completed frame
+    /// onto `out`. Whitespace-only frames (blank lines, bare `\r`) are
+    /// skipped without emitting anything, matching the old reader.
+    pub fn feed(&mut self, bytes: &[u8], out: &mut Vec<Result<Json, WireError>>) {
+        let mut rest = bytes;
+        while let Some(pos) = rest.iter().position(|&c| c == b'\n') {
+            let (line, tail) = rest.split_at(pos);
+            rest = &tail[1..];
+            if self.dropping {
+                // The newline ends the frame we were discarding.
+                self.dropped += line.len();
+                out.push(Err(self.oversize_error()));
+                self.dropping = false;
+                self.dropped = 0;
+                continue;
+            }
+            if self.buf.len() + line.len() > self.cfg.max_frame_bytes {
+                self.dropped = self.buf.len() + line.len();
+                self.buf.clear();
+                out.push(Err(self.oversize_error()));
+                self.dropped = 0;
+                continue;
+            }
+            let opts = self.cfg.parse_options();
+            let frame: &[u8] = if self.buf.is_empty() {
+                line
+            } else {
+                self.buf.extend_from_slice(line);
+                &self.buf
+            };
+            if !frame.iter().all(|b| b.is_ascii_whitespace()) {
+                out.push(Json::parse_with(frame, &opts).map_err(WireError::parse));
+            }
+            self.buf.clear();
+        }
+        // Tail with no newline yet: buffer it, or start dropping if it
+        // would breach the cap — memory stays bounded while an
+        // oversized frame streams in.
+        if self.dropping {
+            self.dropped = self.dropped.saturating_add(rest.len());
+        } else if self.buf.len() + rest.len() > self.cfg.max_frame_bytes {
+            self.dropped = self.buf.len() + rest.len();
+            self.buf.clear();
+            self.dropping = true;
+        } else {
+            self.buf.extend_from_slice(rest);
+        }
+    }
+
+    fn oversize_error(&self) -> WireError {
+        WireError::protocol(format!(
+            "frame exceeds max_frame_bytes={} ({} bytes discarded)",
+            self.cfg.max_frame_bytes, self.dropped
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decode_all(dec: &mut WireDecoder, bytes: &[u8]) -> Vec<Result<Json, WireError>> {
+        let mut out = Vec::new();
+        dec.feed(bytes, &mut out);
+        out
+    }
+
+    #[test]
+    fn frames_split_across_arbitrary_chunks() {
+        let mut dec = WireDecoder::new(WireConfig::default());
+        let mut out = Vec::new();
+        dec.feed(b"{\"a\"", &mut out);
+        assert!(out.is_empty());
+        assert!(dec.mid_frame());
+        dec.feed(b":1}\ntru", &mut out);
+        dec.feed(b"e\n", &mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].as_ref().unwrap().get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(out[1].as_ref().unwrap(), &Json::Bool(true));
+        assert!(!dec.mid_frame());
+    }
+
+    #[test]
+    fn blank_and_crlf_frames_are_skipped() {
+        let mut dec = WireDecoder::new(WireConfig::default());
+        let out = decode_all(&mut dec, b"\n  \n1\r\n\r\n2\n");
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].as_ref().unwrap(), &Json::Num(1.0));
+        assert_eq!(out[1].as_ref().unwrap(), &Json::Num(2.0));
+    }
+
+    #[test]
+    fn oversized_frame_dropped_with_bounded_buffer_then_recovers() {
+        let cfg = WireConfig { max_frame_bytes: 16, ..Default::default() };
+        let mut dec = WireDecoder::new(cfg);
+        let mut out = Vec::new();
+        for _ in 0..100 {
+            dec.feed(b"xxxxxxxx", &mut out); // 800 bytes, no newline
+            assert!(dec.buffered() <= 16, "buffer breached the cap");
+        }
+        assert!(out.is_empty());
+        dec.feed(b"\ntrue\n", &mut out);
+        assert_eq!(out.len(), 2);
+        let err = out[0].as_ref().err().expect("oversize must error");
+        assert_eq!(err.kind, ErrorKind::Protocol);
+        assert!(err.msg.contains("max_frame_bytes"), "{}", err.msg);
+        assert_eq!(out[1].as_ref().unwrap(), &Json::Bool(true));
+    }
+
+    #[test]
+    fn oversized_single_chunk_line_also_rejected() {
+        let cfg = WireConfig { max_frame_bytes: 8, ..Default::default() };
+        let mut dec = WireDecoder::new(cfg);
+        let out = decode_all(&mut dec, b"[1,2,3,4,5,6]\n7\n");
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].as_ref().err().unwrap().kind, ErrorKind::Protocol);
+        assert_eq!(out[1].as_ref().unwrap(), &Json::Num(7.0));
+    }
+
+    #[test]
+    fn garbage_frames_yield_parse_errors_and_resync() {
+        let mut dec = WireDecoder::new(WireConfig::default());
+        let out = decode_all(&mut dec, b"\xff\xfe{[\n{\"ok\":true}\n");
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].as_ref().err().unwrap().kind, ErrorKind::Parse);
+        assert!(out[1].is_ok());
+    }
+
+    #[test]
+    fn depth_cap_applies_per_frame() {
+        let cfg = WireConfig { max_parse_depth: 4, ..Default::default() };
+        let mut dec = WireDecoder::new(cfg);
+        let out = decode_all(&mut dec, b"[[[[[1]]]]]\n[[1]]\n");
+        assert_eq!(out.len(), 2);
+        let err = out[0].as_ref().err().expect("depth bomb must error");
+        assert_eq!(err.kind, ErrorKind::Parse);
+        assert!(err.msg.contains("max_depth"), "{}", err.msg);
+        assert!(out[1].is_ok());
+    }
+}

@@ -1,11 +1,54 @@
 //! Minimal JSON parser/serializer (no serde in the offline registry).
 //!
-//! Supports the full JSON grammar minus exotic escapes (\u surrogate
-//! pairs are handled); numbers parse as f64.  Used for the artifact
-//! manifest, the experiment result files, and the server protocol.
+//! Supports the full JSON grammar; numbers parse as f64. Used for the
+//! artifact manifest, the experiment result files, and the server
+//! protocol — the last of which makes this attacker-facing, so parsing
+//! is hardened:
+//!
+//! - **Depth cap.** Nesting is depth-counted against
+//!   [`ParseOptions::max_depth`] (default 128), so `[[[[…` bombs get a
+//!   clean error instead of exhausting the stack. Recursion depth is
+//!   bounded by the cap, never by the input.
+//! - **Unicode modes** ([`UnicodeMode`]): `Strict` (default) rejects
+//!   lone/unpaired `\uXXXX` surrogates and invalid UTF-8 bytes inside
+//!   strings; `Replace` substitutes U+FFFD for them, for callers that
+//!   prefer lossy decoding over rejection. Replace mode only relaxes
+//!   *character validity* — malformed escape syntax is an error in both
+//!   modes.
+//! - **Byte input.** [`Json::parse_with`] takes `&[u8]`, so wire frames
+//!   need not pass a UTF-8 pre-check to be rejected with a useful error.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// How to handle invalid Unicode in string literals: unpaired `\uXXXX`
+/// surrogates and invalid UTF-8 byte sequences.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnicodeMode {
+    /// Reject with a parse error (the default; matches RFC 8259's
+    /// requirement that texts be valid Unicode).
+    Strict,
+    /// Substitute U+FFFD REPLACEMENT CHARACTER and continue.
+    Replace,
+}
+
+/// Limits and decode policy for one parse. `Default` is what the
+/// manifest/results readers use; the server wire layer passes its own
+/// (see `server::wire::WireConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct ParseOptions {
+    /// Maximum nesting depth (arrays + objects). Parsing deeper input
+    /// fails cleanly; recursion is bounded by this cap.
+    pub max_depth: usize,
+    /// Lone-surrogate / invalid-UTF-8 policy for string literals.
+    pub unicode: UnicodeMode,
+}
+
+impl Default for ParseOptions {
+    fn default() -> ParseOptions {
+        ParseOptions { max_depth: 128, unicode: UnicodeMode::Strict }
+    }
+}
 
 /// A JSON value. Object keys are sorted (BTreeMap) so serialization is
 /// deterministic — results files diff cleanly between runs.
@@ -21,7 +64,15 @@ pub enum Json {
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, String> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        Json::parse_with(text.as_bytes(), &ParseOptions::default())
+    }
+
+    /// Parse raw bytes under explicit limits. Input need not be valid
+    /// UTF-8: strict mode rejects invalid bytes inside strings, replace
+    /// mode substitutes U+FFFD. Bytes outside strings must be JSON
+    /// syntax either way.
+    pub fn parse_with(bytes: &[u8], opts: &ParseOptions) -> Result<Json, String> {
+        let mut p = Parser { b: bytes, i: 0, depth: 0, opts: *opts };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -40,8 +91,21 @@ impl Json {
         }
     }
 
+    /// Index/count accessor: `Some` only when the value is a finite,
+    /// non-negative whole number that a usize represents exactly (the
+    /// 2^53 bound is where f64 stops representing every integer — a
+    /// "count" past it is already corrupt). Negatives, NaN, and
+    /// fractional values are `None`, never silently truncated into a
+    /// nonsense index.
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        let limit = MAX_EXACT.min(usize::MAX as f64);
+        match self.as_f64() {
+            Some(x) if x.is_finite() && x >= 0.0 && x <= limit && x.fract() == 0.0 => {
+                Some(x as usize)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -193,6 +257,8 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
+    opts: ParseOptions,
 }
 
 impl<'a> Parser<'a> {
@@ -215,6 +281,20 @@ impl<'a> Parser<'a> {
         } else {
             Err(format!("expected '{}' at byte {}", c as char, self.i))
         }
+    }
+
+    /// Count one level of nesting against the cap. Paired with a plain
+    /// `self.depth -= 1` on the matching close; errors abandon the whole
+    /// parse, so unwinding the counter on the error path is moot.
+    fn descend(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > self.opts.max_depth {
+            return Err(format!(
+                "nesting deeper than max_depth={} at byte {}",
+                self.opts.max_depth, self.i
+            ));
+        }
+        Ok(())
     }
 
     fn value(&mut self) -> Result<Json, String> {
@@ -269,72 +349,141 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'\\') => {
                     self.i += 1;
-                    let esc = self.peek().ok_or("bad escape")?;
-                    self.i += 1;
-                    match esc {
-                        b'"' => out.push('"'),
-                        b'\\' => out.push('\\'),
-                        b'/' => out.push('/'),
-                        b'b' => out.push('\u{8}'),
-                        b'f' => out.push('\u{c}'),
-                        b'n' => out.push('\n'),
-                        b'r' => out.push('\r'),
-                        b't' => out.push('\t'),
-                        b'u' => {
-                            let cp = self.hex4()?;
-                            // Handle surrogate pairs.
-                            if (0xD800..0xDC00).contains(&cp) {
-                                if self.peek() == Some(b'\\') {
-                                    self.i += 1;
-                                    self.expect(b'u')?;
-                                    let lo = self.hex4()?;
-                                    let c = 0x10000
-                                        + ((cp - 0xD800) << 10)
-                                        + (lo - 0xDC00);
-                                    out.push(
-                                        char::from_u32(c)
-                                            .ok_or("bad surrogate")?,
-                                    );
-                                } else {
-                                    return Err("lone surrogate".into());
-                                }
-                            } else {
-                                out.push(
-                                    char::from_u32(cp).ok_or("bad codepoint")?,
-                                );
-                            }
-                        }
-                        c => return Err(format!("bad escape \\{}", c as char)),
-                    }
+                    self.escape(&mut out)?;
                 }
                 Some(_) => {
-                    // Consume one UTF-8 char.
-                    let rest = std::str::from_utf8(&self.b[self.i..])
-                        .map_err(|e| e.to_string())?;
-                    let c = rest.chars().next().unwrap();
-                    out.push(c);
-                    self.i += c.len_utf8();
+                    // Raw span up to the next quote/escape, validated as
+                    // UTF-8 in one pass (not char-by-char: the old code
+                    // re-validated the whole tail per char, O(n^2), and
+                    // choked on invalid bytes anywhere after the span).
+                    let start = self.i;
+                    while self.i < self.b.len()
+                        && self.b[self.i] != b'"'
+                        && self.b[self.i] != b'\\'
+                    {
+                        self.i += 1;
+                    }
+                    let span = &self.b[start..self.i];
+                    match std::str::from_utf8(span) {
+                        Ok(s) => out.push_str(s),
+                        Err(e) => match self.opts.unicode {
+                            UnicodeMode::Strict => {
+                                return Err(format!(
+                                    "invalid UTF-8 in string at byte {}",
+                                    start + e.valid_up_to()
+                                ));
+                            }
+                            UnicodeMode::Replace => {
+                                out.push_str(&String::from_utf8_lossy(span));
+                            }
+                        },
+                    }
                 }
             }
         }
+    }
+
+    /// Decode one escape sequence (cursor already past the backslash).
+    fn escape(&mut self, out: &mut String) -> Result<(), String> {
+        let esc = self
+            .peek()
+            .ok_or_else(|| "truncated escape at end of input".to_string())?;
+        self.i += 1;
+        match esc {
+            b'"' => out.push('"'),
+            b'\\' => out.push('\\'),
+            b'/' => out.push('/'),
+            b'b' => out.push('\u{8}'),
+            b'f' => out.push('\u{c}'),
+            b'n' => out.push('\n'),
+            b'r' => out.push('\r'),
+            b't' => out.push('\t'),
+            b'u' => {
+                let cp = self.hex4()?;
+                if (0xD800..0xDC00).contains(&cp) {
+                    // High surrogate: valid only when the next escape is
+                    // a low surrogate (\uDC00..\uDFFF).
+                    let followed = self.peek() == Some(b'\\')
+                        && self.b.get(self.i + 1) == Some(&b'u');
+                    if followed {
+                        let save = self.i;
+                        self.i += 2;
+                        let lo = self.hex4()?;
+                        if (0xDC00..0xE000).contains(&lo) {
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            out.push(
+                                char::from_u32(c).ok_or("bad surrogate pair")?,
+                            );
+                        } else if self.opts.unicode == UnicodeMode::Replace {
+                            // Unpaired high surrogate: substitute, then
+                            // reprocess the second escape on its own.
+                            out.push('\u{FFFD}');
+                            self.i = save;
+                        } else {
+                            return Err(format!(
+                                "unpaired high surrogate \\u{cp:04x} at byte {}",
+                                self.i
+                            ));
+                        }
+                    } else if self.opts.unicode == UnicodeMode::Replace {
+                        out.push('\u{FFFD}');
+                    } else {
+                        return Err(format!(
+                            "lone surrogate \\u{cp:04x} at byte {}",
+                            self.i
+                        ));
+                    }
+                } else if (0xDC00..0xE000).contains(&cp) {
+                    if self.opts.unicode == UnicodeMode::Replace {
+                        out.push('\u{FFFD}');
+                    } else {
+                        return Err(format!(
+                            "lone low surrogate \\u{cp:04x} at byte {}",
+                            self.i
+                        ));
+                    }
+                } else {
+                    out.push(char::from_u32(cp).ok_or("bad codepoint")?);
+                }
+            }
+            c => return Err(format!("bad escape \\{}", c as char)),
+        }
+        Ok(())
     }
 
     fn hex4(&mut self) -> Result<u32, String> {
         if self.i + 4 > self.b.len() {
             return Err("short \\u escape".into());
         }
-        let s = std::str::from_utf8(&self.b[self.i..self.i + 4])
-            .map_err(|e| e.to_string())?;
+        // Hand-decoded: from_str_radix also accepts a leading '+',
+        // which is not JSON.
+        let mut cp = 0u32;
+        for &d in &self.b[self.i..self.i + 4] {
+            let v = match d {
+                b'0'..=b'9' => d - b'0',
+                b'a'..=b'f' => d - b'a' + 10,
+                b'A'..=b'F' => d - b'A' + 10,
+                _ => {
+                    return Err(format!(
+                        "bad hex digit in \\u escape at byte {}",
+                        self.i
+                    ))
+                }
+            };
+            cp = (cp << 4) | v as u32;
+        }
         self.i += 4;
-        u32::from_str_radix(s, 16).map_err(|e| e.to_string())
+        Ok(cp)
     }
 
     fn array(&mut self) -> Result<Json, String> {
         self.expect(b'[')?;
+        self.descend()?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(out));
         }
         loop {
@@ -346,6 +495,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(out));
                 }
                 other => {
@@ -360,10 +510,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, String> {
         self.expect(b'{')?;
+        self.descend()?;
         let mut out = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(out));
         }
         loop {
@@ -380,6 +532,7 @@ impl<'a> Parser<'a> {
                 }
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(out));
                 }
                 other => {
@@ -396,6 +549,10 @@ impl<'a> Parser<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn replace_opts() -> ParseOptions {
+        ParseOptions { unicode: UnicodeMode::Replace, ..Default::default() }
+    }
 
     #[test]
     fn roundtrip_scalars() {
@@ -446,6 +603,9 @@ mod tests {
     fn unicode_surrogates() {
         let v = Json::parse(r#""😀""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "😀");
+        // Escaped surrogate pair decodes to the same char.
+        let v = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
     }
 
     #[test]
@@ -455,5 +615,91 @@ mod tests {
             ("name", Json::Str("run".into())),
         ]);
         assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn as_usize_rejects_non_indices() {
+        assert_eq!(Json::Num(3.0).as_usize(), Some(3));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(-0.5).as_usize(), None);
+        assert_eq!(Json::Num(1.5).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        assert_eq!(Json::Str("3".into()).as_usize(), None);
+        // Largest exactly-representable integer is still accepted.
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_usize(),
+                   Some(9_007_199_254_740_992));
+    }
+
+    #[test]
+    fn depth_bomb_errors_cleanly() {
+        // 100k opens would previously recurse 100k frames deep; now the
+        // cap fires long before the stack is at risk.
+        let bomb = "[".repeat(100_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.contains("max_depth"), "{err}");
+        // Same for objects.
+        let bomb = r#"{"a":"#.repeat(100_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.contains("max_depth"), "{err}");
+        // Nesting below the cap still parses.
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn custom_depth_cap() {
+        let opts = ParseOptions { max_depth: 3, ..Default::default() };
+        assert!(Json::parse_with(b"[[[1]]]", &opts).is_ok());
+        assert!(Json::parse_with(b"[[[[1]]]]", &opts).is_err());
+    }
+
+    #[test]
+    fn lone_surrogates_strict_vs_replace() {
+        // Lone high surrogate at end of string.
+        assert!(Json::parse(r#""\ud800""#).is_err());
+        let v = Json::parse_with(br#""\ud800""#, &replace_opts()).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{FFFD}");
+        // High surrogate followed by a non-surrogate escape: the old
+        // parser underflowed `lo - 0xDC00` here (debug-build panic).
+        assert!(Json::parse(r#""\ud800A""#).is_err());
+        let v = Json::parse_with(br#""\ud800A""#, &replace_opts()).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{FFFD}A");
+        // High surrogate followed by raw text.
+        assert!(Json::parse(r#""\ud800xy""#).is_err());
+        let v = Json::parse_with(br#""\ud800xy""#, &replace_opts()).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{FFFD}xy");
+        // Lone low surrogate.
+        assert!(Json::parse(r#""\udc00""#).is_err());
+        let v = Json::parse_with(br#""\udc00""#, &replace_opts()).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{FFFD}");
+        // High + high: first replaced, second reprocessed and replaced.
+        let v = Json::parse_with(br#""\ud800\ud800""#, &replace_opts()).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{FFFD}\u{FFFD}");
+        // Replace mode does not relax escape *syntax*.
+        assert!(Json::parse_with(br#""\ud8zz""#, &replace_opts()).is_err());
+        assert!(Json::parse_with(br#""\q""#, &replace_opts()).is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_strict_vs_replace() {
+        assert!(Json::parse_with(b"\"\x80\"", &ParseOptions::default()).is_err());
+        let v = Json::parse_with(b"\"\x80\"", &replace_opts()).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{FFFD}");
+        // Valid multibyte chars still pass through untouched either way.
+        let v = Json::parse_with("\"héllo😀\"".as_bytes(), &replace_opts()).unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo😀");
+        // Invalid bytes outside a string are syntax errors in both modes.
+        assert!(Json::parse_with(b"\xff\xfe", &replace_opts()).is_err());
+    }
+
+    #[test]
+    fn hex_escape_is_strict() {
+        // from_str_radix would accept "+abc"; the wire parser must not.
+        assert!(Json::parse(r#""\u+abc""#).is_err());
+        assert!(Json::parse(r#""\u00g0""#).is_err());
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap().as_str().unwrap(), "A");
     }
 }

@@ -1,0 +1,669 @@
+//! Fault-injection and property suite for the hardened serving edge.
+//!
+//! Three layers of attack, mirroring the jsonmodem-style fuzz
+//! methodology on the decoder and adding live-server fault injection:
+//!
+//! 1. **Decoder properties** (no sockets): random valid JSON frames
+//!    round-trip bitwise through the streaming decoder regardless of
+//!    how the byte stream is chunked; random byte mutations never
+//!    panic and never desynchronise the frame stream; depth bombs and
+//!    oversized frames produce clean typed errors with the reassembly
+//!    buffer provably bounded.
+//! 2. **Malformed-input battery over real TCP**: binary garbage, lone
+//!    surrogates, unterminated strings, nesting past the depth cap,
+//!    frame-cap violations, negative ids — each costs one typed error
+//!    line and the connection/server stays healthy.
+//! 3. **Lifecycle faults**: shutdown completes with idle connections
+//!    attached (the old reader hung forever), the connection cap
+//!    rejects gracefully and recovers, a panicking handler (injected
+//!    via the test-only `fault` op) is isolated even while holding the
+//!    model lock, mid-frame disconnects are harmless, and a
+//!    well-behaved client receives bitwise-identical bytes whether or
+//!    not a storm of garbage clients hammers the server concurrently.
+//!
+//! Property-test iteration counts default low enough for the tier-1
+//! suite and scale up in CI via `WIRE_FUZZ_CASES`.
+
+use grfgp::gp::{Hypers, Modulation};
+use grfgp::graph::generators;
+use grfgp::prop_assert;
+use grfgp::server::wire::{ErrorKind, WireConfig, WireDecoder, WireError};
+use grfgp::server::ServerConfig;
+use grfgp::stream::StreamingFeatures;
+use grfgp::util::json::{Json, UnicodeMode};
+use grfgp::util::proptest::proptest;
+use grfgp::util::rng::Rng;
+use grfgp::walks::WalkConfig;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Property-test case count: low for the tier-1 run, raised in CI.
+fn fuzz_cases(default: usize) -> usize {
+    std::env::var("WIRE_FUZZ_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+// ---------------------------------------------------------------------
+// Random JSON generation (serializer-compatible: finite numbers only,
+// so `parse(to_string(v)) == v` holds bitwise).
+// ---------------------------------------------------------------------
+
+fn random_string(rng: &mut Rng) -> String {
+    let len = rng.below(12);
+    (0..len)
+        .map(|_| match rng.below(10) {
+            0 => '"',
+            1 => '\\',
+            2 => '\n',
+            3 => '\u{1}',
+            4 => '😀',
+            5 => 'é',
+            6 => '\t',
+            _ => (b'a' + rng.below(26) as u8) as char,
+        })
+        .collect()
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bernoulli(0.5)),
+        2 => {
+            // Spread magnitudes across ~12 decades; always finite.
+            let mag = 10f64.powi(rng.below(13) as i32 - 6);
+            Json::Num(rng.normal() * mag)
+        }
+        3 => Json::Str(random_string(rng)),
+        4 => Json::Arr(
+            (0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|_| (random_string(rng), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// Feed `blob` to the decoder in random-sized chunks (1..=7 bytes).
+fn feed_chunked(
+    rng: &mut Rng,
+    dec: &mut WireDecoder,
+    blob: &[u8],
+) -> Vec<Result<Json, WireError>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < blob.len() {
+        let k = 1 + rng.below(7);
+        let end = (i + k).min(blob.len());
+        dec.feed(&blob[i..end], &mut out);
+        i = end;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// 1. Decoder properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn decoder_roundtrips_random_frames_in_random_chunks() {
+    proptest(fuzz_cases(48), |rng| {
+        let n_frames = 1 + rng.below(8);
+        let frames: Vec<Json> =
+            (0..n_frames).map(|_| random_json(rng, 3)).collect();
+        let mut blob = Vec::new();
+        for f in &frames {
+            blob.extend_from_slice(f.to_string().as_bytes());
+            blob.push(b'\n');
+        }
+        let mut dec = WireDecoder::new(WireConfig::default());
+        let out = feed_chunked(rng, &mut dec, &blob);
+        prop_assert!(
+            out.len() == n_frames,
+            "decoded {} of {} frames",
+            out.len(),
+            n_frames
+        );
+        for (got, want) in out.iter().zip(&frames) {
+            match got {
+                Ok(j) => prop_assert!(
+                    j == want,
+                    "frame mismatch: {j:?} vs {want:?}"
+                ),
+                Err(e) => {
+                    return Err(format!(
+                        "valid frame rejected ({}): {}",
+                        e.msg,
+                        want.to_string()
+                    ))
+                }
+            }
+        }
+        prop_assert!(!dec.mid_frame(), "decoder left mid-frame");
+        Ok(())
+    });
+}
+
+#[test]
+fn decoder_survives_random_byte_mutations() {
+    proptest(fuzz_cases(48), |rng| {
+        let mut blob = random_json(rng, 3).to_string().into_bytes();
+        for _ in 0..(1 + rng.below(6)) {
+            let i = rng.below(blob.len());
+            blob[i] = rng.below(256) as u8;
+        }
+        blob.push(b'\n');
+        // A pristine frame after the mutated one: the decoder must
+        // resynchronise on the newline no matter what the mutation did.
+        let follow = random_json(rng, 2);
+        blob.extend_from_slice(follow.to_string().as_bytes());
+        blob.push(b'\n');
+        let cfg = WireConfig {
+            max_frame_bytes: 1 << 16,
+            max_parse_depth: 16,
+            unicode: UnicodeMode::Strict,
+        };
+        let mut dec = WireDecoder::new(cfg);
+        // Must not panic, whatever bytes the mutation produced.
+        let out = feed_chunked(rng, &mut dec, &blob);
+        // The mutated frame may decode, error, split (if a '\n' was
+        // injected), or vanish (mutated to whitespace); the *last*
+        // frame must always be the pristine one, decoded exactly.
+        match out.last() {
+            Some(Ok(j)) => {
+                prop_assert!(j == &follow, "resync lost: {j:?} vs {follow:?}")
+            }
+            Some(Err(e)) => {
+                return Err(format!("pristine follow-up rejected: {}", e.msg))
+            }
+            None => return Err("no frames decoded at all".to_string()),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn decoder_replace_mode_substitutes_lone_surrogates() {
+    let cfg = WireConfig {
+        unicode: UnicodeMode::Replace,
+        ..Default::default()
+    };
+    let mut dec = WireDecoder::new(cfg);
+    let mut out = Vec::new();
+    dec.feed(b"{\"s\":\"\\ud800\"}\n", &mut out);
+    assert_eq!(out.len(), 1);
+    let j = out[0].as_ref().expect("replace mode accepts lone surrogate");
+    assert_eq!(j.get("s").unwrap().as_str().unwrap(), "\u{FFFD}");
+    // The same frame under the strict default is a parse error.
+    let mut strict = WireDecoder::new(WireConfig::default());
+    out.clear();
+    strict.feed(b"{\"s\":\"\\ud800\"}\n", &mut out);
+    assert_eq!(out[0].as_ref().err().unwrap().kind, ErrorKind::Parse);
+}
+
+#[test]
+fn decoder_memory_stays_bounded_under_megabyte_line_bomb() {
+    let cfg = WireConfig { max_frame_bytes: 4096, ..Default::default() };
+    let mut dec = WireDecoder::new(cfg);
+    let mut out = Vec::new();
+    let junk = vec![b'x'; 8 * 1024];
+    for _ in 0..256 {
+        // 2 MiB total without a newline.
+        dec.feed(&junk, &mut out);
+        assert!(
+            dec.buffered() <= 4096,
+            "reassembly buffer exceeded max_frame_bytes"
+        );
+    }
+    assert!(out.is_empty(), "no frame completed yet");
+    dec.feed(b"\n{\"op\":\"stats\"}\n", &mut out);
+    assert_eq!(out.len(), 2);
+    let err = out[0].as_ref().err().expect("bomb must yield one error");
+    assert_eq!(err.kind, ErrorKind::Protocol);
+    assert!(err.msg.contains("max_frame_bytes"), "{}", err.msg);
+    assert!(out[1].is_ok(), "decoder must recover after the bomb");
+}
+
+// ---------------------------------------------------------------------
+// Server harness
+// ---------------------------------------------------------------------
+
+fn start_server_with(
+    n: usize,
+    config: ServerConfig,
+) -> (std::net::SocketAddr, JoinHandle<()>) {
+    let g = generators::ring(n);
+    let cfg = WalkConfig {
+        n_walks: 16,
+        p_halt: 0.1,
+        max_len: 3,
+        threads: 1,
+        ..Default::default()
+    };
+    let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+    let stream = StreamingFeatures::new(g, cfg, hypers.modulation.coeffs(), 0);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        grfgp::server::serve_on_with(stream, hypers, listener, 7, config)
+            .unwrap();
+    });
+    (addr, handle)
+}
+
+/// Fast-polling config so shutdown/idle tests finish quickly.
+fn quick_config() -> ServerConfig {
+    ServerConfig {
+        read_timeout: Duration::from_millis(50),
+        ..Default::default()
+    }
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn call_raw(&mut self, body: &[u8]) -> String {
+        self.stream.write_all(body).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        line
+    }
+
+    fn call(&mut self, body: &str) -> Json {
+        let line = self.call_raw(body.as_bytes());
+        Json::parse(&line).expect("server must return valid JSON")
+    }
+
+    fn call_bytes(&mut self, body: &[u8]) -> Json {
+        let line = self.call_raw(body);
+        Json::parse(&line).expect("server must return valid JSON")
+    }
+}
+
+fn assert_kind(resp: &Json, kind: &str) {
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp:?}");
+    assert_eq!(
+        resp.get("error_kind").unwrap().as_str(),
+        Some(kind),
+        "{resp:?}"
+    );
+}
+
+fn assert_ok(resp: &Json) {
+    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp:?}");
+}
+
+/// Join the server thread with a deadline — a hang here is exactly the
+/// regression these tests exist to catch.
+fn join_within(handle: JoinHandle<()>, within: Duration, what: &str) {
+    let deadline = Instant::now() + within;
+    while !handle.is_finished() {
+        assert!(Instant::now() < deadline, "server did not exit: {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    handle.join().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// 2. Malformed-input battery over real TCP
+// ---------------------------------------------------------------------
+
+#[test]
+fn malformed_battery_yields_typed_errors_and_connection_stays_healthy() {
+    let config = ServerConfig {
+        wire: WireConfig {
+            max_frame_bytes: 4096,
+            max_parse_depth: 16,
+            unicode: UnicodeMode::Strict,
+        },
+        ..quick_config()
+    };
+    let (addr, handle) = start_server_with(64, config);
+    let mut c = Client::connect(addr);
+
+    // Binary garbage.
+    let r = c.call_bytes(&[0xFF, 0xFE, 0x00, 0x80, b'{']);
+    assert_kind(&r, "parse");
+    // Lone surrogate (strict default).
+    let r = c.call(r#"{"bad":"\ud800"}"#);
+    assert_kind(&r, "parse");
+    // Unterminated string.
+    let r = c.call(r#"{"op":"sta"#);
+    assert_kind(&r, "parse");
+    // Nesting past the depth cap.
+    let bomb = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+    let r = c.call(&bomb);
+    assert_kind(&r, "parse");
+    assert!(
+        r.get("error").unwrap().as_str().unwrap().contains("max_depth"),
+        "{r:?}"
+    );
+    // Line exceeding the frame cap (~12 KB against a 4 KiB cap).
+    let big = format!(
+        r#"{{"op":"predict","nodes":[{}]}}"#,
+        vec!["1"; 6000].join(",")
+    );
+    let r = c.call(&big);
+    assert_kind(&r, "protocol");
+    assert!(
+        r.get("error").unwrap().as_str().unwrap().contains("max_frame_bytes"),
+        "{r:?}"
+    );
+    // Valid JSON, unknown op.
+    let r = c.call(r#"{"op":"frobnicate"}"#);
+    assert_kind(&r, "protocol");
+    // Negative node id: must be a typed error, not a write to node 0
+    // (the old `as usize` cast saturated -1 to 0).
+    let r = c.call(r#"{"op":"observe","node":-1,"y":0.5}"#);
+    assert_kind(&r, "protocol");
+    let r = c.call(r#"{"op":"predict","nodes":[-3]}"#);
+    assert_kind(&r, "protocol");
+    // Fault injection is off by default: the op is refused, not run.
+    let r = c.call(r#"{"op":"fault","mode":"panic"}"#);
+    assert_kind(&r, "protocol");
+
+    // Same connection still serves real traffic afterwards.
+    let p = c.call(r#"{"op":"predict","nodes":[0,1],"samples":4}"#);
+    assert_ok(&p);
+    assert_eq!(p.get("mean").unwrap().as_arr().unwrap().len(), 2);
+    let s = c.call(r#"{"op":"stats"}"#);
+    assert_ok(&s);
+    // The rejected negative-node observe must not have landed anywhere.
+    assert_eq!(s.get("n_obs").unwrap().as_usize(), Some(0), "{s:?}");
+
+    assert_ok(&c.call(r#"{"op":"shutdown"}"#));
+    join_within(handle, Duration::from_secs(20), "after malformed battery");
+}
+
+#[test]
+fn frames_assembled_from_byte_sized_reads() {
+    let (addr, handle) = start_server_with(64, quick_config());
+    let mut c = Client::connect(addr);
+    // Trickle a request one byte at a time: chunk boundaries must be
+    // invisible to the protocol.
+    let body = br#"{"op":"predict","nodes":[0,1],"samples":4}"#;
+    for &byte in body.iter() {
+        c.stream.write_all(&[byte]).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    c.stream.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    c.reader.read_line(&mut line).unwrap();
+    let p = Json::parse(&line).unwrap();
+    assert_ok(&p);
+    assert_eq!(p.get("mean").unwrap().as_arr().unwrap().len(), 2);
+    assert_ok(&c.call(r#"{"op":"shutdown"}"#));
+    join_within(handle, Duration::from_secs(20), "after byte-sized reads");
+}
+
+#[test]
+fn mid_frame_disconnects_leave_server_healthy() {
+    let (addr, handle) = start_server_with(64, quick_config());
+    // Several clients die mid-frame (no newline ever sent).
+    for k in 0..4 {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let partial = format!(r#"{{"op":"predict","nodes":[{k},"#);
+        s.write_all(partial.as_bytes()).unwrap();
+        drop(s);
+    }
+    // And one dies mid-frame with garbage.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&[0x00, 0xFF, b'{', b'[']).unwrap();
+    drop(s);
+
+    let mut c = Client::connect(addr);
+    for i in 0..3 {
+        let r = c.call(&format!(
+            r#"{{"op":"observe","node":{},"y":{}}}"#,
+            i * 7,
+            i as f64 * 0.25
+        ));
+        assert_ok(&r);
+    }
+    let p = c.call(r#"{"op":"predict","nodes":[0,7,14],"samples":4}"#);
+    assert_ok(&p);
+    assert_ok(&c.call(r#"{"op":"shutdown"}"#));
+    // Joining proves the half-dead connections' threads exited too.
+    join_within(handle, Duration::from_secs(20), "after mid-frame disconnects");
+}
+
+// ---------------------------------------------------------------------
+// 3. Lifecycle faults
+// ---------------------------------------------------------------------
+
+#[test]
+fn shutdown_completes_with_idle_connection_attached() {
+    let (addr, handle) = start_server_with(64, quick_config());
+    // An idle client that never sends a byte — the old reader blocked
+    // in `lines()` forever here and `thread::scope` never joined.
+    let idle = TcpStream::connect(addr).unwrap();
+    let mut c = Client::connect(addr);
+    let bye = c.call(r#"{"op":"shutdown"}"#);
+    assert_ok(&bye);
+    join_within(
+        handle,
+        Duration::from_secs(20),
+        "shutdown must complete with an idle client attached",
+    );
+    drop(idle);
+}
+
+/// Outcome of connecting while the server may be at capacity.
+enum Probe {
+    /// Got the unsolicited busy line.
+    Rejected(Json),
+    /// Accepted (no busy line within the probe window).
+    Accepted(Client),
+}
+
+/// Connect and wait briefly for an unsolicited reply: a capped server
+/// sends its `overload` line immediately; an accepted connection sends
+/// nothing until asked. (The probe never writes first — writing into a
+/// just-rejected socket can turn the pending busy line into a reset.)
+fn probe(addr: std::net::SocketAddr) -> Probe {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(300)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => panic!("server closed a probe without any reply line"),
+        Ok(_) => Probe::Rejected(Json::parse(&line).unwrap()),
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            stream.set_read_timeout(None).unwrap();
+            Probe::Accepted(Client { stream, reader })
+        }
+        Err(e) => panic!("probe read failed: {e}"),
+    }
+}
+
+#[test]
+fn connection_cap_rejects_gracefully_and_recovers() {
+    let config = ServerConfig { max_connections: 2, ..quick_config() };
+    let (addr, handle) = start_server_with(64, config);
+    let mut a = Client::connect(addr);
+    let mut b = Client::connect(addr);
+    // A served round-trip pins both connections as accepted before the
+    // third connect.
+    assert_ok(&a.call(r#"{"op":"stats"}"#));
+    assert_ok(&b.call(r#"{"op":"stats"}"#));
+
+    // Third connection: one graceful busy line, classified overload.
+    match probe(addr) {
+        Probe::Rejected(r) => {
+            assert_kind(&r, "overload");
+            assert!(
+                r.get("error").unwrap().as_str().unwrap().contains("busy"),
+                "{r:?}"
+            );
+        }
+        Probe::Accepted(_) => panic!("third connection must be rejected"),
+    }
+
+    // Dropping a client frees its slot (within a read-timeout tick).
+    drop(a);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut admitted = loop {
+        match probe(addr) {
+            Probe::Accepted(c) => break c,
+            Probe::Rejected(r) => {
+                assert_kind(&r, "overload");
+                assert!(
+                    Instant::now() < deadline,
+                    "slot never reclaimed after disconnect"
+                );
+                std::thread::sleep(Duration::from_millis(30));
+            }
+        }
+    };
+    assert_ok(&admitted.call(r#"{"op":"stats"}"#));
+    assert_ok(&admitted.call(r#"{"op":"shutdown"}"#));
+    join_within(handle, Duration::from_secs(20), "after connection-cap test");
+}
+
+#[test]
+fn panicking_handler_is_isolated_and_lock_poison_recovered() {
+    let config = ServerConfig { fault_injection: true, ..quick_config() };
+    let (addr, handle) = start_server_with(64, config);
+    let mut a = Client::connect(addr);
+
+    // Plain handler panic: internal error on this connection, which
+    // then keeps working.
+    let r = a.call(r#"{"op":"fault","mode":"panic"}"#);
+    assert_kind(&r, "internal");
+    assert!(
+        r.get("error").unwrap().as_str().unwrap().contains("injected fault"),
+        "{r:?}"
+    );
+    assert_ok(&a.call(r#"{"op":"stats"}"#));
+
+    // Panic while holding the model lock: the mutex is poisoned
+    // mid-handler; lock recovery must keep every other path serving.
+    let r = a.call(r#"{"op":"fault","mode":"panic_locked"}"#);
+    assert_kind(&r, "internal");
+    let mut b = Client::connect(addr);
+    assert_ok(&b.call(r#"{"op":"observe","node":3,"y":0.5}"#));
+    let p = b.call(r#"{"op":"predict","nodes":[0,3],"samples":4}"#);
+    assert_ok(&p);
+    assert_eq!(p.get("mean").unwrap().as_arr().unwrap().len(), 2);
+    // Repeat on the original (panicking) connection too.
+    assert_ok(&a.call(r#"{"op":"stats"}"#));
+
+    assert_ok(&b.call(r#"{"op":"shutdown"}"#));
+    join_within(handle, Duration::from_secs(20), "after handler panics");
+}
+
+// ---------------------------------------------------------------------
+// Bitwise isolation: a well-behaved client vs a fault storm
+// ---------------------------------------------------------------------
+
+/// One fixed request script; returns the raw reply lines byte-for-byte.
+fn well_behaved_session(addr: std::net::SocketAddr) -> Vec<String> {
+    let mut c = Client::connect(addr);
+    let mut lines = Vec::new();
+    for i in 0..5usize {
+        lines.push(c.call_raw(
+            format!(
+                r#"{{"op":"observe","node":{},"y":{}}}"#,
+                i * 10,
+                (i as f64 * 0.7).sin()
+            )
+            .as_bytes(),
+        ));
+    }
+    lines.push(
+        c.call_raw(br#"{"op":"predict","nodes":[0,25,49],"samples":4}"#),
+    );
+    lines.push(c.call_raw(br#"{"op":"predict","nodes":[7,13],"samples":8}"#));
+    lines
+}
+
+#[test]
+fn predictions_bitwise_identical_under_fault_storm() {
+    let config = ServerConfig {
+        wire: WireConfig {
+            max_frame_bytes: 2048,
+            max_parse_depth: 16,
+            unicode: UnicodeMode::Strict,
+        },
+        ..quick_config()
+    };
+
+    // Reference run: no faults anywhere.
+    let (addr, handle) = start_server_with(64, config.clone());
+    let clean = well_behaved_session(addr);
+    assert_ok(&Client::connect(addr).call(r#"{"op":"shutdown"}"#));
+    join_within(handle, Duration::from_secs(20), "reference run");
+
+    // Storm run: same server parameters, same seed, plus three chaos
+    // clients hammering garbage, oversize frames, and mid-frame
+    // disconnects for the whole session.
+    let (addr, handle) = start_server_with(64, config);
+    let stop = Arc::new(AtomicBool::new(false));
+    let chaos: Vec<_> = (0..3)
+        .map(|k| {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + k);
+                while !stop.load(Ordering::Relaxed) {
+                    let Ok(mut s) = TcpStream::connect(addr) else {
+                        continue;
+                    };
+                    match rng.below(3) {
+                        0 => {
+                            // Binary garbage frame; replies ignored.
+                            let _ = s.write_all(b"\xff\x00garbage{{{[\n");
+                        }
+                        1 => {
+                            // Frame-cap bomb (4 KiB against a 2 KiB cap).
+                            let junk = vec![b'['; 4096];
+                            let _ = s.write_all(&junk);
+                            let _ = s.write_all(b"\n");
+                        }
+                        _ => {
+                            // Mid-frame disconnect.
+                            let _ = s.write_all(br#"{"op":"predict","nodes":[0"#);
+                        }
+                    }
+                    drop(s);
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            })
+        })
+        .collect();
+    // Let the storm actually rage before (and during) the session.
+    std::thread::sleep(Duration::from_millis(50));
+    let stormy = well_behaved_session(addr);
+    stop.store(true, Ordering::Relaxed);
+    for h in chaos {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        clean, stormy,
+        "well-behaved client's bytes diverged under the fault storm"
+    );
+    assert_ok(&Client::connect(addr).call(r#"{"op":"shutdown"}"#));
+    join_within(handle, Duration::from_secs(20), "storm run");
+}
