@@ -53,6 +53,12 @@
 //! a batch of well-formed predict frames vs a hostile mix of binary
 //! junk and frame-cap bombs; `n` carries the frame count and
 //! `ns_per_op` is the whole-batch decode time.
+//!
+//! PR 7 additions: `server_predict_throughput` (per-request wall time,
+//! 4 concurrent predict clients against a live TCP server) and
+//! `server_mixed_p99` (p99 predict latency under a concurrent
+//! edge-toggling writer) — the end-to-end rows for the snapshot-based
+//! wait-free read path; both run in the quick CI profile.
 
 use grfgp::bo::{run_policy, BoConfig, ThompsonPolicy};
 use grfgp::gp::{GpModel, Hypers, Modulation};
@@ -661,6 +667,152 @@ fn main() {
             out.len()
         });
         rows.push(BenchRow::new("wire_decode_garbage", n_junk, 1, r.mean_s));
+    }
+
+    // --- Serving path: wait-free predict reads ------------------------
+    // End-to-end rows over a real TCP server (accept loop, wire
+    // decoder, batcher, snapshot reads):
+    // * `server_predict_throughput` — per-request wall time with 4
+    //   concurrent predict clients hammering the published snapshot
+    //   (`b` = client count, whole-run time / total requests);
+    // * `server_mixed_p99` — p99 predict latency while a writer
+    //   connection toggles an edge in a loop, i.e. reads racing the
+    //   write path's publish cycle. Before the snapshot split, every
+    //   one of these predicts queued behind the model mutex.
+    {
+        fn srv_call(
+            s: &mut std::net::TcpStream,
+            r: &mut std::io::BufReader<std::net::TcpStream>,
+            body: &str,
+        ) -> String {
+            use std::io::{BufRead, Write};
+            s.write_all(body.as_bytes()).unwrap();
+            s.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert!(line.contains("\"ok\":true"), "server error: {line}");
+            line
+        }
+        fn srv_connect(
+            addr: std::net::SocketAddr,
+        ) -> (std::net::TcpStream, std::io::BufReader<std::net::TcpStream>) {
+            let s = std::net::TcpStream::connect(addr).unwrap();
+            let r = std::io::BufReader::new(s.try_clone().unwrap());
+            (s, r)
+        }
+        let ns = if quick { 2048 } else { 8192 };
+        let g = generators::ring(ns);
+        let wcfg = WalkConfig {
+            n_walks: 32,
+            p_halt: 0.1,
+            max_len: 3,
+            threads: 1,
+            ..Default::default()
+        };
+        let hy = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+        let stream =
+            StreamingFeatures::new(g, wcfg, hy.modulation.coeffs(), 0);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv = std::thread::spawn(move || {
+            grfgp::server::serve_on(stream, hy, listener, 7).unwrap();
+        });
+        let (mut s0, mut r0) = srv_connect(addr);
+        for i in 0..16 {
+            srv_call(
+                &mut s0,
+                &mut r0,
+                &format!(
+                    "{{\"op\":\"observe\",\"node\":{},\"y\":{}}}",
+                    i * 37 % ns,
+                    (i as f64 * 0.3).sin()
+                ),
+            );
+        }
+
+        let clients = 4usize;
+        let per_client = if quick { 64 } else { 256 };
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|k| {
+                std::thread::spawn(move || {
+                    let (mut s, mut r) = srv_connect(addr);
+                    for j in 0..per_client {
+                        let a = (k * 31 + j * 7) % 2048;
+                        srv_call(
+                            &mut s,
+                            &mut r,
+                            &format!(
+                                "{{\"op\":\"predict\",\"nodes\":[{},{}],\
+                                 \"samples\":4}}",
+                                a,
+                                (a + 97) % 2048
+                            ),
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = (clients * per_client) as f64;
+        let per_req = t0.elapsed().as_secs_f64() / total;
+        println!(
+            "server_predict_throughput/n={ns}/C={clients}: {:.3} ms/req \
+             ({:.0} req/s)",
+            1e3 * per_req,
+            1.0 / per_req
+        );
+        rows.push(BenchRow::new("server_predict_throughput", ns, clients, per_req));
+
+        let stop = std::sync::Arc::new(
+            std::sync::atomic::AtomicBool::new(false),
+        );
+        let stop_w = stop.clone();
+        let writer = std::thread::spawn(move || {
+            let (mut s, mut r) = srv_connect(addr);
+            let mut flip = 0usize;
+            while !stop_w.load(std::sync::atomic::Ordering::SeqCst) {
+                let body = if flip % 2 == 0 {
+                    "{\"op\":\"add_edge\",\"u\":13,\"v\":1037,\"w\":0.5}"
+                } else {
+                    "{\"op\":\"remove_edge\",\"u\":13,\"v\":1037}"
+                };
+                srv_call(&mut s, &mut r, body);
+                flip += 1;
+            }
+            flip
+        });
+        let m = if quick { 200 } else { 500 };
+        let mut lats = Vec::with_capacity(m);
+        let (mut s1, mut r1) = srv_connect(addr);
+        for j in 0..m {
+            let a = (j * 13) % 2048;
+            let t = std::time::Instant::now();
+            srv_call(
+                &mut s1,
+                &mut r1,
+                &format!(
+                    "{{\"op\":\"predict\",\"nodes\":[{a}],\"samples\":4}}"
+                ),
+            );
+            lats.push(t.elapsed().as_secs_f64());
+        }
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        let deltas = writer.join().unwrap();
+        lats.sort_by(f64::total_cmp);
+        let p99 = lats[(m * 99 / 100).min(m - 1)];
+        println!(
+            "server_mixed_p99/n={ns}: {:.3} ms (median {:.3} ms, {} deltas \
+             applied concurrently)",
+            1e3 * p99,
+            1e3 * lats[m / 2],
+            deltas
+        );
+        rows.push(BenchRow::new("server_mixed_p99", ns, 1, p99));
+        srv_call(&mut s0, &mut r0, "{\"op\":\"shutdown\"}");
+        srv.join().unwrap();
     }
 
     // Machine-readable record for cross-PR perf tracking.

@@ -9,5 +9,7 @@ pub mod modulation;
 pub mod woodbury;
 
 pub use exact::{ExactGp, ExactKernel};
-pub use model::{DeltaOutcome, GpModel, SolveConfig, TrainStep};
+pub use model::{
+    DeltaOutcome, GpModel, ModelReadView, SolveConfig, SolveScratch, TrainStep,
+};
 pub use modulation::{Hypers, Modulation};

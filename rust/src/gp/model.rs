@@ -53,6 +53,7 @@ use crate::stream::{GraphDelta, StreamingFeatures};
 use crate::util::parallel::num_threads;
 use crate::util::rng::Rng;
 use crate::walks::{CombinedFeatures, WalkComponents};
+use std::sync::{Arc, Mutex, PoisonError};
 
 /// Solver settings shared by training and inference.
 #[derive(Clone, Debug)]
@@ -163,10 +164,7 @@ pub struct GpModel {
     phi_t: RowOverlay,
     /// Scratch buffers for the masked gram operator — the CG hot path
     /// must not allocate per iteration (EXPERIMENTS.md §Perf).
-    scratch: std::cell::RefCell<(Vec<f64>, Vec<f64>, Vec<f64>)>,
-    /// Block-sized scratch (masked input, Φᵀ-space mid) for the blocked
-    /// operator; lazily grown to the widest block seen.
-    scratch_blk: std::cell::RefCell<(Vec<f64>, Vec<f64>)>,
+    scratch: std::cell::RefCell<SolveScratch>,
     /// Cached Jacobi diagonal of H (None = stale). Invalidated when Φ,
     /// the mask, or σ² change (`refresh_features` / `set_data`), so the
     /// many solves between hyperparameter updates (posterior mean,
@@ -190,8 +188,367 @@ pub struct GpModel {
     phi_f: Vec<f64>,
 }
 
-/// (policy it was built under, Φ operand, Φᵀ operand).
-type EllSelection = (FeatureLayout, Option<Ell>, Option<Ell>);
+/// (policy it was built under, Φ operand, Φᵀ operand). The operands
+/// are `Arc`-shared so a published [`ModelReadView`] reuses them
+/// without re-packing or copying.
+type EllSelection = (FeatureLayout, Option<Arc<Ell>>, Option<Arc<Ell>>);
+
+/// Reusable buffers for the masked gram operator — the CG hot path
+/// must not allocate per iteration. One instance serves both the
+/// single-vector ([`SolveCore::apply_h`]) and the blocked
+/// ([`SolveCore::apply_h_block`]) operator.
+pub struct SolveScratch {
+    mx: Vec<f64>,
+    mid: Vec<f64>,
+    prod: Vec<f64>,
+    blk_x: Vec<f64>,
+    blk_mid: Vec<f64>,
+}
+
+impl SolveScratch {
+    pub fn new(n: usize) -> SolveScratch {
+        SolveScratch {
+            mx: vec![0.0; n],
+            mid: vec![0.0; n],
+            prod: vec![0.0; n],
+            blk_x: Vec::new(),
+            blk_mid: Vec::new(),
+        }
+    }
+
+    /// Grow the single-vector buffers after node insertion.
+    fn grow(&mut self, n: usize) {
+        self.mx.resize(n, 0.0);
+        self.mid.resize(n, 0.0);
+        self.prod.resize(n, 0.0);
+    }
+}
+
+/// Borrowed bundle of everything the solve/predict math reads, plus
+/// the math itself. This is the **single implementation** behind both
+/// [`GpModel`] (live, mutable, `RefCell` caches) and
+/// [`ModelReadView`] (owned, immutable, `Send + Sync` snapshot) — the
+/// two entry points are bitwise-identical by construction because
+/// they execute literally the same code over the same operand kinds.
+pub struct SolveCore<'a> {
+    pub phi: &'a RowOverlay,
+    pub phi_t: &'a RowOverlay,
+    pub phi_ell: Option<&'a Ell>,
+    pub phi_t_ell: Option<&'a Ell>,
+    pub mask: &'a [f64],
+    pub y: &'a [f64],
+    pub sigma2: f64,
+    pub tol: f64,
+    pub max_iters: usize,
+    pub threads: usize,
+    pub jacobi: Option<&'a [f64]>,
+}
+
+impl<'a> SolveCore<'a> {
+    fn n(&self) -> usize {
+        self.mask.len()
+    }
+
+    /// y = m Φ Φᵀ m x + σ² x (see [`GpModel`] module docs).
+    fn apply_h(&self, scratch: &mut SolveScratch, x: &[f64], out: &mut [f64]) {
+        let n = self.n();
+        let k = self.phi.n_cols();
+        let par = self.threads > 1 && n > 4096;
+        scratch.mx.resize(n, 0.0);
+        scratch.mid.resize(k, 0.0);
+        scratch.prod.resize(n, 0.0);
+        for i in 0..n {
+            scratch.mx[i] = self.mask[i] * x[i];
+        }
+        self.phi_t
+            .spmv(self.phi_t_ell, &scratch.mx, &mut scratch.mid, self.threads, par);
+        self.phi
+            .spmv(self.phi_ell, &scratch.mid, &mut scratch.prod, self.threads, par);
+        for i in 0..n {
+            out[i] = self.mask[i] * scratch.prod[i] + self.sigma2 * x[i];
+        }
+    }
+
+    /// Blocked operator: `Y = m Φ Φᵀ m X + σ² X` over a row-major
+    /// `n × ncols` block — two SpMMs serve all `ncols` vectors.
+    fn apply_h_block(
+        &self,
+        scratch: &mut SolveScratch,
+        x: &[f64],
+        ncols: usize,
+        out: &mut [f64],
+    ) {
+        let n = self.n();
+        let k = self.phi.n_cols();
+        let par = self.threads > 1 && n > 4096;
+        debug_assert_eq!(x.len(), n * ncols);
+        debug_assert_eq!(out.len(), n * ncols);
+        scratch.blk_x.resize(n * ncols, 0.0);
+        scratch.blk_mid.resize(k * ncols, 0.0);
+        for i in 0..n {
+            let m = self.mask[i];
+            let base = i * ncols;
+            for j in 0..ncols {
+                scratch.blk_x[base + j] = m * x[base + j];
+            }
+        }
+        self.phi_t.spmm(
+            self.phi_t_ell,
+            &scratch.blk_x,
+            ncols,
+            &mut scratch.blk_mid,
+            self.threads,
+            par,
+        );
+        self.phi
+            .spmm(self.phi_ell, &scratch.blk_mid, ncols, out, self.threads, par);
+        for i in 0..n {
+            let m = self.mask[i];
+            let base = i * ncols;
+            for j in 0..ncols {
+                out[base + j] = m * out[base + j] + self.sigma2 * x[base + j];
+            }
+        }
+    }
+
+    /// Solve (m K m + σ² I) v = b by (optionally preconditioned) CG.
+    pub fn solve_system(
+        &self,
+        scratch: &mut SolveScratch,
+        b: &[f64],
+    ) -> (Vec<f64>, CgStats) {
+        pcg_solve(
+            |x, out| self.apply_h(scratch, x, out),
+            b,
+            None,
+            self.jacobi,
+            self.tol,
+            self.max_iters,
+        )
+    }
+
+    /// Block solve with optional warm start (row-major `n × ncols`).
+    pub fn solve_system_block_warm(
+        &self,
+        scratch: &mut SolveScratch,
+        b: &[f64],
+        ncols: usize,
+        x0: Option<&[f64]>,
+    ) -> (Vec<f64>, Vec<CgStats>) {
+        block_cg_solve(
+            |x, out| self.apply_h_block(scratch, x, ncols, out),
+            b,
+            ncols,
+            x0,
+            self.jacobi,
+            self.tol,
+            self.max_iters,
+        )
+    }
+
+    /// Kernel product y = Φ (Φᵀ x) (no mask/noise).
+    pub fn apply_kernel(&self, x: &[f64]) -> Vec<f64> {
+        if self.threads > 1 && self.n() > 4096 {
+            let mid = self.phi_t.matvec_par(x, self.threads);
+            self.phi.matvec_par(&mid, self.threads)
+        } else {
+            self.phi.matvec(&self.phi_t.matvec(x))
+        }
+    }
+
+    /// Posterior mean at every node: K (m α) with α = H⁻¹ (m y).
+    pub fn posterior_mean(&self, scratch: &mut SolveScratch) -> (Vec<f64>, CgStats) {
+        let rhs: Vec<f64> = self
+            .mask
+            .iter()
+            .zip(self.y.iter())
+            .map(|(m, y)| m * y)
+            .collect();
+        let (alpha, st) = self.solve_system(scratch, &rhs);
+        let malpha: Vec<f64> = self
+            .mask
+            .iter()
+            .zip(&alpha)
+            .map(|(m, a)| m * a)
+            .collect();
+        (self.apply_kernel(&malpha), st)
+    }
+
+    /// `n_samples` pathwise-conditioning draws through one blocked
+    /// solve. Randomness is drawn per sample in the same order as the
+    /// historic serial loop (`w_j`, then sample `j`'s per-node noise).
+    pub fn posterior_samples(
+        &self,
+        scratch: &mut SolveScratch,
+        n_samples: usize,
+        rng: &mut Rng,
+    ) -> Vec<Vec<f64>> {
+        if n_samples == 0 {
+            return Vec::new();
+        }
+        let n = self.n();
+        let b = n_samples;
+        let k = self.phi.n_cols();
+        let par = self.threads > 1 && n > 4096;
+        let sigma = self.sigma2.sqrt();
+
+        let mut w = vec![0.0; k * b];
+        let mut eps = vec![0.0; n * b];
+        for j in 0..b {
+            for i in 0..k {
+                w[i * b + j] = rng.normal();
+            }
+            for i in 0..n {
+                eps[i * b + j] = rng.normal();
+            }
+        }
+        // Prior draws g = Φ W over the whole block.
+        let g = if par {
+            self.phi.matmat_par(&w, b, self.threads)
+        } else {
+            self.phi.matmat(&w, b)
+        };
+        // Masked residual block m (y − g − σ ε).
+        let mut rhs = vec![0.0; n * b];
+        for i in 0..n {
+            let m = self.mask[i];
+            let base = i * b;
+            for j in 0..b {
+                rhs[base + j] = m * (self.y[i] - g[base + j] - sigma * eps[base + j]);
+            }
+        }
+        let (alpha, _) = self.solve_system_block_warm(scratch, &rhs, b, None);
+        // Kernel correction K (m α) for all samples: two more SpMMs.
+        let mut malpha = alpha;
+        for i in 0..n {
+            let m = self.mask[i];
+            let base = i * b;
+            for j in 0..b {
+                malpha[base + j] *= m;
+            }
+        }
+        let mid = if par {
+            self.phi_t.matmat_par(&malpha, b, self.threads)
+        } else {
+            self.phi_t.matmat(&malpha, b)
+        };
+        let corr = if par {
+            self.phi.matmat_par(&mid, b, self.threads)
+        } else {
+            self.phi.matmat(&mid, b)
+        };
+        (0..b)
+            .map(|j| (0..n).map(|i| g[i * b + j] + corr[i * b + j]).collect())
+            .collect()
+    }
+
+    /// Predictive mean + variance given an already-computed posterior
+    /// mean (the mean solve is rng-free, so callers may cache it).
+    pub fn predict_with_mean(
+        &self,
+        scratch: &mut SolveScratch,
+        mean: &[f64],
+        n_samples: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let n = self.n();
+        let mut m2 = vec![0.0; n];
+        for s in self.posterior_samples(scratch, n_samples, rng) {
+            for i in 0..n {
+                let d = s[i] - mean[i];
+                m2[i] += d * d;
+            }
+        }
+        let var: Vec<f64> = m2
+            .iter()
+            .map(|v| v / n_samples.max(1) as f64 + self.sigma2)
+            .collect();
+        (mean.to_vec(), var)
+    }
+}
+
+/// An immutable, owned snapshot of everything the inference path
+/// reads: Φ/Φᵀ overlay views (`Arc`-shared compacted bases, so the
+/// clone is O(overlay rows)), the packed ELL operands, mask, targets,
+/// hyperparameters, solver settings, and the Jacobi diagonal. It is
+/// `Send + Sync` (no interior mutability beyond a `Mutex`-guarded
+/// lazy mean), so server read paths can run predictions concurrently
+/// **without the model lock** — and because it drives the same
+/// [`SolveCore`] the live model does, its answers are bitwise
+/// identical to [`GpModel::predict`] on the same state and rng.
+pub struct ModelReadView {
+    phi: RowOverlay,
+    phi_t: RowOverlay,
+    phi_ell: Option<Arc<Ell>>,
+    phi_t_ell: Option<Arc<Ell>>,
+    mask: Vec<f64>,
+    y: Vec<f64>,
+    sigma2: f64,
+    tol: f64,
+    max_iters: usize,
+    threads: usize,
+    jacobi: Option<Vec<f64>>,
+    /// Lazily computed posterior mean, shared across requests: the
+    /// cold mean solve is deterministic and rng-free, so caching it
+    /// cannot perturb any bitwise contract.
+    mean_cache: Mutex<Option<Arc<Vec<f64>>>>,
+}
+
+impl ModelReadView {
+    pub fn n(&self) -> usize {
+        self.mask.len()
+    }
+
+    pub fn sigma2(&self) -> f64 {
+        self.sigma2
+    }
+
+    fn core(&self) -> SolveCore<'_> {
+        SolveCore {
+            phi: &self.phi,
+            phi_t: &self.phi_t,
+            phi_ell: self.phi_ell.as_deref(),
+            phi_t_ell: self.phi_t_ell.as_deref(),
+            mask: &self.mask,
+            y: &self.y,
+            sigma2: self.sigma2,
+            tol: self.tol,
+            max_iters: self.max_iters,
+            threads: self.threads,
+            jacobi: self.jacobi.as_deref(),
+        }
+    }
+
+    /// Posterior mean over all nodes, computed once per view and
+    /// shared by every subsequent prediction off this snapshot.
+    pub fn posterior_mean(&self) -> Arc<Vec<f64>> {
+        let mut cache = self
+            .mean_cache
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        if cache.is_none() {
+            let mut scratch = SolveScratch::new(self.n());
+            let (mean, _) = self.core().posterior_mean(&mut scratch);
+            *cache = Some(Arc::new(mean));
+        }
+        cache.as_ref().expect("filled above").clone()
+    }
+
+    /// Predictive mean + variance at every node — bitwise what
+    /// [`GpModel::predict`] returns on the same state and rng stream.
+    pub fn predict(&self, n_samples: usize, rng: &mut Rng) -> (Vec<f64>, Vec<f64>) {
+        let mean = self.posterior_mean();
+        let mut scratch = SolveScratch::new(self.n());
+        self.core()
+            .predict_with_mean(&mut scratch, &mean, n_samples, rng)
+    }
+
+    /// `n_samples` pathwise posterior draws off the snapshot.
+    pub fn posterior_samples(&self, n_samples: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+        let mut scratch = SolveScratch::new(self.n());
+        self.core().posterior_samples(&mut scratch, n_samples, rng)
+    }
+}
 
 impl GpModel {
     /// Build from walk components. `train_nodes` and `train_y` define
@@ -235,12 +592,7 @@ impl GpModel {
             c_t: std::cell::RefCell::new(Some(c_t)),
             phi,
             phi_t,
-            scratch: std::cell::RefCell::new((
-                vec![0.0; n],
-                vec![0.0; n],
-                vec![0.0; n],
-            )),
-            scratch_blk: std::cell::RefCell::new((Vec::new(), Vec::new())),
+            scratch: std::cell::RefCell::new(SolveScratch::new(n)),
             jacobi_cache: std::cell::RefCell::new(None),
             ell_cache: std::cell::RefCell::new(None),
             phi_transposes: std::cell::Cell::new(1),
@@ -323,8 +675,8 @@ impl GpModel {
                 let layout = self.solve.layout;
                 *cache = Some((
                     layout,
-                    self.phi.select_ell(layout),
-                    self.phi_t.select_ell(layout),
+                    self.phi.select_ell(layout).map(Arc::new),
+                    self.phi_t.select_ell(layout).map(Arc::new),
                 ));
             }
         }
@@ -434,10 +786,7 @@ impl GpModel {
             // operator scratch (new nodes start unobserved).
             self.mask.resize(n, 0.0);
             self.y.resize(n, 0.0);
-            let mut guard = self.scratch.borrow_mut();
-            guard.0.resize(n, 0.0);
-            guard.1.resize(n, 0.0);
-            guard.2.resize(n, 0.0);
+            self.scratch.borrow_mut().grow(n);
         }
         // The modulation-gradient operands C_lᵀ are only read by
         // `lml_grad`; invalidate them here and rebuild lazily so the
@@ -520,69 +869,57 @@ impl GpModel {
     }
 
     // ------------------------------------------------------------------
-    // Masked gram operator
+    // Masked gram operator (the math lives in [`SolveCore`]; the model
+    // assembles a borrowed core over its caches and delegates)
     // ------------------------------------------------------------------
 
-    /// y = m Φ Φᵀ m x + σ² x.
-    ///
-    /// Both the serial and the threaded SpMVs run through the reusable
-    /// scratch buffers — no allocation per CG iteration on either path.
-    /// The operands are whatever `solve.layout` selected (native ELL
-    /// when Φ's rows are regular enough and the overlays are compacted,
-    /// the overlay-aware CSR dispatch otherwise); the blocked variant
-    /// uses the same selection so single- and multi-RHS solves stay in
-    /// bitwise lockstep.
-    fn apply_h(&self, x: &[f64], out: &mut [f64]) {
-        let n = self.n();
-        let threads = self.solve.effective_threads();
-        let sigma2 = self.hypers.sigma_n2();
-        let par = threads > 1 && n > 4096;
+    /// Assemble a borrowed [`SolveCore`] over the model's live state
+    /// (lazily filling the ELL/Jacobi caches) plus the reusable
+    /// scratch, and run `f` on it. Every solve and inference entry
+    /// point funnels through here, so the live model and a published
+    /// [`ModelReadView`] execute the exact same code.
+    fn with_core<R>(&self, f: impl FnOnce(&SolveCore<'_>, &mut SolveScratch) -> R) -> R {
         let ops = self.ell_ops();
         let (_, phi_ell, phi_t_ell) = &*ops;
-        let mut guard = self.scratch.borrow_mut();
-        let (mx, mid, prod) = &mut *guard;
-        for i in 0..n {
-            mx[i] = self.mask[i] * x[i];
-        }
-        self.phi_t.spmv(phi_t_ell.as_ref(), mx, mid, threads, par);
-        self.phi.spmv(phi_ell.as_ref(), mid, prod, threads, par);
-        for i in 0..n {
-            out[i] = self.mask[i] * prod[i] + sigma2 * x[i];
-        }
+        let jacobi = self.jacobi_cached();
+        let core = SolveCore {
+            phi: &self.phi,
+            phi_t: &self.phi_t,
+            phi_ell: phi_ell.as_deref(),
+            phi_t_ell: phi_t_ell.as_deref(),
+            mask: &self.mask,
+            y: &self.y,
+            sigma2: self.hypers.sigma_n2(),
+            tol: self.solve.tol,
+            max_iters: self.solve.max_iters,
+            threads: self.solve.effective_threads(),
+            jacobi: jacobi.as_deref().map(|v| v.as_slice()),
+        };
+        let mut scratch = self.scratch.borrow_mut();
+        f(&core, &mut scratch)
     }
 
-    /// Blocked operator: `Y = m Φ Φᵀ m X + σ² X` over a row-major
-    /// `n × ncols` block — two SpMMs serve all `ncols` vectors, so one
-    /// block-CG iteration streams Φ/Φᵀ once instead of `ncols` times.
-    fn apply_h_block(&self, x: &[f64], ncols: usize, out: &mut [f64]) {
-        let n = self.n();
-        let k = self.phi.n_cols();
-        let threads = self.solve.effective_threads();
-        let sigma2 = self.hypers.sigma_n2();
-        debug_assert_eq!(x.len(), n * ncols);
-        debug_assert_eq!(out.len(), n * ncols);
-        let par = threads > 1 && n > 4096;
+    /// An owned, immutable snapshot of the inference inputs — see
+    /// [`ModelReadView`]. O(overlay rows + n) to build: the compacted
+    /// Φ/Φᵀ bases and packed ELL operands are `Arc`-shared, only the
+    /// overlay maps, mask/y, and the Jacobi diagonal are copied.
+    pub fn read_view(&self) -> ModelReadView {
         let ops = self.ell_ops();
         let (_, phi_ell, phi_t_ell) = &*ops;
-        let mut guard = self.scratch_blk.borrow_mut();
-        let (mx, mid) = &mut *guard;
-        mx.resize(n * ncols, 0.0);
-        mid.resize(k * ncols, 0.0);
-        for i in 0..n {
-            let m = self.mask[i];
-            let base = i * ncols;
-            for j in 0..ncols {
-                mx[base + j] = m * x[base + j];
-            }
-        }
-        self.phi_t.spmm(phi_t_ell.as_ref(), mx, ncols, mid, threads, par);
-        self.phi.spmm(phi_ell.as_ref(), mid, ncols, out, threads, par);
-        for i in 0..n {
-            let m = self.mask[i];
-            let base = i * ncols;
-            for j in 0..ncols {
-                out[base + j] = m * out[base + j] + sigma2 * x[base + j];
-            }
+        let jacobi = self.jacobi_cached().map(|d| (*d).clone());
+        ModelReadView {
+            phi: self.phi.clone(),
+            phi_t: self.phi_t.clone(),
+            phi_ell: phi_ell.clone(),
+            phi_t_ell: phi_t_ell.clone(),
+            mask: self.mask.clone(),
+            y: self.y.clone(),
+            sigma2: self.hypers.sigma_n2(),
+            tol: self.solve.tol,
+            max_iters: self.solve.max_iters,
+            threads: self.solve.effective_threads(),
+            jacobi,
+            mean_cache: Mutex::new(None),
         }
     }
 
@@ -598,13 +935,7 @@ impl GpModel {
 
     /// Kernel product y = Φ (Φᵀ x) (no mask/noise).
     pub fn apply_kernel(&self, x: &[f64]) -> Vec<f64> {
-        let threads = self.solve.effective_threads();
-        if threads > 1 && self.n() > 4096 {
-            let mid = self.phi_t.matvec_par(x, threads);
-            self.phi.matvec_par(&mid, threads)
-        } else {
-            self.phi.matvec(&self.phi_t.matvec(x))
-        }
+        self.with_core(|core, _| core.apply_kernel(x))
     }
 
     /// Cached C_lᵀ operands for the modulation gradients: rebuilt on
@@ -663,15 +994,7 @@ impl GpModel {
     /// Solve (m K m + σ² I) v = b by (optionally Jacobi-preconditioned)
     /// CG.
     pub fn solve_system(&self, b: &[f64]) -> (Vec<f64>, CgStats) {
-        let precond = self.jacobi_cached();
-        pcg_solve(
-            |x, out| self.apply_h(x, out),
-            b,
-            None,
-            precond.as_ref().map(|d| d.as_slice()),
-            self.solve.tol,
-            self.solve.max_iters,
-        )
+        self.with_core(|core, scratch| core.solve_system(scratch, b))
     }
 
     /// Solve (m K m + σ² I) V = B for a row-major `n × ncols` block of
@@ -694,16 +1017,9 @@ impl GpModel {
         ncols: usize,
         x0: Option<&[f64]>,
     ) -> (Vec<f64>, Vec<CgStats>) {
-        let precond = self.jacobi_cached();
-        block_cg_solve(
-            |x, out| self.apply_h_block(x, ncols, out),
-            b,
-            ncols,
-            x0,
-            precond.as_ref().map(|d| d.as_slice()),
-            self.solve.tol,
-            self.solve.max_iters,
-        )
+        self.with_core(|core, scratch| {
+            core.solve_system_block_warm(scratch, b, ncols, x0)
+        })
     }
 
     // ------------------------------------------------------------------
@@ -858,12 +1174,7 @@ impl GpModel {
 
     /// Posterior mean at every node: K (m α) with α = H⁻¹ (m y).
     pub fn posterior_mean(&self) -> (Vec<f64>, CgStats) {
-        let rhs: Vec<f64> =
-            self.mask.iter().zip(&self.y).map(|(m, y)| m * y).collect();
-        let (alpha, st) = self.solve_system(&rhs);
-        let malpha: Vec<f64> =
-            self.mask.iter().zip(&alpha).map(|(m, a)| m * a).collect();
-        (self.apply_kernel(&malpha), st)
+        self.with_core(|core, scratch| core.posterior_mean(scratch))
     }
 
     /// One pathwise-conditioning sample from the posterior over all
@@ -884,64 +1195,9 @@ impl GpModel {
     /// serial loop (`w_j`, then the per-node noise of sample `j`), so a
     /// given `Rng` produces the same draws either way.
     pub fn posterior_samples(&self, n_samples: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
-        if n_samples == 0 {
-            return Vec::new();
-        }
-        let n = self.n();
-        let b = n_samples;
-        let k = self.phi.n_cols();
-        let threads = self.solve.effective_threads();
-        let par = threads > 1 && n > 4096;
-        let sigma = self.hypers.sigma_n2().sqrt();
-
-        let mut w = vec![0.0; k * b];
-        let mut eps = vec![0.0; n * b];
-        for j in 0..b {
-            for i in 0..k {
-                w[i * b + j] = rng.normal();
-            }
-            for i in 0..n {
-                eps[i * b + j] = rng.normal();
-            }
-        }
-        // Prior draws g = Φ W over the whole block.
-        let g = if par {
-            self.phi.matmat_par(&w, b, threads)
-        } else {
-            self.phi.matmat(&w, b)
-        };
-        // Masked residual block m (y − g − σ ε).
-        let mut rhs = vec![0.0; n * b];
-        for i in 0..n {
-            let m = self.mask[i];
-            let base = i * b;
-            for j in 0..b {
-                rhs[base + j] = m * (self.y[i] - g[base + j] - sigma * eps[base + j]);
-            }
-        }
-        let (alpha, _) = self.solve_system_block(&rhs, b);
-        // Kernel correction K (m α) for all samples: two more SpMMs.
-        let mut malpha = alpha;
-        for i in 0..n {
-            let m = self.mask[i];
-            let base = i * b;
-            for j in 0..b {
-                malpha[base + j] *= m;
-            }
-        }
-        let mid = if par {
-            self.phi_t.matmat_par(&malpha, b, threads)
-        } else {
-            self.phi_t.matmat(&malpha, b)
-        };
-        let corr = if par {
-            self.phi.matmat_par(&mid, b, threads)
-        } else {
-            self.phi.matmat(&mid, b)
-        };
-        (0..b)
-            .map(|j| (0..n).map(|i| g[i * b + j] + corr[i * b + j]).collect())
-            .collect()
+        self.with_core(|core, scratch| {
+            core.posterior_samples(scratch, n_samples, rng)
+        })
     }
 
     /// One pathwise Thompson draw with a warm-startable conditioning
@@ -962,63 +1218,53 @@ impl GpModel {
         rng: &mut Rng,
         warm: Option<&[f64]>,
     ) -> (Vec<f64>, Vec<f64>, Vec<CgStats>) {
-        let n = self.n();
-        let k = self.phi.n_cols();
-        let threads = self.solve.effective_threads();
-        let par = threads > 1 && n > 4096;
-        let sigma = self.hypers.sigma_n2().sqrt();
-        let w = rng.normal_vec(k);
-        let eps = rng.normal_vec(n);
-        let g = if par {
-            self.phi.matvec_par(&w, threads)
-        } else {
-            self.phi.matvec(&w)
-        };
-        let mut rhs = vec![0.0; n * 2];
-        for i in 0..n {
-            let m = self.mask[i];
-            rhs[i * 2] = m * self.y[i];
-            rhs[i * 2 + 1] = m * (g[i] + sigma * eps[i]);
-        }
-        let x0: Option<Vec<f64>> = warm.filter(|wv| wv.len() == n).map(|wv| {
-            let mut v = vec![0.0; n * 2];
+        self.with_core(|core, scratch| {
+            let n = core.mask.len();
+            let k = core.phi.n_cols();
+            let par = core.threads > 1 && n > 4096;
+            let sigma = core.sigma2.sqrt();
+            let w = rng.normal_vec(k);
+            let eps = rng.normal_vec(n);
+            let g = if par {
+                core.phi.matvec_par(&w, core.threads)
+            } else {
+                core.phi.matvec(&w)
+            };
+            let mut rhs = vec![0.0; n * 2];
             for i in 0..n {
-                v[i * 2] = wv[i];
+                let m = core.mask[i];
+                rhs[i * 2] = m * core.y[i];
+                rhs[i * 2 + 1] = m * (g[i] + sigma * eps[i]);
             }
-            v
-        });
-        let (sol, stats) = self.solve_system_block_warm(&rhs, 2, x0.as_deref());
-        let mut alpha_y = vec![0.0; n];
-        let mut malpha = vec![0.0; n];
-        for i in 0..n {
-            alpha_y[i] = sol[i * 2];
-            malpha[i] = self.mask[i] * (sol[i * 2] - sol[i * 2 + 1]);
-        }
-        let corr = self.apply_kernel(&malpha);
-        let sample: Vec<f64> =
-            (0..n).map(|i| g[i] + corr[i]).collect();
-        (sample, alpha_y, stats)
+            let x0: Option<Vec<f64>> = warm.filter(|wv| wv.len() == n).map(|wv| {
+                let mut v = vec![0.0; n * 2];
+                for i in 0..n {
+                    v[i * 2] = wv[i];
+                }
+                v
+            });
+            let (sol, stats) =
+                core.solve_system_block_warm(scratch, &rhs, 2, x0.as_deref());
+            let mut alpha_y = vec![0.0; n];
+            let mut malpha = vec![0.0; n];
+            for i in 0..n {
+                alpha_y[i] = sol[i * 2];
+                malpha[i] = core.mask[i] * (sol[i * 2] - sol[i * 2 + 1]);
+            }
+            let corr = core.apply_kernel(&malpha);
+            let sample: Vec<f64> = (0..n).map(|i| g[i] + corr[i]).collect();
+            (sample, alpha_y, stats)
+        })
     }
 
     /// Predictive mean + variance at every node, variance estimated
     /// from `n_samples` pathwise draws (includes observation noise).
     /// The draws come from one blocked solve ([`GpModel::posterior_samples`]).
     pub fn predict(&self, n_samples: usize, rng: &mut Rng) -> (Vec<f64>, Vec<f64>) {
-        let n = self.n();
-        let (mean, _) = self.posterior_mean();
-        let mut m2 = vec![0.0; n];
-        for s in self.posterior_samples(n_samples, rng) {
-            for i in 0..n {
-                let d = s[i] - mean[i];
-                m2[i] += d * d;
-            }
-        }
-        let sigma2 = self.hypers.sigma_n2();
-        let var: Vec<f64> = m2
-            .iter()
-            .map(|v| v / n_samples.max(1) as f64 + sigma2)
-            .collect();
-        (mean, var)
+        self.with_core(|core, scratch| {
+            let (mean, _) = core.posterior_mean(scratch);
+            core.predict_with_mean(scratch, &mean, n_samples, rng)
+        })
     }
 }
 
@@ -1096,6 +1342,32 @@ mod tests {
                 expect[i]
             );
         }
+    }
+
+    #[test]
+    fn read_view_predictions_bitwise_match_live_model() {
+        let (model, _) = small_model(7);
+        let view = model.read_view();
+        assert_eq!(view.n(), model.n());
+        // Same rng stream into both entry points — bitwise equality is
+        // the contract that lets the server predict off published
+        // snapshots without re-deriving anything from the live model.
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let (m1, v1) = model.predict(4, &mut r1);
+        let (m2, v2) = view.predict(4, &mut r2);
+        assert_eq!(m1, m2, "means diverge");
+        assert_eq!(v1, v2, "variances diverge");
+        // The cached mean is reused — a second predict off the view
+        // still matches a fresh model predict on the same stream.
+        let (m3, v3) = model.predict(4, &mut r1);
+        let (m4, v4) = view.predict(4, &mut r2);
+        assert_eq!(m3, m4);
+        assert_eq!(v3, v4);
+        // Raw pathwise samples agree too.
+        let s1 = model.posterior_samples(3, &mut r1);
+        let s2 = view.posterior_samples(3, &mut r2);
+        assert_eq!(s1, s2);
     }
 
     #[test]

@@ -32,6 +32,7 @@ USAGE:
   grfgp serve [--graph ring --n 4096 --addr 127.0.0.1:7701]
               [--max-frame-bytes B --max-parse-depth D --unicode strict|replace]
               [--max-conns C --read-timeout-ms T --idle-timeout-s T --write-timeout-s T]
+              [--max-batch K]
   grfgp info  [--artifacts artifacts]
 
 Common experiment options:
@@ -165,6 +166,9 @@ fn run_serve(args: &Args) -> Result<()> {
             args.u64("write-timeout-s", defaults.write_timeout.as_secs()),
         ),
         fault_injection: false,
+        // Micro-batching width: how many compatible requests one
+        // engine call may serve (predict unions / write batches).
+        max_batch: args.usize("max-batch", defaults.max_batch),
     };
     grfgp::server::serve_with(stream, hypers, &addr, seed, config)
 }

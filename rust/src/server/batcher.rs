@@ -1,17 +1,23 @@
 //! Request parsing + micro-batching.
 //!
-//! The batcher coalesces requests that can share one model-lock
-//! acquisition, in two classes:
+//! The batcher coalesces requests that can share one expensive engine
+//! call, in two classes:
 //!
 //! * **Predict** requests arriving within the batching window are
-//!   merged into a single `predict` over the union of their nodes (the
-//!   expensive part — posterior mean solve + pathwise variance samples
-//!   — is shared), then results are scattered back per request.
+//!   merged into a single prediction over the union of their nodes
+//!   (the expensive part — posterior mean solve + pathwise variance
+//!   samples — is shared), then results are scattered back per
+//!   request. Predictions are computed **entirely off the published
+//!   read snapshot** ([`super::predict_off_snapshot`]) — the predict
+//!   path never acquires the model mutex, so reads cannot block
+//!   writers (or each other's admission).
 //! * **Write** requests (`observe`, `add_edge`, `remove_edge`,
 //!   `add_node`) are coalesced into one ordered batch applied under a
 //!   single lock: runs of observations flush with one `set_data`, and
 //!   each graph delta runs one incremental feature patch + warm
-//!   re-solve ([`crate::gp::GpModel::apply_graph_delta`]).
+//!   re-solve ([`crate::gp::GpModel::apply_graph_delta`]). The write
+//!   batch ends by publishing a fresh snapshot (before acks), which is
+//!   what makes the read path's staleness bounded.
 //!
 //! Leadership is take-based: after the window, whichever participant
 //! still finds its batch pending takes it out, runs it, and publishes
@@ -20,14 +26,16 @@
 //! is never replaced: requests that cannot join (key mismatch, full
 //! batch) execute solo instead, so a batch can never be evicted
 //! before its results reach every client. An **idle fast path** skips
-//! the batching window when the model lock is uncontended — there is
-//! nothing to coalesce with, so serial clients pay no window latency.
+//! the batching window when no other predict is in flight (an atomic
+//! in-flight gate — there is nothing to coalesce with, so serial
+//! clients pay no window latency); the write side keeps the
+//! lock-uncontended probe.
 
 use super::wire::ErrorKind;
-use super::{ModelState, ServerState};
+use super::ServerState;
 use crate::util::json::Json;
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, PoisonError};
 use std::time::Duration;
 
@@ -194,6 +202,28 @@ impl Response {
     }
 }
 
+/// The wire shape of every successful predict response — both serving
+/// entry points (`server::handle` and the batcher) emit through this
+/// one constructor, so they cannot drift. `batched` is the participant
+/// count of the shared engine call; `graph_version` + `rng_seq`
+/// together let a client (or test) reproduce the prediction
+/// bit-for-bit (see `server::snapshot`).
+pub fn predict_response(
+    mu: &[f64],
+    var: &[f64],
+    parts: usize,
+    version: u64,
+    rng_seq: u64,
+) -> Response {
+    Response::ok(vec![
+        ("mean", Json::arr_f64(mu)),
+        ("var", Json::arr_f64(var)),
+        ("batched", Json::from_uint(parts as u64)),
+        ("graph_version", Json::from_uint(version)),
+        ("rng_seq", Json::from_uint(rng_seq)),
+    ])
+}
+
 struct PendingPredict {
     generation: u64,
     /// Batch key: the `samples` parameter (requests must agree on it).
@@ -209,12 +239,31 @@ struct PredictDone {
     /// Graph version at compute time — lets clients detect whether a
     /// response predates a graph delta they already saw acknowledged.
     graph_version: u64,
+    /// Predict rng sequence number of the shared engine call (echoed in
+    /// every participant's response; see `server::snapshot` docs).
+    rng_seq: u64,
+    /// Node count of the snapshot the batch was computed off. A
+    /// participant whose nodes passed the live mirror but exceed this
+    /// (its request raced a not-yet-published `add_node`) converts its
+    /// claim into an out-of-range error instead of reading the NaN
+    /// placeholders the leader gathered for those ids.
+    n_snap: usize,
     parts: usize,
     claimed: usize,
     /// Publication time: entries older than [`RESULT_TIMEOUT`] can have
     /// no live claimant (every deadline predates publication + timeout)
     /// and are swept.
     published: std::time::Instant,
+}
+
+/// A participant's slice of a published batch result.
+struct ClaimedPredict {
+    mu: Vec<f64>,
+    var: Vec<f64>,
+    parts: usize,
+    graph_version: u64,
+    rng_seq: u64,
+    n_snap: usize,
 }
 
 struct PendingWrites {
@@ -255,10 +304,25 @@ pub struct Batcher {
     /// Upper bound on waiting for a leader's results; also the age past
     /// which a published `done` entry can have no live claimant.
     result_timeout: Duration,
+    /// Predict requests currently inside `submit_predict` — the idle
+    /// fast path's gate. Predicts never probe the model mutex, so lock
+    /// contention can't be the "is anyone else here?" signal; this
+    /// atomic is.
+    predicts_inflight: AtomicUsize,
     predicts: Mutex<PredictSlot>,
     pcv: Condvar,
     writes: Mutex<WriteSlot>,
     wcv: Condvar,
+}
+
+/// Decrements the in-flight predict gate on every exit path (including
+/// panics unwinding through the dispatch guard).
+struct InflightGuard<'a>(&'a AtomicUsize);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 /// How long a joiner waits for stragglers before taking leadership.
@@ -282,6 +346,7 @@ impl Batcher {
             max_batch,
             max_union_nodes,
             result_timeout,
+            predicts_inflight: AtomicUsize::new(0),
             predicts: Mutex::new(PredictSlot {
                 next_gen: 0,
                 pending: None,
@@ -311,30 +376,22 @@ impl Batcher {
         }
     }
 
-    /// Shared-lock predict computation + result gather + version stamp.
-    fn predict_under_lock(
+    /// Snapshot-based predict + per-request gather. `Err` is the typed
+    /// response for nodes past the snapshot's node count — the request
+    /// raced an `add_node` that reached the live mirror but not yet the
+    /// publication point.
+    fn predict_gather(
         state: &ServerState,
-        ms: &mut ModelState,
         nodes: &[usize],
         key: usize,
-    ) -> (Vec<f64>, Vec<f64>, u64) {
-        let mut rng = ms.rng.split(0xBA7C);
-        ms.rng = ms.rng.split(3);
-        let (mean, variance) = ms.model.predict(key, &mut rng);
-        let mu: Vec<f64> = nodes.iter().map(|&i| mean[i]).collect();
-        let vv: Vec<f64> = nodes.iter().map(|&i| variance[i]).collect();
-        // Read the version inside the lock: the response is exactly as
-        // fresh as this snapshot.
-        (mu, vv, state.graph_version.load(Ordering::SeqCst))
-    }
-
-    fn predict_response(mu: &[f64], var: &[f64], parts: usize, version: u64) -> Response {
-        Response::ok(vec![
-            ("mean", Json::arr_f64(mu)),
-            ("var", Json::arr_f64(var)),
-            ("batched", Json::Num(parts as f64)),
-            ("graph_version", Json::Num(version as f64)),
-        ])
+    ) -> Result<(Vec<f64>, Vec<f64>, u64, u64), Response> {
+        let (snap, mean, var, rng_seq) = super::predict_off_snapshot(state, key);
+        if let Some(&bad) = nodes.iter().find(|&&i| i >= snap.n_nodes) {
+            return Err(Response::error(format!("node {bad} out of range")));
+        }
+        let mu = nodes.iter().map(|&i| mean[i]).collect();
+        let vv = nodes.iter().map(|&i| var[i]).collect();
+        Ok((mu, vv, snap.graph_version, rng_seq))
     }
 
     fn submit_predict(
@@ -350,14 +407,22 @@ impl Batcher {
         if let Some(&bad) = nodes.iter().find(|&&i| i >= n) {
             return Response::error(format!("node {bad} out of range"));
         }
-        // Idle fast path: an uncontended model means there is nothing
-        // to coalesce with — skip the batching window entirely.
-        if let Some(mut ms) = state.try_model_guard() {
-            let (mu, var, version) =
-                Self::predict_under_lock(state, &mut ms, &nodes, key);
-            drop(ms);
+        // Idle fast path: no other predict in flight means there is
+        // nothing to coalesce with — skip the batching window entirely.
+        // Predicts never touch the model mutex, so lock contention
+        // can't signal company; the in-flight gate does.
+        let solo =
+            self.predicts_inflight.fetch_add(1, Ordering::AcqRel) == 0;
+        let _inflight = InflightGuard(&self.predicts_inflight);
+        if solo {
+            let resp = match Self::predict_gather(state, &nodes, key) {
+                Ok((mu, var, version, rng_seq)) => {
+                    predict_response(&mu, &var, 1, version, rng_seq)
+                }
+                Err(resp) => resp,
+            };
             state.requests_served.fetch_add(1, Ordering::Relaxed);
-            return Self::predict_response(&mu, &var, 1, version);
+            return resp;
         }
         // Join the pending batch if compatible, open one if none is
         // pending; an incompatible pending batch (different samples
@@ -365,13 +430,16 @@ impl Batcher {
         // this request runs solo.
         let joined = self.join_predict(&nodes, key);
         let Some((generation, span)) = joined else {
-            // Solo slow path (blocking lock).
-            let mut ms = state.model_guard();
-            let (mu, var, version) =
-                Self::predict_under_lock(state, &mut ms, &nodes, key);
-            drop(ms);
+            // Solo slow path — still wait-free, just without having
+            // skipped the admission bookkeeping.
+            let resp = match Self::predict_gather(state, &nodes, key) {
+                Ok((mu, var, version, rng_seq)) => {
+                    predict_response(&mu, &var, 1, version, rng_seq)
+                }
+                Err(resp) => resp,
+            };
             state.requests_served.fetch_add(1, Ordering::Relaxed);
-            return Self::predict_response(&mu, &var, 1, version);
+            return resp;
         };
         std::thread::sleep(BATCH_WINDOW);
         // Leader = whoever still finds its batch pending; it takes the
@@ -389,10 +457,24 @@ impl Batcher {
             }
         };
         if let Some(b) = batch {
-            let (mu, var, version) = {
-                let mut ms = state.model_guard();
-                Self::predict_under_lock(state, &mut ms, &b.nodes, b.key)
-            };
+            let (snap, mean, variance, rng_seq) =
+                super::predict_off_snapshot(state, b.key);
+            // Gather the union off the snapshot. Ids past the
+            // snapshot's node count (possible only for a request that
+            // raced a not-yet-published add_node) gather as NaN
+            // placeholders; the claim path converts any span containing
+            // one into a typed error via `n_snap`, so a NaN never
+            // reaches a client.
+            let mu: Vec<f64> = b
+                .nodes
+                .iter()
+                .map(|&i| mean.get(i).copied().unwrap_or(f64::NAN))
+                .collect();
+            let vv: Vec<f64> = b
+                .nodes
+                .iter()
+                .map(|&i| variance.get(i).copied().unwrap_or(f64::NAN))
+                .collect();
             let mut slot = self.predicts.lock().unwrap_or_else(PoisonError::into_inner);
             // Bounded-stale sweep: a participant that timed out never
             // claims its span, so its entry could linger — drop entries
@@ -406,8 +488,10 @@ impl Batcher {
                 b.generation,
                 PredictDone {
                     mu,
-                    var,
-                    graph_version: version,
+                    var: vv,
+                    graph_version: snap.graph_version,
+                    rng_seq,
+                    n_snap: snap.n_nodes,
                     parts: b.spans.len(),
                     claimed: 0,
                     published: std::time::Instant::now(),
@@ -417,9 +501,22 @@ impl Batcher {
             self.pcv.notify_all();
         }
         match self.claim_predict(generation, span) {
-            Some((m, v, parts, version)) => {
+            Some(claim) => {
+                if let Some(&bad) =
+                    nodes.iter().find(|&&i| i >= claim.n_snap)
+                {
+                    return Response::error(format!(
+                        "node {bad} out of range"
+                    ));
+                }
                 state.requests_served.fetch_add(1, Ordering::Relaxed);
-                Self::predict_response(&m, &v, parts, version)
+                predict_response(
+                    &claim.mu,
+                    &claim.var,
+                    claim.parts,
+                    claim.graph_version,
+                    claim.rng_seq,
+                )
             }
             None => Response::fault(ErrorKind::Internal, "predict batch timed out"),
         }
@@ -478,21 +575,25 @@ impl Batcher {
         &self,
         generation: u64,
         span: (usize, usize),
-    ) -> Option<(Vec<f64>, Vec<f64>, usize, u64)> {
+    ) -> Option<ClaimedPredict> {
         let deadline = std::time::Instant::now() + self.result_timeout;
         let mut slot = self.predicts.lock().unwrap_or_else(PoisonError::into_inner);
         loop {
             if let Some(done) = slot.done.get_mut(&generation) {
                 let (off, len) = span;
-                let m = done.mu[off..off + len].to_vec();
-                let v = done.var[off..off + len].to_vec();
-                let parts = done.parts;
-                let version = done.graph_version;
+                let claim = ClaimedPredict {
+                    mu: done.mu[off..off + len].to_vec(),
+                    var: done.var[off..off + len].to_vec(),
+                    parts: done.parts,
+                    graph_version: done.graph_version,
+                    rng_seq: done.rng_seq,
+                    n_snap: done.n_snap,
+                };
                 done.claimed += 1;
-                if done.claimed >= parts {
+                if done.claimed >= done.parts {
                     slot.done.remove(&generation);
                 }
-                return Some((m, v, parts, version));
+                return Some(claim);
             }
             let timeout = self.result_timeout;
             slot.done.retain(|_, d| d.published.elapsed() < timeout);
@@ -721,6 +822,8 @@ mod tests {
                     mu: vec![1.0],
                     var: vec![2.0],
                     graph_version: 3,
+                    rng_seq: 11,
+                    n_snap: 4,
                     parts: 1,
                     claimed: 0,
                     published: std::time::Instant::now(),
@@ -728,12 +831,15 @@ mod tests {
             );
         }
         std::thread::sleep(Duration::from_millis(60)); // age past timeout
-        let (m, v, parts, version) = b
+        let claim = b
             .claim_predict(7, (0, 1))
             .expect("own aged entry must still be claimable");
-        assert_eq!(m, vec![1.0]);
-        assert_eq!(v, vec![2.0]);
-        assert_eq!((parts, version), (1, 3));
+        assert_eq!(claim.mu, vec![1.0]);
+        assert_eq!(claim.var, vec![2.0]);
+        assert_eq!(
+            (claim.parts, claim.graph_version, claim.rng_seq, claim.n_snap),
+            (1, 3, 11, 4)
+        );
         // Generation 10: published, one of two participants claimed,
         // the other timed out — the lingering case. A later claim (even
         // one that itself times out) sweeps it.
@@ -745,6 +851,8 @@ mod tests {
                     mu: vec![4.0],
                     var: vec![1.0],
                     graph_version: 0,
+                    rng_seq: 0,
+                    n_snap: 1,
                     parts: 2,
                     claimed: 1,
                     published: std::time::Instant::now(),

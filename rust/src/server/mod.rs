@@ -87,11 +87,43 @@
 //! carries the post-delta version and every `predict` response carries
 //! the version its numbers were computed under, so a client that saw a
 //! delta acknowledged at version `k` can reject any prediction stamped
-//! `< k` as stale. Batched predictions are stamped under the same model
-//! lock that computes them, so a response can never carry a version
-//! newer than its numbers.
+//! `< k` as stale.
+//!
+//! ## Concurrency & snapshot semantics
+//!
+//! Reads and writes are split RCU-style (see [`snapshot`]):
+//!
+//! * **Publication point.** Writers mutate the private [`ModelState`]
+//!   under the model mutex; at the end of every coalesced write batch
+//!   ([`ModelState::apply_writes`]) they build an immutable
+//!   [`snapshot::ReadSnapshot`] (Φ/Φᵀ overlay views with `Arc`-shared
+//!   bases, cached α, hyperparameters, `graph_version`) and swap it
+//!   into the [`snapshot::SnapshotCell`] **before the writes are
+//!   acknowledged** — an acked `graph_version` is therefore always
+//!   servable, and a predict response can never carry a version newer
+//!   than its numbers.
+//! * **Wait-free reads.** `predict` never acquires the model mutex
+//!   (counter-asserted in the tests): it loads the latest published
+//!   `Arc<ReadSnapshot>` (one brief reader-lock clone) and computes
+//!   entirely off it. Node ids are validated against the *snapshot's*
+//!   node count, so a read racing a node insertion yields a typed
+//!   out-of-range error, never a torn result.
+//! * **Staleness bound.** A predict admitted at time *t* reflects at
+//!   least the last write batch whose ack completed before *t* —
+//!   i.e. staleness is bounded by one in-flight write batch. Readers
+//!   pinned to an old snapshot (long solves) keep it alive via `Arc`
+//!   refcounts and never block writers from publishing newer ones.
+//! * **RNG determinism.** Each predict draws its rng as
+//!   `rng_base.split(0xBA7C).split(rng_seq)` where `rng_base` is the
+//!   server rng frozen at publish time and `rng_seq` (echoed in the
+//!   response) is a global monotone counter. Identical traffic is
+//!   reproducible from `(graph_version, rng_seq)` pairs, read volume
+//!   no longer perturbs the write-side rng stream, and the direct
+//!   handler path and the batcher compute predictions through the
+//!   **same** implementation ([`predict_off_snapshot`]).
 
 pub mod batcher;
+pub mod snapshot;
 pub mod wire;
 
 use crate::gp::model::GpModel;
@@ -101,6 +133,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use batcher::{Batcher, Request, Response};
+use snapshot::{ReadSnapshot, SnapshotCell};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -129,6 +162,9 @@ pub struct ServerConfig {
     /// Enable the test-only `{"op":"fault"}` panic op (off by default;
     /// the fault-injection suite turns it on to prove panic isolation).
     pub fault_injection: bool,
+    /// Micro-batching width: how many compatible requests the batcher
+    /// merges into one engine call (`--max-batch` on `grfgp serve`).
+    pub max_batch: usize,
 }
 
 impl Default for ServerConfig {
@@ -140,6 +176,7 @@ impl Default for ServerConfig {
             idle_timeout: Duration::from_secs(600),
             write_timeout: Duration::from_secs(30),
             fault_injection: false,
+            max_batch: 8,
         }
     }
 }
@@ -157,10 +194,39 @@ pub struct ServerState {
     pub shutdown: AtomicBool,
     /// Live connection count, against `config.max_connections`.
     pub active_connections: AtomicUsize,
+    /// The published read snapshot `predict` computes off — see the
+    /// module-level "Concurrency & snapshot semantics" section.
+    pub snapshots: SnapshotCell,
+    /// Global predict sequence counter: each predict engine call takes
+    /// one value, derives its rng from it, and echoes it (`rng_seq`).
+    pub predict_seq: AtomicU64,
+    /// Lifetime count of model-mutex acquisitions — observability for
+    /// the wait-free-read contract (predicts must not move it).
+    pub model_lock_acquisitions: AtomicU64,
     pub config: ServerConfig,
 }
 
 impl ServerState {
+    /// Build the shared state and publish the initial read snapshot
+    /// (publication 0), so a predict arriving before the first write
+    /// already finds one.
+    pub fn new(ms: ModelState, config: ServerConfig) -> ServerState {
+        let n0 = ms.model.n();
+        let first = ms.snapshot(0);
+        ServerState {
+            model: Mutex::new(ms),
+            requests_served: AtomicU64::new(0),
+            graph_version: AtomicU64::new(0),
+            n_nodes: AtomicUsize::new(n0),
+            shutdown: AtomicBool::new(false),
+            active_connections: AtomicUsize::new(0),
+            snapshots: SnapshotCell::new(first),
+            predict_seq: AtomicU64::new(0),
+            model_lock_acquisitions: AtomicU64::new(0),
+            config,
+        }
+    }
+
     /// Model lock with poison recovery. A panicking handler must not
     /// turn every subsequent request into a poison panic: the panic
     /// already surfaced as an `internal` error on its own connection,
@@ -168,6 +234,7 @@ impl ServerState {
     /// version mirrors) are re-established at the start of each write,
     /// so serving continues on whatever state the handler left.
     pub fn model_guard(&self) -> MutexGuard<'_, ModelState> {
+        self.model_lock_acquisitions.fetch_add(1, Ordering::Relaxed);
         self.model.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
@@ -175,8 +242,14 @@ impl ServerState {
     /// only when the lock is genuinely contended.
     pub fn try_model_guard(&self) -> Option<MutexGuard<'_, ModelState>> {
         match self.model.try_lock() {
-            Ok(g) => Some(g),
-            Err(TryLockError::Poisoned(p)) => Some(p.into_inner()),
+            Ok(g) => {
+                self.model_lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+                Some(g)
+            }
+            Err(TryLockError::Poisoned(p)) => {
+                self.model_lock_acquisitions.fetch_add(1, Ordering::Relaxed);
+                Some(p.into_inner())
+            }
             Err(TryLockError::WouldBlock) => None,
         }
     }
@@ -213,6 +286,22 @@ impl ModelState {
             self.observations.iter().map(|(i, _)| *i).collect();
         let ys: Vec<f64> = self.observations.iter().map(|(_, v)| *v).collect();
         self.model.set_data(&nodes, &ys);
+    }
+
+    /// Freeze the current state into an immutable [`ReadSnapshot`]
+    /// stamped with `graph_version`. O(overlay rows + n): the Φ/Φᵀ
+    /// compacted bases and packed ELL operands are `Arc`-shared with
+    /// the live model ([`GpModel::read_view`]).
+    pub fn snapshot(&self, graph_version: u64) -> ReadSnapshot {
+        ReadSnapshot {
+            view: self.model.read_view(),
+            graph_version,
+            n_nodes: self.model.n(),
+            n_obs: self.observations.len(),
+            compactions: self.stream.compactions,
+            publish_seq: 0,
+            rng_base: self.rng.clone(),
+        }
     }
 
     /// Apply one coalesced write batch (observes + graph deltas) in
@@ -276,7 +365,7 @@ impl ModelState {
                         dirty_obs = true;
                         out.push(Response::ok(vec![(
                             "n_obs",
-                            Json::Num(self.observations.len() as f64),
+                            Json::from_uint(self.observations.len() as u64),
                         )]));
                     }
                 }
@@ -289,6 +378,13 @@ impl ModelState {
         if dirty_obs {
             self.refresh();
         }
+        // Publication point: swap in a snapshot reflecting everything
+        // this batch applied, *before* the acks above are delivered —
+        // so a client that saw `graph_version = k` acknowledged can
+        // immediately read a prediction stamped `>= k`.
+        state.snapshots.publish(
+            self.snapshot(state.graph_version.load(Ordering::SeqCst)),
+        );
         out
     }
 
@@ -404,18 +500,60 @@ fn delta_ack(
     node: Option<usize>,
 ) -> Response {
     let mut fields = vec![
-        ("graph_version", Json::Num(version as f64)),
-        ("resampled_walks", Json::Num(invalidated as f64)),
-        ("batch_resampled_walks", Json::Num(batch_resampled as f64)),
-        ("patched_rows", Json::Num(patched_rows as f64)),
-        ("cg_iters", Json::Num(cg_iters as f64)),
-        ("batched", Json::Num(batched as f64)),
+        ("graph_version", Json::from_uint(version)),
+        ("resampled_walks", Json::from_uint(invalidated as u64)),
+        (
+            "batch_resampled_walks",
+            Json::from_uint(batch_resampled as u64),
+        ),
+        ("patched_rows", Json::from_uint(patched_rows as u64)),
+        ("cg_iters", Json::from_uint(cg_iters as u64)),
+        ("batched", Json::from_uint(batched as u64)),
         ("compacted", Json::Bool(compacted)),
     ];
     if let Some(id) = node {
-        fields.push(("node", Json::Num(id as f64)));
+        fields.push(("node", Json::from_uint(id as u64)));
     }
     Response::ok(fields)
+}
+
+/// One wait-free prediction engine call: load the latest published
+/// snapshot, take a fresh `rng_seq`, and compute full mean/variance
+/// vectors off the snapshot. **Never touches the model mutex.** Both
+/// the direct handler path ([`handle`]) and the batcher's leader
+/// ([`batcher::Batcher`]) come through here, so the two entry points
+/// are one implementation.
+///
+/// Returns `(snapshot, mean, var, rng_seq)`; callers validate node ids
+/// against `snapshot.n_nodes` (not the live mirror — the mirror may
+/// already exceed a not-yet-published insertion) and gather their
+/// requested nodes out of the full vectors.
+pub fn predict_off_snapshot(
+    state: &ServerState,
+    samples: usize,
+) -> (Arc<ReadSnapshot>, Vec<f64>, Vec<f64>, u64) {
+    let snap = state.snapshots.load();
+    let seq = state.predict_seq.fetch_add(1, Ordering::SeqCst);
+    let mut rng = snap.predict_rng(seq);
+    let (mean, var) = snap.view.predict(samples, &mut rng);
+    (snap, mean, var, seq)
+}
+
+/// Reject a posterior sample containing NaN (a numerically failed
+/// solve) with a typed `internal` error instead of letting a NaN
+/// comparison panic the handler.
+fn nan_guard(sample: &[f64], op: &str) -> Option<Response> {
+    if sample.iter().any(|v| v.is_nan()) {
+        Some(Response::fault(
+            ErrorKind::Internal,
+            format!(
+                "{op}: posterior sample contains NaN \
+                 (numerically failed solve); cannot rank nodes"
+            ),
+        ))
+    } else {
+        None
+    }
 }
 
 /// Handle one already-parsed request against the state. Write requests
@@ -434,36 +572,32 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
                 .expect("one response per write")
         }
         Request::Predict { nodes, samples } => {
-            let mut ms = state.model_guard();
-            if let Some(&bad) = nodes.iter().find(|&&n| n >= ms.model.n()) {
+            // Wait-free: computed entirely off the published snapshot,
+            // through the same implementation the batcher uses.
+            let (snap, mean, var, seq) = predict_off_snapshot(state, *samples);
+            if let Some(&bad) = nodes.iter().find(|&&n| n >= snap.n_nodes) {
                 return Response::error(format!("node {bad} out of range"));
             }
-            let mut rng = ms.rng.split(ms.observations.len() as u64);
-            let (mean, var) = ms.model.predict(*samples, &mut rng);
             let mu: Vec<f64> = nodes.iter().map(|&i| mean[i]).collect();
             let vv: Vec<f64> = nodes.iter().map(|&i| var[i]).collect();
-            Response::ok(vec![
-                ("mean", Json::arr_f64(&mu)),
-                ("var", Json::arr_f64(&vv)),
-                (
-                    "graph_version",
-                    Json::Num(state.graph_version.load(Ordering::SeqCst) as f64),
-                ),
-            ])
+            batcher::predict_response(&mu, &vv, 1, snap.graph_version, seq)
         }
         Request::Sample => {
             let mut ms = state.model_guard();
             let mut rng = ms.rng.split(0x5A);
             ms.rng = ms.rng.split(1); // advance server stream
             let s = ms.model.posterior_sample(&mut rng);
+            if let Some(err) = nan_guard(&s, "sample") {
+                return err;
+            }
             let (argmax, max) = s
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, v)| (i, *v))
-                .unwrap();
+                .expect("posterior sample is non-empty");
             Response::ok(vec![
-                ("argmax", Json::Num(argmax as f64)),
+                ("argmax", Json::from_uint(argmax as u64)),
                 ("max", Json::Num(max)),
             ])
         }
@@ -472,46 +606,69 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
             let mut rng = ms.rng.split(0x7A);
             ms.rng = ms.rng.split(2);
             let s = ms.model.posterior_sample(&mut rng);
+            if let Some(err) = nan_guard(&s, "thompson") {
+                return err;
+            }
             let queried: std::collections::HashSet<usize> =
                 ms.observations.iter().map(|(i, _)| *i).collect();
-            let next = s
+            match s
                 .iter()
                 .enumerate()
                 .filter(|(i, _)| !queried.contains(i))
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
-                .unwrap_or(0);
-            Response::ok(vec![("next", Json::Num(next as f64))])
+            {
+                Some(next) => Response::ok(vec![
+                    ("next", Json::from_uint(next as u64)),
+                    ("exhausted", Json::Bool(false)),
+                ]),
+                // Every node has been queried: say so instead of
+                // silently recommending node 0 again.
+                None => Response::ok(vec![("exhausted", Json::Bool(true))]),
+            }
         }
         Request::Stats => {
             let ms = state.model_guard();
             Response::ok(vec![
-                ("n_nodes", Json::Num(ms.model.n() as f64)),
-                ("n_edges", Json::Num(ms.stream.graph().num_edges() as f64)),
-                ("n_obs", Json::Num(ms.observations.len() as f64)),
+                ("n_nodes", Json::from_uint(ms.model.n() as u64)),
+                (
+                    "n_edges",
+                    Json::from_uint(ms.stream.graph().num_edges() as u64),
+                ),
+                ("n_obs", Json::from_uint(ms.observations.len() as u64)),
                 (
                     "graph_version",
-                    Json::Num(state.graph_version.load(Ordering::SeqCst) as f64),
+                    Json::from_uint(state.graph_version.load(Ordering::SeqCst)),
                 ),
                 (
                     "deltas_applied",
-                    Json::Num(ms.stream.deltas_applied as f64),
+                    Json::from_uint(ms.stream.deltas_applied as u64),
                 ),
                 (
                     "walks_resampled",
-                    Json::Num(ms.stream.walks_resampled_total as f64),
+                    Json::from_uint(ms.stream.walks_resampled_total as u64),
                 ),
                 (
                     "overlay_rows",
-                    Json::Num(ms.stream.overlay_rows() as f64),
+                    Json::from_uint(ms.stream.overlay_rows() as u64),
                 ),
                 (
                     "hub_fallback_nodes",
-                    Json::Num(ms.stream.saturated_hubs() as f64),
+                    Json::from_uint(ms.stream.saturated_hubs() as u64),
                 ),
                 (
                     "requests",
-                    Json::Num(state.requests_served.load(Ordering::Relaxed) as f64),
+                    Json::from_uint(
+                        state.requests_served.load(Ordering::Relaxed),
+                    ),
+                ),
+                (
+                    "published_snapshots",
+                    Json::from_uint(state.snapshots.published()),
+                ),
+                (
+                    "predicts_served",
+                    Json::from_uint(state.predict_seq.load(Ordering::SeqCst)),
                 ),
             ])
         }
@@ -691,17 +848,9 @@ pub fn serve_on_with(
     config: ServerConfig,
 ) -> Result<()> {
     let ms = ModelState::new(stream, hypers, seed);
-    let n0 = ms.model.n();
-    let state = Arc::new(ServerState {
-        model: Mutex::new(ms),
-        requests_served: AtomicU64::new(0),
-        graph_version: AtomicU64::new(0),
-        n_nodes: AtomicUsize::new(n0),
-        shutdown: AtomicBool::new(false),
-        active_connections: AtomicUsize::new(0),
-        config,
-    });
-    let batcher = Arc::new(Batcher::new(8));
+    let max_batch = config.max_batch;
+    let state = Arc::new(ServerState::new(ms, config));
+    let batcher = Arc::new(Batcher::new(max_batch));
     listener.set_nonblocking(true)?;
     std::thread::scope(|scope| -> Result<()> {
         loop {

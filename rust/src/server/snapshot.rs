@@ -1,0 +1,136 @@
+//! Published read snapshots — the wait-free half of the serving path.
+//!
+//! Writers (the batcher's coalesced write path) mutate the private
+//! [`crate::server`] model state under its mutex, then **publish** an
+//! immutable [`ReadSnapshot`] here. Readers (`predict`) grab the
+//! latest published snapshot — one brief `RwLock` read to clone an
+//! `Arc` — and compute entirely off it, never touching the model
+//! mutex. Reclamation is just `Arc` refcounts: a reader pinned to an
+//! old snapshot keeps it alive; the last drop frees it. Snapshots are
+//! cheap to build (the Φ/Φᵀ compacted bases and packed ELL operands
+//! are `Arc`-shared with the live model; see
+//! [`crate::gp::GpModel::read_view`]), so writers publish once per
+//! engine call without a memory cliff.
+//!
+//! ## Determinism contract
+//!
+//! Every predict computed off a snapshot derives its rng as
+//! `rng_base.split(PREDICT_STREAM).split(seq)` where `rng_base` is
+//! the server rng captured at publish time and `seq` is a
+//! monotonically increasing per-request counter
+//! ([`crate::server`]'s `predict_seq`). The `seq` is echoed in the
+//! response (`rng_seq`), so a client — or a test — can reproduce any
+//! prediction bit-for-bit from `(stamped graph_version, rng_seq)`
+//! alone. Predict traffic no longer advances the server's write-side
+//! rng, so read volume cannot perturb `sample`/`thompson` draws.
+
+use crate::gp::ModelReadView;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, PoisonError, RwLock};
+
+/// Stream id predictions split off the published rng base. (Kept at
+/// the historic batcher constant so the serving rng lineage is
+/// recognisable in older traces.)
+pub const PREDICT_STREAM: u64 = 0xBA7C;
+
+/// Everything a prediction reads, frozen at one publication point.
+pub struct ReadSnapshot {
+    /// Owned inference inputs (Φ/Φᵀ views, ELL operands, mask/y,
+    /// hypers, solver settings, Jacobi diagonal, lazy cached mean).
+    pub view: ModelReadView,
+    /// Graph version this state corresponds to — stamped on every
+    /// response computed off this snapshot.
+    pub graph_version: u64,
+    /// Node count of `view` (responses validate node ids against
+    /// this, not the live mirror, so a torn read is impossible).
+    pub n_nodes: usize,
+    /// Observation count at publish time.
+    pub n_obs: usize,
+    /// Stream compaction count at publish time (observability).
+    pub compactions: usize,
+    /// Monotone publication sequence number (assigned by
+    /// [`SnapshotCell::publish`]).
+    pub publish_seq: u64,
+    /// Server rng captured at publish time; per-request predict rngs
+    /// split off it (see module docs).
+    pub rng_base: Rng,
+}
+
+impl ReadSnapshot {
+    /// The deterministic per-request rng for predict sequence number
+    /// `seq` under this snapshot.
+    pub fn predict_rng(&self, seq: u64) -> Rng {
+        self.rng_base.split(PREDICT_STREAM).split(seq)
+    }
+}
+
+/// The publication point: an atomically swappable `Arc<ReadSnapshot>`.
+///
+/// `load` is a reader-lock acquisition held only for one `Arc` clone —
+/// never across a solve — so readers cannot block a writer for longer
+/// than that clone, and a writer swap cannot tear a reader (the reader
+/// either sees the old `Arc` or the new one, both fully constructed).
+pub struct SnapshotCell {
+    slot: RwLock<Arc<ReadSnapshot>>,
+    /// Count of publications (== `publish_seq` of the current
+    /// snapshot); readable without the lock for monotonicity asserts.
+    published: AtomicU64,
+}
+
+impl SnapshotCell {
+    /// Initialise with the first snapshot (publication 0 — the server
+    /// constructor publishes before accepting connections, so readers
+    /// always find a snapshot).
+    pub fn new(mut first: ReadSnapshot) -> SnapshotCell {
+        first.publish_seq = 0;
+        SnapshotCell {
+            slot: RwLock::new(Arc::new(first)),
+            published: AtomicU64::new(0),
+        }
+    }
+
+    /// The latest published snapshot.
+    pub fn load(&self) -> Arc<ReadSnapshot> {
+        self.slot
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
+    }
+
+    /// Swap in a new snapshot; returns its publication sequence
+    /// number. Callers publish **before** acking the writes the
+    /// snapshot reflects, so an acked `graph_version` is always
+    /// servable.
+    pub fn publish(&self, mut snap: ReadSnapshot) -> u64 {
+        let seq = self.published.fetch_add(1, Ordering::AcqRel) + 1;
+        snap.publish_seq = seq;
+        let next = Arc::new(snap);
+        let mut slot = self.slot.write().unwrap_or_else(PoisonError::into_inner);
+        *slot = next;
+        seq
+    }
+
+    /// Publication count (sequence number of the current snapshot).
+    pub fn published(&self) -> u64 {
+        self.published.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_rng_is_pure_in_seq() {
+        let base = Rng::new(7);
+        let a = base.split(PREDICT_STREAM).split(3);
+        let mut b = Rng::new(7).split(PREDICT_STREAM).split(3);
+        let mut a2 = a.clone();
+        assert_eq!(a2.next_u64(), b.next_u64());
+        // Different seq → different stream.
+        let mut c = Rng::new(7).split(PREDICT_STREAM).split(4);
+        let mut a3 = a.clone();
+        assert_ne!(a3.next_u64(), c.next_u64());
+    }
+}

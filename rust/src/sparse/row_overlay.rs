@@ -32,12 +32,20 @@
 use super::{Csr, Ell, FeatureLayout};
 use crate::util::parallel;
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 
 /// A sparse matrix as (compacted base CSR) + (per-row patch overlay).
+///
+/// The base is held behind an [`Arc`] so cloning an overlay (e.g. to
+/// publish an immutable server read snapshot) costs O(overlay rows),
+/// not O(nnz): the compacted base is shared, only the patch map is
+/// deep-copied. [`RowOverlay::compact`] installs a *new* `Arc`, so
+/// clones taken before a compaction keep reading their original base —
+/// snapshot isolation for free.
 #[derive(Clone, Debug)]
 pub struct RowOverlay {
     /// Compacted base; rows not in the overlay read from here.
-    base: Csr,
+    base: Arc<Csr>,
     /// Patched rows (sorted by column) staged since the last
     /// compaction. Keys may exceed `base.n_rows` (appended rows).
     overlay: BTreeMap<u32, (Vec<u32>, Vec<f64>)>,
@@ -53,7 +61,7 @@ impl From<Csr> for RowOverlay {
     fn from(base: Csr) -> RowOverlay {
         let (n_rows, n_cols) = (base.n_rows, base.n_cols);
         RowOverlay {
-            base,
+            base: Arc::new(base),
             overlay: BTreeMap::new(),
             n_rows,
             n_cols,
@@ -93,7 +101,7 @@ impl RowOverlay {
     /// The compacted base. Rows in the overlay shadow it; callers that
     /// need exact current content should use [`RowOverlay::row`].
     pub fn base(&self) -> &Csr {
-        &self.base
+        self.base.as_ref()
     }
 
     /// Logical stored nonzeros (base rows not shadowed + overlay rows).
@@ -151,9 +159,11 @@ impl RowOverlay {
         if self.is_compacted() {
             return;
         }
-        self.base =
-            self.base
-                .with_replaced_rows(self.n_rows, self.n_cols, &self.overlay);
+        self.base = Arc::new(self.base.with_replaced_rows(
+            self.n_rows,
+            self.n_cols,
+            &self.overlay,
+        ));
         self.overlay.clear();
         self.compactions += 1;
     }
@@ -162,7 +172,7 @@ impl RowOverlay {
     /// base when compacted).
     pub fn to_csr(&self) -> Csr {
         if self.is_compacted() {
-            return self.base.clone();
+            return self.base.as_ref().clone();
         }
         self.base
             .with_replaced_rows(self.n_rows, self.n_cols, &self.overlay)

@@ -147,6 +147,38 @@ impl Json {
 
     // -- constructors ----------------------------------------------------
 
+    /// Emit-side twin of [`Json::as_usize`]: a counter/id becomes a
+    /// number only while f64 still represents it exactly (≤ 2^53).
+    /// Every server counter goes through here so a long-lived process
+    /// can never silently emit a rounded count — past the bound the
+    /// value is emitted as a decimal string, which clients treating it
+    /// as an opaque token still round-trip, and `debug_assert` makes
+    /// the (astronomically far) cliff loud in tests.
+    pub fn from_uint(x: u64) -> Json {
+        match Json::try_from_uint(x) {
+            Ok(j) => j,
+            Err(x) => {
+                debug_assert!(
+                    false,
+                    "counter {x} exceeds 2^53; emitting as string"
+                );
+                Json::Str(x.to_string())
+            }
+        }
+    }
+
+    /// `Ok(Json::Num)` when `x` is exactly representable as f64
+    /// (≤ 2^53, matching the [`Json::as_usize`] accept bound), `Err(x)`
+    /// otherwise.
+    pub fn try_from_uint(x: u64) -> Result<Json, u64> {
+        const MAX_EXACT: u64 = 9_007_199_254_740_992; // 2^53
+        if x <= MAX_EXACT {
+            Ok(Json::Num(x as f64))
+        } else {
+            Err(x)
+        }
+    }
+
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
@@ -631,6 +663,35 @@ mod tests {
         // Largest exactly-representable integer is still accepted.
         assert_eq!(Json::Num(9_007_199_254_740_992.0).as_usize(),
                    Some(9_007_199_254_740_992));
+    }
+
+    #[test]
+    fn from_uint_is_exact_up_to_2_53() {
+        const MAX_EXACT: u64 = 9_007_199_254_740_992; // 2^53
+        assert_eq!(Json::from_uint(0), Json::Num(0.0));
+        assert_eq!(Json::from_uint(17), Json::Num(17.0));
+        assert_eq!(
+            Json::from_uint(MAX_EXACT),
+            Json::Num(9_007_199_254_740_992.0)
+        );
+        // The boundary value round-trips through the index accessor.
+        assert_eq!(
+            Json::from_uint(MAX_EXACT).as_usize(),
+            Some(9_007_199_254_740_992)
+        );
+        // Past the bound: try_from_uint refuses rather than rounding.
+        assert_eq!(Json::try_from_uint(MAX_EXACT + 1), Err(MAX_EXACT + 1));
+        assert_eq!(Json::try_from_uint(u64::MAX), Err(u64::MAX));
+        assert!(Json::try_from_uint(MAX_EXACT).is_ok());
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn from_uint_release_fallback_is_a_decimal_string() {
+        // Release builds degrade to a lossless string instead of a
+        // rounded number (debug builds assert instead).
+        let j = Json::from_uint(u64::MAX);
+        assert_eq!(j.as_str(), Some("18446744073709551615"));
     }
 
     #[test]

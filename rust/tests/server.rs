@@ -7,12 +7,37 @@
 
 use grfgp::gp::{GpModel, Hypers, Modulation};
 use grfgp::graph::generators;
+use grfgp::server::batcher::{Batcher, Request};
+use grfgp::server::{handle, ModelState, ServerConfig, ServerState};
 use grfgp::stream::StreamingFeatures;
 use grfgp::util::json::Json;
 use grfgp::util::rng::Rng;
 use grfgp::walks::WalkConfig;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+
+/// In-process server state over a ring graph (no sockets) — for tests
+/// that assert on internals like the model-lock acquisition counter.
+fn in_process_state(n: usize, seed: u64) -> (ServerState, Hypers, WalkConfig) {
+    let g = generators::ring(n);
+    let cfg = WalkConfig {
+        n_walks: 16,
+        p_halt: 0.1,
+        max_len: 3,
+        threads: 1,
+        ..Default::default()
+    };
+    let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+    let stream =
+        StreamingFeatures::new(g, cfg.clone(), hypers.modulation.coeffs(), 0);
+    let ms = ModelState::new(stream, hypers.clone(), seed);
+    (
+        ServerState::new(ms, ServerConfig::default()),
+        hypers,
+        cfg,
+    )
+}
 
 fn start_server(n: usize) -> std::net::SocketAddr {
     let g = generators::ring(n);
@@ -77,6 +102,7 @@ fn protocol_roundtrip() {
     }
 
     let t = c.call(r#"{"op":"thompson"}"#);
+    assert_eq!(t.get("exhausted").unwrap().as_bool(), Some(false), "{t:?}");
     let next = t.get("next").unwrap().as_usize().unwrap();
     assert!(next < 256);
 
@@ -360,7 +386,12 @@ fn compaction_boundary_keeps_predictions_bitwise_and_versions_monotone() {
         let nodes: Vec<usize> = obs.iter().map(|o| o.0).collect();
         let ys: Vec<f64> = obs.iter().map(|o| o.1).collect();
         model.set_data(&nodes, &ys);
-        let mut rng = Rng::new(7).split(obs.len() as u64);
+        // The response's (graph_version, rng_seq) pair fully determines
+        // the prediction: rng = server_rng.split(0xBA7C).split(rng_seq)
+        // (see server::snapshot docs). Observes don't advance the
+        // server rng, so its base is still the seed.
+        let seq = p.get("rng_seq").unwrap().as_usize().unwrap() as u64;
+        let mut rng = Rng::new(7).split(0xBA7C).split(seq);
         let (mean, var) = model.predict(4, &mut rng);
         let served_mean = p.get("mean").unwrap().as_arr().unwrap();
         let served_var = p.get("var").unwrap().as_arr().unwrap();
@@ -381,6 +412,293 @@ fn compaction_boundary_keeps_predictions_bitwise_and_versions_monotone() {
     }
     let s = c.call(r#"{"op":"stats"}"#);
     assert_eq!(s.get("overlay_rows").unwrap().as_usize(), Some(0), "{s:?}");
+    c.call(r#"{"op":"shutdown"}"#);
+}
+
+/// Tentpole invariant: `predict` is wait-free — neither the direct
+/// handler path nor the batcher path may acquire the model mutex. The
+/// lifetime lock-acquisition counter must not move across any number
+/// of predicts through either entry point.
+#[test]
+fn predicts_never_acquire_the_model_lock() {
+    let (state, _, _) = in_process_state(96, 7);
+    for i in 0..4 {
+        let r = handle(
+            &state,
+            &Request::Observe { node: i * 20, y: (i as f64).cos() },
+        );
+        assert!(r.ok, "{r:?}");
+    }
+    let batcher = Batcher::new(8);
+    let before = state.model_lock_acquisitions.load(Ordering::SeqCst);
+    for i in 0..5 {
+        let r = handle(
+            &state,
+            &Request::Predict { nodes: vec![i, i + 30], samples: 2 },
+        );
+        assert!(r.ok, "{r:?}");
+        let r = batcher.submit(
+            &state,
+            Request::Predict { nodes: vec![i + 1, i + 50], samples: 2 },
+        );
+        assert!(r.ok, "{r:?}");
+    }
+    let after = state.model_lock_acquisitions.load(Ordering::SeqCst);
+    assert_eq!(
+        before, after,
+        "a predict path acquired the model mutex ({} -> {})",
+        before, after
+    );
+}
+
+/// The two predict entry points (`handle` and the batcher) are one
+/// implementation: with the same snapshot and rng sequence rule, both
+/// must serve numbers bitwise-identical to a from-scratch model driven
+/// by `server_rng.split(0xBA7C).split(rng_seq)`.
+#[test]
+fn both_predict_entry_points_are_bitwise_identical() {
+    let (state, hypers, cfg) = in_process_state(96, 7);
+    let obs = [(3usize, 0.5f64), (40, -0.2), (77, 1.1)];
+    for &(node, y) in &obs {
+        let r = handle(&state, &Request::Observe { node, y });
+        assert!(r.ok, "{r:?}");
+    }
+    let batcher = Batcher::new(8);
+    let nodes = vec![0usize, 9, 55];
+    let direct =
+        handle(&state, &Request::Predict { nodes: nodes.clone(), samples: 4 });
+    let batched = batcher
+        .submit(&state, Request::Predict { nodes: nodes.clone(), samples: 4 });
+    // Reference: model rebuilt from scratch (same graph seed), same
+    // observations, rng derived purely from the echoed rng_seq.
+    let g = generators::ring(96);
+    let full = StreamingFeatures::new(g, cfg, hypers.modulation.coeffs(), 0);
+    let mut model = GpModel::new(full.components(), hypers, &[], &[]);
+    model.set_data(&[3, 40, 77], &[0.5, -0.2, 1.1]);
+    for (label, resp) in [("handle", direct), ("batcher", batched)] {
+        let j = resp.to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{label}: {j:?}");
+        let seq = j.get("rng_seq").unwrap().as_usize().unwrap() as u64;
+        let mut rng = Rng::new(7).split(0xBA7C).split(seq);
+        let (mean, var) = model.predict(4, &mut rng);
+        let served_mean = j.get("mean").unwrap().as_arr().unwrap();
+        let served_var = j.get("var").unwrap().as_arr().unwrap();
+        for (k, &node) in nodes.iter().enumerate() {
+            assert_eq!(
+                served_mean[k].as_f64().unwrap(),
+                mean[node],
+                "{label}: mean at node {node} not bitwise the reference"
+            );
+            assert_eq!(
+                served_var[k].as_f64().unwrap(),
+                var[node],
+                "{label}: var at node {node} not bitwise the reference"
+            );
+        }
+    }
+}
+
+/// Regression: a NaN observation used to panic `sample`/`thompson` at
+/// the `partial_cmp(..).unwrap()` ranking step. It must now surface as
+/// a typed `internal` error — and the server must keep serving after.
+#[test]
+fn nan_poisoned_posterior_yields_typed_error_not_panic() {
+    let (state, _, _) = in_process_state(16, 7);
+    let r = handle(&state, &Request::Observe { node: 0, y: f64::NAN });
+    assert!(r.ok, "observe does not validate y: {r:?}");
+    for req in [Request::Sample, Request::Thompson] {
+        let resp = handle(&state, &req);
+        let j = resp.to_json();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false), "{j:?}");
+        assert_eq!(
+            j.get("error_kind").unwrap().as_str(),
+            Some("internal"),
+            "{j:?}"
+        );
+    }
+    // Not a one-shot: the handler stays up and keeps answering.
+    let again = handle(&state, &Request::Sample).to_json();
+    assert_eq!(again.get("ok").unwrap().as_bool(), Some(false));
+}
+
+/// Regression: `thompson` with every node already queried used to fall
+/// back to `unwrap_or(0)` — silently re-recommending node 0. It must
+/// now say `exhausted: true` and carry no `next` field.
+#[test]
+fn thompson_reports_exhaustion_instead_of_node_zero() {
+    let addr = start_server(4);
+    let mut c = Client::connect(addr);
+    for node in 0..4 {
+        let r = c.call(&format!(
+            r#"{{"op":"observe","node":{node},"y":{}}}"#,
+            node as f64 * 0.2
+        ));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    }
+    let t = c.call(r#"{"op":"thompson"}"#);
+    assert_eq!(t.get("ok").unwrap().as_bool(), Some(true), "{t:?}");
+    assert_eq!(t.get("exhausted").unwrap().as_bool(), Some(true), "{t:?}");
+    assert!(t.get("next").is_none(), "exhausted reply must not name a node: {t:?}");
+    c.call(r#"{"op":"shutdown"}"#);
+}
+
+/// Satellite stress test: mixed predict/delta traffic with the overlay
+/// compaction threshold forced to 1, so every write batch folds the
+/// stream and model overlays mid-serving. Asserts, per connection,
+/// that `graph_version` is monotone; that the writer finishes while
+/// readers stay pinned on predicts (wait-free reads can't starve
+/// writers); and — after the race — that every served response is
+/// bitwise what a from-scratch model at its stamped version computes
+/// under its echoed `rng_seq`.
+#[test]
+fn concurrent_predicts_and_deltas_stay_consistent_across_compactions() {
+    let n = 128;
+    let g = generators::ring(n);
+    let cfg = WalkConfig {
+        n_walks: 16,
+        p_halt: 0.1,
+        max_len: 3,
+        threads: 1,
+        ..Default::default()
+    };
+    let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+    let mut stream = StreamingFeatures::new(
+        g.clone(),
+        cfg.clone(),
+        hypers.modulation.coeffs(),
+        0,
+    );
+    stream.set_compact_threshold(1); // every delta compacts
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let hypers_srv = hypers.clone();
+    std::thread::spawn(move || {
+        grfgp::server::serve_on(stream, hypers_srv, listener, 7).unwrap();
+    });
+    // Fixed observations seeded before the race, so a reference rebuild
+    // varies only by graph version.
+    let obs: Vec<(usize, f64)> =
+        (0..5).map(|i| (i * 25, (i as f64 * 0.4).sin())).collect();
+    let mut c = Client::connect(addr);
+    for &(node, y) in &obs {
+        let r =
+            c.call(&format!(r#"{{"op":"observe","node":{node},"y":{y}}}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+    }
+    let edges: Vec<(usize, usize, f64)> =
+        (0..6).map(|k| (k * 17 % n, (k * 17 + 64) % n, 0.5)).collect();
+    let writer = {
+        let edges = edges.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            for (i, &(u, v, w)) in edges.iter().enumerate() {
+                let r = c.call(&format!(
+                    r#"{{"op":"add_edge","u":{u},"v":{v},"w":{w}}}"#
+                ));
+                assert_eq!(
+                    r.get("ok").unwrap().as_bool(),
+                    Some(true),
+                    "writer delta {i}: {r:?}"
+                );
+                // Single sequential writer ⇒ versions 1..=len in order.
+                assert_eq!(
+                    r.get("graph_version").unwrap().as_usize(),
+                    Some(i + 1),
+                    "{r:?}"
+                );
+            }
+        })
+    };
+    let probe = [0usize, 33, 90];
+    let readers: Vec<_> = (0..3)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let mut last = 0usize;
+                let mut seen: Vec<(usize, usize, Vec<f64>, Vec<f64>)> =
+                    Vec::new();
+                for _ in 0..8 {
+                    let p = c.call(
+                        r#"{"op":"predict","nodes":[0,33,90],"samples":2}"#,
+                    );
+                    assert_eq!(
+                        p.get("ok").unwrap().as_bool(),
+                        Some(true),
+                        "{p:?}"
+                    );
+                    let ver =
+                        p.get("graph_version").unwrap().as_usize().unwrap();
+                    assert!(
+                        ver >= last,
+                        "per-connection version went backwards: {ver} < {last}"
+                    );
+                    last = ver;
+                    let seq = p.get("rng_seq").unwrap().as_usize().unwrap();
+                    let mean: Vec<f64> = p
+                        .get("mean")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|v| v.as_f64().unwrap())
+                        .collect();
+                    let var: Vec<f64> = p
+                        .get("var")
+                        .unwrap()
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|v| v.as_f64().unwrap())
+                        .collect();
+                    seen.push((ver, seq, mean, var));
+                }
+                seen
+            })
+        })
+        .collect();
+    let responses: Vec<(usize, usize, Vec<f64>, Vec<f64>)> = readers
+        .into_iter()
+        .flat_map(|h| h.join().unwrap())
+        .collect();
+    writer
+        .join()
+        .expect("writer must make progress while readers stay pinned");
+    // Post-hoc bitwise verification: version v ⇔ the first v edges.
+    let obs_nodes: Vec<usize> = obs.iter().map(|o| o.0).collect();
+    let obs_ys: Vec<f64> = obs.iter().map(|o| o.1).collect();
+    let mut models: std::collections::HashMap<usize, GpModel> =
+        std::collections::HashMap::new();
+    for (ver, seq, mean, var) in responses {
+        let model = models.entry(ver).or_insert_with(|| {
+            let mut gv = g.clone();
+            for &(u, v, w) in &edges[..ver] {
+                gv.add_edge(u, v, w);
+            }
+            let full = StreamingFeatures::new(
+                gv,
+                cfg.clone(),
+                hypers.modulation.coeffs(),
+                0,
+            );
+            let mut m =
+                GpModel::new(full.components(), hypers.clone(), &[], &[]);
+            m.set_data(&obs_nodes, &obs_ys);
+            m
+        });
+        let mut rng = Rng::new(7).split(0xBA7C).split(seq as u64);
+        let (rm, rv) = model.predict(2, &mut rng);
+        for (j, &node) in probe.iter().enumerate() {
+            assert_eq!(
+                mean[j], rm[node],
+                "v{ver} seq{seq}: mean at node {node} not bitwise"
+            );
+            assert_eq!(
+                var[j], rv[node],
+                "v{ver} seq{seq}: var at node {node} not bitwise"
+            );
+        }
+    }
+    let mut c = Client::connect(addr);
     c.call(r#"{"op":"shutdown"}"#);
 }
 
