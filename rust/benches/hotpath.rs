@@ -59,6 +59,17 @@
 //! `server_mixed_p99` (p99 predict latency under a concurrent
 //! edge-toggling writer) — the end-to-end rows for the snapshot-based
 //! wait-free read path; both run in the quick CI profile.
+//!
+//! PR 8 additions (telemetry): `telemetry_overhead` /
+//! `telemetry_overhead_disabled` — per-record cost of one registry
+//! histogram record (enabled: two relaxed atomic adds; disabled: one
+//! relaxed load), the price every instrumented hot path pays;
+//! `metrics_scrape` — one full `{"op":"metrics"}` export (JSON +
+//! Prometheus text) over the whole catalogue; and
+//! `metric_grf_variance_iid` — the mean per-entry kernel-estimate
+//! variance across independent walk seeds
+//! (`walks::kernel_variance_iid`, also published as the registry gauge
+//! of the same name). All run in the quick CI profile.
 
 use grfgp::bo::{run_policy, BoConfig, ThompsonPolicy};
 use grfgp::gp::{GpModel, Hypers, Modulation};
@@ -813,6 +824,79 @@ fn main() {
         rows.push(BenchRow::new("server_mixed_p99", ns, 1, p99));
         srv_call(&mut s0, &mut r0, "{\"op\":\"shutdown\"}");
         srv.join().unwrap();
+    }
+
+    // --- Telemetry: record-path cost + scrape cost --------------------
+    // The record path is two relaxed fetch_adds on static atomics (no
+    // locks, no allocation — the zero-allocation claim is asserted by a
+    // counting global allocator in tests/obs.rs); the disabled path is
+    // a single relaxed load. Row value = per-record nanoseconds.
+    {
+        use grfgp::obs;
+        let iters = 1_000_000usize;
+        obs::set_enabled(true);
+        let r = bench(&format!("telemetry_record_on/I={iters}"), 1, 5, || {
+            for i in 0..iters {
+                obs::registry::STOPWATCH_NS.record((i & 0xFFFF) as u64);
+            }
+            obs::registry::STOPWATCH_NS.count()
+        });
+        rows.push(BenchRow::new(
+            "telemetry_overhead",
+            iters,
+            1,
+            r.mean_s / iters as f64,
+        ));
+        obs::set_enabled(false);
+        let r = bench(&format!("telemetry_record_off/I={iters}"), 1, 5, || {
+            for i in 0..iters {
+                obs::registry::STOPWATCH_NS.record((i & 0xFFFF) as u64);
+            }
+            obs::registry::STOPWATCH_NS.count()
+        });
+        obs::set_enabled(true);
+        rows.push(BenchRow::new(
+            "telemetry_overhead_disabled",
+            iters,
+            1,
+            r.mean_s / iters as f64,
+        ));
+
+        // One full wire scrape: JSON export + Prometheus rendering of
+        // the entire catalogue (what a `{"op":"metrics"}` request costs
+        // the server, minus socket IO).
+        let r = bench("metrics_scrape", 1, 10, || {
+            obs::registry::to_json().to_string().len()
+                + obs::prom::render().len()
+        });
+        rows.push(BenchRow::new("metrics_scrape", 1, 1, r.mean_s));
+    }
+
+    // --- GRF estimator quality: variance across walk seeds ------------
+    // Mean per-entry variance of K̂ = Φ Φᵀ across independent walk
+    // seeds (also published as the `grf_variance_iid` registry gauge).
+    // `metric_*` convention: dimensionless value in ns_per_op, never
+    // gated — this is the baseline a QMC walker would have to beat.
+    {
+        let nv = 1024usize;
+        let gv = generators::ring(nv);
+        let vcfg = WalkConfig {
+            n_walks: 32,
+            p_halt: 0.1,
+            max_len: 3,
+            ..Default::default()
+        };
+        let coeffs = vec![1.0, 0.5, 0.25, 0.12];
+        let var = grfgp::walks::kernel_variance_iid(
+            &gv, &vcfg, &coeffs, &[101, 102, 103], 64, 9,
+        );
+        println!("metric_grf_variance_iid: {var:.3e} (n={nv}, 3 seeds)");
+        rows.push(BenchRow {
+            name: "metric_grf_variance_iid".into(),
+            n: nv,
+            b: 1,
+            ns_per_op: var,
+        });
     }
 
     // Machine-readable record for cross-PR perf tracking.

@@ -15,11 +15,13 @@ use crate::gp::{GpModel, Hypers, Modulation};
 use crate::graph::generators::ring;
 use crate::linalg::chol::Cholesky;
 use crate::linalg::{dot, Mat};
+use crate::obs::registry::{EXP_INFER_NS, EXP_INIT_NS, EXP_TRAIN_NS};
+use crate::obs::span::timed;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::powerlaw::fit_powerlaw;
 use crate::util::rng::Rng;
-use crate::util::timer::{mean_std, timeit};
+use crate::util::timer::mean_std;
 use crate::walks::{sample_components, WalkConfig};
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -61,7 +63,7 @@ fn measure_sparse(n: usize, seed: u64, args: &Args) -> Measure {
     let cfg = walk_cfg(args);
     let steps = args.usize("train-steps", 10);
 
-    let (comps, init_s) = timeit(|| sample_components(&g, &cfg, seed));
+    let (comps, init_s) = timed(&EXP_INIT_NS, || sample_components(&g, &cfg, seed));
     let memory_mb = comps.memory_bytes() as f64 / 1e6;
     let hypers = Hypers::new(
         Modulation::diffusion(1.0, 1.0, cfg.max_len),
@@ -72,8 +74,8 @@ fn measure_sparse(n: usize, seed: u64, args: &Args) -> Measure {
     model.solve.max_iters = args.usize("cg-iters", 32);
     model.solve.tol = 1e-7;
 
-    let (_, train_s) = timeit(|| model.fit(steps, 0.05, &mut rng));
-    let (_, infer_s) = timeit(|| {
+    let (_, train_s) = timed(&EXP_TRAIN_NS, || model.fit(steps, 0.05, &mut rng));
+    let (_, infer_s) = timed(&EXP_INFER_NS, || {
         let _ = model.posterior_mean();
         for _ in 0..4 {
             let _ = model.posterior_sample(&mut rng);
@@ -101,7 +103,7 @@ fn measure_dense(n: usize, seed: u64, args: &Args) -> Measure {
     let probes = args.usize("probes", 4);
 
     // Kernel init: walks + DENSE materialisation of K̂ = Φ Φᵀ.
-    let (comps, walk_s) = timeit(|| sample_components(&g, &cfg, seed));
+    let (comps, walk_s) = timed(&EXP_INIT_NS, || sample_components(&g, &cfg, seed));
     let mut hypers = Hypers::new(
         Modulation::diffusion(1.0, 1.0, cfg.max_len),
         0.1,
@@ -115,7 +117,7 @@ fn measure_dense(n: usize, seed: u64, args: &Args) -> Measure {
         let phi_d = Mat::from_rows(&phi.to_dense());
         (phi.clone(), phi_d.matmul_par(&phi_d.transpose(), 0))
     };
-    let ((phi0, k0), mat_s) = timeit(|| materialise(&mut prepared, &hypers));
+    let ((phi0, k0), mat_s) = timed(&EXP_INIT_NS, || materialise(&mut prepared, &hypers));
     let memory_mb = (k0.memory_bytes() + phi0.to_dense().len()) as f64 / 1e6;
     let init_s = walk_s + mat_s;
 
@@ -123,7 +125,7 @@ fn measure_dense(n: usize, seed: u64, args: &Args) -> Measure {
     let mut opt = crate::gp::adam::Adam::new(hypers.n_params(), 0.05);
     let mut phi = phi0;
     let mut k = k0;
-    let (_, train_s) = timeit(|| {
+    let (_, train_s) = timed(&EXP_TRAIN_NS, || {
         for _ in 0..steps {
             let sigma2 = hypers.sigma_n2();
             let mut h = Mat::zeros(n, n);
@@ -190,7 +192,7 @@ fn measure_dense(n: usize, seed: u64, args: &Args) -> Measure {
     });
 
     // Inference: dense posterior mean + variance on the test half.
-    let (_, infer_s) = timeit(|| {
+    let (_, infer_s) = timed(&EXP_INFER_NS, || {
         let sigma2 = hypers.sigma_n2();
         let mut h = Mat::zeros(n, n);
         for i in 0..n {

@@ -24,6 +24,7 @@ pub mod exp;
 pub mod gp;
 pub mod graph;
 pub mod linalg;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod sparse;

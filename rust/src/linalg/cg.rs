@@ -23,6 +23,7 @@
 //!   masked-row-norm construction.
 
 use super::{axpy, column_dots, dot};
+use crate::obs;
 
 /// CG run statistics.
 #[derive(Clone, Copy, Debug)]
@@ -134,14 +135,27 @@ where
         rz = rz_new;
         rr = rr_new;
         iterations += 1;
+        // Residual trajectory: one decades sample per iteration (how
+        // many digits the solve has earned so far). Atomic fetch_add —
+        // negligible next to the operator application it follows.
+        if obs::enabled() {
+            obs::registry::record_residual_decades(rr.sqrt() / b_norm);
+        }
     }
     let residual_norm = rr.sqrt() / b_norm;
+    let converged = residual_norm <= tol;
+    obs::registry::CG_SOLVES.inc();
+    obs::registry::CG_ITERS.record(iterations as u64);
+    obs::registry::CG_LAST_RESIDUAL.set(residual_norm);
+    if !converged {
+        obs::registry::CG_NOCONVERGED.inc();
+    }
     (
         x,
         CgStats {
             iterations,
             residual_norm,
-            converged: residual_norm <= tol,
+            converged,
         },
     )
 }
@@ -306,7 +320,7 @@ where
         }
     }
 
-    let stats = (0..ncols)
+    let stats: Vec<CgStats> = (0..ncols)
         .map(|j| {
             let residual_norm = rr[j].sqrt() / b_norm[j];
             CgStats {
@@ -316,6 +330,23 @@ where
             }
         })
         .collect();
+    obs::registry::CG_BLOCK_SOLVES.inc();
+    if obs::enabled() {
+        for st in &stats {
+            obs::registry::CG_BLOCK_ITERS.record(st.iterations as u64);
+            obs::registry::record_residual_decades(st.residual_norm);
+            if !st.converged {
+                obs::registry::CG_NOCONVERGED.inc();
+            }
+        }
+        if let Some(worst) = stats
+            .iter()
+            .map(|st| st.residual_norm)
+            .max_by(f64::total_cmp)
+        {
+            obs::registry::CG_LAST_RESIDUAL.set(worst);
+        }
+    }
     (x, stats)
 }
 

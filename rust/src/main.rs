@@ -32,7 +32,7 @@ USAGE:
   grfgp serve [--graph ring --n 4096 --addr 127.0.0.1:7701]
               [--max-frame-bytes B --max-parse-depth D --unicode strict|replace]
               [--max-conns C --read-timeout-ms T --idle-timeout-s T --write-timeout-s T]
-              [--max-batch K]
+              [--max-batch K] [--slow-request-ms T]
   grfgp info  [--artifacts artifacts]
 
 Common experiment options:
@@ -169,6 +169,9 @@ fn run_serve(args: &Args) -> Result<()> {
         // Micro-batching width: how many compatible requests one
         // engine call may serve (predict unions / write batches).
         max_batch: args.usize("max-batch", defaults.max_batch),
+        // Slow-request outlier log: one structured JSON line to stderr
+        // per request slower than this (0 = off).
+        slow_request_ms: args.u64("slow-request-ms", defaults.slow_request_ms),
     };
     grfgp::server::serve_with(stream, hypers, &addr, seed, config)
 }

@@ -1,0 +1,49 @@
+//! First-class telemetry — lock-free metrics, solve-path spans, and
+//! the wire-exported observability surface.
+//!
+//! The paper's headline claim is `O(N^{3/2})` inference; this module
+//! is how the repo *watches* that claim hold under load. Three pieces:
+//!
+//! * [`registry`] — a global, dependency-free metrics registry of
+//!   named atomic [`registry::Counter`]s, [`registry::Gauge`]s, and
+//!   fixed-bucket log₂-scale latency [`registry::Histo`]grams. The
+//!   record path is **lock-free and allocation-free**: every metric is
+//!   a `static` of plain `AtomicU64`s (one per histogram bucket), so
+//!   recording is a handful of relaxed `fetch_add`s — safe inside the
+//!   CG inner loop and on the wait-free predict path. p50/p95/p99 are
+//!   derived from the buckets at *export* time, never maintained on
+//!   the hot path.
+//! * [`span`] — RAII timing guards ([`span::Span`]) and a
+//!   [`span::timed`] closure helper feeding the histograms. These
+//!   instrument the layers that define the `N^{3/2}` story: CG
+//!   iterations-to-converge and residual decades per solve
+//!   (`linalg::cg`), SpMV/SpMM dispatch time by layout
+//!   (`sparse::RowOverlay`), delta-batch resample fan-out and
+//!   compaction duration (`stream`), snapshot publish latency and
+//!   predict-vs-publish lag (`server::snapshot`), and per-request wall
+//!   time by op (`server`).
+//! * [`prom`] — a Prometheus-text rendering of the registry, served
+//!   (with the JSON form) by the server's `{"op":"metrics"}` wire op.
+//!
+//! Telemetry is **on by default** and can be flipped off globally with
+//! [`set_enabled`] (a single `AtomicBool` checked at each record
+//! site); the `telemetry_overhead` bench row in `benches/hotpath.rs`
+//! tracks the cost of both states, and `tests/obs.rs` asserts the
+//! record path performs zero heap allocations and that the predict
+//! path still takes zero model locks with telemetry enabled.
+//!
+//! ## Torn-read discipline
+//!
+//! The registry has no global lock, so a scrape concurrent with
+//! traffic cannot be an atomic snapshot across *different* metrics.
+//! What it does guarantee, by construction: each exported histogram's
+//! `count` is computed from the very bucket values exported next to it
+//! (`count == Σ buckets`, always, even mid-traffic), and counters are
+//! monotone — two consecutive scrapes never observe a counter going
+//! backwards. `tests/obs.rs` asserts both under concurrent load.
+
+pub mod prom;
+pub mod registry;
+pub mod span;
+
+pub use registry::{enabled, set_enabled};

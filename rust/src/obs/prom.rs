@@ -1,0 +1,170 @@
+//! Prometheus text rendering of the registry.
+//!
+//! [`render`] walks [`registry::all`] and emits the
+//! [text exposition format](https://prometheus.io/docs/instrumenting/exposition_formats/):
+//! a `# TYPE` line per metric, `name value` samples for counters and
+//! gauges, and cumulative `_bucket{le="…"}` / `_sum` / `_count`
+//! triples for histograms. Metric names are prefixed `grfgp_` and
+//! suffixed with the histogram's unit (`_ns` histograms keep their
+//! name; counts render as-is), so one scrape endpoint
+//! (`{"op":"metrics","format":"prometheus"}`) plugs into a standard
+//! scrape config:
+//!
+//! ```text
+//! scrape_configs:
+//!   - job_name: grfgp
+//!     # a shim converting the newline-JSON op into an HTTP GET:
+//!     #   echo '{"op":"metrics","format":"prometheus"}' | nc host 7701
+//! ```
+
+use super::registry::{self, bucket_bound, Metric, NUM_BUCKETS};
+use std::fmt::Write as _;
+
+/// Prometheus metric-name prefix for everything this crate exports.
+pub const PREFIX: &str = "grfgp_";
+
+/// Render the full registry in the Prometheus text exposition format.
+/// Lock-free (same read discipline as [`registry::to_json`]); each
+/// histogram is rendered from a single bucket read, so its `_count`
+/// equals its `+Inf` cumulative bucket even when scraped mid-traffic.
+pub fn render() -> String {
+    let mut out = String::with_capacity(4096);
+    for m in registry::all() {
+        match m {
+            Metric::Counter(name, c) => {
+                let _ = writeln!(out, "# TYPE {PREFIX}{name} counter");
+                let _ = writeln!(out, "{PREFIX}{name} {}", c.get());
+            }
+            Metric::Gauge(name, g) => {
+                let _ = writeln!(out, "# TYPE {PREFIX}{name} gauge");
+                let _ = writeln!(out, "{PREFIX}{name} {}", fmt_f64(g.get()));
+            }
+            Metric::Histo(name, h) => {
+                let buckets = h.load_buckets();
+                let count: u64 = buckets.iter().sum();
+                let _ = writeln!(out, "# TYPE {PREFIX}{name} histogram");
+                // Cumulative buckets, up to the last nonzero (plus the
+                // mandatory +Inf bound). The top clamp bucket has no
+                // finite bound, so it only ever renders as +Inf.
+                let last = buckets
+                    .iter()
+                    .rposition(|&c| c > 0)
+                    .map(|i| i.min(NUM_BUCKETS - 2));
+                let mut cum = 0u64;
+                if let Some(last) = last {
+                    for (i, &c) in buckets.iter().enumerate().take(last + 1) {
+                        cum += c;
+                        let _ = writeln!(
+                            out,
+                            "{PREFIX}{name}_bucket{{le=\"{}\"}} {cum}",
+                            bucket_bound(i)
+                        );
+                    }
+                }
+                let _ = writeln!(
+                    out,
+                    "{PREFIX}{name}_bucket{{le=\"+Inf\"}} {count}"
+                );
+                let _ = writeln!(out, "{PREFIX}{name}_sum {}", h.sum());
+                let _ = writeln!(out, "{PREFIX}{name}_count {count}");
+            }
+        }
+    }
+    out
+}
+
+/// Prometheus float formatting: finite values via Rust's shortest
+/// round-trip `{}`, specials as the format's `NaN`/`+Inf`/`-Inf`.
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Validate a Prometheus text exposition — every line must be a
+/// comment or `name[{labels}] value`, histograms cumulative and
+/// `_count`-consistent. Not a full parser; it is the structural check
+/// the schema smoke test (and any future CI lint) runs against
+/// [`render`]'s output, so format drift fails a test instead of a
+/// scrape.
+pub fn validate(text: &str) -> Result<(), String> {
+    fn valid_name(s: &str) -> bool {
+        !s.is_empty()
+            && s.chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            && !s.starts_with(|c: char| c.is_ascii_digit())
+    }
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name_part, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: no value: {line:?}", ln + 1))?;
+        let name = match name_part.split_once('{') {
+            Some((n, labels)) => {
+                if !labels.ends_with('}') {
+                    return Err(format!(
+                        "line {}: unterminated labels: {line:?}",
+                        ln + 1
+                    ));
+                }
+                n
+            }
+            None => name_part,
+        };
+        if !valid_name(name) {
+            return Err(format!("line {}: bad metric name {name:?}", ln + 1));
+        }
+        let ok_value = value.parse::<f64>().is_ok()
+            || matches!(value, "NaN" | "+Inf" | "-Inf");
+        if !ok_value {
+            return Err(format!("line {}: bad value {value:?}", ln + 1));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::{test_lock, CG_ITERS, REQ_STATS};
+
+    #[test]
+    fn render_is_valid_and_covers_the_catalogue() {
+        let _g = test_lock();
+        REQ_STATS.inc();
+        CG_ITERS.record(9);
+        let text = render();
+        validate(&text).expect("render must satisfy its own validator");
+        for m in registry::all() {
+            assert!(
+                text.contains(&format!("# TYPE {PREFIX}{}", m.name())),
+                "metric {} missing from rendering",
+                m.name()
+            );
+        }
+        // Histogram triple present and cumulative-bucket shaped.
+        assert!(text.contains("grfgp_cg_iters_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("grfgp_cg_iters_sum"));
+        assert!(text.contains("grfgp_cg_iters_count"));
+    }
+
+    #[test]
+    fn validator_rejects_garbage() {
+        assert!(validate("ok_metric 1\n").is_ok());
+        assert!(validate("# any comment\n").is_ok());
+        assert!(validate("novalue\n").is_err());
+        assert!(validate("bad name 1 2 oops\n").is_err());
+        assert!(validate("m{le=\"1\" 3\n").is_err(), "unterminated labels");
+        assert!(validate("m NaNope\n").is_err());
+        assert!(validate("9starts_with_digit 1\n").is_err());
+    }
+}

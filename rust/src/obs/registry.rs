@@ -1,0 +1,594 @@
+//! The global lock-free metrics registry.
+//!
+//! Every metric is a `static` made of plain `AtomicU64`s, declared in
+//! one catalogue ([`all`]) so the export surface cannot drift from the
+//! record sites. The record path (`inc`/`add`/`set`/`record`) is a
+//! handful of relaxed atomic RMWs — no locks, no allocation, no
+//! branching beyond the global [`enabled`] check — which is what makes
+//! it safe inside the CG inner loop and on the wait-free predict path.
+//!
+//! ## Histogram bucket scheme
+//!
+//! [`Histo`] uses fixed log₂ buckets: a recorded value `v` lands in
+//! bucket `bits(v) = 64 − v.leading_zeros()` (bucket 0 holds `v == 0`,
+//! bucket `i ≥ 1` holds `v ∈ [2^(i-1), 2^i)`), clamped to
+//! [`NUM_BUCKETS`]` − 1`. With 44 buckets the top bucket starts at
+//! `2^42` ns ≈ 73 min — everything slower saturates there. Quantiles
+//! ([`Histo::quantile`]) walk the buckets and return the upper bound
+//! `2^i − 1` of the bucket containing the q-th sample — a ≤ 2×
+//! overestimate by construction, which is the right bias for latency
+//! alerting. Units are per-histogram ([`Unit::Nanos`] for spans,
+//! [`Unit::Count`] for iteration/fan-out distributions) and exported
+//! so renderers can convert.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Global telemetry switch — on by default. Off, every record site
+/// early-returns after one relaxed load (the `telemetry_overhead`
+/// bench row tracks both states).
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Is telemetry recording currently enabled?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip telemetry recording globally (scrapes keep working either
+/// way — disabling only freezes the values).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Monotone event counter.
+pub struct Counter {
+    val: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter { val: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.val.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.val.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in one `AtomicU64`).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        // 0u64 is the bit pattern of +0.0, so a never-set gauge reads 0.
+        Gauge { bits: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if enabled() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+/// What a histogram's recorded values measure (drives rendering).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Unit {
+    /// Durations in nanoseconds (spans).
+    Nanos,
+    /// Dimensionless counts (CG iterations, resample fan-out, …).
+    Count,
+}
+
+impl Unit {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Unit::Nanos => "ns",
+            Unit::Count => "count",
+        }
+    }
+}
+
+/// Fixed bucket count: log₂ buckets 0..=43 (top bucket opens at
+/// 2^42 ns ≈ 73 min; larger values clamp into it).
+pub const NUM_BUCKETS: usize = 44;
+
+/// Log₂-bucket histogram: one `AtomicU64` per bucket plus a running
+/// value sum. `record` is two relaxed `fetch_add`s — no allocation, no
+/// lock. The count is *not* stored separately: exports derive it from
+/// the buckets they just read, so an exported `count` always equals
+/// the sum of the exported buckets even mid-traffic (see the module
+/// docs of [`crate::obs`], "Torn-read discipline").
+pub struct Histo {
+    unit: Unit,
+    buckets: [AtomicU64; NUM_BUCKETS],
+    sum: AtomicU64,
+}
+
+/// Bucket index of a value (see module docs for the scheme).
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(NUM_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the clamp
+/// bucket).
+pub fn bucket_bound(i: usize) -> u64 {
+    if i >= NUM_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+impl Histo {
+    pub const fn new(unit: Unit) -> Histo {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histo { unit, buckets: [ZERO; NUM_BUCKETS], sum: AtomicU64::new(0) }
+    }
+
+    pub fn unit(&self) -> Unit {
+        self.unit
+    }
+
+    /// Record one value (ns for [`Unit::Nanos`], a count otherwise).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if enabled() {
+            self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+            self.sum.fetch_add(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a duration (saturating past ~584 years).
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// One coherent read of the buckets (the unit of export).
+    pub fn load_buckets(&self) -> [u64; NUM_BUCKETS] {
+        let mut out = [0u64; NUM_BUCKETS];
+        for (o, b) in out.iter_mut().zip(&self.buckets) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Total recorded samples (derived from one bucket read).
+    pub fn count(&self) -> u64 {
+        self.load_buckets().iter().sum()
+    }
+
+    /// Sum of all recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Quantile estimate (`q` in [0, 1]): the upper bound of the
+    /// bucket containing the ⌈q·count⌉-th sample, or `None` when
+    /// empty. See the module docs for the (≤ 2×, upward) bias.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        quantile_of(&self.load_buckets(), q)
+    }
+}
+
+/// [`Histo::quantile`] over an already-loaded bucket array — exports
+/// read the buckets once and derive count + every quantile from that
+/// single read.
+pub fn quantile_of(buckets: &[u64; NUM_BUCKETS], q: f64) -> Option<u64> {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return Some(bucket_bound(i));
+        }
+    }
+    Some(bucket_bound(NUM_BUCKETS - 1))
+}
+
+/// One registry entry: a name plus a reference to the static metric.
+pub enum Metric {
+    Counter(&'static str, &'static Counter),
+    Gauge(&'static str, &'static Gauge),
+    Histo(&'static str, &'static Histo),
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Counter(n, _) | Metric::Gauge(n, _) | Metric::Histo(n, _) => n,
+        }
+    }
+}
+
+macro_rules! catalogue {
+    (
+        counters: [ $( ($cstat:ident, $cname:literal) ),* $(,)? ],
+        gauges:   [ $( ($gstat:ident, $gname:literal) ),* $(,)? ],
+        histos:   [ $( ($hstat:ident, $hname:literal, $hunit:expr) ),* $(,)? ],
+    ) => {
+        $( pub static $cstat: Counter = Counter::new(); )*
+        $( pub static $gstat: Gauge = Gauge::new(); )*
+        $( pub static $hstat: Histo = Histo::new($hunit); )*
+
+        /// Every metric in the registry, in catalogue order. This is
+        /// the single source of truth for the export surface: a metric
+        /// not listed here cannot be scraped.
+        pub fn all() -> &'static [Metric] {
+            static ALL: &[Metric] = &[
+                $( Metric::Counter($cname, &$cstat), )*
+                $( Metric::Gauge($gname, &$gstat), )*
+                $( Metric::Histo($hname, &$hstat), )*
+            ];
+            ALL
+        }
+    };
+}
+
+catalogue! {
+    counters: [
+        // Per-op request counters (bumped once per wire-dispatched
+        // request in `server::dispatch`).
+        (REQ_OBSERVE, "req_observe"),
+        (REQ_PREDICT, "req_predict"),
+        (REQ_ADD_EDGE, "req_add_edge"),
+        (REQ_REMOVE_EDGE, "req_remove_edge"),
+        (REQ_ADD_NODE, "req_add_node"),
+        (REQ_SAMPLE, "req_sample"),
+        (REQ_THOMPSON, "req_thompson"),
+        (REQ_STATS, "req_stats"),
+        (REQ_METRICS, "req_metrics"),
+        (REQ_SHUTDOWN, "req_shutdown"),
+        (REQ_FAULT, "req_fault"),
+        // Error replies by `error_kind` (wire + handler errors).
+        (ERR_PARSE, "errors_parse"),
+        (ERR_PROTOCOL, "errors_protocol"),
+        (ERR_OVERLOAD, "errors_overload"),
+        (ERR_INTERNAL, "errors_internal"),
+        // Requests slower than `--slow-request-ms` (logged too).
+        (SLOW_REQUESTS, "slow_requests"),
+        // Solver traffic.
+        (CG_SOLVES, "cg_solves"),
+        (CG_BLOCK_SOLVES, "cg_block_solves"),
+        (CG_NOCONVERGED, "cg_noconverged"),
+        // SpMV/SpMM dispatches by selected layout.
+        (SPMV_ELL, "spmv_ell"),
+        (SPMV_CSR, "spmv_csr"),
+        (SPMM_ELL, "spmm_ell"),
+        (SPMM_CSR, "spmm_csr"),
+        // Streaming delta engine.
+        (STREAM_DELTA_BATCHES, "stream_delta_batches"),
+        (STREAM_COMPACTIONS, "stream_compactions"),
+        // Read-snapshot publications.
+        (SNAPSHOT_PUBLISHES, "snapshot_publishes"),
+    ],
+    gauges: [
+        // Mean per-entry kernel-estimate variance across walk seeds —
+        // the GRF quality readout the QMC-walker roadmap item gates on.
+        (GRF_VARIANCE_IID, "grf_variance_iid"),
+        // Relative residual of the most recent CG solve.
+        (CG_LAST_RESIDUAL, "cg_last_residual"),
+    ],
+    histos: [
+        // Per-request wall time by op, recorded at the wire dispatch
+        // point (includes batching-window waits — the client-visible
+        // latency).
+        (REQUEST_NS_OBSERVE, "request_ns_observe", Unit::Nanos),
+        (REQUEST_NS_PREDICT, "request_ns_predict", Unit::Nanos),
+        (REQUEST_NS_ADD_EDGE, "request_ns_add_edge", Unit::Nanos),
+        (REQUEST_NS_REMOVE_EDGE, "request_ns_remove_edge", Unit::Nanos),
+        (REQUEST_NS_ADD_NODE, "request_ns_add_node", Unit::Nanos),
+        (REQUEST_NS_SAMPLE, "request_ns_sample", Unit::Nanos),
+        (REQUEST_NS_THOMPSON, "request_ns_thompson", Unit::Nanos),
+        (REQUEST_NS_STATS, "request_ns_stats", Unit::Nanos),
+        (REQUEST_NS_METRICS, "request_ns_metrics", Unit::Nanos),
+        (REQUEST_NS_SHUTDOWN, "request_ns_shutdown", Unit::Nanos),
+        (REQUEST_NS_FAULT, "request_ns_fault", Unit::Nanos),
+        // CG: iterations-to-converge per solve (scalar and block), and
+        // the residual trajectory as decades (−log₁₀ of the relative
+        // residual, one sample per iteration of the scalar path plus
+        // one per finished solve — how many digits each solve earns).
+        (CG_ITERS, "cg_iters", Unit::Count),
+        (CG_BLOCK_ITERS, "cg_block_iters", Unit::Count),
+        (CG_RESIDUAL_DECADES, "cg_residual_decades", Unit::Count),
+        // SpMV/SpMM dispatch time by selected layout.
+        (SPMV_ELL_NS, "spmv_ell_ns", Unit::Nanos),
+        (SPMV_CSR_NS, "spmv_csr_ns", Unit::Nanos),
+        (SPMM_ELL_NS, "spmm_ell_ns", Unit::Nanos),
+        (SPMM_CSR_NS, "spmm_csr_ns", Unit::Nanos),
+        // Streaming delta engine: union resample fan-out (walks),
+        // touched feature rows, resample + compaction durations.
+        (RESAMPLE_WALKS, "resample_walks", Unit::Count),
+        (RESAMPLE_ROWS, "resample_rows", Unit::Count),
+        (RESAMPLE_NS, "resample_ns", Unit::Nanos),
+        (COMPACT_NS, "compact_ns", Unit::Nanos),
+        // Snapshot path: publish latency (build + swap) and the age of
+        // the snapshot each predict computes off (predict-vs-publish
+        // lag — the staleness the RCU read path actually delivers).
+        (SNAPSHOT_PUBLISH_NS, "snapshot_publish_ns", Unit::Nanos),
+        (PREDICT_SNAPSHOT_LAG_NS, "predict_snapshot_lag_ns", Unit::Nanos),
+        // Experiment-driver phases (the one timing idiom: `exp`
+        // scenarios time through `obs::span::timed` into these).
+        (EXP_INIT_NS, "exp_init_ns", Unit::Nanos),
+        (EXP_TRAIN_NS, "exp_train_ns", Unit::Nanos),
+        (EXP_INFER_NS, "exp_infer_ns", Unit::Nanos),
+        // Catch-all for the deprecated `util::timer::Stopwatch` shim.
+        (STOPWATCH_NS, "stopwatch_ns", Unit::Nanos),
+    ],
+}
+
+/// The per-op request counter + latency histogram for a wire op name
+/// (`None` for unknown ops — they only count as protocol errors).
+pub fn request_metrics(op: &str) -> Option<(&'static Counter, &'static Histo)> {
+    Some(match op {
+        "observe" => (&REQ_OBSERVE, &REQUEST_NS_OBSERVE),
+        "predict" => (&REQ_PREDICT, &REQUEST_NS_PREDICT),
+        "add_edge" => (&REQ_ADD_EDGE, &REQUEST_NS_ADD_EDGE),
+        "remove_edge" => (&REQ_REMOVE_EDGE, &REQUEST_NS_REMOVE_EDGE),
+        "add_node" => (&REQ_ADD_NODE, &REQUEST_NS_ADD_NODE),
+        "sample" => (&REQ_SAMPLE, &REQUEST_NS_SAMPLE),
+        "thompson" => (&REQ_THOMPSON, &REQUEST_NS_THOMPSON),
+        "stats" => (&REQ_STATS, &REQUEST_NS_STATS),
+        "metrics" => (&REQ_METRICS, &REQUEST_NS_METRICS),
+        "shutdown" => (&REQ_SHUTDOWN, &REQUEST_NS_SHUTDOWN),
+        "fault" => (&REQ_FAULT, &REQUEST_NS_FAULT),
+        _ => return None,
+    })
+}
+
+/// The error counter for an `error_kind` wire string.
+pub fn error_counter(kind: &str) -> Option<&'static Counter> {
+    Some(match kind {
+        "parse" => &ERR_PARSE,
+        "protocol" => &ERR_PROTOCOL,
+        "overload" => &ERR_OVERLOAD,
+        "internal" => &ERR_INTERNAL,
+        _ => return None,
+    })
+}
+
+/// Record a relative residual into [`CG_RESIDUAL_DECADES`] as decades
+/// (digits of accuracy): `1e-6` records 6. Non-positive/NaN residuals
+/// clamp to 0 decades.
+#[inline]
+pub fn record_residual_decades(residual: f64) {
+    let decades = if residual > 0.0 && residual.is_finite() {
+        (-residual.log10()).clamp(0.0, 63.0)
+    } else {
+        0.0
+    };
+    CG_RESIDUAL_DECADES.record(decades as u64);
+}
+
+/// Export the whole registry as one JSON object:
+/// `{"counters":{..},"gauges":{..},"histograms":{name:{unit,count,sum,
+/// p50,p95,p99,buckets:[[le,count],..]}}}`. Lock-free: one relaxed
+/// load per atomic; each histogram's `count`/quantiles derive from the
+/// same single bucket read that is exported, so `count == Σ buckets`
+/// holds even when scraped mid-traffic.
+pub fn to_json() -> Json {
+    let mut counters = Vec::new();
+    let mut gauges = Vec::new();
+    let mut histos = Vec::new();
+    for m in all() {
+        match m {
+            Metric::Counter(name, c) => {
+                counters.push((*name, Json::from_uint(c.get())));
+            }
+            Metric::Gauge(name, g) => {
+                gauges.push((*name, Json::Num(g.get())));
+            }
+            Metric::Histo(name, h) => {
+                histos.push((*name, histo_json(h)));
+            }
+        }
+    }
+    Json::obj(vec![
+        ("counters", Json::obj(counters)),
+        ("gauges", Json::obj(gauges)),
+        ("histograms", Json::obj(histos)),
+    ])
+}
+
+fn histo_json(h: &Histo) -> Json {
+    let buckets = h.load_buckets();
+    let count: u64 = buckets.iter().sum();
+    let q = |p: f64| match quantile_of(&buckets, p) {
+        Some(v) => Json::from_uint(v),
+        None => Json::Null,
+    };
+    let nonzero: Vec<Json> = buckets
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(i, &c)| {
+            Json::Arr(vec![
+                // The clamp bucket's bound (u64::MAX) is not exactly
+                // f64-representable; export it as a string token like
+                // every other over-2^53 count.
+                match Json::try_from_uint(bucket_bound(i)) {
+                    Ok(j) => j,
+                    Err(x) => Json::Str(x.to_string()),
+                },
+                Json::from_uint(c),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("unit", Json::Str(h.unit().as_str().to_string())),
+        ("count", Json::from_uint(count)),
+        ("sum", Json::from_uint(h.sum())),
+        ("p50", q(0.50)),
+        ("p95", q(0.95)),
+        ("p99", q(0.99)),
+        ("buckets", Json::Arr(nonzero)),
+    ])
+}
+
+/// Serialises unit tests that record into (or toggle) the global
+/// registry — without it, a test flipping [`set_enabled`] races any
+/// concurrently running test asserting a recorded delta.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static M: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    M.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: the registry is process-global and the crate's unit tests
+    // run in parallel (CG tests record into CG_ITERS, …), so these
+    // tests only assert *deltas* on metrics nothing else touches, or
+    // pure functions — and every test that records or toggles the
+    // enable flag holds `test_lock()`.
+
+    #[test]
+    fn bucket_index_scheme() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        // Bounds are inclusive tops: bucket i covers (bound(i-1),
+        // bound(i)].
+        assert_eq!(bucket_bound(0), 0);
+        assert_eq!(bucket_bound(1), 1);
+        assert_eq!(bucket_bound(2), 3);
+        assert_eq!(bucket_bound(10), 1023);
+        assert_eq!(bucket_bound(NUM_BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let _g = test_lock();
+        let h = Histo::new(Unit::Count);
+        for v in [0u64, 1, 1, 2, 7, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.sum(), 1111);
+        // q=1.0 → the largest sample's bucket bound (1000 ∈ (511,
+        // 1023]).
+        assert_eq!(h.quantile(1.0), Some(1023));
+        // q→0 → the smallest sample's bucket (0).
+        assert_eq!(h.quantile(0.0), Some(0));
+        // Median of 7 samples is the 4th (value 2 → bound 3).
+        assert_eq!(h.quantile(0.5), Some(3));
+        let empty = Histo::new(Unit::Nanos);
+        assert_eq!(empty.quantile(0.5), None);
+    }
+
+    #[test]
+    fn counter_and_gauge_deltas() {
+        let _g = test_lock();
+        let before = STREAM_COMPACTIONS.get();
+        STREAM_COMPACTIONS.inc();
+        STREAM_COMPACTIONS.add(2);
+        assert_eq!(STREAM_COMPACTIONS.get() - before, 3);
+        GRF_VARIANCE_IID.set(0.25);
+        assert_eq!(GRF_VARIANCE_IID.get(), 0.25);
+    }
+
+    #[test]
+    fn disabled_freezes_all_record_paths() {
+        let _g = test_lock();
+        let local = Histo::new(Unit::Nanos);
+        let c = Counter::new();
+        let g = Gauge::new();
+        g.set(1.0);
+        set_enabled(false);
+        local.record(5);
+        c.inc();
+        g.set(9.0);
+        set_enabled(true);
+        assert_eq!(local.count(), 0);
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 1.0);
+    }
+
+    #[test]
+    fn catalogue_names_are_unique_and_lookups_hit_it() {
+        let mut names: Vec<&str> = all().iter().map(|m| m.name()).collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate metric names in catalogue");
+        // Every op/kind lookup resolves to a catalogued metric.
+        for op in [
+            "observe", "predict", "add_edge", "remove_edge", "add_node",
+            "sample", "thompson", "stats", "metrics", "shutdown", "fault",
+        ] {
+            assert!(request_metrics(op).is_some(), "op {op} missing");
+        }
+        for kind in ["parse", "protocol", "overload", "internal"] {
+            assert!(error_counter(kind).is_some(), "kind {kind} missing");
+        }
+        assert!(request_metrics("nope").is_none());
+        assert!(error_counter("nope").is_none());
+    }
+
+    #[test]
+    fn json_export_shape_and_internal_consistency() {
+        let _g = test_lock();
+        CG_ITERS.record(12);
+        let j = to_json();
+        for key in ["counters", "gauges", "histograms"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        let h = j.path(&["histograms", "cg_iters"]).expect("cg_iters");
+        let count = h.get("count").and_then(Json::as_usize).unwrap();
+        let bucket_total: usize = h
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|b| b.as_arr().unwrap()[1].as_usize().unwrap())
+            .sum();
+        assert_eq!(count, bucket_total, "count must equal Σ buckets");
+        assert!(count >= 1);
+    }
+}

@@ -1,0 +1,113 @@
+//! RAII solve-path spans feeding the registry's latency histograms.
+//!
+//! A [`Span`] measures the wall time from construction to drop and
+//! records it (in ns) into a `static` [`Histo`]. With telemetry
+//! disabled a span is inert — it skips even the `Instant::now()`
+//! call, so the disabled cost is one relaxed atomic load.
+//!
+//! [`timed`] is the closure form that *also returns* the measured
+//! seconds, which is what lets the `exp` scenario drivers keep writing
+//! durations into their JSON result files while feeding the same
+//! numbers to the registry (one timing idiom; see
+//! `util::timer::Stopwatch`'s deprecation note).
+
+use super::registry::{enabled, Histo};
+use std::time::Instant;
+
+/// RAII timing guard: records elapsed ns into `h` on drop.
+#[must_use = "a span records on drop; binding it to _ discards the measurement immediately"]
+pub struct Span {
+    h: &'static Histo,
+    start: Option<Instant>,
+}
+
+impl Span {
+    /// Start a span over `h` (inert when telemetry is disabled).
+    #[inline]
+    pub fn new(h: &'static Histo) -> Span {
+        Span { h, start: enabled().then(Instant::now) }
+    }
+
+    /// Stop early and return the elapsed seconds (0.0 when inert).
+    pub fn stop(mut self) -> f64 {
+        self.finish()
+    }
+
+    fn finish(&mut self) -> f64 {
+        match self.start.take() {
+            Some(t0) => {
+                let d = t0.elapsed();
+                self.h.record_duration(d);
+                d.as_secs_f64()
+            }
+            None => 0.0,
+        }
+    }
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// Time a closure, record the duration into `h`, and return
+/// `(result, seconds)`. The seconds are measured (and returned) even
+/// with telemetry disabled — callers writing results files must not
+/// lose their numbers when recording is off; only the registry feed is
+/// skipped.
+#[inline]
+pub fn timed<T>(h: &'static Histo, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    let d = t0.elapsed();
+    h.record_duration(d);
+    (v, d.as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::{set_enabled, test_lock, STOPWATCH_NS};
+
+    // Delta-based: the registry is process-global (see registry tests).
+
+    #[test]
+    fn span_records_on_drop_and_stop_returns_seconds() {
+        let _g = test_lock();
+        let before = STOPWATCH_NS.count();
+        {
+            let _s = Span::new(&STOPWATCH_NS);
+        }
+        let secs = Span::new(&STOPWATCH_NS).stop();
+        assert!(secs >= 0.0);
+        assert_eq!(STOPWATCH_NS.count() - before, 2);
+    }
+
+    #[test]
+    fn timed_returns_value_and_duration() {
+        let _g = test_lock();
+        let before = STOPWATCH_NS.count();
+        let (v, secs) = timed(&STOPWATCH_NS, || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+        assert_eq!(STOPWATCH_NS.count() - before, 1);
+    }
+
+    #[test]
+    fn disabled_span_is_inert_but_timed_still_measures() {
+        let _g = test_lock();
+        set_enabled(false);
+        let before = STOPWATCH_NS.count();
+        let s = Span::new(&STOPWATCH_NS);
+        assert!(s.start.is_none(), "disabled span must skip Instant::now");
+        drop(s);
+        let (_, secs) = timed(&STOPWATCH_NS, || std::thread::sleep(
+            std::time::Duration::from_millis(1),
+        ));
+        set_enabled(true);
+        assert_eq!(STOPWATCH_NS.count(), before, "no records while disabled");
+        assert!(secs > 0.0, "timed must still measure while disabled");
+    }
+}

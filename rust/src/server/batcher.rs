@@ -57,6 +57,12 @@ pub enum Request {
     /// the fault-injection suite uses it to prove panic isolation and
     /// lock-poison recovery over a real connection.
     Fault { locked: bool },
+    /// Telemetry scrape (`{"op":"metrics"}`): exports the
+    /// [`crate::obs`] registry, as structured JSON by default or as
+    /// Prometheus text exposition when `"format":"prometheus"`. Served
+    /// lock-free off the registry's atomics — see the "Observability"
+    /// section in [`crate::server`].
+    Metrics { prometheus: bool },
 }
 
 /// How the batcher routes a request.
@@ -132,12 +138,40 @@ impl Request {
             "thompson" => Ok(Request::Thompson),
             "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown),
+            "metrics" => match j.get("format").and_then(Json::as_str) {
+                None | Some("json") => Ok(Request::Metrics { prometheus: false }),
+                Some("prometheus") | Some("prom") => {
+                    Ok(Request::Metrics { prometheus: true })
+                }
+                Some(other) => Err(format!(
+                    "metrics format must be \"json\" or \"prometheus\", got {other:?}"
+                )),
+            },
             "fault" => match j.get("mode").and_then(Json::as_str) {
                 Some("panic") => Ok(Request::Fault { locked: false }),
                 Some("panic_locked") => Ok(Request::Fault { locked: true }),
                 _ => Err("fault needs mode \"panic\" or \"panic_locked\"".into()),
             },
             other => Err(format!("unknown op {other:?}")),
+        }
+    }
+
+    /// Wire op name of this request — the key under which its
+    /// telemetry is accounted (`req_<op>`, `request_ns_<op>`; see
+    /// [`crate::obs::registry::request_metrics`]).
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Request::Observe { .. } => "observe",
+            Request::Predict { .. } => "predict",
+            Request::AddEdge { .. } => "add_edge",
+            Request::RemoveEdge { .. } => "remove_edge",
+            Request::AddNode => "add_node",
+            Request::Sample => "sample",
+            Request::Thompson => "thompson",
+            Request::Stats => "stats",
+            Request::Shutdown => "shutdown",
+            Request::Fault { .. } => "fault",
+            Request::Metrics { .. } => "metrics",
         }
     }
 
@@ -926,6 +960,55 @@ mod tests {
                 .unwrap_or(false),
             "absent-or-unusable samples falls back to the default"
         );
+    }
+
+    #[test]
+    fn parse_metrics_op() {
+        assert_eq!(
+            Request::parse(r#"{"op":"metrics"}"#).unwrap(),
+            Request::Metrics { prometheus: false }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"metrics","format":"json"}"#).unwrap(),
+            Request::Metrics { prometheus: false }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"metrics","format":"prometheus"}"#).unwrap(),
+            Request::Metrics { prometheus: true }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"metrics","format":"prom"}"#).unwrap(),
+            Request::Metrics { prometheus: true }
+        );
+        assert!(Request::parse(r#"{"op":"metrics","format":"xml"}"#).is_err());
+    }
+
+    #[test]
+    fn op_names_match_wire_ops() {
+        // Every op name must round-trip through the parser back to the
+        // same variant — the telemetry keys are derived from these.
+        for (req, op) in [
+            (Request::AddNode, "add_node"),
+            (Request::Sample, "sample"),
+            (Request::Thompson, "thompson"),
+            (Request::Stats, "stats"),
+            (Request::Shutdown, "shutdown"),
+            (Request::Metrics { prometheus: false }, "metrics"),
+        ] {
+            assert_eq!(req.op_name(), op);
+            assert_eq!(
+                Request::parse(&format!(r#"{{"op":"{op}"}}"#)).unwrap(),
+                req
+            );
+        }
+        assert_eq!(Request::Observe { node: 0, y: 0.0 }.op_name(), "observe");
+        assert_eq!(
+            Request::Predict { nodes: vec![], samples: 1 }.op_name(),
+            "predict"
+        );
+        assert_eq!(Request::AddEdge { u: 0, v: 1, w: 1.0 }.op_name(), "add_edge");
+        assert_eq!(Request::RemoveEdge { u: 0, v: 1 }.op_name(), "remove_edge");
+        assert_eq!(Request::Fault { locked: false }.op_name(), "fault");
     }
 
     #[test]

@@ -17,9 +17,69 @@
 //!   {"op":"sample"}                           → full posterior draw argmax
 //!   {"op":"thompson"}                         → next query node
 //!   {"op":"stats"}
+//!   {"op":"metrics"}                          → telemetry registry (JSON)
+//!   {"op":"metrics","format":"prometheus"}    → Prometheus text rendering
 //!   {"op":"shutdown"}
 //! Responses: {"ok":true, ...} or
 //! {"ok":false,"error":"...","error_kind":"parse|protocol|overload|internal"}.
+//! Every response to a decoded frame additionally carries a
+//! `trace_id` (see "Observability" below).
+//!
+//! ## Observability
+//!
+//! The server is instrumented through [`crate::obs`] — a global
+//! lock-free registry of atomic counters, gauges, and log₂-bucket
+//! latency histograms, exported wholesale by the `{"op":"metrics"}`
+//! op. The metrics handler reads only atomics (the registry + the
+//! server counters below); unlike `stats` it **never takes the model
+//! lock**, so scraping cannot perturb serving.
+//!
+//! **Metric catalogue** (full list: `obs::registry::all`; names are
+//! stable wire API):
+//!
+//! * `req_<op>` / `request_ns_<op>` — per-op request count and wall
+//!   time (recorded at the wire dispatch point, so batching-window
+//!   waits are included: this is client-visible latency). Ops:
+//!   observe, predict, add_edge, remove_edge, add_node, sample,
+//!   thompson, stats, metrics, shutdown, fault.
+//! * `errors_{parse,protocol,overload,internal}` — error replies by
+//!   `error_kind`, wire-decoder errors included.
+//! * `cg_solves` / `cg_block_solves` / `cg_noconverged`, `cg_iters` /
+//!   `cg_block_iters` (iterations-to-converge per solve),
+//!   `cg_residual_decades` (residual trajectory, in digits),
+//!   `cg_last_residual` — the solver layer.
+//! * `spmv_{ell,csr}` + `spmv_{ell,csr}_ns`, `spmm_{ell,csr}` +
+//!   `spmm_{ell,csr}_ns` — kernel dispatches by selected layout.
+//! * `stream_delta_batches`, `resample_walks` (union fan-out),
+//!   `resample_rows`, `resample_ns`, `compact_ns`,
+//!   `stream_compactions` — the streaming delta engine.
+//! * `snapshot_publishes`, `snapshot_publish_ns` (build + swap),
+//!   `predict_snapshot_lag_ns` (age of the snapshot each predict
+//!   computed off — the staleness the RCU read path delivers).
+//! * `slow_requests`, `grf_variance_iid` (see `benches/hotpath.rs`).
+//!
+//! **Histogram buckets** are fixed log₂ scale: bucket `i ≥ 1` holds
+//! values in `[2^(i-1), 2^i)` ns (bucket 0 holds exact zeros), 44
+//! buckets total; p50/p95/p99 in the JSON export are bucket upper
+//! bounds (≤ 2× upward bias). See `obs::registry` docs.
+//!
+//! **trace_id semantics**: every response to a decoded frame carries
+//! `trace_id = "<graph_version-hex>-<dispatch-seq-hex>"`, where the
+//! dispatch sequence is a server-global monotone counter. For
+//! predicts, `trace_id` correlates a log line with the
+//! (`graph_version`, `rng_seq`) pair already echoed in the response —
+//! the pair that reproduces the prediction bit-for-bit. Requests
+//! slower than `--slow-request-ms` additionally log one structured
+//! JSON line to stderr (`slow_request` record, keyed by the same
+//! `trace_id`) and bump `slow_requests`.
+//!
+//! **Prometheus scrape example** — the text rendering is standard
+//! exposition format, prefixed `grfgp_`:
+//!
+//! ```text
+//! $ echo '{"op":"metrics","format":"prometheus"}' | nc 127.0.0.1 7701
+//! {"ok":true,"text":"# TYPE grfgp_req_predict counter\n..."}
+//! ```
 //!
 //! ## Limits & failure modes
 //!
@@ -128,6 +188,7 @@ pub mod wire;
 
 use crate::gp::model::GpModel;
 use crate::gp::Hypers;
+use crate::obs;
 use crate::stream::{GraphDelta, StreamingFeatures};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -165,6 +226,10 @@ pub struct ServerConfig {
     /// Micro-batching width: how many compatible requests the batcher
     /// merges into one engine call (`--max-batch` on `grfgp serve`).
     pub max_batch: usize,
+    /// Log a structured one-line JSON record to stderr for any request
+    /// slower than this many milliseconds (`--slow-request-ms`;
+    /// 0 disables the log, which is the default).
+    pub slow_request_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -177,6 +242,7 @@ impl Default for ServerConfig {
             write_timeout: Duration::from_secs(30),
             fault_injection: false,
             max_batch: 8,
+            slow_request_ms: 0,
         }
     }
 }
@@ -203,6 +269,9 @@ pub struct ServerState {
     /// Lifetime count of model-mutex acquisitions — observability for
     /// the wait-free-read contract (predicts must not move it).
     pub model_lock_acquisitions: AtomicU64,
+    /// Monotone dispatch counter feeding `trace_id` (one value per
+    /// decoded frame; see the module-level "Observability" section).
+    pub trace_seq: AtomicU64,
     pub config: ServerConfig,
 }
 
@@ -223,6 +292,7 @@ impl ServerState {
             snapshots: SnapshotCell::new(first),
             predict_seq: AtomicU64::new(0),
             model_lock_acquisitions: AtomicU64::new(0),
+            trace_seq: AtomicU64::new(0),
             config,
         }
     }
@@ -301,6 +371,7 @@ impl ModelState {
             compactions: self.stream.compactions,
             publish_seq: 0,
             rng_base: self.rng.clone(),
+            published_at: Instant::now(),
         }
     }
 
@@ -381,10 +452,14 @@ impl ModelState {
         // Publication point: swap in a snapshot reflecting everything
         // this batch applied, *before* the acks above are delivered —
         // so a client that saw `graph_version = k` acknowledged can
-        // immediately read a prediction stamped `>= k`.
+        // immediately read a prediction stamped `>= k`. The span covers
+        // build + swap: the full publish latency writers pay.
+        let publish_span =
+            obs::span::Span::new(&obs::registry::SNAPSHOT_PUBLISH_NS);
         state.snapshots.publish(
             self.snapshot(state.graph_version.load(Ordering::SeqCst)),
         );
+        publish_span.stop();
         out
     }
 
@@ -533,6 +608,13 @@ pub fn predict_off_snapshot(
     samples: usize,
 ) -> (Arc<ReadSnapshot>, Vec<f64>, Vec<f64>, u64) {
     let snap = state.snapshots.load();
+    // Predict-vs-publish lag: how stale the snapshot this predict
+    // computes off is. Atomics only — the path stays wait-free (and
+    // skips even the clock read when telemetry is off).
+    if obs::enabled() {
+        obs::registry::PREDICT_SNAPSHOT_LAG_NS
+            .record_duration(snap.published_at.elapsed());
+    }
     let seq = state.predict_seq.fetch_add(1, Ordering::SeqCst);
     let mut rng = snap.predict_rng(seq);
     let (mean, var) = snap.view.predict(samples, &mut rng);
@@ -672,6 +754,60 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
                 ),
             ])
         }
+        Request::Metrics { prometheus } => {
+            // Lock-free by contract (unlike `stats`): the registry and
+            // the server counters below are all atomics, so a scrape
+            // can never contend with serving. The no-torn-reads
+            // guarantee is per-histogram (count == Σ buckets from one
+            // bucket read); see the obs module docs.
+            if *prometheus {
+                return Response::ok(vec![
+                    ("format", Json::Str("prometheus".to_string())),
+                    ("text", Json::Str(obs::prom::render())),
+                ]);
+            }
+            let server = Json::obj(vec![
+                (
+                    "requests",
+                    Json::from_uint(
+                        state.requests_served.load(Ordering::Relaxed),
+                    ),
+                ),
+                (
+                    "graph_version",
+                    Json::from_uint(state.graph_version.load(Ordering::SeqCst)),
+                ),
+                (
+                    "published_snapshots",
+                    Json::from_uint(state.snapshots.published()),
+                ),
+                (
+                    "predicts_served",
+                    Json::from_uint(state.predict_seq.load(Ordering::SeqCst)),
+                ),
+                (
+                    "model_lock_acquisitions",
+                    Json::from_uint(
+                        state.model_lock_acquisitions.load(Ordering::SeqCst),
+                    ),
+                ),
+                (
+                    "active_connections",
+                    Json::from_uint(
+                        state.active_connections.load(Ordering::SeqCst) as u64,
+                    ),
+                ),
+                (
+                    "n_nodes",
+                    Json::from_uint(state.n_nodes.load(Ordering::SeqCst) as u64),
+                ),
+                ("telemetry_enabled", Json::Bool(obs::enabled())),
+            ]);
+            Response::ok(vec![
+                ("metrics", obs::registry::to_json()),
+                ("server", server),
+            ])
+        }
         Request::Shutdown => {
             state.shutdown.store(true, Ordering::SeqCst);
             Response::ok(vec![("bye", Json::Bool(true))])
@@ -709,17 +845,97 @@ fn write_response(writer: &mut TcpStream, resp: &Response) -> std::io::Result<()
     writer.write_all(line.as_bytes())
 }
 
+/// Stamp a `trace_id` onto a response (one monotone dispatch sequence
+/// value per decoded frame, prefixed with the current graph version —
+/// see the module-level "Observability" section) and return the id.
+fn stamp_trace(state: &ServerState, resp: &mut Response) -> String {
+    let seq = state.trace_seq.fetch_add(1, Ordering::Relaxed);
+    let gv = state.graph_version.load(Ordering::SeqCst);
+    let id = format!("{gv:x}-{seq:x}");
+    resp.fields
+        .push(("trace_id".to_string(), Json::Str(id.clone())));
+    id
+}
+
+/// The structured single-line record logged (to stderr) for a request
+/// slower than `slow_request_ms`. Split out so the shape is unit
+/// testable: one JSON object, keyed by the same `trace_id` the client
+/// received.
+pub fn slow_request_record(
+    op: &str,
+    elapsed: Duration,
+    trace_id: &str,
+    resp: &Response,
+) -> Json {
+    let error_kind = resp
+        .fields
+        .iter()
+        .find(|(k, _)| k == "error_kind")
+        .and_then(|(_, v)| v.as_str())
+        .unwrap_or("");
+    Json::obj(vec![
+        ("slow_request", Json::Bool(true)),
+        ("op", Json::Str(op.to_string())),
+        ("ms", Json::Num(elapsed.as_secs_f64() * 1e3)),
+        ("ok", Json::Bool(resp.ok)),
+        ("error_kind", Json::Str(error_kind.to_string())),
+        ("trace_id", Json::Str(trace_id.to_string())),
+    ])
+}
+
+/// Per-request telemetry epilogue shared by every decoded frame: per-op
+/// counter + latency histogram, `error_kind` counters, `trace_id`
+/// stamping, and the slow-request outlier log.
+fn finish_request(
+    state: &ServerState,
+    op: &str,
+    started: Instant,
+    mut resp: Response,
+) -> Response {
+    let elapsed = started.elapsed();
+    if let Some((count, latency)) = obs::registry::request_metrics(op) {
+        count.inc();
+        latency.record_duration(elapsed);
+    }
+    if !resp.ok {
+        let kind = resp
+            .fields
+            .iter()
+            .find(|(k, _)| k == "error_kind")
+            .and_then(|(_, v)| v.as_str());
+        if let Some(c) = kind.and_then(obs::registry::error_counter) {
+            c.inc();
+        }
+    }
+    let trace_id = stamp_trace(state, &mut resp);
+    let threshold = state.config.slow_request_ms;
+    if threshold > 0 && elapsed >= Duration::from_millis(threshold) {
+        obs::registry::SLOW_REQUESTS.inc();
+        let line = slow_request_record(op, elapsed, &trace_id, &resp).to_string();
+        eprintln!("{line}");
+    }
+    resp
+}
+
 /// Run one decoded frame to a response. Handler panics are caught here
 /// and become `internal` errors — one poisoned request must not tear
 /// down the connection thread (and through `thread::scope`, the whole
 /// server). `AssertUnwindSafe` is justified by the poison-recovering
 /// lock discipline documented on [`ServerState::model_guard`].
 fn dispatch(state: &ServerState, batcher: &Batcher, frame: &Json) -> Response {
+    let started = Instant::now();
     let req = match Request::from_json(frame) {
         Ok(req) => req,
-        Err(e) => return Response::error(e),
+        Err(e) => {
+            // Unparsable request: no per-op metrics (the op may be
+            // unknown), but the error-kind counter and trace id still
+            // apply.
+            return finish_request(state, "", started, Response::error(e));
+        }
     };
-    match catch_unwind(AssertUnwindSafe(|| batcher.submit(state, req))) {
+    let op = req.op_name();
+    let submitted = catch_unwind(AssertUnwindSafe(|| batcher.submit(state, req)));
+    let resp = match submitted {
         Ok(resp) => resp,
         Err(payload) => {
             let what = payload
@@ -729,7 +945,8 @@ fn dispatch(state: &ServerState, batcher: &Batcher, frame: &Json) -> Response {
                 .unwrap_or_else(|| "non-string panic payload".to_string());
             Response::fault(ErrorKind::Internal, format!("handler panicked: {what}"))
         }
-    }
+    };
+    finish_request(state, op, started, resp)
 }
 
 /// Per-connection loop: raw timed reads feed the bounded streaming
@@ -791,7 +1008,19 @@ fn client_loop(
         for frame in frames.drain(..) {
             let resp = match frame {
                 Ok(json) => dispatch(state, batcher, &json),
-                Err(we) => Response::fault(we.kind, we.msg),
+                Err(we) => {
+                    // Wire-layer rejects (bad JSON, oversized frame)
+                    // never reach `dispatch`, so they are accounted —
+                    // and trace-stamped — here.
+                    if let Some(c) =
+                        obs::registry::error_counter(we.kind.as_str())
+                    {
+                        c.inc();
+                    }
+                    let mut resp = Response::fault(we.kind, we.msg);
+                    stamp_trace(state, &mut resp);
+                    resp
+                }
             };
             write_response(&mut writer, &resp)?;
             if state.shutdown.load(Ordering::SeqCst) {
@@ -866,6 +1095,7 @@ pub fn serve_on_with(
                     // cannot race another admission.
                     let live = state.active_connections.load(Ordering::SeqCst);
                     if live >= state.config.max_connections {
+                        obs::registry::ERR_OVERLOAD.inc();
                         let mut stream = stream;
                         let _ = stream
                             .set_write_timeout(Some(state.config.write_timeout));

@@ -25,9 +25,11 @@
 //! rng, so read volume cannot perturb `sample`/`thompson` draws.
 
 use crate::gp::ModelReadView;
+use crate::obs;
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, PoisonError, RwLock};
+use std::time::Instant;
 
 /// Stream id predictions split off the published rng base. (Kept at
 /// the historic batcher constant so the serving rng lineage is
@@ -55,6 +57,11 @@ pub struct ReadSnapshot {
     /// Server rng captured at publish time; per-request predict rngs
     /// split off it (see module docs).
     pub rng_base: Rng,
+    /// Swap instant (stamped by [`SnapshotCell`]) — lets each predict
+    /// record the age of the snapshot it computed off
+    /// (`predict_snapshot_lag_ns`), i.e. the staleness the RCU read
+    /// path actually delivers.
+    pub published_at: Instant,
 }
 
 impl ReadSnapshot {
@@ -105,9 +112,11 @@ impl SnapshotCell {
     pub fn publish(&self, mut snap: ReadSnapshot) -> u64 {
         let seq = self.published.fetch_add(1, Ordering::AcqRel) + 1;
         snap.publish_seq = seq;
+        snap.published_at = Instant::now();
         let next = Arc::new(snap);
         let mut slot = self.slot.write().unwrap_or_else(PoisonError::into_inner);
         *slot = next;
+        obs::registry::SNAPSHOT_PUBLISHES.inc();
         seq
     }
 

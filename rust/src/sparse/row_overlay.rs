@@ -30,6 +30,7 @@
 //! [`crate::sparse::ops::GramOperator::patch_phi_rows`] go through it.
 
 use super::{Csr, Ell, FeatureLayout};
+use crate::obs;
 use crate::util::parallel;
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
@@ -339,11 +340,27 @@ impl RowOverlay {
     /// sibling of [`crate::sparse::ell::spmv_dispatch`].
     #[inline]
     pub fn spmv(&self, ell: Option<&Ell>, x: &[f64], y: &mut [f64], threads: usize, par: bool) {
+        // Dispatch time by selected layout (obs spans are inert —
+        // skipping even `Instant::now` — when telemetry is off).
         match ell {
-            Some(e) if par => e.matvec_par_into(x, y, threads),
-            Some(e) => e.matvec_into(x, y),
-            None if par => self.matvec_par_into(x, y, threads),
-            None => self.matvec_into(x, y),
+            Some(e) => {
+                obs::registry::SPMV_ELL.inc();
+                let _s = obs::span::Span::new(&obs::registry::SPMV_ELL_NS);
+                if par {
+                    e.matvec_par_into(x, y, threads)
+                } else {
+                    e.matvec_into(x, y)
+                }
+            }
+            None => {
+                obs::registry::SPMV_CSR.inc();
+                let _s = obs::span::Span::new(&obs::registry::SPMV_CSR_NS);
+                if par {
+                    self.matvec_par_into(x, y, threads)
+                } else {
+                    self.matvec_into(x, y)
+                }
+            }
         }
     }
 
@@ -361,10 +378,24 @@ impl RowOverlay {
         par: bool,
     ) {
         match ell {
-            Some(e) if par => e.matmat_par_into(x, ncols, y, threads),
-            Some(e) => e.matmat_into(x, ncols, y),
-            None if par => self.matmat_par_into(x, ncols, y, threads),
-            None => self.matmat_into(x, ncols, y),
+            Some(e) => {
+                obs::registry::SPMM_ELL.inc();
+                let _s = obs::span::Span::new(&obs::registry::SPMM_ELL_NS);
+                if par {
+                    e.matmat_par_into(x, ncols, y, threads)
+                } else {
+                    e.matmat_into(x, ncols, y)
+                }
+            }
+            None => {
+                obs::registry::SPMM_CSR.inc();
+                let _s = obs::span::Span::new(&obs::registry::SPMM_CSR_NS);
+                if par {
+                    self.matmat_par_into(x, ncols, y, threads)
+                } else {
+                    self.matmat_into(x, ncols, y)
+                }
+            }
         }
     }
 

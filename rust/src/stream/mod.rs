@@ -104,6 +104,7 @@
 //! for the model half.
 
 use crate::graph::Graph;
+use crate::obs;
 use crate::sparse::{Csr, Ell, FeatureLayout};
 use crate::util::parallel::par_map_chunks;
 use crate::walks::{
@@ -620,11 +621,17 @@ impl StreamingFeatures {
             }
         }
         // Phase 2: one parallel resample of the union + row rebuild.
+        obs::registry::STREAM_DELTA_BATCHES.inc();
+        obs::registry::RESAMPLE_WALKS.record(union.len() as u64);
+        let resample_span = obs::span::Span::new(&obs::registry::RESAMPLE_NS);
         let (resampled, affected_rows) = self.resample_invalidated(&union);
+        resample_span.stop();
+        obs::registry::RESAMPLE_ROWS.record(affected_rows.len() as u64);
         self.deltas_applied += deltas.len();
         self.walks_resampled_total += resampled.len();
         let mut compacted = false;
         if self.overlay.len() >= self.compact_threshold {
+            let _s = obs::span::Span::new(&obs::registry::COMPACT_NS);
             self.compact();
             compacted = true;
         }
@@ -706,6 +713,7 @@ impl StreamingFeatures {
         self.overlay.clear();
         self.phi_ell = self.phi_base.select_ell(self.layout);
         self.compactions += 1;
+        obs::registry::STREAM_COMPACTIONS.inc();
     }
 
     /// Return saturated hubs to precise invalidation where possible:

@@ -1,8 +1,19 @@
 //! Wall-clock timing + lightweight metrics instrumentation.
+//!
+//! New code should time through [`crate::obs::span`] (RAII spans and
+//! [`crate::obs::span::timed`], which feed the global lock-free
+//! metrics registry); the statistics helpers here (`mean_std`,
+//! `percentile`) remain the summary layer the experiment scenarios
+//! report with. [`Stopwatch`] is deprecated and kept only as a thin
+//! shim over the registry.
 
 use std::time::Instant;
 
 /// Time a closure; returns (result, seconds).
+///
+/// Prefer [`crate::obs::span::timed`], which additionally records the
+/// duration into a registry histogram; this helper remains for call
+/// sites with no natural metric to feed.
 pub fn timeit<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t0 = Instant::now();
     let v = f();
@@ -24,29 +35,47 @@ pub fn mean_std(xs: &[f64]) -> (f64, f64) {
 }
 
 /// Percentile (nearest-rank) of a sample; `q` in [0, 1].
+///
+/// NaN-tolerant: sorts with `f64::total_cmp` (IEEE total order, NaN
+/// sorts above +∞), so a NaN in the sample — e.g. a failed-solve
+/// timing — can surface *as* a NaN result at high ranks but can never
+/// panic the reporting path (the old `partial_cmp().unwrap()` did).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
     sorted[rank - 1]
 }
 
 /// Named duration accumulator for profiling sections of a pipeline.
+///
+/// Deprecated: time through [`crate::obs::span`] instead — spans feed
+/// the global registry, which the server exports over the wire
+/// (`{"op":"metrics"}`) and the benches snapshot. This shim still
+/// works for callers that want a local per-name report, and every
+/// `record` additionally lands in the registry's `stopwatch_ns`
+/// catch-all histogram so legacy timings stay visible in scrapes.
+#[deprecated(
+    note = "use obs::span::Span / obs::span::timed; the registry \
+            replaces local accumulators"
+)]
 #[derive(Default, Debug)]
 pub struct Stopwatch {
     entries: Vec<(String, f64)>,
 }
 
+#[allow(deprecated)]
 impl Stopwatch {
     pub fn new() -> Self {
         Self::default()
     }
 
     pub fn record<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
-        let (v, secs) = timeit(f);
+        let (v, secs) =
+            crate::obs::span::timed(&crate::obs::registry::STOPWATCH_NS, f);
         self.entries.push((name.to_string(), secs));
         v
     }
@@ -105,12 +134,34 @@ mod tests {
     }
 
     #[test]
+    fn percentile_tolerates_nan_without_panicking() {
+        // A NaN sample (failed-solve timing) must not panic the
+        // reporting path. Under total order NaN sorts last, so low
+        // ranks still answer with real numbers and only the top rank
+        // surfaces the NaN.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+        assert_eq!(percentile(&xs, 0.25), 1.0);
+        assert!(percentile(&xs, 1.0).is_nan());
+        // All-NaN input degrades to NaN, not a panic.
+        assert!(percentile(&[f64::NAN, f64::NAN], 0.5).is_nan());
+    }
+
+    #[test]
+    #[allow(deprecated)]
     fn stopwatch_accumulates() {
+        // `record` feeds the global registry — serialise with the obs
+        // tests that assert deltas on the same histogram.
+        let _g = crate::obs::registry::test_lock();
         let mut sw = Stopwatch::new();
         sw.add("a", 1.0);
         sw.add("a", 2.0);
         sw.add("b", 0.5);
         assert!((sw.total("a") - 3.0).abs() < 1e-12);
         assert!(sw.report().contains("a"));
+        // The shim's `record` path goes through the registry.
+        let v = sw.record("c", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(sw.total("c") >= 0.0);
     }
 }

@@ -17,8 +17,10 @@
 
 pub mod components;
 pub mod engine;
+pub mod variance;
 
 pub use components::{CombinedFeatures, WalkComponents};
+pub use variance::kernel_variance_iid;
 pub use engine::{
     resample_walk, rows_from_walks, sample_components,
     sample_components_indexed, sample_features, walk_rng, IndexedWalks,

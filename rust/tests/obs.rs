@@ -1,0 +1,514 @@
+//! Integration: the telemetry surface. Proves the registry's contracts
+//! from the outside — the record path performs **zero heap
+//! allocations** (counting global allocator), the predict path takes
+//! **zero model locks** with telemetry enabled, per-op request counters
+//! are **exact** under concurrent mixed traffic (no lost or double
+//! counts), scrapes taken mid-traffic are internally consistent
+//! (`count == Σ buckets` per histogram), every wire response — errors
+//! included — carries a distinct `trace_id`, and both export formats
+//! (JSON schema, Prometheus text) hold their shape.
+
+use grfgp::gp::{Hypers, Modulation};
+use grfgp::graph::generators;
+use grfgp::obs::registry;
+use grfgp::obs::span::Span;
+use grfgp::server::batcher::{Request, Response};
+use grfgp::server::wire::ErrorKind;
+use grfgp::server::{
+    handle, slow_request_record, ModelState, ServerConfig, ServerState,
+};
+use grfgp::stream::StreamingFeatures;
+use grfgp::util::json::Json;
+use grfgp::walks::WalkConfig;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// Counting allocator: every heap allocation in this test binary bumps
+// ALLOCS, which is how the zero-allocation contract of the record path
+// is *proved* rather than asserted by inspection.
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+// Edition 2021: bodies of `unsafe fn` may use unsafe operations
+// directly; the forwarding calls below inherit System's contracts.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------
+// The registry is process-global, so tests in this binary that record
+// into it (or read deltas from it) must not interleave. This is the
+// integration-test twin of the library's internal `test_lock` (which
+// is `cfg(test)`-only and not visible here).
+
+fn lock() -> MutexGuard<'static, ()> {
+    static M: Mutex<()> = Mutex::new(());
+    M.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------
+// Harness (mirrors tests/server.rs).
+
+fn state(n: usize, seed: u64) -> ServerState {
+    let g = generators::ring(n);
+    let cfg = WalkConfig {
+        n_walks: 16,
+        p_halt: 0.1,
+        max_len: 3,
+        threads: 1,
+        ..Default::default()
+    };
+    let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+    let stream =
+        StreamingFeatures::new(g, cfg, hypers.modulation.coeffs(), 0);
+    ServerState::new(
+        ModelState::new(stream, hypers, seed),
+        ServerConfig::default(),
+    )
+}
+
+fn start_server(
+    n: usize,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let g = generators::ring(n);
+    let cfg = WalkConfig {
+        n_walks: 32,
+        p_halt: 0.1,
+        max_len: 3,
+        threads: 1,
+        ..Default::default()
+    };
+    let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+    let stream = StreamingFeatures::new(g, cfg, hypers.modulation.coeffs(), 0);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        grfgp::server::serve_on(stream, hypers, listener, 7).unwrap();
+    });
+    (addr, server)
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn call(&mut self, body: &str) -> Json {
+        self.stream.write_all(body.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(&line).expect("server must return valid JSON")
+    }
+}
+
+fn trace_of(r: &Json) -> String {
+    r.get("trace_id")
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("response must carry a trace_id: {r:?}"))
+        .to_string()
+}
+
+/// The per-histogram no-torn-reads contract: an exported `count` always
+/// equals the sum of the bucket counts exported next to it, even when
+/// the scrape raced live traffic.
+fn assert_histograms_consistent(metrics: &Json) {
+    let Some(Json::Obj(histos)) = metrics.get("histograms") else {
+        panic!("metrics.histograms must be an object: {metrics:?}");
+    };
+    for (name, h) in histos {
+        let count = h
+            .get("count")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("histogram {name} missing count"))
+            as u64;
+        let total: u64 = h
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .unwrap_or_else(|| panic!("histogram {name} missing buckets"))
+            .iter()
+            .map(|b| {
+                b.as_arr().expect("bucket pair")[1]
+                    .as_f64()
+                    .expect("bucket count") as u64
+            })
+            .sum();
+        assert_eq!(
+            count, total,
+            "histogram {name}: exported count must equal Σ buckets"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+
+#[test]
+fn record_path_performs_zero_heap_allocations() {
+    let _g = lock();
+    registry::set_enabled(true);
+    // Warm-up (first Instant::now may touch lazily-initialised state).
+    registry::STOPWATCH_NS.record(1);
+    drop(Span::new(&registry::COMPACT_NS));
+
+    // The test harness itself may allocate on other threads (printing
+    // a finished test's result line), so measure over several windows:
+    // a record path that allocates does so deterministically on every
+    // iteration and can never produce a clean window.
+    let mut clean = false;
+    for _ in 0..16 {
+        let before = alloc_count();
+        for i in 0..10_000u64 {
+            registry::STOPWATCH_NS.record(i & 0xFFF);
+            registry::STOPWATCH_NS
+                .record_duration(Duration::from_nanos(i & 0x3FF));
+            registry::CG_SOLVES.inc();
+            registry::CG_LAST_RESIDUAL.set(i as f64);
+            let span = Span::new(&registry::COMPACT_NS);
+            drop(span);
+        }
+        if alloc_count() == before {
+            clean = true;
+            break;
+        }
+    }
+    assert!(
+        clean,
+        "counter/gauge/histogram/span record path must not allocate"
+    );
+}
+
+#[test]
+fn predict_path_takes_zero_model_locks_with_telemetry_on() {
+    let _g = lock();
+    registry::set_enabled(true);
+    let state = state(128, 3);
+    // One write so predicts run off a post-write published snapshot.
+    let observe =
+        Request::parse(r#"{"op":"observe","node":5,"y":0.5}"#).unwrap();
+    assert!(handle(&state, &observe).ok);
+
+    let locks_before = state.model_lock_acquisitions.load(Ordering::SeqCst);
+    let lag_before = registry::PREDICT_SNAPSHOT_LAG_NS.count();
+    for k in 0..12 {
+        let req = Request::Predict { nodes: vec![k, k + 1], samples: 2 };
+        let r = handle(&state, &req);
+        assert!(r.ok, "{:?}", r.fields);
+    }
+    assert_eq!(
+        state.model_lock_acquisitions.load(Ordering::SeqCst),
+        locks_before,
+        "predicts must stay wait-free with telemetry enabled"
+    );
+    assert_eq!(
+        registry::PREDICT_SNAPSHOT_LAG_NS.count() - lag_before,
+        12,
+        "each predict engine call records its snapshot lag"
+    );
+}
+
+#[test]
+fn metrics_op_json_schema() {
+    let _g = lock();
+    registry::set_enabled(true);
+    let state = state(64, 1);
+    let r = handle(&state, &Request::Metrics { prometheus: false });
+    assert!(r.ok);
+    let j = r.to_json();
+
+    let metrics = j.get("metrics").expect("metrics key");
+    for name in [
+        "req_predict",
+        "req_observe",
+        "errors_parse",
+        "slow_requests",
+        "cg_solves",
+        "spmm_ell",
+        "stream_delta_batches",
+        "snapshot_publishes",
+    ] {
+        assert!(
+            metrics.path(&["counters", name]).is_some(),
+            "missing counter {name}"
+        );
+    }
+    for name in ["grf_variance_iid", "cg_last_residual"] {
+        assert!(
+            metrics.path(&["gauges", name]).is_some(),
+            "missing gauge {name}"
+        );
+    }
+    for name in [
+        "request_ns_predict",
+        "cg_iters",
+        "spmv_ell_ns",
+        "resample_ns",
+        "compact_ns",
+        "snapshot_publish_ns",
+        "predict_snapshot_lag_ns",
+    ] {
+        let h = metrics
+            .path(&["histograms", name])
+            .unwrap_or_else(|| panic!("missing histogram {name}"));
+        for key in ["unit", "count", "sum", "p50", "p95", "p99", "buckets"] {
+            assert!(h.get(key).is_some(), "histogram {name} missing {key}");
+        }
+    }
+    assert_histograms_consistent(metrics);
+
+    for key in [
+        "requests",
+        "graph_version",
+        "published_snapshots",
+        "predicts_served",
+        "model_lock_acquisitions",
+        "active_connections",
+        "n_nodes",
+        "telemetry_enabled",
+    ] {
+        assert!(
+            j.path(&["server", key]).is_some(),
+            "missing server.{key}"
+        );
+    }
+    assert_eq!(
+        j.path(&["server", "telemetry_enabled"]).unwrap().as_bool(),
+        Some(true)
+    );
+}
+
+#[test]
+fn metrics_op_prometheus_export_is_well_formed() {
+    let _g = lock();
+    registry::set_enabled(true);
+    // Non-trivial histogram content so the bucket triples render.
+    registry::STOPWATCH_NS.record(123);
+    registry::CG_SOLVES.inc();
+    let state = state(32, 2);
+    let r = handle(&state, &Request::Metrics { prometheus: true });
+    assert!(r.ok);
+    let j = r.to_json();
+    assert_eq!(
+        j.get("format").and_then(Json::as_str),
+        Some("prometheus")
+    );
+    let text = j.get("text").and_then(Json::as_str).expect("text");
+    grfgp::obs::prom::validate(text)
+        .expect("prometheus rendering must validate");
+    assert!(text.contains("# TYPE grfgp_req_predict counter"));
+    assert!(text.contains("# TYPE grfgp_grf_variance_iid gauge"));
+    assert!(text.contains("grfgp_stopwatch_ns_bucket{le=\"+Inf\"}"));
+    assert!(text.contains("grfgp_stopwatch_ns_count"));
+}
+
+#[test]
+fn slow_request_log_record_shape() {
+    let rec = slow_request_record(
+        "predict",
+        Duration::from_millis(42),
+        "7-2a",
+        &Response::fault(ErrorKind::Internal, "boom"),
+    );
+    assert_eq!(rec.get("slow_request").unwrap().as_bool(), Some(true));
+    assert_eq!(rec.get("op").unwrap().as_str(), Some("predict"));
+    assert!(rec.get("ms").unwrap().as_f64().unwrap() >= 42.0);
+    assert_eq!(rec.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(rec.get("error_kind").unwrap().as_str(), Some("internal"));
+    assert_eq!(rec.get("trace_id").unwrap().as_str(), Some("7-2a"));
+    // The outlier log is line-oriented: one record, one line.
+    assert!(!rec.to_string().contains('\n'));
+}
+
+#[test]
+fn mixed_traffic_counts_are_exact_and_traced() {
+    let _g = lock();
+    registry::set_enabled(true);
+    let (addr, server) = start_server(256);
+
+    let predict0 = registry::REQ_PREDICT.get();
+    let predict_lat0 = registry::REQUEST_NS_PREDICT.count();
+    let observe0 = registry::REQ_OBSERVE.get();
+    let add0 = registry::REQ_ADD_EDGE.get();
+    let rm0 = registry::REQ_REMOVE_EDGE.get();
+    let stats0 = registry::REQ_STATS.get();
+    let metrics0 = registry::REQ_METRICS.get();
+    let parse0 = registry::ERR_PARSE.get();
+    let proto0 = registry::ERR_PROTOCOL.get();
+
+    let mut traces: Vec<String> = Vec::new();
+    let mut c = Client::connect(addr);
+    for i in 0..10 {
+        let r = c.call(&format!(
+            r#"{{"op":"observe","node":{},"y":{}}}"#,
+            i * 20,
+            (i as f64 * 0.3).sin()
+        ));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        traces.push(trace_of(&r));
+    }
+
+    // Concurrent predict clients racing a metrics scraper: counts must
+    // come out exact, and every scrape taken mid-flight must be
+    // internally consistent.
+    let predictors: Vec<_> = (0..3)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let mut ids = Vec::new();
+                for k in 0..8 {
+                    let r = c.call(&format!(
+                        r#"{{"op":"predict","nodes":[{}],"samples":2}}"#,
+                        t * 50 + k
+                    ));
+                    assert_eq!(
+                        r.get("ok").unwrap().as_bool(),
+                        Some(true),
+                        "{r:?}"
+                    );
+                    ids.push(trace_of(&r));
+                }
+                ids
+            })
+        })
+        .collect();
+    let scraper = std::thread::spawn(move || {
+        let mut c = Client::connect(addr);
+        let mut ids = Vec::new();
+        for _ in 0..20 {
+            let r = c.call(r#"{"op":"metrics"}"#);
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+            assert_histograms_consistent(r.get("metrics").expect("metrics"));
+            ids.push(trace_of(&r));
+        }
+        ids
+    });
+    for h in predictors {
+        traces.extend(h.join().unwrap());
+    }
+    traces.extend(scraper.join().unwrap());
+
+    // Graph deltas + stats from the original client.
+    for (u, v) in [(0usize, 5usize), (1, 9), (2, 17)] {
+        let r =
+            c.call(&format!(r#"{{"op":"add_edge","u":{u},"v":{v},"w":0.5}}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        traces.push(trace_of(&r));
+    }
+    for (u, v) in [(0usize, 5usize), (1, 9)] {
+        let r = c.call(&format!(r#"{{"op":"remove_edge","u":{u},"v":{v}}}"#));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        traces.push(trace_of(&r));
+    }
+    for _ in 0..2 {
+        let r = c.call(r#"{"op":"stats"}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        traces.push(trace_of(&r));
+    }
+
+    // Malformed traffic: wire-level parse errors and unknown ops are
+    // counted by kind and still traced.
+    let bad = c.call("this is not json");
+    assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(bad.get("error_kind").unwrap().as_str(), Some("parse"));
+    traces.push(trace_of(&bad));
+    let unknown = c.call(r#"{"op":"zap"}"#);
+    assert_eq!(unknown.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(
+        unknown.get("error_kind").unwrap().as_str(),
+        Some("protocol")
+    );
+    traces.push(trace_of(&unknown));
+
+    // Wire-level wait-free check: two scrapes with only predicts in
+    // between must report the same model-lock acquisition count.
+    let m0 = c.call(r#"{"op":"metrics"}"#);
+    let locks0 = m0
+        .path(&["server", "model_lock_acquisitions"])
+        .and_then(Json::as_f64)
+        .unwrap();
+    for k in 0..8 {
+        let r = c.call(&format!(
+            r#"{{"op":"predict","nodes":[{k}],"samples":2}}"#
+        ));
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+        traces.push(trace_of(&r));
+    }
+    let m1 = c.call(r#"{"op":"metrics"}"#);
+    let locks1 = m1
+        .path(&["server", "model_lock_acquisitions"])
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert_eq!(
+        locks0, locks1,
+        "predicts over the wire must take zero model locks"
+    );
+    traces.push(trace_of(&m0));
+    traces.push(trace_of(&m1));
+
+    // Exact deltas: no lost counts, no double counts, batched or not.
+    assert_eq!(registry::REQ_PREDICT.get() - predict0, 32);
+    assert_eq!(registry::REQUEST_NS_PREDICT.count() - predict_lat0, 32);
+    assert_eq!(registry::REQ_OBSERVE.get() - observe0, 10);
+    assert_eq!(registry::REQ_ADD_EDGE.get() - add0, 3);
+    assert_eq!(registry::REQ_REMOVE_EDGE.get() - rm0, 2);
+    assert_eq!(registry::REQ_STATS.get() - stats0, 2);
+    assert_eq!(registry::REQ_METRICS.get() - metrics0, 22);
+    assert_eq!(registry::ERR_PARSE.get() - parse0, 1);
+    assert_eq!(registry::ERR_PROTOCOL.get() - proto0, 1);
+
+    // Every response carried its own trace id.
+    let unique: HashSet<&str> = traces.iter().map(String::as_str).collect();
+    assert_eq!(
+        unique.len(),
+        traces.len(),
+        "trace ids must be distinct per dispatched frame"
+    );
+
+    // Clean shutdown so no server thread outlives the registry lock.
+    let bye = c.call(r#"{"op":"shutdown"}"#);
+    assert_eq!(bye.get("ok").unwrap().as_bool(), Some(true));
+    server.join().unwrap();
+}
