@@ -70,11 +70,22 @@
 //! variance across independent walk seeds
 //! (`walks::kernel_variance_iid`, also published as the registry gauge
 //! of the same name). All run in the quick CI profile.
+//!
+//! PR 9 additions (sharding): `stream_delta_batch_sharded` — the PR 4
+//! K-delta roundtrip through the partitioned engine
+//! (`shard::ShardedFeatures`, S=4 workers resampling their owned walks
+//! in parallel), contrasted against the mono `stream_delta_batch`; and
+//! `server_predict_throughput_sharded` — the PR 7 four-client predict
+//! hammer against a `--shards 2` server (wait-free reads either way,
+//! so this row tracks its mono twin). Both run in the quick CI
+//! profile and flow through the bench gate like any other row.
 
 use grfgp::bo::{run_policy, BoConfig, ThompsonPolicy};
 use grfgp::gp::{GpModel, Hypers, Modulation};
 use grfgp::graph::generators;
 use grfgp::server::wire::{WireConfig, WireDecoder};
+use grfgp::server::ServerConfig;
+use grfgp::shard::ShardedFeatures;
 use grfgp::sparse::ops::GramOperator;
 use grfgp::sparse::FeatureLayout;
 use grfgp::stream::{GraphDelta, StreamingFeatures};
@@ -452,7 +463,7 @@ fn main() {
                 seq_s,
             ));
             let mut s_bat =
-                StreamingFeatures::new(gpl.clone(), cfgpl.clone(), fpl, 33);
+                StreamingFeatures::new(gpl.clone(), cfgpl.clone(), fpl.clone(), 33);
             let r = bench(
                 &format!("stream_delta_batch/n={npl}/K={k_deltas}"),
                 1,
@@ -463,10 +474,48 @@ fn main() {
                     s_bat.overlay_rows()
                 },
             );
-            rows.push(BenchRow::new("stream_delta_batch", npl, k_deltas, r.mean_s));
+            let bat_s = r.mean_s;
+            rows.push(BenchRow::new("stream_delta_batch", npl, k_deltas, bat_s));
             println!(
                 "stream delta batch speedup (n={npl}, {k_deltas} deltas): {:.1}x",
-                seq_s / r.mean_s.max(1e-12)
+                seq_s / bat_s.max(1e-12)
+            );
+
+            // The same roundtrip through the partitioned engine (S=4
+            // shard workers, each resampling only its owned walks and
+            // patching only its own rows — bit-identical features,
+            // property-tested in `shard`). The contrast vs
+            // `stream_delta_batch` is the fan-out overhead / win of the
+            // per-shard parallel resample.
+            let n_shards = 4usize;
+            let mut s_shard = ShardedFeatures::new(
+                gpl.clone(),
+                cfgpl.clone(),
+                fpl,
+                33,
+                n_shards,
+            );
+            let r = bench(
+                &format!(
+                    "stream_delta_batch_sharded/n={npl}/K={k_deltas}/S={n_shards}"
+                ),
+                1,
+                3,
+                || {
+                    s_shard.apply_delta_batch(&adds).unwrap();
+                    s_shard.apply_delta_batch(&undo).unwrap();
+                    s_shard.overlay_rows()
+                },
+            );
+            rows.push(BenchRow::new(
+                "stream_delta_batch_sharded",
+                npl,
+                k_deltas,
+                r.mean_s,
+            ));
+            println!(
+                "stream delta batch sharded (n={npl}, S={n_shards}): {:.2}x vs mono",
+                bat_s / r.mean_s.max(1e-12)
             );
         }
 
@@ -824,6 +873,81 @@ fn main() {
         rows.push(BenchRow::new("server_mixed_p99", ns, 1, p99));
         srv_call(&mut s0, &mut r0, "{\"op\":\"shutdown\"}");
         srv.join().unwrap();
+
+        // The same 4-client predict hammer against a server running the
+        // partitioned engine (`--shards 2`). Reads are wait-free in
+        // both modes (snapshot loads, zero model locks), so this row
+        // should track `server_predict_throughput`; a regression here
+        // is sharded-operand kernel overhead on the read path.
+        let g2 = generators::ring(ns);
+        let wcfg2 = WalkConfig {
+            n_walks: 32,
+            p_halt: 0.1,
+            max_len: 3,
+            threads: 1,
+            ..Default::default()
+        };
+        let hy2 = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+        let stream2 =
+            StreamingFeatures::new(g2, wcfg2, hy2.modulation.coeffs(), 0);
+        let listener2 = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr2 = listener2.local_addr().unwrap();
+        let shard_cfg = ServerConfig { shards: 2, ..ServerConfig::default() };
+        let srv2 = std::thread::spawn(move || {
+            grfgp::server::serve_on_with(stream2, hy2, listener2, 7, shard_cfg)
+                .unwrap();
+        });
+        let (mut s2, mut r2) = srv_connect(addr2);
+        for i in 0..16 {
+            srv_call(
+                &mut s2,
+                &mut r2,
+                &format!(
+                    "{{\"op\":\"observe\",\"node\":{},\"y\":{}}}",
+                    i * 37 % ns,
+                    (i as f64 * 0.3).sin()
+                ),
+            );
+        }
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|k| {
+                std::thread::spawn(move || {
+                    let (mut s, mut r) = srv_connect(addr2);
+                    for j in 0..per_client {
+                        let a = (k * 31 + j * 7) % 2048;
+                        srv_call(
+                            &mut s,
+                            &mut r,
+                            &format!(
+                                "{{\"op\":\"predict\",\"nodes\":[{},{}],\
+                                 \"samples\":4}}",
+                                a,
+                                (a + 97) % 2048
+                            ),
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let per_req_sharded = t0.elapsed().as_secs_f64() / total;
+        println!(
+            "server_predict_throughput_sharded/n={ns}/C={clients}/S=2: \
+             {:.3} ms/req ({:.0} req/s)",
+            1e3 * per_req_sharded,
+            1.0 / per_req_sharded
+        );
+        rows.push(BenchRow::new(
+            "server_predict_throughput_sharded",
+            ns,
+            clients,
+            per_req_sharded,
+        ));
+        srv_call(&mut s2, &mut r2, "{\"op\":\"shutdown\"}");
+        srv2.join().unwrap();
     }
 
     // --- Telemetry: record-path cost + scrape cost --------------------

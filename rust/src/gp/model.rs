@@ -19,11 +19,17 @@
 //! A dynamic-graph delta flows through two delta row-stores that share
 //! one compaction policy:
 //!
-//! 1. **Stream overlay** — [`StreamingFeatures`] resamples only the
-//!    invalidated walks and stages the rebuilt feature rows over its
-//!    compacted base CSRs (see `stream` module docs).
+//! 1. **Stream overlay** — [`crate::stream::StreamingFeatures`] (or a
+//!    sharded [`crate::shard::ShardedFeatures`] — anything implementing
+//!    [`DeltaEngine`]) resamples only the invalidated walks and stages
+//!    the rebuilt feature rows over its compacted base CSRs (see
+//!    `stream` module docs).
 //! 2. **Model overlay** — this model mirrors that design for its own
-//!    operands: Φ and Φᵀ live in [`crate::sparse::RowOverlay`]s, and
+//!    operands: Φ and Φᵀ live in [`Operand`]s (a
+//!    [`crate::sparse::RowOverlay`], or its row-partitioned
+//!    [`crate::shard::ShardedOverlay`] twin when
+//!    [`GpModel::set_sharding`] is active — bitwise interchangeable,
+//!    see the `shard` module docs), and
 //!    [`CombinedFeatures`] keeps per-row pattern segments + relative
 //!    scatter maps for the patched rows. A delta batch therefore costs
 //!    O(touched nnz) model-side: no Φ clone, no full Φᵀ splice, no
@@ -48,8 +54,9 @@ use crate::gp::adam::Adam;
 use crate::gp::modulation::Hypers;
 use crate::linalg::cg::{block_cg_solve, pcg_solve, CgStats};
 use crate::linalg::{column_dots, dot};
-use crate::sparse::{Csr, Ell, FeatureLayout, RowOverlay};
-use crate::stream::{GraphDelta, StreamingFeatures};
+use crate::shard::{Operand, Partition};
+use crate::sparse::{Csr, Ell, FeatureLayout};
+use crate::stream::{DeltaEngine, GraphDelta};
 use crate::util::parallel::num_threads;
 use crate::util::rng::Rng;
 use crate::walks::{CombinedFeatures, WalkComponents};
@@ -160,8 +167,14 @@ pub struct GpModel {
     /// Current Φ and Φᵀ as compacted-base + delta-row overlays: a
     /// hyperparameter refresh rebuilds the bases; a graph delta stages
     /// O(touched) row patches and leaves the bases alone (module docs).
-    phi: RowOverlay,
-    phi_t: RowOverlay,
+    /// Stored behind [`Operand`] so the same solve/predict code runs
+    /// over a mono `RowOverlay` or the row-partitioned sharded twin.
+    phi: Operand,
+    phi_t: Operand,
+    /// Node partition the operands are stored under (`None` = mono).
+    /// Purely a storage-mode choice: every product, solve, and patch is
+    /// bitwise identical either way ([`crate::shard`] module docs).
+    partition: Option<Partition>,
     /// Scratch buffers for the masked gram operator — the CG hot path
     /// must not allocate per iteration (EXPERIMENTS.md §Perf).
     scratch: std::cell::RefCell<SolveScratch>,
@@ -231,8 +244,8 @@ impl SolveScratch {
 /// two entry points are bitwise-identical by construction because
 /// they execute literally the same code over the same operand kinds.
 pub struct SolveCore<'a> {
-    pub phi: &'a RowOverlay,
-    pub phi_t: &'a RowOverlay,
+    pub phi: &'a Operand,
+    pub phi_t: &'a Operand,
     pub phi_ell: Option<&'a Ell>,
     pub phi_t_ell: Option<&'a Ell>,
     pub mask: &'a [f64],
@@ -477,8 +490,8 @@ impl<'a> SolveCore<'a> {
 /// [`SolveCore`] the live model does, its answers are bitwise
 /// identical to [`GpModel::predict`] on the same state and rng.
 pub struct ModelReadView {
-    phi: RowOverlay,
-    phi_t: RowOverlay,
+    phi: Operand,
+    phi_t: Operand,
     phi_ell: Option<Arc<Ell>>,
     phi_t_ell: Option<Arc<Ell>>,
     mask: Vec<f64>,
@@ -581,8 +594,8 @@ impl GpModel {
         let mut features = components.prepare();
         let phi_f = hypers.modulation.coeffs();
         let phi = features.combine_into(&phi_f).clone();
-        let phi_t = RowOverlay::from(phi.transpose_par(threads));
-        let phi = RowOverlay::from(phi);
+        let phi_t = Operand::from_csr(phi.transpose_par(threads), None);
+        let phi = Operand::from_csr(phi, None);
         GpModel {
             features,
             hypers,
@@ -592,12 +605,48 @@ impl GpModel {
             c_t: std::cell::RefCell::new(Some(c_t)),
             phi,
             phi_t,
+            partition: None,
             scratch: std::cell::RefCell::new(SolveScratch::new(n)),
             jacobi_cache: std::cell::RefCell::new(None),
             ell_cache: std::cell::RefCell::new(None),
             phi_transposes: std::cell::Cell::new(1),
             phi_f,
         }
+    }
+
+    /// Switch the Φ/Φᵀ storage mode: `Some(p)` re-wraps both operands
+    /// as row-partitioned [`crate::shard::ShardedOverlay`]s under `p`,
+    /// `None` folds them back to mono. The fold-and-rewrap is one
+    /// O(nnz) pass per operand and preserves every stored value bit, so
+    /// all downstream products and solves are unchanged; the packed ELL
+    /// selection is invalidated because the sharded mode never offers
+    /// one ([`Operand::select_ell`]).
+    pub fn set_sharding(&mut self, partition: Option<Partition>) {
+        if self.partition == partition {
+            return;
+        }
+        let phi = self.phi.to_csr();
+        let phi_t = self.phi_t.to_csr();
+        self.phi = Operand::from_csr(phi, partition);
+        self.phi_t = Operand::from_csr(phi_t, partition);
+        self.partition = partition;
+        *self.ell_cache.borrow_mut() = None;
+    }
+
+    /// The node partition the operands are stored under (`None` = mono).
+    pub fn partition(&self) -> Option<Partition> {
+        self.partition
+    }
+
+    /// Φ folded to a plain CSR — test/diagnostic oracle for the
+    /// sharded-vs-mono bit-identity suites.
+    pub fn phi_csr(&self) -> Csr {
+        self.phi.to_csr()
+    }
+
+    /// Φᵀ folded to a plain CSR (see [`GpModel::phi_csr`]).
+    pub fn phi_t_csr(&self) -> Csr {
+        self.phi_t.to_csr()
     }
 
     /// How many full Φ transposes (`transpose_par`) this model has run
@@ -654,8 +703,8 @@ impl GpModel {
         // the rebuilt Φ/Φᵀ start a fresh compacted generation.
         let phi = self.features.combine_into(&f).clone();
         let phi_t = phi.transpose_par(self.solve.effective_threads());
-        self.phi = RowOverlay::from(phi);
-        self.phi_t = RowOverlay::from(phi_t);
+        self.phi = Operand::from_csr(phi, self.partition);
+        self.phi_t = Operand::from_csr(phi_t, self.partition);
         self.phi_transposes.set(self.phi_transposes.get() + 1);
         self.phi_f = f;
         *self.jacobi_cache.borrow_mut() = None;
@@ -711,7 +760,7 @@ impl GpModel {
     /// streaming subsystem's correctness anchor.
     pub fn apply_graph_delta(
         &mut self,
-        stream: &mut StreamingFeatures,
+        stream: &mut impl DeltaEngine,
         delta: &GraphDelta,
         warm: Option<&[f64]>,
     ) -> Result<DeltaOutcome, String> {
@@ -730,16 +779,18 @@ impl GpModel {
         })
     }
 
-    /// Batched [`GpModel::apply_graph_delta`]: the stream applies the
-    /// whole batch with one union invalidation + parallel resample
-    /// ([`StreamingFeatures::apply_delta_batch`]), then the model pays
-    /// **one** union row patch, one incremental operator refresh, and
-    /// one warm re-solve for the entire batch. The post-batch model is
-    /// bit-identical to one built from scratch on the mutated graph
-    /// under the same per-walk seeds.
+    /// Batched [`GpModel::apply_graph_delta`]: the delta engine applies
+    /// the whole batch with one union invalidation + parallel resample
+    /// ([`crate::stream::StreamingFeatures::apply_delta_batch`], or the
+    /// per-shard fan-out of [`crate::shard::ShardedFeatures`]), then
+    /// the model pays **one** union row patch, one incremental operator
+    /// refresh, and one warm re-solve for the entire batch. The
+    /// post-batch model is bit-identical to one built from scratch on
+    /// the mutated graph under the same per-walk seeds — whichever
+    /// engine maintained the features.
     pub fn apply_graph_delta_batch(
         &mut self,
-        stream: &mut StreamingFeatures,
+        stream: &mut impl DeltaEngine,
         deltas: &[GraphDelta],
         warm: Option<&[f64]>,
     ) -> Result<BatchDeltaOutcome, String> {
@@ -751,10 +802,10 @@ impl GpModel {
             ));
         }
         let n_len = self.features.components.n_coeffs();
-        if stream.config().max_len + 1 != n_len {
+        if stream.walk_config().max_len + 1 != n_len {
             return Err(format!(
                 "stream l_max+1 = {} != model modulation length {n_len}",
-                stream.config().max_len + 1
+                stream.walk_config().max_len + 1
             ));
         }
         let summary = stream.apply_delta_batch(deltas)?;
@@ -926,11 +977,8 @@ impl GpModel {
     /// Jacobi preconditioner diagonal of H, `diag(H)_i = m_i ‖φ_i‖² + σ²`
     /// (see [`crate::sparse::ops::jacobi_diag`], the shared definition).
     pub fn jacobi_diag(&self) -> Vec<f64> {
-        crate::sparse::ops::jacobi_diag(
-            &self.phi,
-            Some(&self.mask),
-            self.hypers.sigma_n2(),
-        )
+        self.phi
+            .jacobi_diag(Some(&self.mask), self.hypers.sigma_n2())
     }
 
     /// Kernel product y = Φ (Φᵀ x) (no mask/noise).

@@ -185,7 +185,7 @@ pub fn knn_graph(points: &[[f64; 3]], k: usize) -> Graph {
             })
             .collect();
         let kth = k.min(dists.len());
-        dists.select_nth_unstable_by(kth - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        dists.select_nth_unstable_by(kth - 1, |a, b| a.0.total_cmp(&b.0));
         for &(_, j) in &dists[..kth] {
             let (a, b) = (i as u32, j);
             edges.push((a.min(b), a.max(b), 1.0));

@@ -65,6 +65,13 @@ impl Graph {
     /// Build from an undirected edge list. Duplicate edges are summed;
     /// self-loops are kept as single directed entries.
     pub fn from_edges(n: usize, edges: &[(u32, u32, f64)]) -> Graph {
+        // Node ids are stored as u32 throughout (CSR targets, staged
+        // rows): guard the ceiling here so every later `as u32` cast
+        // on an index < n is provably lossless instead of wrapping.
+        assert!(
+            u32::try_from(n).is_ok(),
+            "graph node count {n} exceeds the u32 id space"
+        );
         let mut deg = vec![0usize; n];
         for &(a, b, _) in edges {
             assert!((a as usize) < n && (b as usize) < n, "edge out of range");
@@ -304,6 +311,12 @@ impl Graph {
     /// Append an isolated node; returns its id. O(1).
     pub fn add_node(&mut self) -> usize {
         let n = self.num_nodes();
+        // Same u32-id-space guard as `from_edges`: the new node's id
+        // must remain representable in CSR targets / staged-row keys.
+        assert!(
+            u32::try_from(n).map(|i| i < u32::MAX).unwrap_or(false),
+            "graph node count {n} exceeds the u32 id space"
+        );
         self.offsets.push(*self.offsets.last().unwrap());
         n
     }

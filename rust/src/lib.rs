@@ -27,6 +27,7 @@ pub mod linalg;
 pub mod obs;
 pub mod runtime;
 pub mod server;
+pub mod shard;
 pub mod sparse;
 pub mod stream;
 pub mod util;

@@ -61,7 +61,7 @@ pub fn jacobi_eigen(a: &Mat, max_sweeps: usize) -> (Vec<f64>, Mat) {
     // Extract and sort ascending.
     let mut pairs: Vec<(f64, usize)> =
         (0..n).map(|i| (m[(i, i)], i)).collect();
-    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
     let lam: Vec<f64> = pairs.iter().map(|p| p.0).collect();
     let mut vec_sorted = Mat::zeros(n, n);
     for (new_j, &(_, old_j)) in pairs.iter().enumerate() {
@@ -221,7 +221,7 @@ pub fn sym_eigen(a: &Mat) -> (Vec<f64>, Mat) {
 
     // Sort ascending.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    order.sort_by(|&a, &b| d[a].total_cmp(&d[b]));
     let lam: Vec<f64> = order.iter().map(|&i| d[i]).collect();
     let mut v = Mat::zeros(n, n);
     for (newj, &oldj) in order.iter().enumerate() {

@@ -33,6 +33,8 @@ USAGE:
               [--max-frame-bytes B --max-parse-depth D --unicode strict|replace]
               [--max-conns C --read-timeout-ms T --idle-timeout-s T --write-timeout-s T]
               [--max-batch K] [--slow-request-ms T]
+              [--shards S] [--metrics-addr 127.0.0.1:9464]
+              [--alert-p99-ms op=ms[,op=ms...]]
   grfgp info  [--artifacts artifacts]
 
 Common experiment options:
@@ -172,6 +174,21 @@ fn run_serve(args: &Args) -> Result<()> {
         // Slow-request outlier log: one structured JSON line to stderr
         // per request slower than this (0 = off).
         slow_request_ms: args.u64("slow-request-ms", defaults.slow_request_ms),
+        // Partitioned feature maintenance: S workers each own the rows
+        // `i mod S == s` (1 = the mono engine; see server docs,
+        // "Sharding topology"). Bitwise-identical results either way.
+        shards: args.usize("shards", defaults.shards),
+        // Prometheus exposition: plain-HTTP `GET /metrics` listener
+        // (unset = wire `{"op":"metrics"}` only).
+        metrics_addr: args.get("metrics-addr").map(|s| s.to_string()),
+        // p99 latency limits per request op, checked at scrape time.
+        alerts: match args.get("alert-p99-ms") {
+            None => Vec::new(),
+            Some(spec) => match grfgp::obs::alerts::parse_rules(spec) {
+                Ok(rules) => rules,
+                Err(e) => bail!("--alert-p99-ms: {e}"),
+            },
+        },
     };
     grfgp::server::serve_with(stream, hypers, &addr, seed, config)
 }

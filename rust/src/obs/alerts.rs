@@ -1,0 +1,192 @@
+//! p99 latency alerting off the registry's log₂ histograms.
+//!
+//! Rules come from `--alert-p99-ms op=ms[,op=ms...]` (one per request
+//! op) and are **evaluated at scrape time** — the `{"op":"metrics"}`
+//! wire op and the `--metrics-addr` HTTP endpoint both call
+//! [`evaluate`] before rendering, so alerting costs nothing between
+//! scrapes and needs no timer thread. Evaluation reads only atomics
+//! (the histogram buckets), keeping the scrape path lock-free.
+//!
+//! A breached rule fires one structured single-line JSON record to
+//! stderr ([`alert_record`], machine-parseable like the server's
+//! `slow_request` records) and bumps the `alerts_fired` counter, so a
+//! scraper can alert on the counter even if it drops stderr.
+//!
+//! The p99 is the registry's bucket-upper-bound estimate
+//! ([`crate::obs::registry::Histo::quantile`]): biased upward by at
+//! most 2×, never downward — a conservative trigger that cannot miss a
+//! real breach at twice the limit.
+
+use crate::obs::registry::{self, Histo};
+use crate::util::json::Json;
+
+/// One configured p99 limit for a request-op latency histogram.
+#[derive(Clone)]
+pub struct AlertRule {
+    /// Request op the rule watches (e.g. `predict`).
+    pub op: String,
+    /// Fire when the op's p99 exceeds this many milliseconds.
+    pub p99_limit_ms: u64,
+    histo: &'static Histo,
+}
+
+impl std::fmt::Debug for AlertRule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlertRule")
+            .field("op", &self.op)
+            .field("p99_limit_ms", &self.p99_limit_ms)
+            .finish()
+    }
+}
+
+/// One fired alert (returned by [`evaluate`] for tests/callers; the
+/// stderr record is the operational surface).
+#[derive(Clone, Debug)]
+pub struct Alert {
+    pub op: String,
+    /// Observed p99, in milliseconds (bucket upper bound).
+    pub p99_ms: f64,
+    pub p99_limit_ms: u64,
+}
+
+/// Parse a `--alert-p99-ms` spec: comma-separated `op=ms` pairs, ops
+/// resolved against the request-metric catalogue
+/// ([`registry::request_metrics`]). Unknown ops and malformed limits
+/// are errors — a typo'd rule that silently never fires is worse than
+/// a failed start.
+pub fn parse_rules(spec: &str) -> Result<Vec<AlertRule>, String> {
+    let mut rules = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (op, limit) = part
+            .split_once('=')
+            .ok_or_else(|| format!("alert rule '{part}': expected op=ms"))?;
+        let op = op.trim();
+        let p99_limit_ms: u64 = limit.trim().parse().map_err(|_| {
+            format!("alert rule '{part}': bad millisecond limit '{}'", limit.trim())
+        })?;
+        let (_, histo) = registry::request_metrics(op)
+            .ok_or_else(|| format!("alert rule '{part}': unknown op '{op}'"))?;
+        rules.push(AlertRule {
+            op: op.to_string(),
+            p99_limit_ms,
+            histo,
+        });
+    }
+    Ok(rules)
+}
+
+/// The structured single-line record logged (to stderr) for a breach.
+/// Split out so the shape is unit-testable.
+pub fn alert_record(a: &Alert) -> Json {
+    Json::obj(vec![
+        ("alert", Json::Bool(true)),
+        ("metric", Json::Str(format!("request_ns_{}", a.op))),
+        ("op", Json::Str(a.op.clone())),
+        ("p99_ms", Json::Num(a.p99_ms)),
+        ("limit_ms", Json::from_uint(a.p99_limit_ms)),
+    ])
+}
+
+/// Check every rule against the live registry. Each breach bumps
+/// `alerts_fired` and logs one [`alert_record`] line to stderr; an
+/// empty histogram (no traffic yet) never fires. Atomics only.
+pub fn evaluate(rules: &[AlertRule]) -> Vec<Alert> {
+    let mut fired = Vec::new();
+    for rule in rules {
+        let Some(p99_ns) = rule.histo.quantile(0.99) else {
+            continue;
+        };
+        let p99_ms = p99_ns as f64 / 1e6;
+        if p99_ms > rule.p99_limit_ms as f64 {
+            registry::ALERTS_FIRED.inc();
+            let alert = Alert {
+                op: rule.op.clone(),
+                p99_ms,
+                p99_limit_ms: rule.p99_limit_ms,
+            };
+            let record = alert_record(&alert).to_string();
+            eprintln!("{record}");
+            fired.push(alert);
+        }
+    }
+    fired
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    #[test]
+    fn parse_rules_accepts_pairs_and_rejects_junk() {
+        let rules = parse_rules("predict=50, add_edge=120 ,").unwrap();
+        assert_eq!(rules.len(), 2);
+        assert_eq!(rules[0].op, "predict");
+        assert_eq!(rules[0].p99_limit_ms, 50);
+        assert_eq!(rules[1].op, "add_edge");
+        assert_eq!(rules[1].p99_limit_ms, 120);
+        assert!(parse_rules("predict").is_err(), "missing =ms");
+        assert!(parse_rules("predict=fast").is_err(), "non-numeric limit");
+        assert!(parse_rules("warp_drive=5").is_err(), "unknown op");
+        assert!(parse_rules("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn p99_breaches_fire_once_per_scrape_and_count() {
+        let _guard = registry::test_lock();
+        let was_enabled = obs::enabled();
+        obs::set_enabled(true);
+        // Synthetic fill of the (test-only) fault op's histogram: a
+        // crowd of fast requests and >1% slow outliers put the p99 in
+        // the slow bucket (upper bound 2^24 - 1 ns ≈ 16.8 ms). Sized
+        // relative to any samples other tests already recorded — the
+        // registry's statics persist across tests in one binary.
+        let (_, h) = registry::request_metrics("fault").unwrap();
+        let prior = h.count();
+        let slow = (prior + 99) / 50 + 1;
+        for _ in 0..99 {
+            h.record(100_000); // 0.1 ms
+        }
+        for _ in 0..slow {
+            h.record(10_000_000); // 10 ms → bucket top ≈ 16.8 ms
+        }
+        let p99_ms = h.quantile(0.99).unwrap() as f64 / 1e6;
+        assert!(p99_ms > 10.0, "synthetic fill missed the slow bucket");
+
+        let rules = parse_rules("fault=5").unwrap();
+        let before = registry::ALERTS_FIRED.get();
+        let fired = evaluate(&rules);
+        assert_eq!(fired.len(), 1, "limit below p99 must fire");
+        assert_eq!(registry::ALERTS_FIRED.get(), before + 1);
+        assert_eq!(fired[0].op, "fault");
+        assert!(fired[0].p99_ms > 5.0);
+
+        // A generous limit stays quiet; so does an op with no traffic
+        // (quantile of an empty histogram is None — only checkable
+        // when no other test in this binary has recorded shutdowns).
+        let mut spec = String::from("fault=60000");
+        if registry::request_metrics("shutdown").unwrap().1.count() == 0 {
+            spec.push_str(",shutdown=1");
+        }
+        let quiet = parse_rules(&spec).unwrap();
+        let before = registry::ALERTS_FIRED.get();
+        assert!(
+            evaluate(&quiet).is_empty(),
+            "limit above p99 / empty histogram must not fire"
+        );
+        assert_eq!(registry::ALERTS_FIRED.get(), before);
+
+        // The stderr record is one flat JSON object with the fields a
+        // log pipeline keys on.
+        let rec = alert_record(&fired[0]).to_string();
+        assert!(rec.contains("\"alert\":true"));
+        assert!(rec.contains("\"metric\":\"request_ns_fault\""));
+        assert!(rec.contains("\"limit_ms\":5"));
+        assert!(!rec.contains('\n'));
+        obs::set_enabled(was_enabled);
+    }
+}

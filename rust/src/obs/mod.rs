@@ -23,7 +23,13 @@
 //!   predict-vs-publish lag (`server::snapshot`), and per-request wall
 //!   time by op (`server`).
 //! * [`prom`] — a Prometheus-text rendering of the registry, served
-//!   (with the JSON form) by the server's `{"op":"metrics"}` wire op.
+//!   (with the JSON form) by the server's `{"op":"metrics"}` wire op
+//!   and by the dependency-free `--metrics-addr` HTTP exposition
+//!   listener.
+//! * [`alerts`] — configurable p99 latency limits per request op
+//!   (`--alert-p99-ms`), evaluated against the histograms at scrape
+//!   time; breaches log one structured JSON record and bump
+//!   `alerts_fired`.
 //!
 //! Telemetry is **on by default** and can be flipped off globally with
 //! [`set_enabled`] (a single `AtomicBool` checked at each record
@@ -42,6 +48,7 @@
 //! monotone — two consecutive scrapes never observe a counter going
 //! backwards. `tests/obs.rs` asserts both under concurrent load.
 
+pub mod alerts;
 pub mod prom;
 pub mod registry;
 pub mod span;

@@ -300,6 +300,19 @@ catalogue! {
         (STREAM_COMPACTIONS, "stream_compactions"),
         // Read-snapshot publications.
         (SNAPSHOT_PUBLISHES, "snapshot_publishes"),
+        // Alert rules that fired at scrape time (`obs::alerts`).
+        (ALERTS_FIRED, "alerts_fired"),
+        // Per-shard delta-fan-out work (see `shard_metrics`): walks
+        // resampled and feature rows patched by each shard worker.
+        // Shards beyond slot 3 clamp into the last slot.
+        (SHARD0_RESAMPLE_WALKS, "shard0_resample_walks"),
+        (SHARD1_RESAMPLE_WALKS, "shard1_resample_walks"),
+        (SHARD2_RESAMPLE_WALKS, "shard2_resample_walks"),
+        (SHARD3_RESAMPLE_WALKS, "shard3_resample_walks"),
+        (SHARD0_PATCH_ROWS, "shard0_patch_rows"),
+        (SHARD1_PATCH_ROWS, "shard1_patch_rows"),
+        (SHARD2_PATCH_ROWS, "shard2_patch_rows"),
+        (SHARD3_PATCH_ROWS, "shard3_patch_rows"),
     ],
     gauges: [
         // Mean per-entry kernel-estimate variance across walk seeds —
@@ -353,7 +366,27 @@ catalogue! {
         (EXP_INFER_NS, "exp_infer_ns", Unit::Nanos),
         // Catch-all for the deprecated `util::timer::Stopwatch` shim.
         (STOPWATCH_NS, "stopwatch_ns", Unit::Nanos),
+        // Per-shard resample wall time inside the delta fan-out (same
+        // slot clamp as the shard counters).
+        (SHARD0_RESAMPLE_NS, "shard0_resample_ns", Unit::Nanos),
+        (SHARD1_RESAMPLE_NS, "shard1_resample_ns", Unit::Nanos),
+        (SHARD2_RESAMPLE_NS, "shard2_resample_ns", Unit::Nanos),
+        (SHARD3_RESAMPLE_NS, "shard3_resample_ns", Unit::Nanos),
     ],
+}
+
+/// Per-shard worker metrics `(resample_walks, patch_rows,
+/// resample_ns)` for shard `s`. Four static slots are catalogued;
+/// shards `s >= 3` share the last slot (the export stays bounded no
+/// matter how many shards a deployment runs — per-shard resolution
+/// for the first three, an aggregate tail for the rest).
+pub fn shard_metrics(s: usize) -> (&'static Counter, &'static Counter, &'static Histo) {
+    match s {
+        0 => (&SHARD0_RESAMPLE_WALKS, &SHARD0_PATCH_ROWS, &SHARD0_RESAMPLE_NS),
+        1 => (&SHARD1_RESAMPLE_WALKS, &SHARD1_PATCH_ROWS, &SHARD1_RESAMPLE_NS),
+        2 => (&SHARD2_RESAMPLE_WALKS, &SHARD2_PATCH_ROWS, &SHARD2_RESAMPLE_NS),
+        _ => (&SHARD3_RESAMPLE_WALKS, &SHARD3_PATCH_ROWS, &SHARD3_RESAMPLE_NS),
+    }
 }
 
 /// The per-op request counter + latency histogram for a wire op name

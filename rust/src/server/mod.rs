@@ -127,7 +127,9 @@
 //!
 //! ## Dynamic-graph lifecycle
 //!
-//! The server owns a [`StreamingFeatures`] next to the model. A graph
+//! The server owns a [`FeatureEngine`] next to the model — the mono
+//! [`StreamingFeatures`] by default, or the partitioned
+//! [`crate::shard::ShardedFeatures`] behind `--shards`. A graph
 //! mutation does **not** rebuild the features: only the walks whose
 //! trajectories visited the delta endpoints are resampled, the affected
 //! feature rows are patched through the model
@@ -181,6 +183,39 @@
 //!   no longer perturbs the write-side rng stream, and the direct
 //!   handler path and the batcher compute predictions through the
 //!   **same** implementation ([`predict_off_snapshot`]).
+//!
+//! ## Sharding topology (`--shards S`)
+//!
+//! With `S > 1` the graph's nodes are partitioned across `S` shard
+//! workers by the pure round-robin rule `owner(i) = i mod S`
+//! ([`crate::shard::Partition`]) — balanced under `add_node` growth and
+//! derivable from the id alone, so routing needs no lookup table.
+//!
+//! * **Partitioned maintenance.** Each shard owns the feature rows of
+//!   its nodes: its own walk store, visit index, and delta overlay
+//!   over row-partitioned component bases. A validated write batch
+//!   fans out to all shards; each resamples only the *owned* walks the
+//!   batch invalidated and patches only its own Φ/Φᵀ rows, in
+//!   parallel ([`crate::shard::ShardedFeatures::apply_delta_batch`]).
+//! * **Cross-shard edge invalidation.** An edge delta `{u, v}` is
+//!   routed by *walk-source* ownership, not endpoint ownership: a walk
+//!   started at shard A's node that visited `u` lives in shard A's
+//!   visit index, so each shard discovers its own invalidations from
+//!   its replica of the graph — no shard asks another what to resample
+//!   (walk seeds are a pure function of `(seed, node, walk)`).
+//! * **Snapshot composition invariant.** The write path joins every
+//!   shard worker *before* the model rows are patched and the
+//!   [`snapshot::ReadSnapshot`] is published, so a snapshot can never
+//!   mix two generations of per-shard state: one `graph_version`
+//!   stamps all rows, and ack-implies-published holds exactly as in
+//!   the mono path. Predicts stay wait-free and never acquire the
+//!   model lock, sharded or not.
+//! * **Bitwise contract.** Φ, Φᵀ, predictions, and `graph_version`
+//!   stamps are bit-identical to the unsharded engine for every shard
+//!   count (enforced by `tests/shard.rs` across S ∈ {2,4,7}, hub-cap
+//!   saturation, and forced compactions). Per-shard compaction
+//!   cadences and overlay occupancy legitimately differ — those are
+//!   observability-only.
 
 pub mod batcher;
 pub mod snapshot;
@@ -189,6 +224,7 @@ pub mod wire;
 use crate::gp::model::GpModel;
 use crate::gp::Hypers;
 use crate::obs;
+use crate::shard::{FeatureEngine, ShardedFeatures};
 use crate::stream::{GraphDelta, StreamingFeatures};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -230,6 +266,18 @@ pub struct ServerConfig {
     /// slower than this many milliseconds (`--slow-request-ms`;
     /// 0 disables the log, which is the default).
     pub slow_request_ms: u64,
+    /// Feature-maintenance shard count (`--shards`; 1 = the mono
+    /// engine). See the module-level "Sharding topology" section.
+    pub shards: usize,
+    /// Optional plaintext-HTTP metrics listener address
+    /// (`--metrics-addr`): answers `GET /metrics` with the Prometheus
+    /// text rendering so a stock scraper needs no JSON shim. `None`
+    /// (default) binds nothing.
+    pub metrics_addr: Option<String>,
+    /// p99 latency alert rules (`--alert-p99-ms op=ms,...`), evaluated
+    /// at every metrics scrape — wire op and HTTP listener alike (see
+    /// [`crate::obs::alerts`]).
+    pub alerts: Vec<obs::alerts::AlertRule>,
 }
 
 impl Default for ServerConfig {
@@ -243,6 +291,9 @@ impl Default for ServerConfig {
             fault_injection: false,
             max_batch: 8,
             slow_request_ms: 0,
+            shards: 1,
+            metrics_addr: None,
+            alerts: Vec::new(),
         }
     }
 }
@@ -328,8 +379,10 @@ impl ServerState {
 /// The mutable model + data the workers operate on.
 pub struct ModelState {
     pub model: GpModel,
-    /// Incrementally maintained walk/feature state of the served graph.
-    pub stream: StreamingFeatures,
+    /// Incrementally maintained walk/feature state of the served graph
+    /// — the mono engine, or the partitioned fan-out behind `--shards`
+    /// (bitwise interchangeable; see [`crate::shard`]).
+    pub stream: FeatureEngine,
     pub observations: Vec<(usize, f64)>,
     pub rng: Rng,
     /// Posterior-mean solve carried across graph deltas — the warm
@@ -341,10 +394,43 @@ impl ModelState {
     /// Build the served model from the streaming state (the model's
     /// components are the stream's, so deltas patch consistently).
     pub fn new(stream: StreamingFeatures, hypers: Hypers, seed: u64) -> ModelState {
-        let model = GpModel::new(stream.components(), hypers, &[], &[]);
+        ModelState::with_engine(FeatureEngine::Mono(stream), hypers, seed)
+    }
+
+    /// [`ModelState::new`] over a partitioned engine: the graph's nodes
+    /// are round-robin-owned by `n_shards` workers that each maintain
+    /// their own rows of the feature state; the model's Φ/Φᵀ operands
+    /// adopt the same partition ([`GpModel::set_sharding`]). With
+    /// `n_shards <= 1` this is exactly [`ModelState::new`].
+    pub fn new_sharded(
+        stream: StreamingFeatures,
+        hypers: Hypers,
+        seed: u64,
+        n_shards: usize,
+    ) -> ModelState {
+        if n_shards <= 1 {
+            return ModelState::new(stream, hypers, seed);
+        }
+        let sharded = ShardedFeatures::new(
+            stream.graph().clone(),
+            stream.config().clone(),
+            stream.modulation().to_vec(),
+            stream.seed(),
+            n_shards,
+        );
+        ModelState::with_engine(FeatureEngine::Sharded(sharded), hypers, seed)
+    }
+
+    /// Build the served model over an explicit maintenance engine. The
+    /// model's components are the engine's — and its operand storage
+    /// follows the engine's node partition — so deltas patch both
+    /// consistently in either mode.
+    pub fn with_engine(engine: FeatureEngine, hypers: Hypers, seed: u64) -> ModelState {
+        let mut model = GpModel::new(engine.components(), hypers, &[], &[]);
+        model.set_sharding(engine.partition());
         ModelState {
             model,
-            stream,
+            stream: engine,
             observations: Vec::new(),
             rng: Rng::new(seed),
             alpha: None,
@@ -368,7 +454,8 @@ impl ModelState {
             graph_version,
             n_nodes: self.model.n(),
             n_obs: self.observations.len(),
-            compactions: self.stream.compactions,
+            compactions: self.stream.compactions(),
+            shards: self.stream.n_shards(),
             publish_seq: 0,
             rng_base: self.rng.clone(),
             published_at: Instant::now(),
@@ -724,11 +811,15 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
                 ),
                 (
                     "deltas_applied",
-                    Json::from_uint(ms.stream.deltas_applied as u64),
+                    Json::from_uint(ms.stream.deltas_applied() as u64),
                 ),
                 (
                     "walks_resampled",
-                    Json::from_uint(ms.stream.walks_resampled_total as u64),
+                    Json::from_uint(ms.stream.walks_resampled_total() as u64),
+                ),
+                (
+                    "shards",
+                    Json::from_uint(ms.stream.n_shards() as u64),
                 ),
                 (
                     "overlay_rows",
@@ -760,6 +851,10 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
             // can never contend with serving. The no-torn-reads
             // guarantee is per-histogram (count == Σ buckets from one
             // bucket read); see the obs module docs.
+            // Scrape time is also alert time: every configured p99
+            // rule is checked against the live histograms (atomics
+            // only — the path stays lock-free).
+            obs::alerts::evaluate(&state.config.alerts);
             if *prometheus {
                 return Response::ok(vec![
                     ("format", Json::Str("prometheus".to_string())),
@@ -1031,6 +1126,61 @@ fn client_loop(
     Ok(())
 }
 
+/// Minimal, dependency-free HTTP exposition endpoint (`--metrics-addr`):
+/// answers `GET /metrics` with the Prometheus text rendering
+/// ([`crate::obs::prom::render`]) so a stock scraper can pull the
+/// registry without speaking the JSON wire protocol. One request per
+/// connection (`Connection: close`); reads/writes are bounded by the
+/// server's timeouts; every scrape also evaluates the configured p99
+/// alert rules ([`crate::obs::alerts`]). Polls shutdown on the accept
+/// loop, so it drains with the rest of the server.
+fn serve_metrics_http(listener: TcpListener, state: &ServerState) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    loop {
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let mut conn = match listener.accept() {
+            Ok((c, _)) => c,
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+            Err(_) => return,
+        };
+        let _ = conn.set_nonblocking(false);
+        let _ = conn.set_read_timeout(Some(state.config.read_timeout));
+        let _ = conn.set_write_timeout(Some(state.config.write_timeout));
+        // One bounded read is enough to route: the request line fits
+        // the head buffer, and nothing after it changes the answer.
+        let mut head = [0u8; 1024];
+        let k = match conn.read(&mut head) {
+            Ok(k) => k,
+            Err(_) => continue,
+        };
+        let line = String::from_utf8_lossy(&head[..k]);
+        let target = line.split_whitespace().nth(1).unwrap_or("");
+        let routed = line.starts_with("GET ")
+            && (target == "/metrics" || target.starts_with("/metrics?"));
+        let (status, body) = if routed {
+            obs::alerts::evaluate(&state.config.alerts);
+            ("200 OK", obs::prom::render())
+        } else {
+            ("404 Not Found", "only GET /metrics is served here\n".to_string())
+        };
+        let resp = format!(
+            "HTTP/1.0 {status}\r\n\
+             Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len(),
+        );
+        let _ = conn.write_all(resp.as_bytes());
+    }
+}
+
 /// Serve the streaming state on `addr` until a shutdown request
 /// arrives. The GP model is built from the stream's components, so
 /// graph deltas patch both consistently.
@@ -1076,12 +1226,28 @@ pub fn serve_on_with(
     seed: u64,
     config: ServerConfig,
 ) -> Result<()> {
-    let ms = ModelState::new(stream, hypers, seed);
+    let ms = ModelState::new_sharded(stream, hypers, seed, config.shards);
     let max_batch = config.max_batch;
+    let metrics_listener = match &config.metrics_addr {
+        Some(addr) => {
+            let l = TcpListener::bind(addr.as_str())
+                .with_context(|| format!("bind metrics listener {addr}"))?;
+            eprintln!(
+                "grfgp metrics exposition on http://{}/metrics",
+                l.local_addr()?
+            );
+            Some(l)
+        }
+        None => None,
+    };
     let state = Arc::new(ServerState::new(ms, config));
     let batcher = Arc::new(Batcher::new(max_batch));
     listener.set_nonblocking(true)?;
     std::thread::scope(|scope| -> Result<()> {
+        if let Some(ml) = metrics_listener {
+            let st = state.clone();
+            scope.spawn(move || serve_metrics_http(ml, &st));
+        }
         loop {
             if state.shutdown.load(Ordering::SeqCst) {
                 break;

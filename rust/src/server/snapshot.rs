@@ -49,8 +49,16 @@ pub struct ReadSnapshot {
     pub n_nodes: usize,
     /// Observation count at publish time.
     pub n_obs: usize,
-    /// Stream compaction count at publish time (observability).
+    /// Stream compaction count at publish time (observability; when
+    /// sharded, the sum over shards — per-shard cadences legitimately
+    /// differ, see [`crate::shard`]).
     pub compactions: usize,
+    /// How many feature-maintenance shards composed this snapshot's
+    /// operands (1 = mono). The composition invariant: the write path
+    /// joins **every** shard worker before it patches the model and
+    /// publishes, so a snapshot can never mix two generations of
+    /// per-shard state — one `graph_version` stamps all rows.
+    pub shards: usize,
     /// Monotone publication sequence number (assigned by
     /// [`SnapshotCell::publish`]).
     pub publish_seq: u64,

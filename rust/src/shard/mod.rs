@@ -1,0 +1,1321 @@
+//! Node-partitioned shard layer: per-shard feature maintenance that
+//! composes **bitwise** into the unsharded engine.
+//!
+//! GRFs are embarrassingly parallel across source nodes — node `i`'s
+//! feature row is a pure function of (graph, seed, i) through the
+//! per-walk RNG streams ([`crate::walks::walk_rng`]). A shard therefore
+//! owns a *subset of rows*, not a subgraph: every shard keeps the full
+//! graph (topology is shared, cheap, and needed to replay any walk that
+//! wanders across the partition), but samples and maintains only the
+//! walks sourced at its own nodes. Composition is pure row routing:
+//!
+//! * **Partition rule** ([`Partition`]): round-robin `owner(i) = i mod
+//!   S`. Stays balanced as [`crate::stream::GraphDelta::AddNode`]
+//!   appends rows, and is a pure function of the node id — no routing
+//!   table to maintain or replicate.
+//! * **Delta fan-out** ([`ShardedFeatures::apply_delta_batch`]): the
+//!   same validated batch goes to every shard. Each shard applies the
+//!   graph mutations to its replica and resamples the invalidated walks
+//!   *it owns* — a cross-shard edge `(u, v)` invalidates walks on both
+//!   endpoints' owners and on any third shard whose walks stepped
+//!   through `u` or `v`, exactly today's union rule restricted to each
+//!   shard's visit index. Owners patch only their own Φ rows, so the
+//!   shards' row sets stay disjoint and their union is exactly the
+//!   unsharded resample set (the per-shard hub cap may saturate at
+//!   different times than the global one, which only ever *widens* a
+//!   shard's resample set — replayed walks are bit-identical, so Φ is
+//!   unchanged; see the hub-cap section of [`crate::stream`]).
+//! * **Operand composition** ([`ShardedOverlay`]): Φ and Φᵀ live as one
+//!   [`RowOverlay`] per shard, each holding the full logical shape with
+//!   only the owned rows nonzero. Every kernel computes output row `i`
+//!   with the exact CSR per-row accumulation against the owner's
+//!   storage — same entries, same order, same f64 additions — so SpMV,
+//!   SpMM and the incremental transpose maintenance are **bitwise**
+//!   equal to the unsharded [`RowOverlay`] on the same logical matrix.
+//!   (No partial sums are ever combined across shards: summing
+//!   per-shard partial vectors would reassociate floating-point adds.)
+//! * **ELL**: the packed fast path is not offered while sharded
+//!   ([`Operand::select_ell`] returns `None`) — per-part packing is
+//!   future work; the per-row dispatch kernels serve, exactly as they
+//!   do between compactions today.
+//!
+//! Φᵀ is partitioned by the *same* node partition (its rows are feature
+//! columns ≡ nodes), and maintained by a sharded mirror of
+//! [`RowOverlay::patch_transpose_rows`] with an identical per-row merge
+//! — the only difference is which part a merged row is staged into.
+//!
+//! Per-shard compaction cadences legitimately drift from the unsharded
+//! engine (each shard's overlay fills at its own rate); this is
+//! observability-only and excluded from the bitwise contract, which
+//! covers Φ, Φᵀ, predictions, and `graph_version` stamps (property
+//! suite in `tests/shard.rs`, shard counts driven by
+//! `GRFGP_TEST_SHARDS` in CI).
+
+use crate::graph::Graph;
+use crate::obs;
+use crate::sparse::{Csr, Ell, FeatureLayout, RowOverlay};
+use crate::stream::{BatchSummary, DeltaAck, DeltaEngine, GraphDelta, StreamingFeatures};
+use crate::util::parallel;
+use crate::walks::{WalkComponents, WalkConfig};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// The node → shard map: round-robin by node id (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Partition {
+    n_shards: u32,
+}
+
+impl Partition {
+    pub fn new(n_shards: usize) -> Partition {
+        assert!(n_shards > 0, "at least one shard");
+        assert!(n_shards <= u32::MAX as usize, "shard count overflow");
+        Partition { n_shards: n_shards as u32 }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards as usize
+    }
+
+    /// The shard that owns node `i`'s walks and feature row.
+    #[inline]
+    pub fn owner(&self, i: usize) -> usize {
+        (i as u32 % self.n_shards) as usize
+    }
+}
+
+/// Build a canonical CSR from per-row content (cols already sorted).
+///
+/// Rows are emitted in order with their given value bits — unlike
+/// [`crate::sparse::CooBuilder`] this performs no merge and never drops
+/// explicit entries, so a composed matrix is bitwise the row
+/// concatenation of its sources.
+fn csr_from_rows(
+    n_rows: usize,
+    n_cols: usize,
+    mut row: impl FnMut(usize) -> (Vec<u32>, Vec<f64>),
+) -> Csr {
+    let mut offsets = Vec::with_capacity(n_rows + 1);
+    offsets.push(0usize);
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for r in 0..n_rows {
+        let (rc, rv) = row(r);
+        debug_assert_eq!(rc.len(), rv.len());
+        debug_assert!(rc.windows(2).all(|w| w[0] < w[1]));
+        cols.extend_from_slice(&rc);
+        vals.extend_from_slice(&rv);
+        offsets.push(cols.len());
+    }
+    Csr { n_rows, n_cols, offsets, cols, vals }
+}
+
+// ---------------------------------------------------------------------
+// Sharded feature maintenance
+// ---------------------------------------------------------------------
+
+/// `S` partition-filtered [`StreamingFeatures`] engines plus the fan-out
+/// that keeps them in lockstep (module docs). Shard `s` samples and
+/// maintains exactly the walks of nodes with `owner(i) == s`; its
+/// component matrices and Φ hold full logical shape with only those
+/// rows nonzero.
+pub struct ShardedFeatures {
+    partition: Partition,
+    shards: Vec<StreamingFeatures>,
+}
+
+impl ShardedFeatures {
+    /// Sample every shard's owned rows under the shared `seed`. Each
+    /// walk is seeded by `(seed, node, walk)` alone, so the union over
+    /// shards is bitwise the unsharded sample.
+    pub fn new(
+        graph: Graph,
+        cfg: WalkConfig,
+        f: Vec<f64>,
+        seed: u64,
+        n_shards: usize,
+    ) -> ShardedFeatures {
+        let partition = Partition::new(n_shards);
+        let shards = (0..n_shards as u32)
+            .map(|s| {
+                StreamingFeatures::new_owned(
+                    graph.clone(),
+                    cfg.clone(),
+                    f.clone(),
+                    seed,
+                    Some((s, n_shards as u32)),
+                )
+            })
+            .collect();
+        ShardedFeatures { partition, shards }
+    }
+
+    pub fn partition(&self) -> Partition {
+        self.partition
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.partition.n_shards()
+    }
+
+    /// The per-shard engines (tests / diagnostics).
+    pub fn shards(&self) -> &[StreamingFeatures] {
+        &self.shards
+    }
+
+    pub fn n(&self) -> usize {
+        self.shards[0].n()
+    }
+
+    /// The shared graph replica (shard 0's copy; all replicas apply the
+    /// same validated mutation stream, so they are identical).
+    pub fn graph(&self) -> &Graph {
+        self.shards[0].graph()
+    }
+
+    pub fn config(&self) -> &WalkConfig {
+        self.shards[0].config()
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.shards[0].seed()
+    }
+
+    pub fn modulation(&self) -> &[f64] {
+        self.shards[0].modulation()
+    }
+
+    /// Overlay rows staged across all shards.
+    pub fn overlay_rows(&self) -> usize {
+        self.shards.iter().map(|s| s.overlay_rows()).sum()
+    }
+
+    /// Saturated hub entries summed over the per-shard visit indices
+    /// (a node can saturate on several shards independently).
+    pub fn saturated_hubs(&self) -> usize {
+        self.shards.iter().map(|s| s.saturated_hubs()).sum()
+    }
+
+    /// Batches applied (identical on every shard; shard 0 reports).
+    pub fn deltas_applied(&self) -> usize {
+        self.shards[0].deltas_applied
+    }
+
+    /// Walks resampled summed over shards. May exceed the unsharded
+    /// count when a per-shard hub cap saturates earlier than the global
+    /// one would (superset resamples — observability only).
+    pub fn walks_resampled_total(&self) -> usize {
+        self.shards.iter().map(|s| s.walks_resampled_total).sum()
+    }
+
+    /// Overlay compactions summed over shards (cadences drift per
+    /// shard; see module docs).
+    pub fn compactions(&self) -> usize {
+        self.shards.iter().map(|s| s.compactions).sum()
+    }
+
+    pub fn set_hub_cap(&mut self, k: usize) {
+        for s in &mut self.shards {
+            s.set_hub_cap(k);
+        }
+    }
+
+    pub fn set_compact_threshold(&mut self, rows: usize) {
+        for s in &mut self.shards {
+            s.set_compact_threshold(rows);
+        }
+    }
+
+    /// Compose the per-shard component matrices into the full
+    /// [`WalkComponents`] by row routing — bitwise the unsharded
+    /// sampler's output.
+    pub fn components(&self) -> WalkComponents {
+        let n = self.n();
+        let n_len = self.config().max_len + 1;
+        let c = (0..n_len)
+            .map(|l| {
+                csr_from_rows(n, n, |r| {
+                    self.shards[self.partition.owner(r)].component_row(l, r)
+                })
+            })
+            .collect();
+        WalkComponents::new(c)
+    }
+
+    /// Compose the current Φ by row routing (see
+    /// [`StreamingFeatures::phi_snapshot`]).
+    pub fn phi_snapshot(&self) -> Csr {
+        let n = self.n();
+        let snaps: Vec<Csr> = self.shards.iter().map(|s| s.phi_snapshot()).collect();
+        csr_from_rows(n, n, |r| {
+            let (c, v) = snaps[self.partition.owner(r)].row(r);
+            (c.to_vec(), v.to_vec())
+        })
+    }
+
+    /// Fan one validated batch out to every shard in parallel and
+    /// compose the per-shard outcomes (module docs). Validation is
+    /// deterministic and runs against identical graph replicas, so the
+    /// shards unanimously accept (and mutate) or unanimously reject
+    /// (and stay untouched) — the composed engine keeps the
+    /// errors-leave-state-untouched contract of the trait.
+    pub fn apply_delta_batch(
+        &mut self,
+        deltas: &[GraphDelta],
+    ) -> Result<BatchSummary, String> {
+        let results: Vec<Result<BatchSummary, String>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .shards
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(s, shard)| {
+                        scope.spawn(move || {
+                            let (walks_c, rows_c, ns_h) =
+                                obs::registry::shard_metrics(s);
+                            let (res, _secs) = obs::span::timed(ns_h, || {
+                                shard.apply_delta_batch(deltas)
+                            });
+                            if let Ok(sum) = &res {
+                                walks_c.add(sum.resampled.len() as u64);
+                                rows_c.add(sum.affected_rows.len() as u64);
+                            }
+                            res
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard worker panicked"))
+                    .collect()
+            });
+        let mut summaries = Vec::with_capacity(results.len());
+        for r in results {
+            summaries.push(r?);
+        }
+        let mut deltas_out = vec![
+            DeltaAck { invalidated: 0, added_node: None };
+            deltas.len()
+        ];
+        let mut resampled = Vec::new();
+        let mut affected_rows = Vec::new();
+        let mut compacted = false;
+        for sum in &summaries {
+            for (ack, sa) in deltas_out.iter_mut().zip(&sum.deltas) {
+                // Per-shard invalidation sets are disjoint (each shard
+                // only tracks walks it owns), so the composed count is
+                // their sum.
+                ack.invalidated += sa.invalidated;
+                ack.added_node = ack.added_node.or(sa.added_node);
+            }
+            resampled.extend_from_slice(&sum.resampled);
+            affected_rows.extend_from_slice(&sum.affected_rows);
+            compacted |= sum.compacted;
+        }
+        // Disjoint-by-owner, so sorting restores the unsharded order.
+        resampled.sort_unstable();
+        affected_rows.sort_unstable();
+        Ok(BatchSummary {
+            deltas: deltas_out,
+            resampled,
+            affected_rows,
+            compacted,
+        })
+    }
+}
+
+impl DeltaEngine for ShardedFeatures {
+    fn n(&self) -> usize {
+        ShardedFeatures::n(self)
+    }
+
+    fn walk_config(&self) -> &WalkConfig {
+        self.config()
+    }
+
+    fn apply_delta_batch(&mut self, deltas: &[GraphDelta]) -> Result<BatchSummary, String> {
+        ShardedFeatures::apply_delta_batch(self, deltas)
+    }
+
+    fn component_row(&self, l: usize, r: usize) -> (Vec<u32>, Vec<f64>) {
+        self.shards[self.partition.owner(r)].component_row(l, r)
+    }
+}
+
+/// The server-facing engine: one handle over either maintenance mode,
+/// so `ModelState` and the wire handlers stay shard-agnostic.
+pub enum FeatureEngine {
+    /// Single-engine path (today's default).
+    Mono(StreamingFeatures),
+    /// Partitioned path behind `--shards`.
+    Sharded(ShardedFeatures),
+}
+
+impl FeatureEngine {
+    pub fn n(&self) -> usize {
+        match self {
+            FeatureEngine::Mono(s) => s.n(),
+            FeatureEngine::Sharded(s) => s.n(),
+        }
+    }
+
+    /// Shard count (1 for the mono path).
+    pub fn n_shards(&self) -> usize {
+        match self {
+            FeatureEngine::Mono(_) => 1,
+            FeatureEngine::Sharded(s) => s.n_shards(),
+        }
+    }
+
+    /// The partition when sharded.
+    pub fn partition(&self) -> Option<Partition> {
+        match self {
+            FeatureEngine::Mono(_) => None,
+            FeatureEngine::Sharded(s) => Some(s.partition()),
+        }
+    }
+
+    pub fn graph(&self) -> &Graph {
+        match self {
+            FeatureEngine::Mono(s) => s.graph(),
+            FeatureEngine::Sharded(s) => s.graph(),
+        }
+    }
+
+    pub fn config(&self) -> &WalkConfig {
+        match self {
+            FeatureEngine::Mono(s) => s.config(),
+            FeatureEngine::Sharded(s) => s.config(),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        match self {
+            FeatureEngine::Mono(s) => s.seed(),
+            FeatureEngine::Sharded(s) => s.seed(),
+        }
+    }
+
+    pub fn modulation(&self) -> &[f64] {
+        match self {
+            FeatureEngine::Mono(s) => s.modulation(),
+            FeatureEngine::Sharded(s) => s.modulation(),
+        }
+    }
+
+    pub fn components(&self) -> WalkComponents {
+        match self {
+            FeatureEngine::Mono(s) => s.components(),
+            FeatureEngine::Sharded(s) => s.components(),
+        }
+    }
+
+    pub fn phi_snapshot(&self) -> Csr {
+        match self {
+            FeatureEngine::Mono(s) => s.phi_snapshot(),
+            FeatureEngine::Sharded(s) => s.phi_snapshot(),
+        }
+    }
+
+    pub fn overlay_rows(&self) -> usize {
+        match self {
+            FeatureEngine::Mono(s) => s.overlay_rows(),
+            FeatureEngine::Sharded(s) => s.overlay_rows(),
+        }
+    }
+
+    pub fn saturated_hubs(&self) -> usize {
+        match self {
+            FeatureEngine::Mono(s) => s.saturated_hubs(),
+            FeatureEngine::Sharded(s) => s.saturated_hubs(),
+        }
+    }
+
+    pub fn deltas_applied(&self) -> usize {
+        match self {
+            FeatureEngine::Mono(s) => s.deltas_applied,
+            FeatureEngine::Sharded(s) => s.deltas_applied(),
+        }
+    }
+
+    pub fn walks_resampled_total(&self) -> usize {
+        match self {
+            FeatureEngine::Mono(s) => s.walks_resampled_total,
+            FeatureEngine::Sharded(s) => s.walks_resampled_total(),
+        }
+    }
+
+    pub fn compactions(&self) -> usize {
+        match self {
+            FeatureEngine::Mono(s) => s.compactions,
+            FeatureEngine::Sharded(s) => s.compactions(),
+        }
+    }
+
+    pub fn set_hub_cap(&mut self, k: usize) {
+        match self {
+            FeatureEngine::Mono(s) => s.set_hub_cap(k),
+            FeatureEngine::Sharded(s) => s.set_hub_cap(k),
+        }
+    }
+
+    pub fn set_compact_threshold(&mut self, rows: usize) {
+        match self {
+            FeatureEngine::Mono(s) => s.set_compact_threshold(rows),
+            FeatureEngine::Sharded(s) => s.set_compact_threshold(rows),
+        }
+    }
+}
+
+impl DeltaEngine for FeatureEngine {
+    fn n(&self) -> usize {
+        FeatureEngine::n(self)
+    }
+
+    fn walk_config(&self) -> &WalkConfig {
+        self.config()
+    }
+
+    fn apply_delta_batch(&mut self, deltas: &[GraphDelta]) -> Result<BatchSummary, String> {
+        match self {
+            FeatureEngine::Mono(s) => s.apply_delta_batch(deltas),
+            FeatureEngine::Sharded(s) => s.apply_delta_batch(deltas),
+        }
+    }
+
+    fn component_row(&self, l: usize, r: usize) -> (Vec<u32>, Vec<f64>) {
+        match self {
+            FeatureEngine::Mono(s) => s.component_row(l, r),
+            FeatureEngine::Sharded(s) => DeltaEngine::component_row(s, l, r),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded model operand
+// ---------------------------------------------------------------------
+
+/// A logical matrix row-partitioned over per-shard [`RowOverlay`]
+/// parts. Part `s` carries the full logical shape with only the rows
+/// `owner(i) == s` nonzero; reads route each row to its owner, so the
+/// assembled matrix is bitwise the unsharded overlay on the same
+/// content (module docs — no cross-shard arithmetic anywhere).
+#[derive(Clone, Debug)]
+pub struct ShardedOverlay {
+    partition: Partition,
+    parts: Vec<RowOverlay>,
+    n_rows: usize,
+    n_cols: usize,
+}
+
+impl ShardedOverlay {
+    /// Split `m` into per-shard parts by row ownership.
+    pub fn from_csr(m: &Csr, partition: Partition) -> ShardedOverlay {
+        let s_count = partition.n_shards();
+        let parts = (0..s_count)
+            .map(|s| {
+                let part = csr_from_rows(m.n_rows, m.n_cols, |r| {
+                    if partition.owner(r) == s {
+                        let (c, v) = m.row(r);
+                        (c.to_vec(), v.to_vec())
+                    } else {
+                        (Vec::new(), Vec::new())
+                    }
+                });
+                RowOverlay::from(part)
+            })
+            .collect();
+        ShardedOverlay {
+            partition,
+            parts,
+            n_rows: m.n_rows,
+            n_cols: m.n_cols,
+        }
+    }
+
+    pub fn partition(&self) -> Partition {
+        self.partition
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    /// Row `i` from its owner part.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        self.parts[self.partition.owner(i)].row(i)
+    }
+
+    /// Grow the logical shape (every part tracks the full shape).
+    pub fn grow(&mut self, n_rows: usize, n_cols: usize) {
+        assert!(n_rows >= self.n_rows && n_cols >= self.n_cols);
+        self.n_rows = n_rows;
+        self.n_cols = n_cols;
+        for p in &mut self.parts {
+            p.grow(n_rows, n_cols);
+        }
+    }
+
+    /// Stage new content for row `r` in its owner part.
+    pub fn patch_row(&mut self, r: u32, cols: Vec<u32>, vals: Vec<f64>) {
+        self.parts[self.partition.owner(r as usize)].patch_row(r, cols, vals);
+    }
+
+    /// Fold every part's overlay (each part compacts independently in
+    /// production — this is the model-side compaction hook).
+    pub fn compact(&mut self) {
+        for p in &mut self.parts {
+            p.compact();
+        }
+    }
+
+    pub fn overlay_rows(&self) -> usize {
+        self.parts.iter().map(|p| p.overlay_rows()).sum()
+    }
+
+    pub fn compactions(&self) -> usize {
+        self.parts.iter().map(|p| p.compactions()).sum()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.parts.iter().map(|p| p.nnz()).sum()
+    }
+
+    /// Materialise the composed content as canonical CSR.
+    pub fn to_csr(&self) -> Csr {
+        csr_from_rows(self.n_rows, self.n_cols, |r| {
+            let (c, v) = self.row(r);
+            (c.to_vec(), v.to_vec())
+        })
+    }
+
+    /// Dense expansion (tests / small-N oracles only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut out = vec![vec![0.0; self.n_cols]; self.n_rows];
+        for (r, row) in out.iter_mut().enumerate() {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                row[*c as usize] += v;
+            }
+        }
+        out
+    }
+
+    /// Thread-parallel transpose of the composed content.
+    pub fn transpose_par(&self, threads: usize) -> Csr {
+        self.to_csr().transpose_par(threads)
+    }
+
+    // -----------------------------------------------------------------
+    // Kernels: bitwise `RowOverlay`'s on the same logical matrix — the
+    // identical per-row accumulation, with the row read routed to its
+    // owner part.
+    // -----------------------------------------------------------------
+
+    /// Rows [s, e) of y = A x into `out[0..e-s]`.
+    #[inline]
+    fn rows_matvec(&self, x: &[f64], s: usize, e: usize, out: &mut [f64]) {
+        for i in s..e {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0.0;
+            for (c, v) in cols.iter().zip(vals) {
+                // SAFETY: *c < n_cols == x.len() — part rows come from
+                // CSR construction or `patch_row`'s hard bound check.
+                acc += v * unsafe { x.get_unchecked(*c as usize) };
+            }
+            out[i - s] = acc;
+        }
+    }
+
+    /// Rows [s, e) of Y = A X (row-major `ncols` block) into `out`.
+    #[inline]
+    fn rows_matmat(&self, x: &[f64], ncols: usize, s: usize, e: usize, out: &mut [f64]) {
+        for i in s..e {
+            let (cols, vals) = self.row(i);
+            let yi = &mut out[(i - s) * ncols..(i - s + 1) * ncols];
+            yi.fill(0.0);
+            for (c, v) in cols.iter().zip(vals) {
+                let base = *c as usize * ncols;
+                // SAFETY: *c < n_cols (see rows_matvec), so the slice
+                // is in bounds by the callers' asserted shape contract.
+                let xr = unsafe { x.get_unchecked(base..base + ncols) };
+                for (yj, xj) in yi.iter_mut().zip(xr) {
+                    *yj += v * xj;
+                }
+            }
+        }
+    }
+
+    /// y = A x into a caller-provided buffer (serial).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        self.rows_matvec(x, 0, self.n_rows, y);
+    }
+
+    /// Allocating wrapper over [`ShardedOverlay::matvec_into`].
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Thread-parallel y = A x over disjoint *global* row chunks (row
+    /// routing happens inside each chunk), allocation-free.
+    pub fn matvec_par_into(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        parallel::par_rows_mut(y, 1, threads, |s, e, ys| {
+            self.rows_matvec(x, s, e, ys);
+        });
+    }
+
+    /// Allocating wrapper over [`ShardedOverlay::matvec_par_into`].
+    pub fn matvec_par(&self, x: &[f64], threads: usize) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_par_into(x, &mut y, threads);
+        y
+    }
+
+    /// SpMM Y = A X over a row-major `n_cols × ncols` block.
+    pub fn matmat_into(&self, x: &[f64], ncols: usize, y: &mut [f64]) {
+        assert!(ncols > 0, "block width must be positive");
+        assert_eq!(x.len(), self.n_cols * ncols);
+        assert_eq!(y.len(), self.n_rows * ncols);
+        self.rows_matmat(x, ncols, 0, self.n_rows, y);
+    }
+
+    /// Allocating wrapper over [`ShardedOverlay::matmat_into`].
+    pub fn matmat(&self, x: &[f64], ncols: usize) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows * ncols];
+        self.matmat_into(x, ncols, &mut y);
+        y
+    }
+
+    /// Thread-parallel SpMM over disjoint global row chunks.
+    pub fn matmat_par_into(&self, x: &[f64], ncols: usize, y: &mut [f64], threads: usize) {
+        assert!(ncols > 0, "block width must be positive");
+        assert_eq!(x.len(), self.n_cols * ncols);
+        assert_eq!(y.len(), self.n_rows * ncols);
+        parallel::par_rows_mut(y, ncols, threads, |s, e, rows| {
+            self.rows_matmat(x, ncols, s, e, rows);
+        });
+    }
+
+    /// Allocating wrapper over [`ShardedOverlay::matmat_par_into`].
+    pub fn matmat_par(&self, x: &[f64], ncols: usize, threads: usize) -> Vec<f64> {
+        let mut y = vec![0.0; self.n_rows * ncols];
+        self.matmat_par_into(x, ncols, &mut y, threads);
+        y
+    }
+
+    /// Instrumented y = A x — always the CSR dispatch path (no packed
+    /// operand while sharded; see module docs).
+    #[inline]
+    pub fn spmv(&self, x: &[f64], y: &mut [f64], threads: usize, par: bool) {
+        obs::registry::SPMV_CSR.inc();
+        let _s = obs::span::Span::new(&obs::registry::SPMV_CSR_NS);
+        if par {
+            self.matvec_par_into(x, y, threads)
+        } else {
+            self.matvec_into(x, y)
+        }
+    }
+
+    /// Instrumented blocked Y = A X (see [`ShardedOverlay::spmv`]).
+    #[inline]
+    pub fn spmm(&self, x: &[f64], ncols: usize, y: &mut [f64], threads: usize, par: bool) {
+        obs::registry::SPMM_CSR.inc();
+        let _s = obs::span::Span::new(&obs::registry::SPMM_CSR_NS);
+        if par {
+            self.matmat_par_into(x, ncols, y, threads)
+        } else {
+            self.matmat_into(x, ncols, y)
+        }
+    }
+
+    /// Column-scatter the changed primal rows into `self = primalᵀ` —
+    /// the sharded mirror of [`RowOverlay::patch_transpose_rows`]: the
+    /// per-row merge is byte-for-byte the same; only the storage a
+    /// merged row is staged into is routed by the (node ≡ transpose
+    /// row) partition.
+    pub fn patch_transpose_rows(
+        &mut self,
+        primal: &ShardedOverlay,
+        affected: &[u32],
+        old_supports: &[(u32, Vec<u32>)],
+    ) {
+        debug_assert!(affected.windows(2).all(|w| w[0] < w[1]));
+        self.grow(primal.n_cols(), primal.n_rows());
+        // Fresh entries of the affected primal rows, bucketed per
+        // column j. `affected` is sorted ascending, so each bucket
+        // comes out sorted by source row.
+        let mut adds: BTreeMap<u32, (Vec<u32>, Vec<f64>)> = BTreeMap::new();
+        for &r in affected {
+            let (cols, vals) = primal.row(r as usize);
+            for (c, v) in cols.iter().zip(vals) {
+                let e = adds.entry(*c).or_default();
+                e.0.push(r);
+                e.1.push(*v);
+            }
+        }
+        let mut touched: BTreeSet<u32> = adds.keys().copied().collect();
+        for (_, cols) in old_supports {
+            touched.extend(cols.iter().copied());
+        }
+        let empty = (Vec::new(), Vec::new());
+        let mut patches: Vec<(u32, Vec<u32>, Vec<f64>)> =
+            Vec::with_capacity(touched.len());
+        for &j in &touched {
+            let (oc, ov) = self.row(j as usize);
+            let (ac, av) = adds.get(&j).unwrap_or(&empty);
+            let mut cols = Vec::with_capacity(oc.len() + ac.len());
+            let mut vals = Vec::with_capacity(oc.len() + ac.len());
+            let mut ai = 0;
+            for (c, v) in oc.iter().zip(ov) {
+                if affected.binary_search(c).is_ok() {
+                    continue; // this column's primal row was rebuilt: drop
+                }
+                while ai < ac.len() && ac[ai] < *c {
+                    cols.push(ac[ai]);
+                    vals.push(av[ai]);
+                    ai += 1;
+                }
+                cols.push(*c);
+                vals.push(*v);
+            }
+            while ai < ac.len() {
+                cols.push(ac[ai]);
+                vals.push(av[ai]);
+                ai += 1;
+            }
+            patches.push((j, cols, vals));
+        }
+        for (j, cols, vals) in patches {
+            self.patch_row(j, cols, vals);
+        }
+    }
+}
+
+/// Logical equality against the unsharded overlay: same shape, same
+/// per-row content with bitwise values.
+impl PartialEq<RowOverlay> for ShardedOverlay {
+    fn eq(&self, other: &RowOverlay) -> bool {
+        if self.n_rows != other.n_rows() || self.n_cols != other.n_cols() {
+            return false;
+        }
+        (0..self.n_rows).all(|r| self.row(r) == other.row(r))
+    }
+}
+
+// ---------------------------------------------------------------------
+// The model operand: one handle over both storage modes
+// ---------------------------------------------------------------------
+
+/// Φ / Φᵀ as held by the GP model: an unsharded [`RowOverlay`] or a
+/// row-partitioned [`ShardedOverlay`]. Every kernel and maintenance
+/// entry point dispatches per variant; the two variants are bitwise
+/// interchangeable on the same logical matrix.
+#[derive(Clone, Debug)]
+pub enum Operand {
+    Mono(RowOverlay),
+    Sharded(ShardedOverlay),
+}
+
+impl Operand {
+    /// Wrap a materialised matrix under the given partitioning mode.
+    pub fn from_csr(m: Csr, partition: Option<Partition>) -> Operand {
+        match partition {
+            None => Operand::Mono(RowOverlay::from(m)),
+            Some(p) => Operand::Sharded(ShardedOverlay::from_csr(&m, p)),
+        }
+    }
+
+    /// The partition when sharded.
+    pub fn partition(&self) -> Option<Partition> {
+        match self {
+            Operand::Mono(_) => None,
+            Operand::Sharded(s) => Some(s.partition()),
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        match self {
+            Operand::Mono(o) => o.n_rows(),
+            Operand::Sharded(o) => o.n_rows(),
+        }
+    }
+
+    pub fn n_cols(&self) -> usize {
+        match self {
+            Operand::Mono(o) => o.n_cols(),
+            Operand::Sharded(o) => o.n_cols(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        match self {
+            Operand::Mono(o) => o.row(i),
+            Operand::Sharded(o) => o.row(i),
+        }
+    }
+
+    pub fn grow(&mut self, n_rows: usize, n_cols: usize) {
+        match self {
+            Operand::Mono(o) => o.grow(n_rows, n_cols),
+            Operand::Sharded(o) => o.grow(n_rows, n_cols),
+        }
+    }
+
+    pub fn patch_row(&mut self, r: u32, cols: Vec<u32>, vals: Vec<f64>) {
+        match self {
+            Operand::Mono(o) => o.patch_row(r, cols, vals),
+            Operand::Sharded(o) => o.patch_row(r, cols, vals),
+        }
+    }
+
+    pub fn compact(&mut self) {
+        match self {
+            Operand::Mono(o) => o.compact(),
+            Operand::Sharded(o) => o.compact(),
+        }
+    }
+
+    pub fn overlay_rows(&self) -> usize {
+        match self {
+            Operand::Mono(o) => o.overlay_rows(),
+            Operand::Sharded(o) => o.overlay_rows(),
+        }
+    }
+
+    pub fn compactions(&self) -> usize {
+        match self {
+            Operand::Mono(o) => o.compactions(),
+            Operand::Sharded(o) => o.compactions(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            Operand::Mono(o) => o.nnz(),
+            Operand::Sharded(o) => o.nnz(),
+        }
+    }
+
+    pub fn to_csr(&self) -> Csr {
+        match self {
+            Operand::Mono(o) => o.to_csr(),
+            Operand::Sharded(o) => o.to_csr(),
+        }
+    }
+
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        match self {
+            Operand::Mono(o) => o.to_dense(),
+            Operand::Sharded(o) => o.to_dense(),
+        }
+    }
+
+    pub fn transpose_par(&self, threads: usize) -> Csr {
+        match self {
+            Operand::Mono(o) => o.transpose_par(threads),
+            Operand::Sharded(o) => o.transpose_par(threads),
+        }
+    }
+
+    pub fn transpose(&self) -> Csr {
+        match self {
+            Operand::Mono(o) => o.transpose(),
+            Operand::Sharded(o) => o.to_csr().transpose(),
+        }
+    }
+
+    /// Run the ELL layout policy — `None` while sharded (per-part
+    /// packing is future work; module docs) or while a mono overlay is
+    /// live.
+    pub fn select_ell(&self, layout: FeatureLayout) -> Option<Ell> {
+        match self {
+            Operand::Mono(o) => o.select_ell(layout),
+            Operand::Sharded(_) => None,
+        }
+    }
+
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            Operand::Mono(o) => o.matvec_into(x, y),
+            Operand::Sharded(o) => o.matvec_into(x, y),
+        }
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            Operand::Mono(o) => o.matvec(x),
+            Operand::Sharded(o) => o.matvec(x),
+        }
+    }
+
+    pub fn matvec_par_into(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        match self {
+            Operand::Mono(o) => o.matvec_par_into(x, y, threads),
+            Operand::Sharded(o) => o.matvec_par_into(x, y, threads),
+        }
+    }
+
+    pub fn matvec_par(&self, x: &[f64], threads: usize) -> Vec<f64> {
+        match self {
+            Operand::Mono(o) => o.matvec_par(x, threads),
+            Operand::Sharded(o) => o.matvec_par(x, threads),
+        }
+    }
+
+    pub fn matmat_into(&self, x: &[f64], ncols: usize, y: &mut [f64]) {
+        match self {
+            Operand::Mono(o) => o.matmat_into(x, ncols, y),
+            Operand::Sharded(o) => o.matmat_into(x, ncols, y),
+        }
+    }
+
+    pub fn matmat(&self, x: &[f64], ncols: usize) -> Vec<f64> {
+        match self {
+            Operand::Mono(o) => o.matmat(x, ncols),
+            Operand::Sharded(o) => o.matmat(x, ncols),
+        }
+    }
+
+    pub fn matmat_par_into(&self, x: &[f64], ncols: usize, y: &mut [f64], threads: usize) {
+        match self {
+            Operand::Mono(o) => o.matmat_par_into(x, ncols, y, threads),
+            Operand::Sharded(o) => o.matmat_par_into(x, ncols, y, threads),
+        }
+    }
+
+    pub fn matmat_par(&self, x: &[f64], ncols: usize, threads: usize) -> Vec<f64> {
+        match self {
+            Operand::Mono(o) => o.matmat_par(x, ncols, threads),
+            Operand::Sharded(o) => o.matmat_par(x, ncols, threads),
+        }
+    }
+
+    /// Instrumented y = A x through the selected operand (`ell` is only
+    /// ever `Some` for a mono operand — sharded selection returns
+    /// `None` by construction).
+    #[inline]
+    pub fn spmv(&self, ell: Option<&Ell>, x: &[f64], y: &mut [f64], threads: usize, par: bool) {
+        match self {
+            Operand::Mono(o) => o.spmv(ell, x, y, threads, par),
+            Operand::Sharded(o) => {
+                debug_assert!(ell.is_none(), "no packed operand while sharded");
+                o.spmv(x, y, threads, par)
+            }
+        }
+    }
+
+    /// Instrumented blocked Y = A X (see [`Operand::spmv`]).
+    #[inline]
+    pub fn spmm(
+        &self,
+        ell: Option<&Ell>,
+        x: &[f64],
+        ncols: usize,
+        y: &mut [f64],
+        threads: usize,
+        par: bool,
+    ) {
+        match self {
+            Operand::Mono(o) => o.spmm(ell, x, ncols, y, threads, par),
+            Operand::Sharded(o) => {
+                debug_assert!(ell.is_none(), "no packed operand while sharded");
+                o.spmm(x, ncols, y, threads, par)
+            }
+        }
+    }
+
+    /// Incremental transpose maintenance — both operands must be in the
+    /// same storage mode (the model converts Φ and Φᵀ together).
+    pub fn patch_transpose_rows(
+        &mut self,
+        primal: &Operand,
+        affected: &[u32],
+        old_supports: &[(u32, Vec<u32>)],
+    ) {
+        match (self, primal) {
+            (Operand::Mono(t), Operand::Mono(p)) => {
+                t.patch_transpose_rows(p, affected, old_supports)
+            }
+            (Operand::Sharded(t), Operand::Sharded(p)) => {
+                t.patch_transpose_rows(p, affected, old_supports)
+            }
+            _ => unreachable!("Φ and Φᵀ always share a storage mode"),
+        }
+    }
+
+    /// Diagonal of `σ² I + mask ⊙ Φ Φᵀ` — the Jacobi preconditioner.
+    /// Mirrors [`crate::sparse::ops::jacobi_diag`] exactly (the per-row
+    /// accumulation reads the same value bits in the same order in both
+    /// storage modes).
+    pub fn jacobi_diag(&self, mask: Option<&[f64]>, sigma2: f64) -> Vec<f64> {
+        match self {
+            Operand::Mono(o) => crate::sparse::ops::jacobi_diag(o, mask, sigma2),
+            Operand::Sharded(o) => {
+                let n = o.n_rows();
+                let mut d = vec![sigma2; n];
+                for (i, di) in d.iter_mut().enumerate() {
+                    if let Some(m) = mask {
+                        if m[i] == 0.0 {
+                            continue;
+                        }
+                    }
+                    let (_, vals) = o.row(i);
+                    let mut acc = 0.0;
+                    for v in vals {
+                        acc += v * v;
+                    }
+                    *di += acc;
+                }
+                d
+            }
+        }
+    }
+}
+
+impl PartialEq<Csr> for Operand {
+    /// Logical (post-fold) equality against a plain CSR — test oracle.
+    fn eq(&self, other: &Csr) -> bool {
+        match self {
+            Operand::Mono(o) => o == other,
+            Operand::Sharded(o) => o.to_csr() == *other,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::rng::Rng;
+
+    fn wcfg(threads: usize) -> WalkConfig {
+        WalkConfig {
+            n_walks: 12,
+            p_halt: 0.25,
+            max_len: 3,
+            reweight: true,
+            normalize: true,
+            threads,
+        }
+    }
+
+    fn diffusion_f(max_len: usize) -> Vec<f64> {
+        let mut f = vec![0.0; max_len + 1];
+        let mut acc = 1.0;
+        for (l, fl) in f.iter_mut().enumerate() {
+            if l > 0 {
+                acc *= 0.5 / l as f64;
+            }
+            *fl = acc;
+        }
+        f
+    }
+
+    #[test]
+    fn partition_is_total_and_balanced() {
+        let p = Partition::new(4);
+        let mut counts = [0usize; 4];
+        for i in 0..101 {
+            counts[p.owner(i)] += 1;
+        }
+        let (lo, hi) = (
+            *counts.iter().min().unwrap(),
+            *counts.iter().max().unwrap(),
+        );
+        assert!(hi - lo <= 1, "round-robin must stay balanced: {counts:?}");
+        assert_eq!(Partition::new(1).owner(12345), 0);
+    }
+
+    /// The composed sharded engine is bitwise the mono engine: fresh
+    /// sample, then a mixed mutation batch (cross-shard edges, node
+    /// append) with a tight hub cap and forced compactions.
+    #[test]
+    fn sharded_features_compose_bitwise() {
+        let mut rng = Rng::new(42);
+        let g = generators::barabasi_albert(40, 3, &mut rng);
+        let cfg = wcfg(2);
+        let f = diffusion_f(cfg.max_len);
+        let mut mono = StreamingFeatures::new(g.clone(), cfg.clone(), f.clone(), 99);
+        mono.set_hub_cap(1);
+        mono.set_compact_threshold(2);
+        for s_count in [2usize, 3, 7] {
+            let mut sharded =
+                ShardedFeatures::new(g.clone(), cfg.clone(), f.clone(), 99, s_count);
+            sharded.set_hub_cap(1);
+            sharded.set_compact_threshold(2);
+            assert!(
+                sharded.phi_snapshot() == mono.phi_snapshot(),
+                "fresh Φ differs at S={s_count}"
+            );
+        }
+        // Mutate: mono and a 3-shard engine in lockstep.
+        let mut sharded = ShardedFeatures::new(g, cfg, f, 99, 3);
+        sharded.set_hub_cap(1);
+        sharded.set_compact_threshold(2);
+        let gone = mono.graph().neighbors(2)[0] as usize;
+        let deltas = vec![
+            GraphDelta::AddEdge { u: 0, v: 17, w: 0.8 },
+            GraphDelta::AddNode,
+            GraphDelta::AddEdge { u: 40, v: 5, w: 1.5 },
+            GraphDelta::RemoveEdge { u: 2, v: gone },
+        ];
+        let ms = mono.apply_delta_batch(&deltas).unwrap();
+        let ss = sharded.apply_delta_batch(&deltas).unwrap();
+        // Saturation cadences differ between the aggregated and the
+        // per-shard visit indices, so the *resampled sets* are allowed
+        // to drift (both are supersets of the true visitors) — the
+        // features they produce are not.
+        assert_eq!(
+            ms.deltas[1].added_node, ss.deltas[1].added_node,
+            "node append diverged"
+        );
+        assert!(
+            sharded.phi_snapshot() == mono.phi_snapshot(),
+            "post-batch Φ differs"
+        );
+        let mc = mono.components();
+        let sc = sharded.components();
+        for (l, (a, b)) in mc.c.iter().zip(&sc.c).enumerate() {
+            assert!(a == b, "component {l} differs");
+        }
+        // Errors leave every shard untouched, like the mono engine.
+        let before = sharded.phi_snapshot();
+        let bad = vec![GraphDelta::AddEdge { u: 0, v: 9999, w: 1.0 }];
+        assert!(sharded.apply_delta_batch(&bad).is_err());
+        assert!(mono.apply_delta_batch(&bad).is_err());
+        assert!(sharded.phi_snapshot() == before, "failed batch mutated state");
+    }
+
+    fn random_csr(rng: &mut Rng, n_rows: usize, n_cols: usize, nnz: usize) -> Csr {
+        let mut b = crate::sparse::CooBuilder::new(n_rows, n_cols);
+        for _ in 0..nnz {
+            b.push(
+                rng.below(n_rows) as u32,
+                rng.below(n_cols) as u32,
+                rng.normal(),
+            );
+        }
+        b.build()
+    }
+
+    fn random_row(rng: &mut Rng, n_cols: usize, width: usize) -> (Vec<u32>, Vec<f64>) {
+        let mut cols: Vec<u32> = (0..width).map(|_| rng.below(n_cols) as u32).collect();
+        cols.sort_unstable();
+        cols.dedup();
+        let vals: Vec<f64> = cols.iter().map(|_| rng.normal()).collect();
+        (cols, vals)
+    }
+
+    /// Every sharded kernel is bitwise the unsharded overlay's on the
+    /// same logical matrix, through patches, growth, and compaction.
+    #[test]
+    fn sharded_overlay_kernels_bitwise_match_row_overlay() {
+        let mut rng = Rng::new(3);
+        let m = random_csr(&mut rng, 23, 23, 140);
+        let mut mono = RowOverlay::from(m.clone());
+        let mut sharded = ShardedOverlay::from_csr(&m, Partition::new(4));
+        assert!(sharded == mono, "fresh split differs");
+        assert_eq!(sharded.nnz(), mono.nnz());
+        // Patch a handful of rows (plus growth) in both.
+        mono.grow(25, 25);
+        sharded.grow(25, 25);
+        for r in [0u32, 7, 11, 23, 24] {
+            let (cols, vals) = random_row(&mut rng, 25, 6);
+            mono.patch_row(r, cols.clone(), vals.clone());
+            sharded.patch_row(r, cols, vals);
+        }
+        assert!(sharded == mono, "patched content differs");
+        let x: Vec<f64> = (0..25).map(|_| rng.normal()).collect();
+        assert_eq!(mono.matvec(&x), sharded.matvec(&x), "matvec");
+        assert_eq!(
+            mono.matvec_par(&x, 3),
+            sharded.matvec_par(&x, 3),
+            "matvec_par"
+        );
+        let xb: Vec<f64> = (0..25 * 4).map(|_| rng.normal()).collect();
+        assert_eq!(mono.matmat(&xb, 4), sharded.matmat(&xb, 4), "matmat");
+        assert_eq!(
+            mono.matmat_par(&xb, 4, 3),
+            sharded.matmat_par(&xb, 4, 3),
+            "matmat_par"
+        );
+        assert_eq!(mono.to_csr(), sharded.to_csr(), "to_csr");
+        sharded.compact();
+        mono.compact();
+        assert!(sharded == mono, "compaction diverged");
+        assert_eq!(mono.matvec(&x), sharded.matvec(&x), "compacted matvec");
+    }
+
+    /// The sharded transpose maintenance replays the unsharded merge
+    /// bitwise, and both equal a from-scratch transpose of the patched
+    /// primal.
+    #[test]
+    fn sharded_patch_transpose_rows_bitwise() {
+        let mut rng = Rng::new(17);
+        let m = random_csr(&mut rng, 19, 19, 120);
+        let p = Partition::new(3);
+        let mut phi_m = RowOverlay::from(m.clone());
+        let mut phi_s = ShardedOverlay::from_csr(&m, p);
+        let mut pt_m = RowOverlay::from(m.transpose());
+        let mut pt_s = ShardedOverlay::from_csr(&m.transpose(), p);
+        for round in 0..3 {
+            let mut affected: Vec<u32> =
+                (0..4).map(|_| rng.below(19) as u32).collect();
+            affected.sort_unstable();
+            affected.dedup();
+            let old_supports: Vec<(u32, Vec<u32>)> = affected
+                .iter()
+                .map(|&r| (r, phi_m.row(r as usize).0.to_vec()))
+                .collect();
+            for &r in &affected {
+                let (cols, vals) = random_row(&mut rng, 19, 5);
+                phi_m.patch_row(r, cols.clone(), vals.clone());
+                phi_s.patch_row(r, cols, vals);
+            }
+            pt_m.patch_transpose_rows(&phi_m, &affected, &old_supports);
+            pt_s.patch_transpose_rows(&phi_s, &affected, &old_supports);
+            assert_eq!(pt_m.to_csr(), pt_s.to_csr(), "round {round}: Φᵀ differs");
+            assert_eq!(
+                pt_s.to_csr(),
+                phi_m.to_csr().transpose(),
+                "round {round}: Φᵀ is not the transpose of Φ"
+            );
+        }
+    }
+
+    #[test]
+    fn operand_dispatch_and_jacobi_parity() {
+        let mut rng = Rng::new(29);
+        let m = random_csr(&mut rng, 15, 15, 70);
+        let mono = Operand::from_csr(m.clone(), None);
+        let sharded = Operand::from_csr(m, Some(Partition::new(2)));
+        assert!(
+            sharded.select_ell(FeatureLayout::Auto).is_none(),
+            "no packed operand while sharded"
+        );
+        let mask: Vec<f64> = (0..15).map(|i| (i % 3 == 0) as u64 as f64).collect();
+        assert_eq!(
+            mono.jacobi_diag(Some(&mask), 0.3),
+            sharded.jacobi_diag(Some(&mask), 0.3),
+            "jacobi parity"
+        );
+        let x: Vec<f64> = (0..15).map(|_| rng.normal()).collect();
+        let mut ym = vec![0.0; 15];
+        let mut ys = vec![0.0; 15];
+        mono.spmv(None, &x, &mut ym, 2, true);
+        sharded.spmv(None, &x, &mut ys, 2, true);
+        assert_eq!(ym, ys, "spmv parity");
+        assert_eq!(mono.to_dense(), sharded.to_dense());
+    }
+}

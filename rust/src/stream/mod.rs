@@ -108,8 +108,8 @@ use crate::obs;
 use crate::sparse::{Csr, Ell, FeatureLayout};
 use crate::util::parallel::par_map_chunks;
 use crate::walks::{
-    resample_walk, rows_from_walks, sample_components_indexed, NodeWalks,
-    WalkComponents, WalkConfig,
+    resample_walk, rows_from_walks, sample_components_indexed_part,
+    NodeWalks, WalkComponents, WalkConfig,
 };
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -264,6 +264,11 @@ pub struct StreamingFeatures {
     graph: Graph,
     cfg: WalkConfig,
     seed: u64,
+    /// `Some((shard, n_shards))` when this engine maintains only the
+    /// walks whose **source** node it owns (`node % n_shards == shard`)
+    /// — the per-shard worker mode of [`crate::shard::ShardedFeatures`].
+    /// `None` is the classic unsharded engine owning every source.
+    owner: Option<(u32, u32)>,
     /// Modulation coefficients of the maintained Φ = Σ_l f_l C_l.
     f: Vec<f64>,
     /// Current weighted degrees (empty unless `cfg.normalize`).
@@ -350,9 +355,29 @@ impl StreamingFeatures {
     /// Full (parallel) build on a static graph — also the reference the
     /// incremental path is tested against.
     pub fn new(graph: Graph, cfg: WalkConfig, f: Vec<f64>, seed: u64) -> StreamingFeatures {
+        StreamingFeatures::new_owned(graph, cfg, f, seed, None)
+    }
+
+    /// Partition-filtered build: with `owner = Some((shard, n_shards))`
+    /// this engine samples, indexes, and maintains **only** the walks
+    /// whose source it owns; foreign sources keep empty stores, empty
+    /// feature rows, and empty visit lists. Per-walk RNG streams make
+    /// the owned rows bitwise the corresponding rows of the unsharded
+    /// engine — see [`crate::shard::ShardedFeatures`], which composes a
+    /// full engine out of `n_shards` of these.
+    pub fn new_owned(
+        graph: Graph,
+        cfg: WalkConfig,
+        f: Vec<f64>,
+        seed: u64,
+        owner: Option<(u32, u32)>,
+    ) -> StreamingFeatures {
         assert_eq!(f.len(), cfg.max_len + 1, "modulation length != l_max+1");
+        if let Some((shard, count)) = owner {
+            assert!(count > 0 && shard < count, "owner {shard} out of {count}");
+        }
         let n = graph.num_nodes();
-        let iw = sample_components_indexed(&graph, &cfg, seed);
+        let iw = sample_components_indexed_part(&graph, &cfg, seed, owner);
         let norm_deg: Vec<f64> = if cfg.normalize {
             (0..n).map(|i| graph.weighted_degree(i).max(1e-12)).collect()
         } else {
@@ -377,6 +402,7 @@ impl StreamingFeatures {
             graph,
             cfg,
             seed,
+            owner,
             f,
             norm_deg,
             store: iw.store,
@@ -408,6 +434,21 @@ impl StreamingFeatures {
 
     pub fn seed(&self) -> u64 {
         self.seed
+    }
+
+    /// Does this engine own (sample and maintain) walks sourced at
+    /// `node`? Always true for the unsharded engine.
+    pub fn owns(&self, node: usize) -> bool {
+        match self.owner {
+            Some((shard, count)) => node as u32 % count == shard,
+            None => true,
+        }
+    }
+
+    /// The `(shard, n_shards)` partition slot, if this is a per-shard
+    /// worker engine.
+    pub fn owner(&self) -> Option<(u32, u32)> {
+        self.owner
     }
 
     pub fn modulation(&self) -> &[f64] {
@@ -602,12 +643,16 @@ impl StreamingFeatures {
                         self.norm_deg.push(0.0);
                         touched.insert(id);
                     }
-                    (
+                    // The appended node's walks belong to its owner
+                    // shard; a foreign shard only grows its index.
+                    let inv: BTreeSet<(u32, u32)> = if self.owns(id) {
                         (0..self.cfg.n_walks)
                             .map(|t| (id as u32, t as u32))
-                            .collect(),
-                        Some(id),
-                    )
+                            .collect()
+                    } else {
+                        BTreeSet::new()
+                    };
+                    (inv, Some(id))
                 }
             };
             acks.push(DeltaAck { invalidated: inv.len(), added_node });
@@ -863,6 +908,44 @@ impl StreamingFeatures {
             affected_rows.push(i);
         }
         (invalid.iter().copied().collect(), affected_rows)
+    }
+}
+
+/// What the GP model needs from a feature-maintenance engine to run
+/// its delta path — implemented by the unsharded
+/// [`StreamingFeatures`], the partitioned
+/// [`crate::shard::ShardedFeatures`], and the server's
+/// [`crate::shard::FeatureEngine`] dispatcher. The contract every
+/// implementor must honour: after `apply_delta_batch`, `component_row`
+/// returns rows **bitwise identical** to a from-scratch build on the
+/// mutated graph under the same per-walk seeds.
+pub trait DeltaEngine {
+    /// Current node count.
+    fn n(&self) -> usize;
+    /// The walk configuration the features are sampled under.
+    fn walk_config(&self) -> &WalkConfig;
+    /// Apply a validated batch of graph mutations; errors must leave
+    /// the engine untouched.
+    fn apply_delta_batch(&mut self, deltas: &[GraphDelta]) -> Result<BatchSummary, String>;
+    /// Current content of component row `r` at length `l`.
+    fn component_row(&self, l: usize, r: usize) -> (Vec<u32>, Vec<f64>);
+}
+
+impl DeltaEngine for StreamingFeatures {
+    fn n(&self) -> usize {
+        StreamingFeatures::n(self)
+    }
+
+    fn walk_config(&self) -> &WalkConfig {
+        self.config()
+    }
+
+    fn apply_delta_batch(&mut self, deltas: &[GraphDelta]) -> Result<BatchSummary, String> {
+        StreamingFeatures::apply_delta_batch(self, deltas)
+    }
+
+    fn component_row(&self, l: usize, r: usize) -> (Vec<u32>, Vec<f64>) {
+        StreamingFeatures::component_row(self, l, r)
     }
 }
 

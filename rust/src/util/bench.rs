@@ -264,14 +264,18 @@ pub fn gate_rows(
         1.0
     } else {
         let mut ratios: Vec<f64> = matched.iter().map(|m| m.ratio).collect();
-        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ratios.sort_by(f64::total_cmp);
         ratios[ratios.len() / 2]
     };
     let scale = if median_ratio > 0.0 { median_ratio } else { 1.0 };
     for m in &mut matched {
         m.normalized = m.ratio / scale;
     }
-    matched.sort_by(|a, b| b.normalized.partial_cmp(&a.normalized).unwrap());
+    // total_cmp: a NaN ratio (e.g. a 0/0 baseline row) must rank, not
+    // panic the gate — NaN sorts above every real ratio here, so a
+    // poisoned row surfaces at the top of the report instead of
+    // killing it.
+    matched.sort_by(|a, b| b.normalized.total_cmp(&a.normalized));
     let regressions = matched
         .iter()
         .filter(|m| m.normalized > threshold)
@@ -381,6 +385,37 @@ mod tests {
         let mut mild = baseline.clone();
         mild[0].ns_per_op *= 1.4;
         let rep = gate_rows(&mild, &baseline, 1.5, 1_000.0);
+        assert!(rep.regressions.is_empty(), "{:?}", rep.regressions);
+    }
+
+    #[test]
+    fn gate_survives_poisoned_timings_without_panicking() {
+        // Poisoned measurements must flow through the ranking instead
+        // of panicking it — the old `partial_cmp().unwrap()` sorts
+        // aborted the whole gate on the first non-comparable value.
+        let mk = |name: &str, ns: f64| BenchRow::new(name, 4096, 1, ns * 1e-9);
+        let baseline = vec![mk("a", 100_000.0), mk("b", 200_000.0)];
+        // A NaN timing fails the `ns_per_op > 0.0` gateable filter and
+        // is skipped; the healthy row's verdict is unaffected.
+        let mut current = baseline.clone();
+        current[1].ns_per_op = f64::NAN;
+        let rep = gate_rows(&current, &baseline, 1.5, 1_000.0);
+        assert_eq!(rep.matched.len(), 1);
+        assert_eq!(rep.skipped, 1, "NaN timing must be skipped, not gated");
+        assert!(rep.regressions.is_empty(), "{:?}", rep.regressions);
+        // Infinite timings DO pass the filter: every ratio is inf, the
+        // median scale is inf, and each normalized value is inf/inf =
+        // NaN — the exact input that used to panic the final ranking
+        // sort. Now it ranks (NaN first under total_cmp's descending
+        // order) and, comparing false against any threshold, never
+        // fabricates a regression verdict.
+        let infinite: Vec<BenchRow> = baseline
+            .iter()
+            .map(|r| BenchRow { ns_per_op: f64::INFINITY, ..r.clone() })
+            .collect();
+        let rep = gate_rows(&infinite, &baseline, 1.5, 1_000.0);
+        assert_eq!(rep.matched.len(), 2);
+        assert!(rep.matched.iter().all(|m| m.normalized.is_nan()));
         assert!(rep.regressions.is_empty(), "{:?}", rep.regressions);
     }
 

@@ -180,7 +180,7 @@ impl VgpClassifier {
             .map(|row| {
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(c, _)| c)
                     .unwrap()
             })

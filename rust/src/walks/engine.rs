@@ -261,6 +261,23 @@ struct IndexedChunkOut {
 /// affected rows via [`rows_from_walks`] is bit-identical to a full
 /// resample in which only those walks changed.
 pub fn sample_components_indexed(g: &Graph, cfg: &WalkConfig, seed: u64) -> IndexedWalks {
+    sample_components_indexed_part(g, cfg, seed, None)
+}
+
+/// Partition-filtered [`sample_components_indexed`]: with
+/// `owner = Some((shard, n_shards))` only sources `i` with
+/// `i % n_shards == shard` are walked; every other source gets an
+/// empty deposit store, empty feature rows, and no visit entries.
+/// Because each walk `(i, t)` runs on its own RNG stream, the rows and
+/// visit entries this emits for the owned sources are **bitwise** the
+/// corresponding slices of the unfiltered sampler — the foundation of
+/// the sharded engine's composition contract (see `crate::shard`).
+pub fn sample_components_indexed_part(
+    g: &Graph,
+    cfg: &WalkConfig,
+    seed: u64,
+    owner: Option<(u32, u32)>,
+) -> IndexedWalks {
     let n = g.num_nodes();
     let n_len = cfg.max_len + 1;
     let threads = cfg.effective_threads();
@@ -270,6 +287,10 @@ pub fn sample_components_indexed(g: &Graph, cfg: &WalkConfig, seed: u64) -> Inde
         Vec::new()
     };
     let inv_n = 1.0 / cfg.n_walks as f64;
+    let owns = |i: usize| match owner {
+        Some((shard, count)) => i as u32 % count == shard,
+        None => true,
+    };
 
     let chunks: Vec<IndexedChunkOut> = par_map_chunks(n, threads, |s, e, _| {
         let mut per_len: Vec<(Vec<u32>, Vec<u32>, Vec<f64>)> =
@@ -280,6 +301,15 @@ pub fn sample_components_indexed(g: &Graph, cfg: &WalkConfig, seed: u64) -> Inde
         for i in s..e {
             let mut nw = NodeWalks::default();
             nw.offsets.push(0);
+            if !owns(i) {
+                // Foreign source: this shard holds no walks and an
+                // all-empty row — the owner's shard carries them.
+                for (rows, _, _) in per_len.iter_mut() {
+                    rows.push(0);
+                }
+                store.push(nw);
+                continue;
+            }
             for t in 0..cfg.n_walks {
                 let mut rng = walk_rng(seed, i, t);
                 walk_once_record(g, cfg, &norm_deg, i, &mut rng, &mut nw.deposits);

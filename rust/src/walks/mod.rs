@@ -23,6 +23,6 @@ pub use components::{CombinedFeatures, WalkComponents};
 pub use variance::kernel_variance_iid;
 pub use engine::{
     resample_walk, rows_from_walks, sample_components,
-    sample_components_indexed, sample_features, walk_rng, IndexedWalks,
-    NodeWalks, WalkConfig,
+    sample_components_indexed, sample_components_indexed_part,
+    sample_features, walk_rng, IndexedWalks, NodeWalks, WalkConfig,
 };

@@ -702,6 +702,136 @@ fn concurrent_predicts_and_deltas_stay_consistent_across_compactions() {
     c.call(r#"{"op":"shutdown"}"#);
 }
 
+/// A pipelined client writes many frames in ONE socket write; the
+/// server must answer each with exactly one complete reply, in request
+/// order — the streaming decoder may not drop, reorder, or merge
+/// pipelined frames even when the batcher coalesces their handling.
+#[test]
+fn pipelined_frames_get_ordered_complete_replies() {
+    let addr = start_server(64);
+    let mut c = Client::connect(addr);
+    // 8 observes (distinct nodes → n_obs counts 1..=8 in order), one
+    // stats, then 3 predicts of strictly growing span (mean length
+    // identifies which reply is which).
+    let mut body = String::new();
+    for i in 0..8 {
+        body.push_str(&format!(
+            "{{\"op\":\"observe\",\"node\":{},\"y\":{}}}\n",
+            i * 7,
+            (i as f64 * 0.3).sin()
+        ));
+    }
+    body.push_str("{\"op\":\"stats\"}\n");
+    for k in 1..=3usize {
+        let nodes: Vec<String> = (0..k).map(|j| (j * 5).to_string()).collect();
+        body.push_str(&format!(
+            "{{\"op\":\"predict\",\"nodes\":[{}],\"samples\":2}}\n",
+            nodes.join(",")
+        ));
+    }
+    c.stream.write_all(body.as_bytes()).unwrap();
+    let mut reply = || {
+        let mut line = String::new();
+        c.reader.read_line(&mut line).unwrap();
+        assert!(line.ends_with('\n'), "truncated reply: {line:?}");
+        Json::parse(&line).expect("complete JSON reply")
+    };
+    for i in 0..8 {
+        let r = reply();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "obs {i}: {r:?}");
+        assert_eq!(
+            r.get("n_obs").unwrap().as_usize(),
+            Some(i + 1),
+            "observe replies out of order"
+        );
+    }
+    let s = reply();
+    assert_eq!(s.get("n_obs").unwrap().as_usize(), Some(8), "{s:?}");
+    for k in 1..=3usize {
+        let p = reply();
+        assert_eq!(p.get("ok").unwrap().as_bool(), Some(true), "{p:?}");
+        assert_eq!(
+            p.get("mean").unwrap().as_arr().unwrap().len(),
+            k,
+            "predict replies out of order"
+        );
+    }
+    let mut c2 = Client::connect(addr);
+    c2.call(r#"{"op":"shutdown"}"#);
+}
+
+/// Satellite smoke test: the `--metrics-addr` HTTP exposition listener
+/// answers `GET /metrics` with the Prometheus text rendering over a
+/// plain TCP socket (no JSON wire protocol involved), and 404s
+/// everything else.
+#[test]
+fn metrics_http_listener_serves_prometheus_text() {
+    use std::io::Read;
+    // Reserve an ephemeral port for the metrics listener (bind, read,
+    // drop) — the server re-binds it via config.metrics_addr.
+    let metrics_addr = {
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().to_string()
+    };
+    let g = generators::ring(64);
+    let cfg = WalkConfig {
+        n_walks: 8,
+        p_halt: 0.1,
+        max_len: 3,
+        threads: 1,
+        ..Default::default()
+    };
+    let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+    let stream = StreamingFeatures::new(g, cfg, hypers.modulation.coeffs(), 0);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let config = ServerConfig {
+        metrics_addr: Some(metrics_addr.clone()),
+        ..ServerConfig::default()
+    };
+    std::thread::spawn(move || {
+        grfgp::server::serve_on_with(stream, hypers, listener, 7, config)
+            .unwrap();
+    });
+    // Generate some traffic so the scrape has non-zero counters.
+    let mut c = Client::connect(addr);
+    let p = c.call(r#"{"op":"predict","nodes":[0,1],"samples":2}"#);
+    assert_eq!(p.get("ok").unwrap().as_bool(), Some(true), "{p:?}");
+
+    let http_get = |target: &str| -> String {
+        let mut s = TcpStream::connect(&metrics_addr).unwrap();
+        s.write_all(
+            format!("GET {target} HTTP/1.0\r\nHost: x\r\n\r\n").as_bytes(),
+        )
+        .unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    };
+    let resp = http_get("/metrics");
+    assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp:?}");
+    assert!(
+        resp.contains("text/plain; version=0.0.4"),
+        "missing exposition content type: {resp:?}"
+    );
+    let body = resp
+        .split_once("\r\n\r\n")
+        .expect("header/body separator")
+        .1;
+    assert!(
+        body.contains("grfgp_req_predict"),
+        "scrape body missing request counters: {body:?}"
+    );
+    assert!(
+        body.contains("# TYPE"),
+        "not Prometheus text exposition: {body:?}"
+    );
+    let miss = http_get("/not-metrics");
+    assert!(miss.starts_with("HTTP/1.0 404"), "{miss:?}");
+
+    c.call(r#"{"op":"shutdown"}"#);
+}
+
 #[test]
 fn concurrent_deltas_get_distinct_monotone_versions() {
     // Coalesced delta runs must still stamp one monotone graph_version

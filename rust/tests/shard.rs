@@ -1,0 +1,210 @@
+//! Tentpole property suite: the sharded engine is **bitwise invisible**.
+//!
+//! For every shard count (default S ∈ {2, 4, 7}; override with
+//! `GRFGP_TEST_SHARDS=1,2,4`), a server over the partitioned
+//! [`grfgp::shard::ShardedFeatures`] engine must serve predictions,
+//! Φ/Φᵀ operands, and `graph_version` stamps **bit-identical** to the
+//! mono engine under an identical request script — with the hub cap
+//! active and compactions forced mid-run, and with predicts still
+//! acquiring zero model locks.
+//!
+//! What is deliberately NOT compared: per-delta `resampled_walks` /
+//! `compacted` ack fields and compaction counts. Per-shard visit
+//! indices saturate their hub caps on different cadences than the mono
+//! index, so the resample sets (both supersets of the true visitor
+//! sets) and overlay occupancies legitimately drift — the features do
+//! not. See the `grfgp::shard` module docs.
+
+use grfgp::gp::{Hypers, Modulation};
+use grfgp::graph::{generators, Graph};
+use grfgp::server::batcher::Request;
+use grfgp::server::{handle, ModelState, ServerConfig, ServerState};
+use grfgp::stream::StreamingFeatures;
+use grfgp::util::rng::Rng;
+use grfgp::walks::WalkConfig;
+use std::sync::atomic::Ordering;
+
+/// Shard counts under test: `GRFGP_TEST_SHARDS` (comma-separated) or
+/// the default {2, 4, 7} — coprime, even, and larger-than-typical
+/// splits of the node count.
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("GRFGP_TEST_SHARDS") {
+        Ok(spec) => spec
+            .split(',')
+            .map(|t| t.trim())
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.parse()
+                    .unwrap_or_else(|_| panic!("GRFGP_TEST_SHARDS: bad entry {t:?}"))
+            })
+            .collect(),
+        Err(_) => vec![2, 4, 7],
+    }
+}
+
+/// The graph every state in this suite serves (fixed seed, so the
+/// mono and sharded runs — and the script's edge picks — agree).
+fn test_graph() -> Graph {
+    generators::barabasi_albert(96, 3, &mut Rng::new(5))
+}
+
+/// Deterministically pick `k` node pairs that are NOT edges of `g`
+/// (so the script's `add_edge`s are guaranteed valid without
+/// hard-coding pairs against a generator's output).
+fn pick_non_edges(g: &Graph, k: usize) -> Vec<(usize, usize)> {
+    let n = g.num_nodes();
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    'outer: for u in 1..n {
+        for v in ((u + 20)..n).step_by(17) {
+            let adjacent = g.neighbors(u).iter().any(|&x| x as usize == v);
+            let fresh = !out.iter().any(|&(a, b)| (a, b) == (u, v));
+            if !adjacent && fresh {
+                out.push((u, v));
+                if out.len() == k {
+                    break 'outer;
+                }
+                break;
+            }
+        }
+    }
+    assert_eq!(out.len(), k, "graph too dense to pick {k} test non-edges");
+    out
+}
+
+/// A server state over a scale-free graph, with the hub cap low enough
+/// to saturate on the BA hubs and the compaction threshold low enough
+/// that the delta script folds the overlays mid-run.
+fn build_state(n_shards: usize) -> ServerState {
+    let g = test_graph();
+    let cfg = WalkConfig {
+        n_walks: 12,
+        p_halt: 0.15,
+        max_len: 3,
+        threads: 1,
+        ..Default::default()
+    };
+    let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+    let stream = StreamingFeatures::new(g, cfg, hypers.modulation.coeffs(), 0);
+    let mut ms = ModelState::new_sharded(stream, hypers, 7, n_shards);
+    ms.stream.set_hub_cap(4); // saturates on BA hubs
+    ms.stream.set_compact_threshold(2); // folds mid-script
+    ServerState::new(ms, ServerConfig::default())
+}
+
+/// Drive one fixed write/read script through the full serving path
+/// (`handle` → write batches → snapshot publication → wait-free
+/// predicts). Returns every predict response rendered to JSON —
+/// mean, var, `graph_version` stamp, and `rng_seq` included, so a
+/// string comparison between two runs is a bitwise comparison of
+/// everything a client can observe from reads.
+fn run_script(state: &ServerState, edges: &[(usize, usize)]) -> Vec<String> {
+    let mut predicts = Vec::new();
+    let mut predict = |nodes: Vec<usize>| {
+        let r = handle(state, &Request::Predict { nodes, samples: 3 });
+        assert!(r.ok, "{r:?}");
+        predicts.push(r.to_json().to_string());
+    };
+    let mut version = 0u64;
+    let mut delta = |req: Request| {
+        let r = handle(state, &req);
+        assert!(r.ok, "{req:?}: {r:?}");
+        version += 1;
+        assert_eq!(
+            r.to_json().get("graph_version").and_then(|v| v.as_usize()),
+            Some(version as usize),
+            "delta ack version out of sequence"
+        );
+    };
+
+    for i in 0..6usize {
+        let r = handle(
+            state,
+            &Request::Observe { node: (i * 13) % 96, y: (i as f64 * 0.7).sin() },
+        );
+        assert!(r.ok, "{r:?}");
+    }
+    predict(vec![0, 17, 42]);
+
+    // Edge insertions (guaranteed non-edges picked off the real
+    // graph), growth, and removal — each delta batch crosses the
+    // forced compaction threshold, and the fan-out invalidates walks
+    // across shard boundaries for every S under test.
+    assert_eq!(edges.len(), 3, "script wants exactly 3 picked edges");
+    let (u0, v0) = edges[0];
+    let (u1, v1) = edges[1];
+    let (u2, v2) = edges[2];
+    delta(Request::AddEdge { u: u0, v: v0, w: 0.9 });
+    predict(vec![u0, v0, 93]);
+    delta(Request::AddNode);
+    let r = handle(state, &Request::Observe { node: 96, y: 0.25 });
+    assert!(r.ok, "{r:?}");
+    predict(vec![96, 3, 71]);
+    delta(Request::AddEdge { u: 96, v: 7, w: 1.2 });
+    predict(vec![96, 7]);
+    delta(Request::RemoveEdge { u: u0, v: v0 });
+    delta(Request::AddEdge { u: u1, v: v1, w: 0.4 });
+    delta(Request::AddEdge { u: u2, v: v2, w: 1.1 });
+    predict(vec![0, u1, v2, 96]);
+
+    // Wait-free contract, extended to the sharded path: a block of
+    // predicts moves the model-lock counter by exactly zero.
+    let before = state.model_lock_acquisitions.load(Ordering::SeqCst);
+    for k in 0..4usize {
+        predict(vec![k * 11, k * 7 + 1]);
+    }
+    let after = state.model_lock_acquisitions.load(Ordering::SeqCst);
+    assert_eq!(
+        before, after,
+        "a predict acquired the model mutex with {} shard(s)",
+        state.snapshots.load().shards
+    );
+    predicts
+}
+
+#[test]
+fn sharded_serving_is_bitwise_identical_to_mono() {
+    let edges = pick_non_edges(&test_graph(), 3);
+    let mono = build_state(1);
+    let mono_predicts = run_script(&mono, &edges);
+    let mono_guard = mono.model_guard();
+    let (mono_phi, mono_phi_t) =
+        (mono_guard.model.phi_csr(), mono_guard.model.phi_t_csr());
+    drop(mono_guard);
+
+    for s in shard_counts() {
+        let sharded = build_state(s);
+        assert_eq!(
+            sharded.snapshots.load().shards,
+            s,
+            "snapshot does not expose the composed shard count"
+        );
+        let got = run_script(&sharded, &edges);
+        assert_eq!(
+            got.len(),
+            mono_predicts.len(),
+            "S={s}: script served a different number of predicts"
+        );
+        for (k, (a, b)) in mono_predicts.iter().zip(&got).enumerate() {
+            assert_eq!(
+                a, b,
+                "S={s}: predict {k} is not bitwise the mono response"
+            );
+        }
+        let guard = sharded.model_guard();
+        assert_eq!(
+            guard.model.phi_csr(),
+            mono_phi,
+            "S={s}: composed Φ differs from the mono operand"
+        );
+        assert_eq!(
+            guard.model.phi_t_csr(),
+            mono_phi_t,
+            "S={s}: composed Φᵀ differs from the mono operand"
+        );
+        assert_eq!(
+            guard.model.partition().map(|p| p.n_shards()),
+            if s > 1 { Some(s) } else { None },
+            "S={s}: model operands not stored under the engine partition"
+        );
+    }
+}
