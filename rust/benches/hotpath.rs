@@ -79,12 +79,20 @@
 //! hammer against a `--shards 2` server (wait-free reads either way,
 //! so this row tracks its mono twin). Both run in the quick CI
 //! profile and flow through the bench gate like any other row.
+//!
+//! PR 10 additions (termination schemes): the single
+//! `metric_grf_variance_iid` row became a four-row family —
+//! `metric_grf_variance_{iid,antithetic,qmc}` at an identical walk
+//! budget and seed set (the correlated schemes should land strictly
+//! below iid), plus `metric_grf_variance_qmc_half_walks` (QMC at half
+//! the walks, expected to land near the iid row — fewer walks for the
+//! same error). All metric rows run in the quick CI profile and are
+//! never gated.
 
 use grfgp::bo::{run_policy, BoConfig, ThompsonPolicy};
 use grfgp::gp::{GpModel, Hypers, Modulation};
 use grfgp::graph::generators;
 use grfgp::server::wire::{WireConfig, WireDecoder};
-use grfgp::server::ServerConfig;
 use grfgp::shard::ShardedFeatures;
 use grfgp::sparse::ops::GramOperator;
 use grfgp::sparse::FeatureLayout;
@@ -92,7 +100,7 @@ use grfgp::stream::{GraphDelta, StreamingFeatures};
 use grfgp::util::bench::{bench, write_rows_json, BenchRow};
 use grfgp::util::parallel::num_threads;
 use grfgp::util::rng::Rng;
-use grfgp::walks::{sample_components, WalkConfig};
+use grfgp::walks::{sample_components, Termination, WalkConfig};
 
 /// Serial multi-RHS reference: what `lml_grad`'s solve phase cost
 /// before the blocked path — one independent CG run per RHS.
@@ -775,7 +783,10 @@ fn main() {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let srv = std::thread::spawn(move || {
-            grfgp::server::serve_on(stream, hy, listener, 7).unwrap();
+            grfgp::server::ServeOptions::new()
+                .seed(7)
+                .serve_on(stream, hy, listener)
+                .unwrap();
         });
         let (mut s0, mut r0) = srv_connect(addr);
         for i in 0..16 {
@@ -892,9 +903,11 @@ fn main() {
             StreamingFeatures::new(g2, wcfg2, hy2.modulation.coeffs(), 0);
         let listener2 = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr2 = listener2.local_addr().unwrap();
-        let shard_cfg = ServerConfig { shards: 2, ..ServerConfig::default() };
         let srv2 = std::thread::spawn(move || {
-            grfgp::server::serve_on_with(stream2, hy2, listener2, 7, shard_cfg)
+            grfgp::server::ServeOptions::new()
+                .shards(2)
+                .seed(7)
+                .serve_on(stream2, hy2, listener2)
                 .unwrap();
         });
         let (mut s2, mut r2) = srv_connect(addr2);
@@ -998,29 +1011,53 @@ fn main() {
 
     // --- GRF estimator quality: variance across walk seeds ------------
     // Mean per-entry variance of K̂ = Φ Φᵀ across independent walk
-    // seeds (also published as the `grf_variance_iid` registry gauge).
-    // `metric_*` convention: dimensionless value in ns_per_op, never
-    // gated — this is the baseline a QMC walker would have to beat.
+    // seeds, one row per walk-termination scheme (each also published
+    // as its `grf_variance_*` registry gauge). `metric_*` convention:
+    // dimensionless value in ns_per_op, never gated. The config keeps
+    // the walk-length distribution termination-sensitive (p_halt 0.2,
+    // max_len 5: survival to the cap ≈ 0.33, not ≈ 1) so the
+    // correlated schemes have tail mass to cancel — antithetic and qmc
+    // should land strictly below iid at the identical walk budget, and
+    // `..._qmc_half_walks` (n_walks 16 vs 32) should land near the iid
+    // row: the "half the walks for the same error" headline.
     {
         let nv = 1024usize;
         let gv = generators::ring(nv);
-        let vcfg = WalkConfig {
-            n_walks: 32,
-            p_halt: 0.1,
-            max_len: 3,
+        let coeffs = vec![1.0, 0.5, 0.25, 0.12, 0.06, 0.03];
+        let seeds = [101u64, 102, 103];
+        let vcfg = |termination, n_walks| WalkConfig {
+            n_walks,
+            p_halt: 0.2,
+            max_len: 5,
+            termination,
             ..Default::default()
         };
-        let coeffs = vec![1.0, 0.5, 0.25, 0.12];
-        let var = grfgp::walks::kernel_variance_iid(
-            &gv, &vcfg, &coeffs, &[101, 102, 103], 64, 9,
-        );
-        println!("metric_grf_variance_iid: {var:.3e} (n={nv}, 3 seeds)");
-        rows.push(BenchRow {
-            name: "metric_grf_variance_iid".into(),
-            n: nv,
-            b: 1,
-            ns_per_op: var,
-        });
+        let schemes = [
+            ("metric_grf_variance_iid", Termination::Iid, 32usize),
+            ("metric_grf_variance_antithetic", Termination::Antithetic, 32),
+            ("metric_grf_variance_qmc", Termination::Qmc, 32),
+            ("metric_grf_variance_qmc_half_walks", Termination::Qmc, 16),
+        ];
+        for (name, termination, n_walks) in schemes {
+            let var = grfgp::walks::kernel_variance(
+                &gv,
+                &vcfg(termination, n_walks),
+                &coeffs,
+                &seeds,
+                64,
+                9,
+            );
+            println!(
+                "{name}: {var:.3e} (n={nv}, walks={n_walks}, {} seeds)",
+                seeds.len()
+            );
+            rows.push(BenchRow {
+                name: name.into(),
+                n: nv,
+                b: n_walks,
+                ns_per_op: var,
+            });
+        }
     }
 
     // Machine-readable record for cross-PR perf tracking.

@@ -37,7 +37,9 @@ fn main() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
-        grfgp::server::serve_on(stream, hypers, listener, 0).unwrap();
+        grfgp::server::ServeOptions::new()
+            .serve_on(stream, hypers, listener)
+            .unwrap();
     });
 
     // Client.

@@ -9,7 +9,7 @@ use crate::gp::model::GpModel;
 use crate::gp::{Hypers, Modulation};
 use crate::graph::Graph;
 use crate::util::rng::Rng;
-use crate::walks::{sample_components, WalkConfig};
+use crate::walks::{WalkConfig, WalkSampler};
 
 /// A BO policy proposes the next node to query given history.
 pub trait Policy {
@@ -124,7 +124,7 @@ impl ThompsonPolicy {
     /// Build the surrogate: one walk-sampling pass (kernel init is O(N))
     /// reused for the whole BO run.
     pub fn new(g: &Graph, cfg: &BoConfig, rng: &mut Rng) -> ThompsonPolicy {
-        let comps = sample_components(g, &cfg.walk, rng.next_u64());
+        let comps = WalkSampler::new(g, &cfg.walk, rng.next_u64()).components();
         let l_max = cfg.walk.max_len;
         let hypers = Hypers::new(
             Modulation::diffusion(1.0, 1.0, l_max),
@@ -450,11 +450,10 @@ mod tests {
         // re-solve is a nearly identical system: warm-starting the
         // block-CG at the previous step's solves must take strictly
         // fewer iterations than the cold start on the same system.
-        use crate::walks::sample_components;
         let n = 400;
         let g = generators::ring(n);
         let walk = WalkConfig { n_walks: 64, max_len: 4, threads: 1, ..Default::default() };
-        let comps = sample_components(&g, &walk, 3);
+        let comps = WalkSampler::new(&g, &walk, 3).components();
         let h = bump_objective(n);
         let nodes0: Vec<usize> = (0..40).map(|i| i * 10).collect();
         let y0: Vec<f64> = nodes0.iter().map(|&i| h(i)).collect();

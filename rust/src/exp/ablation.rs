@@ -15,7 +15,7 @@ use crate::linalg::Mat;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::walks::{sample_components, WalkConfig};
+use crate::walks::{Termination, WalkConfig, WalkSampler};
 
 pub struct AblationResult {
     pub kernel: String,
@@ -100,9 +100,10 @@ pub fn run(args: &Args) -> Json {
             max_len,
             reweight,
             normalize: reweight,
+            termination: Termination::Iid,
             threads: args.usize("threads", 0),
         };
-        let comps = sample_components(&g, &cfg, seed + 1);
+        let comps = WalkSampler::new(&g, &cfg, seed + 1).components();
         let hypers = Hypers::new(
             Modulation::diffusion(1.0, 1.0, max_len),
             0.1,

@@ -17,7 +17,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::timer::mean_std;
 use crate::vgp::VgpClassifier;
-use crate::walks::{sample_components, WalkConfig};
+use crate::walks::{Termination, WalkConfig, WalkSampler};
 
 fn dense_to_csr(l: &crate::linalg::Mat, threshold: f64) -> Csr {
     let n = l.rows;
@@ -50,9 +50,10 @@ fn run_one(
                 max_len: args.usize("max-len", 6),
                 reweight: true,
                 normalize: true,
+                termination: Termination::Iid,
                 threads: 0,
             };
-            let comps = sample_components(&data.graph, &cfg, seed);
+            let comps = WalkSampler::new(&data.graph, &cfg, seed).components();
             // Diffusion-shaped modulation with a moderate lengthscale.
             let f: Vec<f64> = (0..=cfg.max_len)
                 .map(|l| {

@@ -14,7 +14,7 @@ use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::timer::mean_std;
-use crate::walks::{sample_components, WalkConfig};
+use crate::walks::{Termination, WalkConfig, WalkSampler};
 
 /// Evaluate one GRF kernel variant on a dataset.
 fn eval_grf(
@@ -33,9 +33,10 @@ fn eval_grf(
         max_len,
         reweight: true,
         normalize: true,
+        termination: Termination::Iid,
         threads: 0,
     };
-    let comps = sample_components(&data.graph, &cfg, seed);
+    let comps = WalkSampler::new(&data.graph, &cfg, seed).components();
     let modulation = if learnable {
         Modulation::learnable_init(max_len, &mut rng)
     } else {

@@ -22,7 +22,7 @@ use crate::util::json::Json;
 use crate::util::powerlaw::fit_powerlaw;
 use crate::util::rng::Rng;
 use crate::util::timer::mean_std;
-use crate::walks::{sample_components, WalkConfig};
+use crate::walks::{Termination, WalkConfig, WalkSampler};
 
 #[derive(Clone, Copy, Debug, Default)]
 struct Measure {
@@ -49,6 +49,7 @@ fn walk_cfg(args: &Args) -> WalkConfig {
         max_len: args.usize("max-len", 3),
         reweight: true,
         normalize: true,
+        termination: Termination::Iid,
         threads: args.usize("threads", 0),
     }
 }
@@ -63,7 +64,7 @@ fn measure_sparse(n: usize, seed: u64, args: &Args) -> Measure {
     let cfg = walk_cfg(args);
     let steps = args.usize("train-steps", 10);
 
-    let (comps, init_s) = timed(&EXP_INIT_NS, || sample_components(&g, &cfg, seed));
+    let (comps, init_s) = timed(&EXP_INIT_NS, || WalkSampler::new(&g, &cfg, seed).components());
     let memory_mb = comps.memory_bytes() as f64 / 1e6;
     let hypers = Hypers::new(
         Modulation::diffusion(1.0, 1.0, cfg.max_len),
@@ -103,7 +104,7 @@ fn measure_dense(n: usize, seed: u64, args: &Args) -> Measure {
     let probes = args.usize("probes", 4);
 
     // Kernel init: walks + DENSE materialisation of K̂ = Φ Φᵀ.
-    let (comps, walk_s) = timed(&EXP_INIT_NS, || sample_components(&g, &cfg, seed));
+    let (comps, walk_s) = timed(&EXP_INIT_NS, || WalkSampler::new(&g, &cfg, seed).components());
     let mut hypers = Hypers::new(
         Modulation::diffusion(1.0, 1.0, cfg.max_len),
         0.1,

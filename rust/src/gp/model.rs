@@ -1323,7 +1323,7 @@ mod tests {
     use crate::graph::generators;
     use crate::linalg::chol::Cholesky;
     use crate::linalg::Mat;
-    use crate::walks::{sample_components, WalkConfig};
+    use crate::walks::{WalkConfig, WalkSampler};
 
     /// Exact train-block LML (paper Eq. 8) via dense algebra — oracle.
     fn dense_lml_of(m: &GpModel) -> f64 {
@@ -1349,7 +1349,7 @@ mod tests {
     fn small_model(seed: u64) -> (GpModel, Mat) {
         let g = generators::grid2d(5, 5);
         let cfg = WalkConfig { n_walks: 300, max_len: 4, threads: 1, ..Default::default() };
-        let comps = sample_components(&g, &cfg, seed);
+        let comps = WalkSampler::new(&g, &cfg, seed).components();
         let mut rng = Rng::new(seed);
         let train: Vec<usize> = rng.sample_without_replacement(25, 12);
         let y: Vec<f64> = train.iter().map(|&i| (i as f64 * 0.3).sin()).collect();

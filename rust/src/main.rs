@@ -21,7 +21,7 @@ use grfgp::stream::StreamingFeatures;
 use grfgp::util::cli::Args;
 use grfgp::util::json::UnicodeMode;
 use grfgp::util::rng::Rng;
-use grfgp::walks::WalkConfig;
+use grfgp::walks::{Termination, WalkConfig};
 use std::time::Duration;
 
 const USAGE: &str = "\
@@ -35,6 +35,7 @@ USAGE:
               [--max-batch K] [--slow-request-ms T]
               [--shards S] [--metrics-addr 127.0.0.1:9464]
               [--alert-p99-ms op=ms[,op=ms...]]
+              [--termination iid|antithetic|qmc]
   grfgp info  [--artifacts artifacts]
 
 Common experiment options:
@@ -116,19 +117,29 @@ fn run_serve(args: &Args) -> Result<()> {
         "ba" => generators::barabasi_albert(n, 3, &mut Rng::new(seed)),
         other => bail!("unknown graph kind {other:?}"),
     };
+    // Walk-termination scheme: `antithetic`/`qmc` cut estimator
+    // variance at the same `--walks` budget (see walks module docs,
+    // "Termination schemes"); `iid` is the classical sampler.
+    let term_spec = args.get_or("termination", "iid");
+    let termination = match Termination::parse(term_spec) {
+        Some(t) => t,
+        None => bail!("unknown --termination {term_spec:?} (iid|antithetic|qmc)"),
+    };
     let cfg = WalkConfig {
         n_walks: args.usize("walks", 100),
         p_halt: args.f64("p-halt", 0.1),
         max_len: args.usize("max-len", 5),
         reweight: true,
         normalize: true,
+        termination,
         threads: args.usize("threads", 0),
     };
     eprintln!(
-        "sampling GRF components (indexed, per-walk streams): n={} walks={} l_max={}",
+        "sampling GRF components (indexed, per-walk streams): n={} walks={} l_max={} termination={}",
         graph.num_nodes(),
         cfg.n_walks,
-        cfg.max_len
+        cfg.max_len,
+        cfg.termination.as_str()
     );
     let hypers = Hypers::new(
         Modulation::diffusion(1.0, 1.0, cfg.max_len),
@@ -190,7 +201,12 @@ fn run_serve(args: &Args) -> Result<()> {
             },
         },
     };
-    grfgp::server::serve_with(stream, hypers, &addr, seed, config)
+    grfgp::server::ServeOptions::new()
+        .addr(addr)
+        .seed(seed)
+        .config(config)
+        .termination(termination)
+        .serve(stream, hypers)
 }
 
 fn run_info(args: &Args) -> Result<()> {

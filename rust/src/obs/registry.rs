@@ -315,9 +315,13 @@ catalogue! {
         (SHARD3_PATCH_ROWS, "shard3_patch_rows"),
     ],
     gauges: [
-        // Mean per-entry kernel-estimate variance across walk seeds —
-        // the GRF quality readout the QMC-walker roadmap item gates on.
+        // Mean per-entry kernel-estimate variance across walk seeds,
+        // one gauge per walk-termination scheme (`walks::Termination`)
+        // so the correlated walkers publish next to the iid baseline
+        // they must beat (`walks::kernel_variance`).
         (GRF_VARIANCE_IID, "grf_variance_iid"),
+        (GRF_VARIANCE_ANTITHETIC, "grf_variance_antithetic"),
+        (GRF_VARIANCE_QMC, "grf_variance_qmc"),
         // Relative residual of the most recent CG solve.
         (CG_LAST_RESIDUAL, "cg_last_residual"),
     ],

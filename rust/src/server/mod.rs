@@ -25,6 +25,18 @@
 //! Every response to a decoded frame additionally carries a
 //! `trace_id` (see "Observability" below).
 //!
+//! ## Starting a server
+//!
+//! [`ServeOptions`] is the single entry point: a builder over the
+//! listen address (or an already-bound listener), the serving-edge
+//! [`ServerConfig`] (with dedicated setters for the common knobs —
+//! shards, metrics listener, alert rules, slow-request threshold), the
+//! model seed, and the walk-[`Termination`] scheme
+//! (`--termination iid|antithetic|qmc`; see the
+//! [`crate::walks`] docs, "Termination schemes"). The pre-builder
+//! functions `serve` / `serve_with` / `serve_on` / `serve_on_with` are
+//! deprecated shims over it.
+//!
 //! ## Observability
 //!
 //! The server is instrumented through [`crate::obs`] — a global
@@ -56,7 +68,9 @@
 //! * `snapshot_publishes`, `snapshot_publish_ns` (build + swap),
 //!   `predict_snapshot_lag_ns` (age of the snapshot each predict
 //!   computed off — the staleness the RCU read path delivers).
-//! * `slow_requests`, `grf_variance_iid` (see `benches/hotpath.rs`).
+//! * `slow_requests`, `grf_variance_{iid,antithetic,qmc}` — kernel
+//!   estimator variance per termination scheme (see
+//!   `benches/hotpath.rs` and [`crate::walks::kernel_variance`]).
 //!
 //! **Histogram buckets** are fixed log₂ scale: bucket `i ≥ 1` holds
 //! values in `[2^(i-1), 2^i)` ns (bucket 0 holds exact zeros), 44
@@ -84,7 +98,8 @@
 //! ## Limits & failure modes
 //!
 //! The wire layer is attacker-facing and every limit below is a
-//! [`ServerConfig`] knob; the listed defaults are what `serve` uses.
+//! [`ServerConfig`] knob; the listed defaults are what
+//! [`ServeOptions::new`] uses.
 //!
 //! * **Frame cap** (`wire.max_frame_bytes`, 256 KiB): one
 //!   newline-delimited frame may not exceed this. The decoder's
@@ -228,6 +243,7 @@ use crate::shard::{FeatureEngine, ShardedFeatures};
 use crate::stream::{GraphDelta, StreamingFeatures};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::walks::Termination;
 use anyhow::{Context, Result};
 use batcher::{Batcher, Request, Response};
 use snapshot::{ReadSnapshot, SnapshotCell};
@@ -1181,19 +1197,171 @@ fn serve_metrics_http(listener: TcpListener, state: &ServerState) {
     }
 }
 
+/// One builder for every way to start the server — listen address,
+/// serving-edge [`ServerConfig`] (shards, metrics listener, alert
+/// rules, slow-request threshold, wire limits), model seed, and the
+/// walk-[`Termination`] scheme — replacing the old
+/// `serve`/`serve_with`/`serve_on`/`serve_on_with` family (kept as
+/// deprecated shims).
+///
+/// ```no_run
+/// use grfgp::gp::{Hypers, Modulation};
+/// use grfgp::graph::generators;
+/// use grfgp::server::ServeOptions;
+/// use grfgp::stream::StreamingFeatures;
+/// use grfgp::walks::{Termination, WalkConfig};
+///
+/// let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 10), 0.1);
+/// let stream = StreamingFeatures::new(
+///     generators::ring(512),
+///     WalkConfig::default(),
+///     hypers.modulation.coeffs(),
+///     0,
+/// );
+/// ServeOptions::new()
+///     .addr("127.0.0.1:7701")
+///     .shards(4)
+///     .termination(Termination::Qmc)
+///     .serve(stream, hypers)
+///     .unwrap();
+/// ```
+///
+/// Tests that bind port 0 themselves hand the bound listener to
+/// [`ServeOptions::serve_on`] instead of [`ServeOptions::serve`].
+#[derive(Clone, Debug, Default)]
+pub struct ServeOptions {
+    addr: Option<String>,
+    config: ServerConfig,
+    seed: u64,
+    termination: Option<Termination>,
+}
+
+impl ServeOptions {
+    /// Defaults: `127.0.0.1:7701`, `ServerConfig::default()`, seed 0,
+    /// and the termination scheme the stream was sampled with.
+    pub fn new() -> ServeOptions {
+        ServeOptions::default()
+    }
+
+    /// Listen address for [`ServeOptions::serve`] (default
+    /// `127.0.0.1:7701`).
+    pub fn addr(mut self, addr: impl Into<String>) -> Self {
+        self.addr = Some(addr.into());
+        self
+    }
+
+    /// Replace the whole serving-edge config (wire limits, timeouts,
+    /// connection caps, ...). Knobs set *before* this call are
+    /// overwritten; the dedicated setters below are sugar over the
+    /// same struct, so order them after.
+    pub fn config(mut self, config: ServerConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Model/server RNG seed (default 0).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Feature-maintenance shard count (`--shards`; 1 = mono engine).
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.config.shards = shards;
+        self
+    }
+
+    /// Plain-HTTP Prometheus exposition listener (`--metrics-addr`).
+    pub fn metrics_addr(mut self, addr: impl Into<String>) -> Self {
+        self.config.metrics_addr = Some(addr.into());
+        self
+    }
+
+    /// p99 latency alert rules, evaluated at scrape time
+    /// (`--alert-p99-ms`).
+    pub fn alerts(mut self, rules: Vec<obs::alerts::AlertRule>) -> Self {
+        self.config.alerts = rules;
+        self
+    }
+
+    /// Slow-request outlier log threshold in ms (`--slow-request-ms`;
+    /// 0 = off).
+    pub fn slow_request_ms(mut self, ms: u64) -> Self {
+        self.config.slow_request_ms = ms;
+        self
+    }
+
+    /// Walk-termination scheme for the served feature state
+    /// (`--termination`). When it differs from the scheme the handed-in
+    /// stream was sampled under, the stream is resampled once at
+    /// startup; unset leaves the stream as built.
+    pub fn termination(mut self, scheme: Termination) -> Self {
+        self.termination = Some(scheme);
+        self
+    }
+
+    /// Bind the configured address and serve until shutdown.
+    pub fn serve(self, stream: StreamingFeatures, hypers: Hypers) -> Result<()> {
+        let addr = self.addr.clone().unwrap_or_else(|| "127.0.0.1:7701".into());
+        let listener =
+            TcpListener::bind(&addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        eprintln!("grfgp server listening on {local}");
+        self.serve_on(stream, hypers, listener)
+    }
+
+    /// Serve on an already-bound listener (tests bind port 0
+    /// themselves) until a shutdown request arrives. The GP model is
+    /// built from the stream's components, so graph deltas patch both
+    /// consistently.
+    pub fn serve_on(
+        self,
+        stream: StreamingFeatures,
+        hypers: Hypers,
+        listener: TcpListener,
+    ) -> Result<()> {
+        let stream = apply_termination_override(stream, self.termination);
+        serve_inner(stream, hypers, listener, self.seed, self.config)
+    }
+}
+
+/// Resample the feature state under `scheme` when it differs from the
+/// one the stream was built with (`None` / matching scheme: handed
+/// back untouched). One startup-time rebuild, same graph / modulation
+/// / seed.
+fn apply_termination_override(
+    stream: StreamingFeatures,
+    scheme: Option<Termination>,
+) -> StreamingFeatures {
+    match scheme {
+        Some(term) if stream.config().termination != term => {
+            let mut cfg = stream.config().clone();
+            cfg.termination = term;
+            StreamingFeatures::new(
+                stream.graph().clone(),
+                cfg,
+                stream.modulation().to_vec(),
+                stream.seed(),
+            )
+        }
+        _ => stream,
+    }
+}
+
 /// Serve the streaming state on `addr` until a shutdown request
-/// arrives. The GP model is built from the stream's components, so
-/// graph deltas patch both consistently.
+/// arrives.
+#[deprecated(note = "use ServeOptions::new().addr(..).seed(..).serve(..)")]
 pub fn serve(
     stream: StreamingFeatures,
     hypers: Hypers,
     addr: &str,
     seed: u64,
 ) -> Result<()> {
-    serve_with(stream, hypers, addr, seed, ServerConfig::default())
+    ServeOptions::new().addr(addr).seed(seed).serve(stream, hypers)
 }
 
 /// [`serve`] with explicit serving-edge limits.
+#[deprecated(note = "use ServeOptions::new().addr(..).config(..).serve(..)")]
 pub fn serve_with(
     stream: StreamingFeatures,
     hypers: Hypers,
@@ -1201,25 +1369,41 @@ pub fn serve_with(
     seed: u64,
     config: ServerConfig,
 ) -> Result<()> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-    let local = listener.local_addr()?;
-    eprintln!("grfgp server listening on {local}");
-    serve_on_with(stream, hypers, listener, seed, config)
+    ServeOptions::new()
+        .addr(addr)
+        .seed(seed)
+        .config(config)
+        .serve(stream, hypers)
 }
 
-/// Serve on an already-bound listener (tests bind port 0 themselves).
+/// Serve on an already-bound listener.
+#[deprecated(note = "use ServeOptions::new().seed(..).serve_on(..)")]
 pub fn serve_on(
     stream: StreamingFeatures,
     hypers: Hypers,
     listener: TcpListener,
     seed: u64,
 ) -> Result<()> {
-    serve_on_with(stream, hypers, listener, seed, ServerConfig::default())
+    ServeOptions::new().seed(seed).serve_on(stream, hypers, listener)
 }
 
-/// [`serve_on`] with explicit serving-edge limits — the full-control
-/// entry point the fault-injection suite drives.
+/// [`serve_on`] with explicit serving-edge limits.
+#[deprecated(note = "use ServeOptions::new().config(..).seed(..).serve_on(..)")]
 pub fn serve_on_with(
+    stream: StreamingFeatures,
+    hypers: Hypers,
+    listener: TcpListener,
+    seed: u64,
+    config: ServerConfig,
+) -> Result<()> {
+    ServeOptions::new()
+        .config(config)
+        .seed(seed)
+        .serve_on(stream, hypers, listener)
+}
+
+/// The accept loop behind every [`ServeOptions`] entry.
+fn serve_inner(
     stream: StreamingFeatures,
     hypers: Hypers,
     listener: TcpListener,
@@ -1306,4 +1490,98 @@ pub fn serve_on_with(
         }
         Ok(())
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::Modulation;
+    use crate::graph::generators;
+    use crate::walks::WalkConfig;
+
+    fn small_stream(termination: Termination) -> StreamingFeatures {
+        let cfg = WalkConfig {
+            n_walks: 6,
+            p_halt: 0.3,
+            max_len: 3,
+            threads: 1,
+            termination,
+            ..Default::default()
+        };
+        let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
+        StreamingFeatures::new(
+            generators::ring(24),
+            cfg,
+            hypers.modulation.coeffs(),
+            5,
+        )
+    }
+
+    /// The dedicated setters are sugar over `ServerConfig` — each one
+    /// must land on the same field a hand-built config would set, and
+    /// `config()` must replace the whole struct.
+    #[test]
+    fn serve_options_setters_write_through_to_config() {
+        let opts = ServeOptions::new()
+            .shards(3)
+            .metrics_addr("127.0.0.1:9464")
+            .slow_request_ms(25)
+            .alerts(vec![]);
+        assert_eq!(opts.config.shards, 3);
+        assert_eq!(opts.config.metrics_addr.as_deref(), Some("127.0.0.1:9464"));
+        assert_eq!(opts.config.slow_request_ms, 25);
+        assert!(opts.config.alerts.is_empty());
+        assert_eq!(opts.seed, 0);
+        assert_eq!(opts.termination, None);
+
+        // `config()` replaces wholesale: sugar applied before it is lost,
+        // sugar applied after it sticks (the documented ordering rule).
+        let replaced = ServeOptions::new()
+            .shards(3)
+            .config(ServerConfig::default())
+            .slow_request_ms(7)
+            .seed(11)
+            .termination(Termination::Antithetic);
+        assert_eq!(replaced.config.shards, ServerConfig::default().shards);
+        assert_eq!(replaced.config.slow_request_ms, 7);
+        assert_eq!(replaced.seed, 11);
+        assert_eq!(replaced.termination, Some(Termination::Antithetic));
+    }
+
+    /// `--termination` at the serve boundary: no override (or a
+    /// matching one) hands the stream back untouched; a differing
+    /// scheme rebuilds it bitwise-identical to constructing under that
+    /// scheme directly.
+    #[test]
+    fn termination_override_resamples_only_on_mismatch() {
+        let iid = small_stream(Termination::Iid);
+        let phi_iid = iid.phi_snapshot();
+
+        let untouched = apply_termination_override(
+            small_stream(Termination::Iid),
+            None,
+        );
+        assert_eq!(untouched.config().termination, Termination::Iid);
+        assert_eq!(untouched.phi_snapshot(), phi_iid);
+
+        let matching = apply_termination_override(
+            small_stream(Termination::Iid),
+            Some(Termination::Iid),
+        );
+        assert_eq!(matching.phi_snapshot(), phi_iid);
+
+        let overridden = apply_termination_override(
+            small_stream(Termination::Iid),
+            Some(Termination::Qmc),
+        );
+        assert_eq!(overridden.config().termination, Termination::Qmc);
+        let direct = small_stream(Termination::Qmc);
+        assert_eq!(overridden.phi_snapshot(), direct.phi_snapshot());
+        assert_ne!(
+            overridden.phi_snapshot(),
+            phi_iid,
+            "qmc override produced the iid features — the rebuild did not \
+             change the termination stream"
+        );
+    }
 }

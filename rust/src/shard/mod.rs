@@ -1106,6 +1106,7 @@ mod tests {
             max_len: 3,
             reweight: true,
             normalize: true,
+            termination: crate::walks::Termination::Iid,
             threads,
         }
     }
@@ -1195,6 +1196,48 @@ mod tests {
         assert!(sharded.apply_delta_batch(&bad).is_err());
         assert!(mono.apply_delta_batch(&bad).is_err());
         assert!(sharded.phi_snapshot() == before, "failed batch mutated state");
+    }
+
+    /// The composition contract is termination-scheme independent:
+    /// every scheme derives its draws from `(seed, node, walk)` alone,
+    /// so the partitioned engines reproduce the mono engine bitwise
+    /// under each entry of the scheme matrix (`GRFGP_TEST_TERMINATION`
+    /// narrows the matrix; default covers all schemes).
+    #[test]
+    fn sharded_compose_bitwise_under_every_scheme() {
+        let mut rng = Rng::new(7);
+        let g = generators::barabasi_albert(36, 3, &mut rng);
+        for scheme in crate::walks::Termination::test_matrix() {
+            let cfg = WalkConfig { termination: scheme, ..wcfg(2) };
+            let f = diffusion_f(cfg.max_len);
+            let mut mono =
+                StreamingFeatures::new(g.clone(), cfg.clone(), f.clone(), 5);
+            mono.set_hub_cap(1);
+            mono.set_compact_threshold(2);
+            let mut sharded =
+                ShardedFeatures::new(g.clone(), cfg.clone(), f.clone(), 5, 3);
+            sharded.set_hub_cap(1);
+            sharded.set_compact_threshold(2);
+            assert!(
+                sharded.phi_snapshot() == mono.phi_snapshot(),
+                "fresh Φ differs under {scheme:?}"
+            );
+            let deltas = vec![
+                GraphDelta::AddEdge { u: 0, v: 17, w: 0.8 },
+                GraphDelta::AddNode,
+                GraphDelta::AddEdge { u: 36, v: 5, w: 1.5 },
+            ];
+            mono.apply_delta_batch(&deltas).unwrap();
+            sharded.apply_delta_batch(&deltas).unwrap();
+            assert!(
+                sharded.phi_snapshot() == mono.phi_snapshot(),
+                "post-batch Φ differs under {scheme:?}"
+            );
+            let (mc, sc) = (mono.components(), sharded.components());
+            for (l, (a, b)) in mc.c.iter().zip(&sc.c).enumerate() {
+                assert!(a == b, "{scheme:?}: component {l} differs");
+            }
+        }
     }
 
     fn random_csr(rng: &mut Rng, n_rows: usize, n_cols: usize, nnz: usize) -> Csr {

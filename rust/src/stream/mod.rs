@@ -108,8 +108,8 @@ use crate::obs;
 use crate::sparse::{Csr, Ell, FeatureLayout};
 use crate::util::parallel::par_map_chunks;
 use crate::walks::{
-    resample_walk, rows_from_walks, sample_components_indexed_part,
-    NodeWalks, WalkComponents, WalkConfig,
+    resample_walk, rows_from_walks, NodeWalks, WalkComponents, WalkConfig,
+    WalkSampler,
 };
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -377,7 +377,11 @@ impl StreamingFeatures {
             assert!(count > 0 && shard < count, "owner {shard} out of {count}");
         }
         let n = graph.num_nodes();
-        let iw = sample_components_indexed_part(&graph, &cfg, seed, owner);
+        let sampler = WalkSampler::new(&graph, &cfg, seed);
+        let iw = match owner {
+            Some((shard, count)) => sampler.partition(shard, count),
+            None => sampler.indexed(),
+        };
         let norm_deg: Vec<f64> = if cfg.normalize {
             (0..n).map(|i| graph.weighted_degree(i).max(1e-12)).collect()
         } else {
@@ -968,13 +972,19 @@ mod tests {
         (Graph::from_edges(n, &edges), edges)
     }
 
+    /// Random walk config; the termination scheme is drawn from the
+    /// [`Termination::test_matrix`] env knob (`GRFGP_TEST_TERMINATION`,
+    /// default: every scheme), so the bitwise properties below cover
+    /// the whole scheme matrix across proptest cases.
     fn test_cfg(rng: &mut Rng) -> WalkConfig {
+        let schemes = crate::walks::Termination::test_matrix();
         WalkConfig {
             n_walks: 6 + rng.below(6),
             p_halt: 0.15,
             max_len: 3,
             reweight: true,
             normalize: rng.bernoulli(0.5),
+            termination: schemes[rng.below(schemes.len())],
             threads: 1,
         }
     }
@@ -1081,12 +1091,14 @@ mod tests {
         proptest(6, |rng| {
             let n = 8 + rng.below(10);
             let (g, _) = random_graph(rng, n, 0.3);
+            let schemes = crate::walks::Termination::test_matrix();
             let cfg = WalkConfig {
                 n_walks: 6 + rng.below(4),
                 p_halt: 0.15,
                 max_len: 3,
                 reweight: true,
                 normalize: rng.bernoulli(0.5),
+                termination: schemes[rng.below(schemes.len())],
                 threads: 2 + rng.below(3),
             };
             let f = vec![1.0, 0.6, 0.3, 0.1];

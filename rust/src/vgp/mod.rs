@@ -219,7 +219,7 @@ mod tests {
     use super::*;
     use crate::gp::metrics::accuracy;
     use crate::graph::generators;
-    use crate::walks::{sample_components, WalkConfig};
+    use crate::walks::{WalkConfig, WalkSampler};
 
     fn community_problem(
         seed: u64,
@@ -227,7 +227,7 @@ mod tests {
         let mut rng = Rng::new(seed);
         let (g, labels) = generators::sbm(&[40, 40, 40], 0.25, 0.01, &mut rng);
         let cfg = WalkConfig { n_walks: 80, max_len: 3, threads: 1, ..Default::default() };
-        let comps = sample_components(&g, &cfg, seed);
+        let comps = WalkSampler::new(&g, &cfg, seed).components();
         let phi = comps.combine(&[1.0, 0.6, 0.3, 0.15]);
         let n = g.num_nodes();
         let perm = rng.sample_without_replacement(n, n);

@@ -31,6 +31,10 @@ pub struct WalkConfig {
     /// then power series of Wn — e.g. diffusion on the normalised
     /// Laplacian, `exp(-βL̃) = e^{-β} exp(βWn)`.
     pub normalize: bool,
+    /// How walk terminations are sampled (see [`Termination`]).
+    /// Default [`Termination::Iid`] — bit-identical to the historical
+    /// per-step Bernoulli walker.
+    pub termination: Termination,
     /// Worker threads (0 = auto).
     pub threads: usize,
 }
@@ -43,6 +47,7 @@ impl Default for WalkConfig {
             max_len: 10,
             reweight: true,
             normalize: true,
+            termination: Termination::Iid,
             threads: 0,
         }
     }
@@ -56,6 +61,177 @@ impl WalkConfig {
             self.threads
         }
     }
+}
+
+/// Stream tag for the antithetic pair budgets: walks `2t` and `2t+1`
+/// of a node share the uniform drawn from
+/// `Rng::new(seed).split(node).split(ANTITHETIC_STREAM).split(t)`.
+/// Far outside the `split(walk)` range [`walk_rng`] uses, so the
+/// budget streams never collide with a walk's step stream.
+const ANTITHETIC_STREAM: u64 = 0x7E57_A171_0000_0001;
+
+/// Stream tag for the per-node QMC rotation shift (one uniform per
+/// node, applied to every walk's van der Corput point).
+const QMC_SHIFT_STREAM: u64 = 0x7E57_51AC_0000_0002;
+
+/// How walk terminations are sampled — the variance knob of Reid et
+/// al., *Quasi-Monte Carlo Graph Random Features* (arXiv 2305.12470).
+///
+/// Every scheme draws each walk's halting time from the **same
+/// geometric marginal** `P(length ≥ k) = (1-p_halt)^k`, so the
+/// estimator stays unbiased (`E[C_l] = W^l`, tested); schemes differ
+/// only in how the draws of *different walks from the same node* are
+/// correlated, which is what shrinks the variance of the per-node
+/// average. All three are pure functions of `(seed, node, walk)` —
+/// walk isolation, thread-count determinism, and the sharded engine's
+/// partition-independence hold under every scheme.
+///
+/// See the `walks` module docs, "Termination schemes", for the full
+/// contract and guidance on which scheme to pick.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Termination {
+    /// Independent per-step Bernoulli halting drawn from the walk's
+    /// own RNG stream — bit-identical to the historical walker (the
+    /// pre-scheme output is pinned by a regression test).
+    #[default]
+    Iid,
+    /// Antithetic pairs: walks `2t` and `2t+1` of a node draw their
+    /// termination budgets from one shared uniform `u` and its mirror
+    /// `1-u` (comonotone coupling). When one walk of a pair halts
+    /// early the other runs long, cancelling halting-time noise in
+    /// the node's average.
+    Antithetic,
+    /// Randomised quasi-Monte-Carlo: walk `t` of a node maps the
+    /// base-2 van der Corput point `vdc(t)` through a per-node random
+    /// rotation (Cranley-Patterson), so the walk budgets of each node
+    /// stratify the geometric quantiles near-perfectly.
+    Qmc,
+}
+
+impl Termination {
+    /// Every scheme, in stable order (test matrices iterate this).
+    pub const ALL: [Termination; 3] =
+        [Termination::Iid, Termination::Antithetic, Termination::Qmc];
+
+    /// Canonical lowercase name (the `--termination` wire spelling).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Termination::Iid => "iid",
+            Termination::Antithetic => "antithetic",
+            Termination::Qmc => "qmc",
+        }
+    }
+
+    /// Parse the canonical spelling; `None` for anything else.
+    pub fn parse(s: &str) -> Option<Termination> {
+        match s {
+            "iid" => Some(Termination::Iid),
+            "antithetic" => Some(Termination::Antithetic),
+            "qmc" => Some(Termination::Qmc),
+            _ => None,
+        }
+    }
+
+    /// Schemes a test matrix should cover: `GRFGP_TEST_TERMINATION`
+    /// (comma-separated scheme names, e.g. `iid,qmc`) or every scheme
+    /// when unset — the stream/shard property suites run their bitwise
+    /// contracts once per entry, mirroring `GRFGP_TEST_SHARDS`.
+    pub fn test_matrix() -> Vec<Termination> {
+        match std::env::var("GRFGP_TEST_TERMINATION") {
+            Ok(spec) => spec
+                .split(',')
+                .map(|t| t.trim())
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    Termination::parse(t).unwrap_or_else(|| {
+                        panic!("GRFGP_TEST_TERMINATION: bad entry {t:?}")
+                    })
+                })
+                .collect(),
+            Err(_) => Termination::ALL.to_vec(),
+        }
+    }
+
+    /// Build the termination cursor of walk `(node, walk)` under
+    /// `seed`. For `Iid` this touches no RNG (the walk's own stream
+    /// supplies the per-step draws, exactly as before the scheme
+    /// existed); the correlated schemes derive the walk's length
+    /// budget here, from dedicated streams that never overlap the
+    /// step streams.
+    fn draws(self, p_halt: f64, seed: u64, node: usize, walk: usize) -> TermDraws {
+        match self {
+            Termination::Iid => TermDraws::Iid,
+            Termination::Antithetic => {
+                let mut pair = Rng::new(seed)
+                    .split(node as u64)
+                    .split(ANTITHETIC_STREAM)
+                    .split((walk / 2) as u64);
+                let mut u = pair.uniform();
+                if walk % 2 == 1 {
+                    u = 1.0 - u;
+                }
+                TermDraws::Budget(geometric_budget(u, p_halt))
+            }
+            Termination::Qmc => {
+                let mut shift_rng =
+                    Rng::new(seed).split(node as u64).split(QMC_SHIFT_STREAM);
+                let mut u = vdc53(walk as u64) + shift_rng.uniform();
+                if u >= 1.0 {
+                    u -= 1.0;
+                }
+                TermDraws::Budget(geometric_budget(u, p_halt))
+            }
+        }
+    }
+}
+
+/// Per-walk termination cursor, consumed by the walker's halting test.
+#[derive(Clone, Copy, Debug)]
+enum TermDraws {
+    /// Draw `bernoulli(p_halt)` from the walk's step stream each step.
+    Iid,
+    /// Halt once the subwalk length reaches this pre-drawn budget.
+    Budget(usize),
+}
+
+impl TermDraws {
+    /// Halting test after the deposit at subwalk length `l` (Alg. 2
+    /// order: deposit, halt?, step).
+    #[inline]
+    fn halts(self, l: usize, p_halt: f64, rng: &mut Rng) -> bool {
+        match self {
+            TermDraws::Iid => rng.bernoulli(p_halt),
+            TermDraws::Budget(b) => l >= b,
+        }
+    }
+}
+
+/// Geometric length budget by inverse CDF: the largest `L` with
+/// `u ≥ 1 - (1-p)^L`, so `P(budget ≥ k) = (1-p)^k` for uniform `u` —
+/// the same marginal the per-step Bernoulli walker realises. Monotone
+/// in `u`, which is what makes the antithetic `u ↦ 1-u` coupling
+/// comonotone in walk length.
+fn geometric_budget(u: f64, p: f64) -> usize {
+    if p <= 0.0 {
+        return usize::MAX; // no geometric halting; max_len truncates
+    }
+    if u <= 0.0 {
+        return 0;
+    }
+    let b = (1.0 - u).ln() / (1.0 - p).ln();
+    if b.is_finite() && b < usize::MAX as f64 {
+        b as usize
+    } else {
+        usize::MAX // u → 1 (or p ≥ 1 degeneracies): defer to max_len
+    }
+}
+
+/// Base-2 van der Corput radical inverse of `t` with 53-bit
+/// resolution: bit-reverse, then scale to [0, 1) exactly like
+/// [`Rng::uniform`]. The first `2^k` points stratify [0, 1) into
+/// `2^k` equal strata — one walk budget per geometric quantile.
+fn vdc53(t: u64) -> f64 {
+    (t.reverse_bits() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
 }
 
 /// Per-chunk CSR fragment: rows [start, end) of each C_l.
@@ -177,9 +353,10 @@ pub fn sample_components(g: &Graph, cfg: &WalkConfig, seed: u64) -> WalkComponen
             for d in deposits.iter_mut() {
                 d.clear();
             }
-            for _ in 0..cfg.n_walks {
+            for t in 0..cfg.n_walks {
                 rec.clear();
-                walk_once_record(g, cfg, &norm_deg, i, &mut rng, &mut rec);
+                let term = cfg.termination.draws(cfg.p_halt, seed, i, t);
+                walk_once_record(g, cfg, &norm_deg, i, &mut rng, term, &mut rec);
                 for (l, &d) in rec.iter().enumerate() {
                     deposits[l].push(d);
                 }
@@ -312,7 +489,8 @@ pub fn sample_components_indexed_part(
             }
             for t in 0..cfg.n_walks {
                 let mut rng = walk_rng(seed, i, t);
-                walk_once_record(g, cfg, &norm_deg, i, &mut rng, &mut nw.deposits);
+                let term = cfg.termination.draws(cfg.p_halt, seed, i, t);
+                walk_once_record(g, cfg, &norm_deg, i, &mut rng, term, &mut nw.deposits);
                 let start = *nw.offsets.last().unwrap() as usize;
                 nw.offsets.push(nw.deposits.len() as u32);
                 // Visit entries: distinct nodes on this trajectory.
@@ -379,6 +557,9 @@ pub fn sample_components_indexed_part(
 /// step to `rec` (index within the appended run = subwalk length `l`).
 /// The deposit/termination/step order matches Alg. 2 exactly, so both
 /// samplers (and the streaming resampler) share this single walker.
+/// `term` is the walk's termination cursor ([`Termination::draws`]);
+/// under [`TermDraws::Iid`] the halting draws come from `rng` itself,
+/// bit-identical to the pre-scheme walker.
 #[inline]
 fn walk_once_record(
     g: &Graph,
@@ -386,6 +567,7 @@ fn walk_once_record(
     norm_deg: &[f64],
     source: usize,
     rng: &mut Rng,
+    term: TermDraws,
     rec: &mut Vec<(u32, f64)>,
 ) {
     let mut current = source;
@@ -401,7 +583,7 @@ fn walk_once_record(
             break; // isolated node: walk cannot continue
         }
         // Termination draw (after the deposit, as in Alg. 2).
-        if rng.bernoulli(cfg.p_halt) {
+        if term.halts(l, cfg.p_halt, rng) {
             break;
         }
         let k = rng.below(deg);
@@ -438,7 +620,8 @@ pub fn resample_walk(
     rec: &mut Vec<(u32, f64)>,
 ) {
     let mut rng = walk_rng(seed, source, walk);
-    walk_once_record(g, cfg, norm_deg, source, &mut rng, rec);
+    let term = cfg.termination.draws(cfg.p_halt, seed, source, walk);
+    walk_once_record(g, cfg, norm_deg, source, &mut rng, term, rec);
 }
 
 /// Convenience: sample components and immediately combine them with a
@@ -446,6 +629,73 @@ pub fn resample_walk(
 pub fn sample_features(g: &Graph, cfg: &WalkConfig, f: &[f64], seed: u64) -> Csr {
     let comps = sample_components(g, cfg, seed);
     comps.combine(f)
+}
+
+/// Unified front door to the walk engine: one `(graph, config, seed)`
+/// binding with a typed request per output shape, in place of the
+/// older three-function family (`sample_components` /
+/// `sample_components_indexed` / `sample_components_indexed_part`,
+/// which remain as thin wrappers). Everything configurable — walk
+/// count, halting, normalisation, and the [`Termination`] scheme —
+/// rides on the [`WalkConfig`], so a new sampling strategy is a config
+/// change at every call site at once, not a fourth entry point.
+///
+/// ```
+/// use grfgp::graph::generators;
+/// use grfgp::walks::{Termination, WalkConfig, WalkSampler};
+///
+/// let g = generators::ring(32);
+/// let cfg = WalkConfig {
+///     n_walks: 8,
+///     termination: Termination::Antithetic,
+///     ..Default::default()
+/// };
+/// let sampler = WalkSampler::new(&g, &cfg, 7);
+/// let comps = sampler.components();          // features only
+/// let indexed = sampler.indexed();           // + deposit store/index
+/// let mine = sampler.partition(0, 2);        // + ownership filter
+/// assert_eq!(comps.c.len(), cfg.max_len + 1);
+/// assert_eq!(indexed.store.len(), 32);
+/// assert_eq!(mine.store[1].n_walks(), 0);    // node 1 owned by shard 1
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct WalkSampler<'a> {
+    graph: &'a Graph,
+    cfg: &'a WalkConfig,
+    seed: u64,
+}
+
+impl<'a> WalkSampler<'a> {
+    /// Bind the sampler inputs. Cheap (no walking happens until an
+    /// output is requested).
+    pub fn new(graph: &'a Graph, cfg: &'a WalkConfig, seed: u64) -> Self {
+        WalkSampler { graph, cfg, seed }
+    }
+
+    /// Component matrices only (one sequential RNG stream per node —
+    /// the cheapest request; cannot be incrementally patched).
+    pub fn components(&self) -> WalkComponents {
+        sample_components(self.graph, self.cfg, self.seed)
+    }
+
+    /// Components combined with modulation coefficients: Φ(f).
+    pub fn features(&self, f: &[f64]) -> Csr {
+        self.components().combine(f)
+    }
+
+    /// Components plus the per-walk deposit store and visit index
+    /// (per-walk RNG streams — the streaming subsystem's request).
+    pub fn indexed(&self) -> IndexedWalks {
+        sample_components_indexed(self.graph, self.cfg, self.seed)
+    }
+
+    /// [`WalkSampler::indexed`] restricted to the sources owned by
+    /// `shard` of `of` (`i % of == shard`); foreign rows come back
+    /// empty. Owned rows are **bitwise** the corresponding rows of the
+    /// unfiltered request, under every termination scheme.
+    pub fn partition(&self, shard: u32, of: u32) -> IndexedWalks {
+        sample_components_indexed_part(self.graph, self.cfg, self.seed, Some((shard, of)))
+    }
 }
 
 #[cfg(test)]
@@ -487,6 +737,7 @@ mod tests {
             max_len: 3,
             reweight: true,
             normalize: false,
+            termination: Termination::Iid,
             threads: 2,
         };
         let comps = sample_components(&g, &cfg, 12345);
@@ -629,6 +880,7 @@ mod tests {
             max_len: 2,
             reweight: true,
             normalize: false,
+            termination: Termination::Iid,
             threads: 2,
         };
         let iw = sample_components_indexed(&g, &cfg, 999);
@@ -645,6 +897,358 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Frozen copy of the walker as it was before the [`Termination`]
+    /// layer existed: per-step Bernoulli halting drawn from the walk's
+    /// own stream. The regression tests below pin `Termination::Iid`
+    /// to this exact draw sequence.
+    fn pre_scheme_walk(
+        g: &Graph,
+        cfg: &WalkConfig,
+        norm_deg: &[f64],
+        source: usize,
+        rng: &mut Rng,
+        rec: &mut Vec<(u32, f64)>,
+    ) {
+        let mut current = source;
+        let mut load = 1.0f64;
+        for l in 0..=cfg.max_len {
+            rec.push((current as u32, load));
+            if l == cfg.max_len {
+                break;
+            }
+            let (nb, wts) = g.row(current);
+            let deg = nb.len();
+            if deg == 0 {
+                break;
+            }
+            if rng.bernoulli(cfg.p_halt) {
+                break;
+            }
+            let k = rng.below(deg);
+            let next = nb[k] as usize;
+            let mut w = wts[k];
+            if cfg.normalize {
+                w /= (norm_deg[current] * norm_deg[next]).sqrt();
+            }
+            load *= if cfg.reweight {
+                deg as f64 * w / (1.0 - cfg.p_halt)
+            } else {
+                w
+            };
+            current = next;
+        }
+    }
+
+    /// Small weighted graph exercising degree spread + normalisation.
+    fn scheme_test_graph() -> Graph {
+        let mut edges = vec![];
+        let mut rng = Rng::new(17);
+        for i in 0u32..10 {
+            for j in (i + 1)..10 {
+                if rng.bernoulli(0.4) {
+                    edges.push((i, j, 0.2 + 0.6 * rng.uniform()));
+                }
+            }
+        }
+        Graph::from_edges(10, &edges)
+    }
+
+    #[test]
+    fn iid_bit_identical_to_pre_scheme_sampler() {
+        let g = scheme_test_graph();
+        let cfg = WalkConfig { n_walks: 9, p_halt: 0.3, max_len: 4, ..Default::default() };
+        assert_eq!(cfg.termination, Termination::Iid);
+        let seed = 2024u64;
+        let n = g.num_nodes();
+        let norm_deg: Vec<f64> =
+            (0..n).map(|i| g.weighted_degree(i).max(1e-12)).collect();
+
+        // Legacy sampler (one sequential stream per node): replay the
+        // pre-scheme draws and rebuild rows through the shared dedup.
+        let comps = sample_components(&g, &cfg, seed);
+        let base = Rng::new(seed);
+        let inv_n = 1.0 / cfg.n_walks as f64;
+        for i in 0..n {
+            let mut rng = base.split(i as u64);
+            let mut nw = NodeWalks::default();
+            nw.offsets.push(0);
+            for _ in 0..cfg.n_walks {
+                pre_scheme_walk(&g, &cfg, &norm_deg, i, &mut rng, &mut nw.deposits);
+                nw.offsets.push(nw.deposits.len() as u32);
+            }
+            for (l, (cols, vals)) in
+                rows_from_walks(&nw, cfg.max_len + 1, inv_n).into_iter().enumerate()
+            {
+                let (rc, rv) = comps.c[l].row(i);
+                assert_eq!(rc, &cols[..], "legacy node {i} length {l} cols");
+                assert_eq!(rv, &vals[..], "legacy node {i} length {l} vals");
+            }
+        }
+
+        // Indexed sampler (per-walk streams): every stored trajectory
+        // is bitwise the pre-scheme walk under its stream.
+        let iw = sample_components_indexed(&g, &cfg, seed);
+        let mut rec = Vec::new();
+        for i in 0..n {
+            for t in 0..cfg.n_walks {
+                rec.clear();
+                let mut rng = walk_rng(seed, i, t);
+                pre_scheme_walk(&g, &cfg, &norm_deg, i, &mut rng, &mut rec);
+                assert_eq!(iw.store[i].walk(t), &rec[..], "walk ({i},{t})");
+            }
+        }
+    }
+
+    #[test]
+    fn geometric_budget_inverts_the_survival_cdf() {
+        let p = 0.3;
+        // budget(u) >= k  ⟺  u >= 1 - (1-p)^k (strict floor semantics,
+        // checked just inside both sides of every quantile boundary).
+        for k in 1usize..=8 {
+            let q = 1.0 - (1.0f64 - p).powi(k as i32);
+            assert!(geometric_budget(q + 1e-12, p) >= k, "just above q_{k}");
+            assert!(geometric_budget(q - 1e-12, p) < k, "just below q_{k}");
+        }
+        // Monotone in u.
+        let mut prev = 0;
+        for j in 0..100 {
+            let b = geometric_budget(j as f64 / 100.0, p);
+            assert!(b >= prev);
+            prev = b;
+        }
+        // Edge cases: no halting mass, u at the endpoints, p >= 1.
+        assert_eq!(geometric_budget(0.5, 0.0), usize::MAX);
+        assert_eq!(geometric_budget(0.5, -1.0), usize::MAX);
+        assert_eq!(geometric_budget(0.0, p), 0);
+        assert_eq!(geometric_budget(-1.0, p), 0);
+        assert_eq!(geometric_budget(1.0, p), usize::MAX); // max_len truncates
+        assert_eq!(geometric_budget(0.5, 1.0), 0);
+    }
+
+    #[test]
+    fn correlated_budgets_keep_the_geometric_marginal() {
+        // Both correlated schemes must realise the same survival curve
+        // P(budget >= k) = (1-p)^k as the iid walker — that is what
+        // keeps E[C_l] = W^l scheme-independent.
+        let p = 0.3;
+        let (nodes, walks) = (2000usize, 20usize);
+        for scheme in [Termination::Antithetic, Termination::Qmc] {
+            let mut survive = [0usize; 4];
+            for i in 0..nodes {
+                for t in 0..walks {
+                    let b = match scheme.draws(p, 99, i, t) {
+                        TermDraws::Budget(b) => b,
+                        TermDraws::Iid => unreachable!("correlated scheme"),
+                    };
+                    for (k, s) in survive.iter_mut().enumerate() {
+                        if b >= k + 1 {
+                            *s += 1;
+                        }
+                    }
+                }
+            }
+            let total = (nodes * walks) as f64;
+            for (k, &s) in survive.iter().enumerate() {
+                let got = s as f64 / total;
+                let expect = (1.0f64 - p).powi(k as i32 + 1);
+                assert!(
+                    (got - expect).abs() < 0.015,
+                    "{scheme:?} P(budget>={}) = {got} vs {expect}",
+                    k + 1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn antithetic_pairs_mirror_one_uniform() {
+        // The pairing rule: walks 2t and 2t+1 of a node derive their
+        // budgets from one uniform u and its mirror 1-u, drawn from
+        // the pair stream (seed, node, ANTITHETIC_STREAM, t).
+        let p = 0.25;
+        for (seed, node, t) in [(1u64, 3usize, 0usize), (9, 0, 5), (42, 7, 11)] {
+            let mut pair = Rng::new(seed)
+                .split(node as u64)
+                .split(ANTITHETIC_STREAM)
+                .split(t as u64);
+            let u = pair.uniform();
+            let even = Termination::Antithetic.draws(p, seed, node, 2 * t);
+            let odd = Termination::Antithetic.draws(p, seed, node, 2 * t + 1);
+            match (even, odd) {
+                (TermDraws::Budget(b0), TermDraws::Budget(b1)) => {
+                    assert_eq!(b0, geometric_budget(u, p));
+                    assert_eq!(b1, geometric_budget(1.0 - u, p));
+                }
+                _ => unreachable!("antithetic draws budgets"),
+            }
+        }
+    }
+
+    #[test]
+    fn qmc_budgets_stratify_per_node() {
+        // With n_walks = 2^k, the shifted van der Corput points land
+        // one in each of the 2^k equal strata of [0,1) — so each node
+        // gets exactly one budget per geometric quantile block.
+        let (p, walks) = (0.3, 16usize);
+        for node in 0..8usize {
+            let mut shift_rng =
+                Rng::new(5).split(node as u64).split(QMC_SHIFT_STREAM);
+            let shift = shift_rng.uniform();
+            let mut strata = vec![0usize; walks];
+            for t in 0..walks {
+                let mut u = vdc53(t as u64) + shift;
+                if u >= 1.0 {
+                    u -= 1.0;
+                }
+                strata[(u * walks as f64) as usize] += 1;
+                // And the walker's budget is exactly this point's.
+                match Termination::Qmc.draws(p, 5, node, t) {
+                    TermDraws::Budget(b) => {
+                        assert_eq!(b, geometric_budget(u, p))
+                    }
+                    TermDraws::Iid => unreachable!(),
+                }
+            }
+            assert!(
+                strata.iter().all(|&c| c == 1),
+                "node {node}: strata {strata:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn schemes_deterministic_and_walk_isolated() {
+        // Thread-count determinism and resample-in-isolation hold for
+        // every termination scheme, not just Iid — both are pure
+        // consequences of budgets being functions of (seed, node, walk).
+        let g = scheme_test_graph();
+        let seed = 31u64;
+        for scheme in Termination::ALL {
+            let cfg1 = WalkConfig {
+                n_walks: 11,
+                max_len: 4,
+                p_halt: 0.3,
+                termination: scheme,
+                threads: 1,
+                ..Default::default()
+            };
+            let cfg4 = WalkConfig { threads: 4, ..cfg1.clone() };
+            let a = sample_components_indexed(&g, &cfg1, seed);
+            let b = sample_components_indexed(&g, &cfg4, seed);
+            for l in 0..a.components.c.len() {
+                assert_eq!(a.components.c[l], b.components.c[l], "{scheme:?} l={l}");
+            }
+            assert_eq!(a.store, b.store, "{scheme:?} store");
+            assert_eq!(a.visit, b.visit, "{scheme:?} visit");
+            let norm_deg: Vec<f64> = (0..g.num_nodes())
+                .map(|i| g.weighted_degree(i).max(1e-12))
+                .collect();
+            let mut rec = Vec::new();
+            for i in 0..g.num_nodes() {
+                for t in 0..cfg1.n_walks {
+                    rec.clear();
+                    resample_walk(&g, &cfg1, &norm_deg, i, t, seed, &mut rec);
+                    assert_eq!(a.store[i].walk(t), &rec[..], "{scheme:?} ({i},{t})");
+                }
+            }
+            // Partition-independence: owned slices of a partitioned
+            // request are bitwise the unfiltered sampler's, foreign
+            // sources come back empty — under every scheme.
+            for shard in 0..3u32 {
+                let p = sample_components_indexed_part(&g, &cfg1, seed, Some((shard, 3)));
+                for i in 0..g.num_nodes() {
+                    if i as u32 % 3 == shard {
+                        assert_eq!(p.store[i], a.store[i], "{scheme:?} shard {shard} node {i}");
+                    } else {
+                        assert_eq!(p.store[i].n_walks(), 0, "{scheme:?} foreign node {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn correlated_schemes_unbiased_for_adjacency_powers() {
+        // E[C_l] = W^l must survive the correlated terminations: the
+        // budget marginal is the iid geometric, and budgets are
+        // independent of the step draws.
+        let mut edges = vec![];
+        let mut rng = Rng::new(5);
+        for i in 0u32..6 {
+            for j in (i + 1)..6 {
+                if rng.bernoulli(0.6) {
+                    edges.push((i, j, 0.3 + 0.4 * rng.uniform()));
+                }
+            }
+        }
+        let g = Graph::from_edges(6, &edges);
+        let powers = adjacency_powers(&g, 2);
+        for scheme in [Termination::Antithetic, Termination::Qmc] {
+            let cfg = WalkConfig {
+                n_walks: 40_000,
+                p_halt: 0.25,
+                max_len: 2,
+                reweight: true,
+                normalize: false,
+                termination: scheme,
+                threads: 2,
+            };
+            let comps = sample_components(&g, &cfg, 999);
+            for l in 0..=cfg.max_len {
+                let dense = comps.c[l].to_dense();
+                for i in 0..6 {
+                    for j in 0..6 {
+                        let got = dense[i][j];
+                        let expect = powers[l][(i, j)];
+                        assert!(
+                            (got - expect).abs() < 0.15 * (1.0 + expect.abs()),
+                            "{scheme:?} l={l} ({i},{j}): {got} vs {expect}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn termination_parse_round_trips() {
+        for scheme in Termination::ALL {
+            assert_eq!(Termination::parse(scheme.as_str()), Some(scheme));
+        }
+        assert_eq!(Termination::parse("halton"), None);
+        assert_eq!(Termination::default(), Termination::Iid);
+    }
+
+    #[test]
+    fn walk_sampler_matches_free_functions() {
+        let g = scheme_test_graph();
+        let cfg = WalkConfig {
+            n_walks: 8,
+            max_len: 3,
+            termination: Termination::Qmc,
+            ..Default::default()
+        };
+        let sampler = WalkSampler::new(&g, &cfg, 12);
+        let a = sampler.components();
+        let b = sample_components(&g, &cfg, 12);
+        for l in 0..a.c.len() {
+            assert_eq!(a.c[l], b.c[l]);
+        }
+        let f = [1.0, 0.5, 0.25, 0.12];
+        assert_eq!(sampler.features(&f), a.combine(&f));
+        let ia = sampler.indexed();
+        let ib = sample_components_indexed(&g, &cfg, 12);
+        assert_eq!(ia.store, ib.store);
+        assert_eq!(ia.visit, ib.visit);
+        let pa = sampler.partition(1, 3);
+        let pb = sample_components_indexed_part(&g, &cfg, 12, Some((1, 3)));
+        assert_eq!(pa.store, pb.store);
+        for (i, nw) in pa.store.iter().enumerate() {
+            let expect = if i % 3 == 1 { cfg.n_walks } else { 0 };
+            assert_eq!(nw.n_walks(), expect, "partition ownership at {i}");
         }
     }
 

@@ -14,15 +14,68 @@
 //! Unbiasedness: `E[C_l] = W^l` (tested in `engine.rs`), hence
 //! `E[Φ] = Ψ = Σ_l f_l W^l` and `E[Φ Φᵀ] ≈ K_α` for `α = f ⊛ f`
 //! (discrete convolution), exactly the paper's estimator.
+//!
+//! The front door is [`WalkSampler`]: one `(graph, config, seed)`
+//! binding with a typed request per output shape — `components()`
+//! (features only), `indexed()` (+ per-walk deposit store and visit
+//! index, for the streaming subsystem), `partition(shard, of)`
+//! (+ ownership filter, for the sharded engine).
+//!
+//! ## Termination schemes
+//!
+//! [`Termination`] on [`WalkConfig`] selects how walk halting times
+//! are sampled, after Reid et al., *Quasi-Monte Carlo Graph Random
+//! Features* (arXiv 2305.12470):
+//!
+//! * **`Iid`** (default) — independent `bernoulli(p_halt)` per step,
+//!   drawn from the walk's own RNG stream. Bit-identical to the
+//!   historical walker (pinned by a regression test), so existing
+//!   seeds reproduce byte-for-byte.
+//! * **`Antithetic`** — walks `2t` and `2t+1` of each node draw their
+//!   geometric length budgets from one shared uniform `u` and its
+//!   mirror `1-u` (the *pairing rule*: the pair's uniform comes from a
+//!   dedicated stream keyed by `(seed, node, pair)`, never from the
+//!   walks' step streams). The coupling is comonotone in walk length:
+//!   a short walk's pair runs long, cancelling halting-time noise in
+//!   the node's average. Helps most when the modulation `f` still has
+//!   weight at depths the geometric tail reaches (`p_halt·max_len`
+//!   around 1 or above); with aggressive truncation
+//!   (`p_halt·max_len ≪ 1`) nearly every walk hits `max_len` and no
+//!   scheme has terminations left to correlate.
+//! * **`Qmc`** — walk `t` maps the base-2 van der Corput point
+//!   `vdc(t)` through a per-node Cranley-Patterson rotation into a
+//!   geometric length budget, so each node's `n_walks` budgets
+//!   stratify the halting-time quantiles near-perfectly (exactly one
+//!   budget per quantile block when `n_walks` is a power of two).
+//!   Dominates antithetic in every regime we measure; the randomised
+//!   shift keeps the estimator unbiased across seeds.
+//!
+//! **Unbiasedness is scheme-independent**: every scheme realises the
+//! same geometric marginal `P(length ≥ k) = (1-p_halt)^k` per walk
+//! (tested), and budgets are independent of the step draws, so
+//! `E[C_l] = W^l` holds under all three — only the *cross-walk*
+//! covariance changes. Every scheme derives its randomness as a pure
+//! function of `(seed, node, walk)`, so walk isolation (streaming
+//! resample), thread-count determinism, and shard
+//! partition-independence hold under all of them.
+//!
+//! [`kernel_variance`] measures the schemes' across-seed estimator
+//! variance on sampled kernel entries (published as the
+//! `grf_variance_{iid,antithetic,qmc}` gauges and
+//! `metric_grf_variance_*` bench rows); at the bench configuration the
+//! correlated schemes cut variance ~40-50% at fixed `n_walks` —
+//! equivalently, fewer walks (smaller Φ nnz, cheaper SpMM/resampling)
+//! at matched accuracy.
 
 pub mod components;
 pub mod engine;
 pub mod variance;
 
 pub use components::{CombinedFeatures, WalkComponents};
-pub use variance::kernel_variance_iid;
+pub use variance::{kernel_variance, kernel_variance_iid};
 pub use engine::{
     resample_walk, rows_from_walks, sample_components,
     sample_components_indexed, sample_components_indexed_part,
-    sample_features, walk_rng, IndexedWalks, NodeWalks, WalkConfig,
+    sample_features, walk_rng, IndexedWalks, NodeWalks, Termination,
+    WalkConfig, WalkSampler,
 };

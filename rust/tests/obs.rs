@@ -120,7 +120,10 @@ fn start_server(
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {
-        grfgp::server::serve_on(stream, hypers, listener, 7).unwrap();
+        grfgp::server::ServeOptions::new()
+            .seed(7)
+            .serve_on(stream, hypers, listener)
+            .unwrap();
     });
     (addr, server)
 }
@@ -275,7 +278,12 @@ fn metrics_op_json_schema() {
             "missing counter {name}"
         );
     }
-    for name in ["grf_variance_iid", "cg_last_residual"] {
+    for name in [
+        "grf_variance_iid",
+        "grf_variance_antithetic",
+        "grf_variance_qmc",
+        "cg_last_residual",
+    ] {
         assert!(
             metrics.path(&["gauges", name]).is_some(),
             "missing gauge {name}"
@@ -340,6 +348,7 @@ fn metrics_op_prometheus_export_is_well_formed() {
         .expect("prometheus rendering must validate");
     assert!(text.contains("# TYPE grfgp_req_predict counter"));
     assert!(text.contains("# TYPE grfgp_grf_variance_iid gauge"));
+    assert!(text.contains("# TYPE grfgp_grf_variance_qmc gauge"));
     assert!(text.contains("grfgp_stopwatch_ns_bucket{le=\"+Inf\"}"));
     assert!(text.contains("grfgp_stopwatch_ns_count"));
 }

@@ -47,6 +47,10 @@ fn start_server(n: usize) -> std::net::SocketAddr {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     std::thread::spawn(move || {
+        // Deliberately on the deprecated shim: this suite is the
+        // compile-and-run coverage keeping `serve_on` working until
+        // the `ServeOptions` migration window closes.
+        #[allow(deprecated)]
         grfgp::server::serve_on(stream, hypers, listener, 7).unwrap();
     });
     addr
@@ -328,7 +332,10 @@ fn compaction_boundary_keeps_predictions_bitwise_and_versions_monotone() {
     let addr = listener.local_addr().unwrap();
     let hypers_srv = hypers.clone();
     std::thread::spawn(move || {
-        grfgp::server::serve_on(stream, hypers_srv, listener, 7).unwrap();
+        grfgp::server::ServeOptions::new()
+            .seed(7)
+            .serve_on(stream, hypers_srv, listener)
+            .unwrap();
     });
     let mut c = Client::connect(addr);
     let probe_nodes = [0usize, 45, 131];
@@ -573,7 +580,10 @@ fn concurrent_predicts_and_deltas_stay_consistent_across_compactions() {
     let addr = listener.local_addr().unwrap();
     let hypers_srv = hypers.clone();
     std::thread::spawn(move || {
-        grfgp::server::serve_on(stream, hypers_srv, listener, 7).unwrap();
+        grfgp::server::ServeOptions::new()
+            .seed(7)
+            .serve_on(stream, hypers_srv, listener)
+            .unwrap();
     });
     // Fixed observations seeded before the race, so a reference rebuild
     // varies only by graph version.
@@ -785,13 +795,11 @@ fn metrics_http_listener_serves_prometheus_text() {
     let stream = StreamingFeatures::new(g, cfg, hypers.modulation.coeffs(), 0);
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
-    let config = ServerConfig {
-        metrics_addr: Some(metrics_addr.clone()),
-        ..ServerConfig::default()
-    };
+    let opts = grfgp::server::ServeOptions::new()
+        .metrics_addr(metrics_addr.clone())
+        .seed(7);
     std::thread::spawn(move || {
-        grfgp::server::serve_on_with(stream, hypers, listener, 7, config)
-            .unwrap();
+        opts.serve_on(stream, hypers, listener).unwrap();
     });
     // Generate some traffic so the scrape has non-zero counters.
     let mut c = Client::connect(addr);

@@ -21,7 +21,7 @@ use grfgp::server::batcher::Request;
 use grfgp::server::{handle, ModelState, ServerConfig, ServerState};
 use grfgp::stream::StreamingFeatures;
 use grfgp::util::rng::Rng;
-use grfgp::walks::WalkConfig;
+use grfgp::walks::{Termination, WalkConfig};
 use std::sync::atomic::Ordering;
 
 /// Shard counts under test: `GRFGP_TEST_SHARDS` (comma-separated) or
@@ -74,13 +74,14 @@ fn pick_non_edges(g: &Graph, k: usize) -> Vec<(usize, usize)> {
 /// A server state over a scale-free graph, with the hub cap low enough
 /// to saturate on the BA hubs and the compaction threshold low enough
 /// that the delta script folds the overlays mid-run.
-fn build_state(n_shards: usize) -> ServerState {
+fn build_state(n_shards: usize, termination: Termination) -> ServerState {
     let g = test_graph();
     let cfg = WalkConfig {
         n_walks: 12,
         p_halt: 0.15,
         max_len: 3,
         threads: 1,
+        termination,
         ..Default::default()
     };
     let hypers = Hypers::new(Modulation::diffusion(1.0, 1.0, 3), 0.1);
@@ -163,48 +164,53 @@ fn run_script(state: &ServerState, edges: &[(usize, usize)]) -> Vec<String> {
 
 #[test]
 fn sharded_serving_is_bitwise_identical_to_mono() {
+    // Scheme × shard-count matrix: the bitwise contract must hold for
+    // every walk-termination scheme (`GRFGP_TEST_TERMINATION` narrows
+    // the scheme list, like `GRFGP_TEST_SHARDS` for shard counts).
     let edges = pick_non_edges(&test_graph(), 3);
-    let mono = build_state(1);
-    let mono_predicts = run_script(&mono, &edges);
-    let mono_guard = mono.model_guard();
-    let (mono_phi, mono_phi_t) =
-        (mono_guard.model.phi_csr(), mono_guard.model.phi_t_csr());
-    drop(mono_guard);
+    for scheme in Termination::test_matrix() {
+        let mono = build_state(1, scheme);
+        let mono_predicts = run_script(&mono, &edges);
+        let mono_guard = mono.model_guard();
+        let (mono_phi, mono_phi_t) =
+            (mono_guard.model.phi_csr(), mono_guard.model.phi_t_csr());
+        drop(mono_guard);
 
-    for s in shard_counts() {
-        let sharded = build_state(s);
-        assert_eq!(
-            sharded.snapshots.load().shards,
-            s,
-            "snapshot does not expose the composed shard count"
-        );
-        let got = run_script(&sharded, &edges);
-        assert_eq!(
-            got.len(),
-            mono_predicts.len(),
-            "S={s}: script served a different number of predicts"
-        );
-        for (k, (a, b)) in mono_predicts.iter().zip(&got).enumerate() {
+        for s in shard_counts() {
+            let sharded = build_state(s, scheme);
             assert_eq!(
-                a, b,
-                "S={s}: predict {k} is not bitwise the mono response"
+                sharded.snapshots.load().shards,
+                s,
+                "snapshot does not expose the composed shard count"
+            );
+            let got = run_script(&sharded, &edges);
+            assert_eq!(
+                got.len(),
+                mono_predicts.len(),
+                "{scheme:?} S={s}: script served a different number of predicts"
+            );
+            for (k, (a, b)) in mono_predicts.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    a, b,
+                    "{scheme:?} S={s}: predict {k} is not bitwise the mono response"
+                );
+            }
+            let guard = sharded.model_guard();
+            assert_eq!(
+                guard.model.phi_csr(),
+                mono_phi,
+                "{scheme:?} S={s}: composed Φ differs from the mono operand"
+            );
+            assert_eq!(
+                guard.model.phi_t_csr(),
+                mono_phi_t,
+                "{scheme:?} S={s}: composed Φᵀ differs from the mono operand"
+            );
+            assert_eq!(
+                guard.model.partition().map(|p| p.n_shards()),
+                if s > 1 { Some(s) } else { None },
+                "{scheme:?} S={s}: model operands not stored under the engine partition"
             );
         }
-        let guard = sharded.model_guard();
-        assert_eq!(
-            guard.model.phi_csr(),
-            mono_phi,
-            "S={s}: composed Φ differs from the mono operand"
-        );
-        assert_eq!(
-            guard.model.phi_t_csr(),
-            mono_phi_t,
-            "S={s}: composed Φᵀ differs from the mono operand"
-        );
-        assert_eq!(
-            guard.model.partition().map(|p| p.n_shards()),
-            if s > 1 { Some(s) } else { None },
-            "S={s}: model operands not stored under the engine partition"
-        );
     }
 }

@@ -253,6 +253,10 @@ fn start_server_with(
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let handle = std::thread::spawn(move || {
+        // Deliberately on the deprecated shim: this harness is the
+        // compile-and-run coverage keeping `serve_on_with` working
+        // until the `ServeOptions` migration window closes.
+        #[allow(deprecated)]
         grfgp::server::serve_on_with(stream, hypers, listener, 7, config)
             .unwrap();
     });
